@@ -1,0 +1,90 @@
+//! DSE walk-through on the paper's target geometries (Fig. 4's view).
+//!
+//! For each network: run the resource-constrained DSE at a realistic
+//! sparsity profile, print the per-layer MAC/SPE + #SPE allocation for
+//! the 3×3 convolutions (the paper's Fig. 4 plots exactly this for
+//! ResNet-18), and validate the analytical throughput with the
+//! cycle-level simulator where the geometry is small enough.
+//!
+//! Run: `cargo run --release --example dse_explore [-- --network resnet18]`
+
+use hass::arch::{networks, Op};
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::pruning::PruningPlan;
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::sparsity::synthesize;
+use hass::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("resource-constrained DSE exploration (Fig. 4)")
+        .opt("network", "resnet18", "geometry to explore")
+        .opt("w-target", "0.7", "uniform weight-sparsity target")
+        .opt("a-target", "0.4", "uniform activation-sparsity target")
+        .opt("device", "u250", "device budget");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = cli.parse_from(&args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+
+    let net = networks::by_name(p.get("network")).expect("network");
+    let dev = DeviceBudget::by_name(p.get("device")).expect("device");
+    let rm = ResourceModel::default();
+
+    // per-layer thresholds from targets through the synthesized curves —
+    // per-layer *sparsity statistics* then differ layer to layer, which is
+    // what makes Fig. 4's allocation non-uniform
+    let sparsity = synthesize(&net, 42);
+    let n = sparsity.layers.len();
+    let mut x = vec![0.0; 2 * n];
+    for i in 0..n {
+        x[2 * i] = p.get_f64("w-target") / hass::pruning::MAX_SPARSITY;
+        x[2 * i + 1] = p.get_f64("a-target") / hass::pruning::MAX_SPARSITY;
+    }
+    let plan = PruningPlan::from_unit_point(&x, &sparsity);
+    let points = plan.points(&sparsity);
+
+    let t0 = std::time::Instant::now();
+    let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    println!(
+        "[dse] {} on {}: {:.0} img/s | {} DSP | {} kLUT | DSE in {:?}\n",
+        net.name,
+        dev.name,
+        d.images_per_sec(&dev),
+        d.resources.dsp,
+        d.resources.lut / 1000,
+        t0.elapsed()
+    );
+
+    // Fig. 4: allocation across the 3x3 conv layers
+    println!("{:<22} {:>5} {:>9} {:>7} {:>7} {:>9}", "3x3 conv layer", "S̄", "MAC/SPE", "i_par", "o_par", "#SPE");
+    for ((l, des), pt) in net.compute_layers().iter().zip(&d.designs).zip(&points) {
+        if let Op::Conv { kernel: 3, groups: 1, .. } = l.op {
+            println!(
+                "{:<22} {:>5.2} {:>9} {:>7} {:>7} {:>9}",
+                l.name,
+                pt.pair_sparsity(),
+                des.n_mac,
+                des.i_par,
+                des.o_par,
+                des.engines()
+            );
+        }
+    }
+
+    // simulator validation (small geometries only: the sim is per-group)
+    if net.compute_layers().iter().map(|l| l.outputs_per_image()).sum::<usize>() < 3_000_000 {
+        let cfgs = stages_from_design(&net, &d.designs, &points, rm.fifo_depth);
+        let rep = simulate(&net, &cfgs, 3, SparsityDynamics::Deterministic);
+        println!(
+            "\n[sim] {:.3e} img/cyc vs model {:.3e} ({:+.2}%)",
+            rep.throughput,
+            d.throughput,
+            (rep.throughput / d.throughput - 1.0) * 100.0
+        );
+    } else {
+        println!("\n[sim] geometry too large for the per-group simulator demo; see `model_vs_sim` bench");
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end HASS driver (`hass-e2e` in DESIGN.md §5).
+//!
+//! Proves the whole three-layer stack composes on a real workload:
+//!
+//! * the AOT CalibNet artifact (JAX L2 + Pallas L1, compiled at build
+//!   time) is loaded by the PJRT runtime — Python is not running;
+//! * the TPE search (Eq. 6) proposes per-layer thresholds, *measures*
+//!   accuracy and sparsity counters through PJRT, and prices each design
+//!   with the DSE on a U250-class budget;
+//! * the winning design is cross-checked with the cycle-level simulator.
+//!
+//! Run: `make artifacts && cargo run --release --example hass_search`
+//! Flags: `--iters N --batches K --seed S --journal results/e2e.csv`
+
+use hass::arch::networks;
+use hass::coordinator::{search, MeasuredEvaluator, SearchConfig, SearchMode};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::runtime::ModelRuntime;
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("end-to-end HASS search over the AOT CalibNet artifact")
+        .opt("iters", "32", "TPE iterations")
+        .opt("batches", "4", "calibration batches per evaluation (64 imgs each)")
+        .opt("seed", "0", "search seed")
+        .opt("device", "u250", "device budget")
+        .opt("journal", "results/e2e_search.csv", "journal CSV path");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = match cli.parse_from(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    // ---- load the AOT artifact (build-time Python output) -----------
+    let rt = match ModelRuntime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "[e2e] artifact {} | dense val acc {:.2}% | {} calib images",
+        rt.meta.model,
+        rt.meta.dense_val_accuracy * 100.0,
+        rt.meta.n_calib
+    );
+
+    // ---- search ------------------------------------------------------
+    let net = networks::calibnet();
+    let dev = DeviceBudget::by_name(p.get("device")).expect("device");
+    let rm = ResourceModel::default();
+    let cfg = SearchConfig {
+        iterations: p.get_usize("iters"),
+        seed: p.get_u64("seed"),
+        mode: SearchMode::HardwareAware,
+        ..Default::default()
+    };
+    let ev = MeasuredEvaluator::new(rt, p.get_usize("batches"));
+    let t0 = std::time::Instant::now();
+    let result = search(&ev, &net, &rm, &dev, &cfg);
+    let wall = t0.elapsed();
+    let b = result.best_record();
+    println!(
+        "[e2e] {} iterations in {wall:?} ({:.2} s/iter)",
+        cfg.iterations,
+        wall.as_secs_f64() / cfg.iterations as f64
+    );
+    println!(
+        "[e2e] best @ iter {}: accuracy {:.2}% (dense {:.2}%) | avg sparsity {:.3}",
+        b.iter,
+        b.accuracy,
+        ev.base_accuracy_public(),
+        b.avg_sparsity
+    );
+    println!(
+        "[e2e] hardware: {:.0} img/s | {} DSP | {:.3e} img/cycle/DSP (dense ref {:.0} img/s)",
+        b.images_per_sec, b.dsp, b.efficiency, result.dense_images_per_sec
+    );
+
+    // ---- cross-check the winner against the cycle simulator ----------
+    let plan = &b.plan;
+    let ev_point = hass::coordinator::Evaluate::eval(&ev, plan);
+    let design = hass::dse::explore(&net, &ev_point.points, &rm, &dev, &cfg.dse);
+    let cfgs = stages_from_design(&net, &design.designs, &ev_point.points, rm.fifo_depth);
+    let det = simulate(&net, &cfgs, 4, SparsityDynamics::Deterministic);
+    let sto = simulate(&net, &cfgs, 4, SparsityDynamics::Stochastic { seed: 7 });
+    println!(
+        "[e2e] simulator check: deterministic {:.3e} img/cyc vs model {:.3e} ({:+.1}%); \
+         with run-time sparsity variance {:.3e} ({:+.1}%)",
+        det.throughput,
+        design.throughput,
+        (det.throughput / design.throughput - 1.0) * 100.0,
+        sto.throughput,
+        (sto.throughput / design.throughput - 1.0) * 100.0,
+    );
+
+    // ---- journal ------------------------------------------------------
+    let journal = p.get("journal");
+    if !journal.is_empty() {
+        if let Some(dir) = std::path::Path::new(journal).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(journal, result.to_table().to_csv()).expect("write journal");
+        println!("[e2e] journal -> {journal}");
+    }
+}
+
+/// Small helper so the example can print the dense baseline accuracy.
+trait BaseAcc {
+    fn base_accuracy_public(&self) -> f64;
+}
+
+impl BaseAcc for MeasuredEvaluator {
+    fn base_accuracy_public(&self) -> f64 {
+        hass::coordinator::Evaluate::base_accuracy(self)
+    }
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the three core objects of the HASS library in ~60 lines.
+//!
+//! 1. a [`Network`] geometry (here: torchvision ResNet-18),
+//! 2. its per-layer sparsity operating points,
+//! 3. the DSE that turns both into an accelerator design.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hass::arch::networks;
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::pruning::{self, PruningPlan};
+use hass::sparsity::synthesize;
+
+fn main() {
+    // -- 1. a workload geometry --------------------------------------
+    let net = networks::resnet18();
+    println!(
+        "{}: {} layers ({} compute), {:.2} GMACs, {:.1}M params",
+        net.name,
+        net.layers.len(),
+        net.compute_layers().len(),
+        net.total_macs() as f64 / 1e9,
+        net.total_weights() as f64 / 1e6
+    );
+
+    // -- 2. sparsity: one-shot magnitude pruning at 60%/natural -------
+    let sparsity = synthesize(&net, /*seed=*/ 1);
+    let n = sparsity.layers.len();
+    let mut x = vec![0.0; 2 * n];
+    for i in 0..n {
+        x[2 * i] = 0.6 / pruning::MAX_SPARSITY; // weight-sparsity target 0.6
+        x[2 * i + 1] = 0.0; // activations: natural zeros only
+    }
+    let plan = PruningPlan::from_unit_point(&x, &sparsity);
+    let points = plan.points(&sparsity);
+    let m = pruning::metrics(&net, &points);
+    println!(
+        "pruned: avg sparsity {:.3}, operation density {:.3}, weight sparsity {:.3}",
+        m.avg_sparsity, m.op_density, m.weight_sparsity
+    );
+
+    // -- 3. hardware: DSE onto an Alveo U250 --------------------------
+    let dev = DeviceBudget::u250();
+    let rm = ResourceModel::default();
+    let design = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    println!(
+        "design: {:.0} img/s | {} DSP | {} kLUT | {} BRAM18k | {:.3e} img/cycle/DSP",
+        design.images_per_sec(&dev),
+        design.resources.dsp,
+        design.resources.lut / 1000,
+        design.resources.bram18k,
+        design.efficiency()
+    );
+
+    // dense reference for the speedup headline (Fig. 6's view)
+    let dense_pts = vec![hass::sparsity::SparsityPoint::DENSE; n];
+    let dense = explore(&net, &dense_pts, &rm, &dev, &DseConfig::default());
+    println!(
+        "dense reference: {:.0} img/s -> sparse speedup {:.2}x",
+        dense.images_per_sec(&dev),
+        design.images_per_sec(&dev) / dense.images_per_sec(&dev)
+    );
+}

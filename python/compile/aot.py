@@ -1,0 +1,244 @@
+"""AOT compile path: train -> fold -> lower -> emit artifacts.
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 serialises HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts (all consumed by the Rust coordinator, never by Python again):
+
+  model.hlo.txt        inference+stats, B=64, thresholds as runtime inputs
+  train_step.hlo.txt   one masked-SGD fine-tuning step (extension feature)
+  weights.bin          folded + Q8.8-quantised params, f32 LE, meta order
+  calib_images.bin     calibration/validation images, f32 LE
+  calib_labels.bin     labels, i32 LE
+  meta.json            layer table, input order, |w|/|a| quantiles, golden
+                       outputs for Rust integration tests
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common, dataset, model, train
+
+EXPORT_BLOCK_M = 8192  # interpret-mode grid amortisation; see §Perf
+QUANTILE_PTS = [i / 20.0 for i in range(21)]
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ------------------------------------------------------- exported graphs
+
+
+def make_infer_fn(batch):
+    """(images, w0, b0, ..., w9, b9, tau_w, tau_a) -> 4-tuple outputs."""
+
+    def fn(images, *rest):
+        flat, tw, ta = rest[:-2], rest[-2], rest[-1]
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(common.NUM_LAYERS)]
+        return model.forward(params, images, tw, ta, block_m=EXPORT_BLOCK_M)
+
+    args = [jax.ShapeDtypeStruct((batch, common.IMG_SIZE, common.IMG_SIZE,
+                                  common.IMG_CHANNELS), jnp.float32)]
+    for spec in common.LAYERS:
+        args.append(jax.ShapeDtypeStruct(spec.weight_shape(), jnp.float32))
+        args.append(jax.ShapeDtypeStruct((spec.cout,), jnp.float32))
+    args += [jax.ShapeDtypeStruct((common.NUM_LAYERS,), jnp.float32)] * 2
+    return fn, args
+
+
+def make_train_step_fn(batch):
+    """One masked-SGD step on the folded network (fine-tuning extension).
+
+    Weight clipping inside the forward means pruned weights receive zero
+    gradient (d/dw where(|w|>=tau, w, 0) is the keep-mask), i.e. masked
+    fine-tuning with the one-shot mask — the paper's future-work item.
+    """
+
+    def fn(images, labels, *rest):
+        flat, tw, ta, lr = rest[:-3], rest[-3], rest[-2], rest[-1]
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(common.NUM_LAYERS)]
+
+        def loss_fn(params):
+            logits, _, _, _ = model.forward(
+                params, images, tw, ta, quantize=False, use_pallas=False
+            )
+            one_hot = jax.nn.one_hot(labels, common.NUM_CLASSES)
+            return -jnp.mean(jnp.sum(one_hot * jax.nn.log_softmax(logits), axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        out = []
+        for w, b in new:
+            out += [w, b]
+        return tuple(out) + (loss,)
+
+    args = [
+        jax.ShapeDtypeStruct((batch, common.IMG_SIZE, common.IMG_SIZE,
+                              common.IMG_CHANNELS), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    for spec in common.LAYERS:
+        args.append(jax.ShapeDtypeStruct(spec.weight_shape(), jnp.float32))
+        args.append(jax.ShapeDtypeStruct((spec.cout,), jnp.float32))
+    args += [jax.ShapeDtypeStruct((common.NUM_LAYERS,), jnp.float32)] * 2
+    args.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return fn, args
+
+
+# ------------------------------------------------------------ statistics
+
+
+def weight_quantiles(folded):
+    """Per-layer |w| quantiles (post-quantisation) for threshold mapping."""
+    out = []
+    for w, _ in folded:
+        a = np.abs(np.asarray(w)).ravel()
+        out.append(np.quantile(a, QUANTILE_PTS).tolist())
+    return out
+
+
+def activation_quantiles(folded, images):
+    """Per-layer |a| quantiles of each layer's input activation at tau=0."""
+    # Instrument via the oracle path (cheap, no pallas) with zero thresholds;
+    # collect inputs by re-running forward and capturing pre-conv tensors.
+    taus = jnp.zeros((common.NUM_LAYERS,))
+    acts = {}
+
+    orig_layer = model._layer
+
+    def capture_layer(idx, x, w, b, tau_w, tau_a, **kw):
+        acts[idx] = np.abs(np.asarray(model.fxp_quantize(x))).ravel()
+        return orig_layer(idx, x, w, b, tau_w, tau_a, **kw)
+
+    model._layer = capture_layer
+    try:
+        model.forward(folded, images, taus, taus, use_pallas=False)
+    finally:
+        model._layer = orig_layer
+    return [np.quantile(acts[i], QUANTILE_PTS).tolist()
+            for i in range(common.NUM_LAYERS)]
+
+
+# ----------------------------------------------------------------- main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True, help="path of model.hlo.txt; "
+                    "all other artifacts land in its directory")
+    ap.add_argument("--epochs", type=int, default=18)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    # 1. data ------------------------------------------------------------
+    (tx, ty), (vx, vy) = dataset.train_val()
+    vx.astype("<f4").tofile(os.path.join(outdir, "calib_images.bin"))
+    vy.astype("<i4").tofile(os.path.join(outdir, "calib_labels.bin"))
+
+    # 2. train + fold + quantise ------------------------------------------
+    params, state, dense_acc = train.train(
+        (tx, ty), (vx, vy), epochs=args.epochs, seed=args.seed,
+        verbose=not args.quiet,
+    )
+    print(f"[aot] dense val accuracy: {dense_acc:.4f}")
+    folded = train.fold_bn(params, state)
+    folded = [(model.fxp_quantize(w), model.fxp_quantize(b)) for w, b in folded]
+
+    # 3. weights.bin + meta ------------------------------------------------
+    blobs, layer_meta, off = [], [], 0
+    for spec, (w, b) in zip(common.LAYERS, folded):
+        wa = np.asarray(w, dtype="<f4")
+        ba = np.asarray(b, dtype="<f4")
+        layer_meta.append({
+            "name": spec.name, "kind": spec.kind, "kernel": spec.kernel,
+            "stride": spec.stride, "cin": spec.cin, "cout": spec.cout,
+            "in_hw": spec.in_hw, "out_hw": spec.out_hw,
+            "patch_k": spec.patch_k(), "macs_per_image": spec.macs_per_image(),
+            "weight_shape": list(wa.shape),
+            "w_offset": off, "w_size": wa.size,
+            "b_offset": off + wa.size, "b_size": ba.size,
+        })
+        off += wa.size + ba.size
+        blobs += [wa, ba]
+    np.concatenate([b.ravel() for b in blobs]).tofile(
+        os.path.join(outdir, "weights.bin"))
+
+    # 4. golden outputs for Rust integration tests ------------------------
+    b = common.EXPORT_BATCH
+    imgs = jnp.asarray(vx[:b])
+    tau0 = jnp.zeros((common.NUM_LAYERS,))
+    tau_ref = jnp.full((common.NUM_LAYERS,), 0.05)
+    g_logits0, g_sw0, g_sa0, g_d0 = model.forward(
+        folded, imgs, tau0, tau0, block_m=EXPORT_BLOCK_M)
+    g_logits1, g_sw1, g_sa1, g_d1 = model.forward(
+        folded, imgs, tau_ref, tau_ref, block_m=EXPORT_BLOCK_M)
+    golden = {
+        "batch": b,
+        "tau_ref": 0.05,
+        "logits_sum_tau0": float(jnp.sum(g_logits0)),
+        "acc_tau0": float(model.accuracy(g_logits0, jnp.asarray(vy[:b]))),
+        "s_w_tau_ref": np.asarray(g_sw1).tolist(),
+        "s_a_tau_ref": np.asarray(g_sa1).tolist(),
+        "pair_density_tau_ref": np.asarray(g_d1).tolist(),
+        "pair_density_tau0": np.asarray(g_d0).tolist(),
+        "logits_first8_tau_ref": np.asarray(g_logits1[0, :8]).tolist(),
+    }
+
+    # 5. lower + emit HLO --------------------------------------------------
+    infer_fn, infer_args = make_infer_fn(common.EXPORT_BATCH)
+    hlo = to_hlo_text(jax.jit(infer_fn).lower(*infer_args))
+    with open(args.out, "w") as f:
+        f.write(hlo)
+    print(f"[aot] wrote {args.out} ({len(hlo)} chars)")
+
+    ts_fn, ts_args = make_train_step_fn(common.TRAIN_BATCH)
+    hlo_ts = to_hlo_text(jax.jit(ts_fn).lower(*ts_args))
+    ts_path = os.path.join(outdir, "train_step.hlo.txt")
+    with open(ts_path, "w") as f:
+        f.write(hlo_ts)
+    print(f"[aot] wrote {ts_path} ({len(hlo_ts)} chars)")
+
+    meta = {
+        "format_version": 1,
+        "model": "calibnet-resnet8",
+        "export_batch": common.EXPORT_BATCH,
+        "train_batch": common.TRAIN_BATCH,
+        "num_layers": common.NUM_LAYERS,
+        "num_classes": common.NUM_CLASSES,
+        "img_size": common.IMG_SIZE,
+        "img_channels": common.IMG_CHANNELS,
+        "block_m": EXPORT_BLOCK_M,
+        "fxp_scale": common.FXP_SCALE,
+        "dense_val_accuracy": float(dense_acc),
+        "n_calib": int(vx.shape[0]),
+        "quantile_pts": QUANTILE_PTS,
+        "weight_abs_quantiles": weight_quantiles(folded),
+        "act_abs_quantiles": activation_quantiles(folded, imgs),
+        "layers": layer_meta,
+        "input_order": "images, then (w_l, b_l) for l in 0..10, tau_w, tau_a",
+        "output_order": "logits, s_w, s_a, pair_density",
+        "golden": golden,
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("[aot] wrote meta.json; done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Shared architecture/config definitions for the calibration CNN.
+
+The calibration network ("CalibNet") is the small, *really executed*
+network of the HASS reproduction: it is trained at `make artifacts` time,
+AOT-lowered (with the Pallas SPE kernel inside) to HLO text, and executed
+by the Rust coordinator via PJRT on every TPE iteration to measure
+accuracy and per-layer weight/activation sparsity under candidate
+thresholds.  See DESIGN.md §1.1 for how its measured statistics transfer
+to the five target network geometries.
+
+Topology — a compact pre-folded (conv + bias) residual net for 32x32x3
+inputs, 10 classes:
+
+  idx  name        kind     k  s  cin  cout  notes
+  0    stem        conv3x3  3  1  3    16
+  1    b1.conv1    conv3x3  3  1  16   16    block 1 (identity shortcut)
+  2    b1.conv2    conv3x3  3  1  16   16
+  3    b2.conv1    conv3x3  3  2  16   32    block 2 (projection shortcut)
+  4    b2.conv2    conv3x3  3  1  32   32
+  5    b2.down     conv1x1  1  2  16   32
+  6    b3.conv1    conv3x3  3  2  32   64    block 3 (projection shortcut)
+  7    b3.conv2    conv3x3  3  1  64   64
+  8    b3.down     conv1x1  1  2  32   64
+  9    fc          linear   -  -  64   10    after global average pool
+
+All 10 layers are prunable; thresholds tau_w[10], tau_a[10] are runtime
+inputs of the AOT artifact.
+"""
+
+import dataclasses
+
+IMG_SIZE = 32
+IMG_CHANNELS = 3
+NUM_CLASSES = 10
+NUM_LAYERS = 10
+EXPORT_BATCH = 64  # batch size of the inference artifact
+TRAIN_BATCH = 128  # batch size of the train-step artifact
+
+# Fixed-point format used by the hardware model (paper: 16-bit fixed).
+# Q8.8: 1 sign + 7 integer + 8 fractional bits.
+FXP_SCALE = 256.0
+FXP_MAX = 127.0 + 255.0 / 256.0
+FXP_MIN = -128.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of one prunable layer of CalibNet."""
+
+    name: str
+    kind: str  # "conv" | "linear"
+    kernel: int
+    stride: int
+    cin: int
+    cout: int
+    in_hw: int  # input spatial size (conv only; 1 for linear)
+
+    @property
+    def out_hw(self):
+        return self.in_hw // self.stride if self.kind == "conv" else 1
+
+    @property
+    def pad(self):
+        return (self.kernel - 1) // 2
+
+    def weight_shape(self):
+        if self.kind == "linear":
+            return (self.cin, self.cout)
+        return (self.kernel, self.kernel, self.cin, self.cout)
+
+    def patch_k(self):
+        """K dimension of the im2col'd matmul."""
+        if self.kind == "linear":
+            return self.cin
+        return self.kernel * self.kernel * self.cin
+
+    def macs_per_image(self):
+        """Dense operation count C_l per image (including zeros)."""
+        if self.kind == "linear":
+            return self.cin * self.cout
+        return self.out_hw * self.out_hw * self.patch_k() * self.cout
+
+
+LAYERS = [
+    ConvSpec("stem", "conv", 3, 1, IMG_CHANNELS, 16, 32),
+    ConvSpec("b1.conv1", "conv", 3, 1, 16, 16, 32),
+    ConvSpec("b1.conv2", "conv", 3, 1, 16, 16, 32),
+    ConvSpec("b2.conv1", "conv", 3, 2, 16, 32, 32),
+    ConvSpec("b2.conv2", "conv", 3, 1, 32, 32, 16),
+    ConvSpec("b2.down", "conv", 1, 2, 16, 32, 32),
+    ConvSpec("b3.conv1", "conv", 3, 2, 32, 64, 16),
+    ConvSpec("b3.conv2", "conv", 3, 1, 64, 64, 8),
+    ConvSpec("b3.down", "conv", 1, 2, 32, 64, 16),
+    ConvSpec("fc", "linear", 0, 0, 64, NUM_CLASSES, 1),
+]
+
+assert len(LAYERS) == NUM_LAYERS
+
+
+def param_sizes():
+    """(weights, bias) element counts per layer, artifact input order."""
+    out = []
+    for spec in LAYERS:
+        w = 1
+        for d in spec.weight_shape():
+            w *= d
+        out.append((w, spec.cout))
+    return out
+
+
+def total_params():
+    return sum(w + b for w, b in param_sizes())

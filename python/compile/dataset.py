@@ -1,0 +1,83 @@
+"""Synthetic 10-class image dataset (ImageNet substitute, DESIGN.md §1).
+
+Calibration in HASS only needs (a) input-dependent activation statistics
+and (b) a non-trivial accuracy response to pruning.  This procedural
+dataset provides both, deterministically: each class is a superposition of
+an oriented grating (class-specific angle/frequency), a class-colored
+Gaussian blob at a class-biased location, and per-sample nuisance
+(phase, amplitude, position jitter, additive noise), so the network must
+learn oriented-frequency and color-location features — pruning those
+features degrades accuracy smoothly and then sharply, like Fig. 1.
+"""
+
+import numpy as np
+
+from . import common
+
+
+def make_dataset(n, seed):
+    """Generate n labelled images.
+
+    Returns:
+      images: (n, 32, 32, 3) f32, roughly zero-mean unit-range
+      labels: (n,) i32 in [0, 10)
+    """
+    rng = np.random.default_rng(seed)
+    s = common.IMG_SIZE
+    yy, xx = np.meshgrid(np.arange(s), np.arange(s), indexing="ij")
+    yy = yy.astype(np.float32)
+    xx = xx.astype(np.float32)
+
+    labels = rng.integers(0, common.NUM_CLASSES, size=n).astype(np.int32)
+    images = np.empty((n, s, s, 3), dtype=np.float32)
+
+    for i in range(n):
+        c = int(labels[i])
+        # --- oriented grating: angle and frequency are class features
+        theta = np.pi * c / common.NUM_CLASSES + rng.normal(0, 0.12)
+        freq = (2.0 + (c % 3)) * (2 * np.pi / s) * rng.uniform(0.9, 1.1)
+        phase = rng.uniform(0, 2 * np.pi)
+        amp = rng.uniform(0.6, 1.0)
+        grating = amp * np.sin(
+            freq * (xx * np.cos(theta) + yy * np.sin(theta)) + phase
+        )
+        # --- class-colored blob at a class-biased location
+        cx = s * (0.25 + 0.5 * ((c * 7) % 10) / 9.0) + rng.normal(0, 2.0)
+        cy = s * (0.25 + 0.5 * ((c * 3) % 10) / 9.0) + rng.normal(0, 2.0)
+        sig = rng.uniform(3.0, 5.0)
+        blob = np.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * sig * sig))
+        color = np.array(
+            [
+                0.5 + 0.5 * np.cos(2 * np.pi * c / 10.0),
+                0.5 + 0.5 * np.cos(2 * np.pi * c / 10.0 + 2.1),
+                0.5 + 0.5 * np.cos(2 * np.pi * c / 10.0 + 4.2),
+            ],
+            dtype=np.float32,
+        )
+        img = (
+            0.6 * grating[..., None] * rng.uniform(0.4, 1.0, size=3).astype(np.float32)
+            + 0.9 * blob[..., None] * color
+        )
+        img += rng.normal(0, 0.55, size=img.shape).astype(np.float32)
+        # occasional distractor blob (wrong color, random spot) to create
+        # genuine class confusions under feature loss
+        if rng.random() < 0.5:
+            dx_, dy_ = rng.uniform(4, 28, size=2)
+            dsig = rng.uniform(2.0, 4.0)
+            dblob = np.exp(-((xx - dx_) ** 2 + (yy - dy_) ** 2) / (2 * dsig * dsig))
+            img += 0.6 * dblob[..., None] * rng.uniform(0, 1, size=3).astype(np.float32)
+        img += rng.uniform(-0.2, 0.2)  # global offset nuisance
+        images[i] = img
+
+    # normalize to zero mean / unit std over the whole set (deterministic
+    # given the seed; the constants are stored implicitly in the data).
+    images -= images.mean()
+    images /= images.std() + 1e-8
+    return images, labels
+
+
+def train_val(seed=20240731, n_train=8192, n_val=2048):
+    """The canonical artifact-build split (val doubles as calibration)."""
+    train = make_dataset(n_train, seed)
+    val = make_dataset(n_val, seed + 1)
+    return train, val

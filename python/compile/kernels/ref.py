@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SPE kernel — the CORE correctness signal.
+
+Everything here is written in the most obvious way possible (boolean
+matmul pair counting included) so it can serve as ground truth for the
+Pallas kernel in `spe.py` under pytest/hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def clip_magnitude(v, tau):
+    """Zero out any value whose magnitude is strictly below tau."""
+    return jnp.where(jnp.abs(v) >= tau, v, jnp.zeros_like(v))
+
+
+def spe_matmul_ref(x, w, tau_w, tau_a):
+    """Reference thresholded sparse matmul.
+
+    Mirrors `spe.spe_matmul`: returns (clip(x) @ clip(w), nnz_pair_count).
+    The pair count is computed with an explicit boolean contraction —
+    deliberately naive.
+    """
+    xc = clip_magnitude(x, tau_a)
+    wc = clip_magnitude(w, tau_w)
+    out = xc @ wc
+    xm = (xc != 0.0).astype(jnp.float32)  # (M, K)
+    wm = (wc != 0.0).astype(jnp.float32)  # (K, N)
+    # pair (m, k, n) counted iff x[m,k] != 0 and w[k,n] != 0
+    nnz_pairs = jnp.sum(xm @ wm)
+    return out, nnz_pairs
+
+
+def sparsity(v):
+    """Fraction of exact zeros in a tensor — the paper's S_w / S_a."""
+    return jnp.mean((v == 0.0).astype(jnp.float32))

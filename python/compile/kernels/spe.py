@@ -1,0 +1,126 @@
+"""L1 — Pallas kernel for the HASS Sparse vector dot-Product Engine (SPE).
+
+The paper's SPE (Fig. 3) is an FPGA structure: *clip* modules zero out any
+weight/activation whose magnitude falls below a configurable threshold,
+*zero-filtering* detects the zeros, non-zero pairs are dispatched to DSP
+MACs by a round-robin arbiter, and a dedicated *counter* tracks skipped
+zeros so the accumulator knows when a dot product is complete.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): there is no per-element
+dynamic scheduling on a TPU, but the paper's core insight — density-scaled
+work with exact zero bookkeeping — survives.  We tile the im2col'd
+convolution as VMEM blocks (BlockSpec plays the role the BRAM→arbiter
+schedule plays on the FPGA), apply the clip thresholds inside the tile on
+the VPU, count the non-zero pairs per tile (the paper's counter — exactly
+the statistic that parameterizes the cycle model Eq. 1), and let the MXU
+consume the clipped (hence exactly-sparse) tile.  The *scheduling* benefit
+of sparsity — fewer cycles per output — is then realized by the L3 hardware
+model precisely as the FPGA arbiter realizes it; this kernel guarantees the
+numerics and the statistics are bit-identical to what that hardware
+computes.
+
+`interpret=True` always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot run.  Correctness is pinned against the pure-jnp
+oracle in `ref.py` (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size along the M (= batch x spatial) dimension.  128 rows of
+# f32 activations with K <= 576 keeps the working set (x-block + w + out)
+# well under VMEM budgets while remaining MXU-shaped (multiples of 8x128
+# lanes); see EXPERIMENTS.md §Perf for the footprint table.
+DEFAULT_BLOCK_M = 128
+
+
+def _spe_kernel(x_ref, w_ref, tw_ref, ta_ref, o_ref, cnt_ref):
+    """One grid step: clip -> zero-filter/count -> MAC a (bm, K)x(K, N) tile.
+
+    x_ref:   (bm, K) activation patch tile (VMEM)
+    w_ref:   (K, N)  weight tile (VMEM, resident across grid steps)
+    tw_ref:  (1, 1)  weight clip threshold (runtime input -> no retrace)
+    ta_ref:  (1, 1)  activation clip threshold
+    o_ref:   (bm, N) output tile
+    cnt_ref: (1, 1)  non-zero *pair* count for this tile (f32 exact for
+             counts < 2^24; checked against the oracle)
+    """
+    tau_a = ta_ref[0, 0]
+    tau_w = tw_ref[0, 0]
+    # Clip modules: zero anything with magnitude strictly below the
+    # threshold (values equal to the threshold survive, matching ref.py).
+    x = x_ref[...]
+    w = w_ref[...]
+    xc = jnp.where(jnp.abs(x) >= tau_a, x, 0.0)
+    wc = jnp.where(jnp.abs(w) >= tau_w, w, 0.0)
+    # MAC array consumes the exactly-sparse tiles (MXU on real hardware).
+    o_ref[...] = jnp.dot(xc, wc, preferred_element_type=jnp.float32)
+    # Zero-filter counter: a pair (m, k, n) is dispatched to a MAC only if
+    # both operands are non-zero.  #pairs = sum_k nnz_col(x, k) * nnz_row(w, k)
+    # — O(K*(bm+N)) instead of a boolean matmul.
+    xnz = jnp.sum((xc != 0.0).astype(jnp.float32), axis=0)  # (K,)
+    wnz = jnp.sum((wc != 0.0).astype(jnp.float32), axis=1)  # (K,)
+    cnt_ref[0, 0] = jnp.dot(xnz, wnz)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def spe_matmul(x, w, tau_w, tau_a, *, block_m=DEFAULT_BLOCK_M):
+    """Thresholded sparse matmul with exact non-zero-pair accounting.
+
+    Args:
+      x: (M, K) f32 activations (im2col patches for a conv layer).
+      w: (K, N) f32 weights.
+      tau_w, tau_a: scalar f32 clip thresholds (runtime values).
+      block_m: tile rows per grid step (static).
+
+    Returns:
+      out:       (M, N) f32 — clip(x) @ clip(w).
+      nnz_pairs: () f32 — number of (m, k, n) multiply pairs where both
+                 operands are non-zero after clipping.  The dense pair count
+                 is M * K * N; the pair density nnz_pairs / (M*K*N) is the
+                 (1 - S̄) of the paper's Eq. 1.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(block_m, m)
+    if m % bm != 0:
+        pad = bm - m % bm
+        # Zero rows are exactly-sparse: they contribute neither output nor
+        # counted pairs, so padding is free in both numerics and statistics.
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        m_p = m + pad
+    else:
+        m_p = m
+    gm = m_p // bm
+    tw = jnp.asarray(tau_w, jnp.float32).reshape(1, 1)
+    ta = jnp.asarray(tau_a, jnp.float32).reshape(1, 1)
+
+    out, cnt = pl.pallas_call(
+        _spe_kernel,
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_p, n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, tw, ta)
+    return out[:m], jnp.sum(cnt)
+
+
+def clip_magnitude(v, tau):
+    """The SPE clip module as a standalone op: zero |v| < tau."""
+    return jnp.where(jnp.abs(v) >= tau, v, jnp.zeros_like(v))

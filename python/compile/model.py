@@ -1,0 +1,137 @@
+"""L2 — the CalibNet forward pass (JAX), routed through the L1 SPE kernel.
+
+This is the computation the Rust coordinator executes on every TPE
+iteration.  The per-layer clip thresholds are *runtime inputs*, so a single
+AOT artifact serves the whole search — Python is never on the search path.
+
+Signature of the exported function (see `aot.py`):
+
+    f(images, w0, b0, ..., w9, b9, tau_w[10], tau_a[10])
+        -> (logits[B,10], S_w[10], S_a[10], pair_density[10])
+
+where S_w/S_a are the measured post-clip zero fractions (the paper's
+sparsity statistics) and pair_density[l] = nnz_pairs / (M*K*N) is the
+(1 - S̄_l) that parameterizes the SPE cycle model (Eq. 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .kernels import ref, spe
+
+
+def fxp_quantize(v):
+    """Fake-quantize to the paper's 16-bit fixed point (Q8.8)."""
+    q = jnp.round(v * common.FXP_SCALE) / common.FXP_SCALE
+    return jnp.clip(q, common.FXP_MIN, common.FXP_MAX)
+
+
+def im2col(x, spec):
+    """Unrolled patch extraction for a conv layer.
+
+    x: (B, H, W, C) -> (B * Ho * Wo, kh * kw * C), ordered so that
+    w.reshape(kh*kw*C, cout) contracts correctly (row-major (dy, dx),
+    channel fastest) — property-tested against lax.conv in test_model.py.
+    """
+    k, s, p = spec.kernel, spec.stride, spec.pad
+    b = x.shape[0]
+    ho = wo = spec.out_hw
+    if p > 0:
+        x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(
+                x[:, dy : dy + s * (ho - 1) + 1 : s, dx : dx + s * (wo - 1) + 1 : s, :]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (B, Ho, Wo, k*k*C)
+    return patches.reshape(b * ho * wo, k * k * spec.cin)
+
+
+def _layer(idx, x, w, b, tau_w, tau_a, *, quantize, block_m, use_pallas):
+    """Run prunable layer `idx` on activation tensor x.
+
+    Returns (pre-activation output tensor, (s_w, s_a, pair_density)).
+    """
+    spec = common.LAYERS[idx]
+    if quantize:
+        x = fxp_quantize(x)
+    tw = tau_w[idx]
+    ta = tau_a[idx]
+    if spec.kind == "linear":
+        patches = x  # (B, cin)
+        w2d = w  # (cin, cout)
+        out_hw = None
+    else:
+        patches = im2col(x, spec)
+        w2d = w.reshape(spec.patch_k(), spec.cout)
+        out_hw = spec.out_hw
+    if use_pallas:
+        out, nnz = spe.spe_matmul(patches, w2d, tw, ta, block_m=block_m)
+    else:
+        out, nnz = ref.spe_matmul_ref(patches, w2d, tw, ta)
+    m = patches.shape[0]
+    total_pairs = m * patches.shape[1] * spec.cout
+    pair_density = nnz / total_pairs
+    # The paper's S_a is measured on the activation *tensor* (the data
+    # crossing the layer interface), S_w on the weight tensor.
+    s_a = ref.sparsity(ref.clip_magnitude(x, ta))
+    s_w = ref.sparsity(ref.clip_magnitude(w2d, tw))
+    out = out + b
+    if out_hw is not None:
+        bsz = x.shape[0]
+        out = out.reshape(bsz, out_hw, out_hw, spec.cout)
+    return out, (s_w, s_a, pair_density)
+
+
+def forward(params, images, tau_w, tau_a, *, quantize=True,
+            block_m=spe.DEFAULT_BLOCK_M, use_pallas=True):
+    """CalibNet forward with per-layer clip thresholds.
+
+    Args:
+      params: list of 10 (w, b) tuples in `common.LAYERS` order (BN already
+        folded — see train.py).
+      images: (B, 32, 32, 3) f32.
+      tau_w, tau_a: (10,) f32 absolute clip thresholds.
+      quantize: apply Q8.8 fake quantization to activations (weights are
+        quantized once at export time).
+      use_pallas: route matmuls through the Pallas SPE kernel (True for the
+        AOT artifact) or the jnp oracle (False; used in tests).
+
+    Returns:
+      logits (B, 10), s_w (10,), s_a (10,), pair_density (10,)
+    """
+    assert len(params) == common.NUM_LAYERS
+    kw = dict(quantize=quantize, block_m=block_m, use_pallas=use_pallas)
+    stats = [None] * common.NUM_LAYERS
+
+    def run(idx, x):
+        w, b = params[idx]
+        out, st = _layer(idx, x, w, b, tau_w, tau_a, **kw)
+        stats[idx] = st
+        return out
+
+    x = run(0, images)
+    x = jax.nn.relu(x)
+    # block 1 (identity shortcut)
+    h = jax.nn.relu(run(1, x))
+    x = jax.nn.relu(run(2, h) + x)
+    # block 2 (projection shortcut, stride 2)
+    h = jax.nn.relu(run(3, x))
+    x = jax.nn.relu(run(4, h) + run(5, x))
+    # block 3 (projection shortcut, stride 2)
+    h = jax.nn.relu(run(6, x))
+    x = jax.nn.relu(run(7, h) + run(8, x))
+    # global average pool + classifier
+    x = jnp.mean(x, axis=(1, 2))  # (B, 64)
+    logits = run(9, x)
+
+    s_w = jnp.stack([s[0] for s in stats])
+    s_a = jnp.stack([s[1] for s in stats])
+    dens = jnp.stack([s[2] for s in stats])
+    return logits, s_w, s_a, dens
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,186 @@
+"""Build-time training of CalibNet (dense, BN) + BN folding.
+
+Runs ONCE inside `make artifacts` (never on the search path).  Trains the
+dense network with batchnorm on the synthetic dataset, then folds BN into
+conv weights/biases so the exported inference model (model.py) is a pure
+conv+bias network — matching standard post-training pruning practice and
+the paper's one-shot, no-fine-tuning setting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------- params
+
+
+def init_params(rng):
+    """He-initialised conv weights + BN (gamma, beta) / fc bias."""
+    params = {}
+    for i, spec in enumerate(common.LAYERS):
+        rng, k = jax.random.split(rng)
+        shape = spec.weight_shape()
+        fan_in = spec.patch_k()
+        w = jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+        if spec.kind == "linear":
+            params[f"w{i}"] = w
+            params[f"b{i}"] = jnp.zeros((spec.cout,))
+        else:
+            params[f"w{i}"] = w
+            params[f"gamma{i}"] = jnp.ones((spec.cout,))
+            params[f"beta{i}"] = jnp.zeros((spec.cout,))
+    return params
+
+
+def init_bn_state():
+    state = {}
+    for i, spec in enumerate(common.LAYERS):
+        if spec.kind == "conv":
+            state[f"mean{i}"] = jnp.zeros((spec.cout,))
+            state[f"var{i}"] = jnp.ones((spec.cout,))
+    return state
+
+
+# --------------------------------------------------------------- forward
+
+
+def _conv(x, w, spec):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(spec.stride, spec.stride),
+        padding=[(spec.pad, spec.pad), (spec.pad, spec.pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(i, y, params, state, train):
+    if train:
+        mean = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+        new = (
+            BN_MOMENTUM * state[f"mean{i}"] + (1 - BN_MOMENTUM) * mean,
+            BN_MOMENTUM * state[f"var{i}"] + (1 - BN_MOMENTUM) * var,
+        )
+    else:
+        mean, var = state[f"mean{i}"], state[f"var{i}"]
+        new = (mean, var)
+    yhat = (y - mean) * jax.lax.rsqrt(var + BN_EPS)
+    return yhat * params[f"gamma{i}"] + params[f"beta{i}"], new
+
+
+def dense_forward(params, state, images, train=False):
+    """Dense (unpruned) forward, BN included. Returns (logits, new_state)."""
+    new_state = dict(state)
+
+    def cbn(i, x):
+        y = _conv(x, params[f"w{i}"], common.LAYERS[i])
+        y, (m, v) = _bn(i, y, params, state, train)
+        new_state[f"mean{i}"], new_state[f"var{i}"] = m, v
+        return y
+
+    x = jax.nn.relu(cbn(0, images))
+    h = jax.nn.relu(cbn(1, x))
+    x = jax.nn.relu(cbn(2, h) + x)
+    h = jax.nn.relu(cbn(3, x))
+    x = jax.nn.relu(cbn(4, h) + cbn(5, x))
+    h = jax.nn.relu(cbn(6, x))
+    x = jax.nn.relu(cbn(7, h) + cbn(8, x))
+    x = jnp.mean(x, axis=(1, 2))
+    logits = x @ params["w9"] + params["b9"]
+    return logits, new_state
+
+
+# -------------------------------------------------------------- training
+
+
+def _loss(params, state, images, labels, wd):
+    logits, new_state = dense_forward(params, state, images, train=True)
+    one_hot = jax.nn.one_hot(labels, common.NUM_CLASSES)
+    ce = -jnp.mean(jnp.sum(one_hot * jax.nn.log_softmax(logits), axis=-1))
+    l2 = sum(jnp.sum(v * v) for k, v in params.items() if k.startswith("w"))
+    return ce + wd * l2, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("wd",))
+def _train_step(params, state, mom, images, labels, lr, wd):
+    (loss, new_state), grads = jax.value_and_grad(_loss, has_aux=True)(
+        params, state, images, labels, wd
+    )
+    new_mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_mom)
+    return new_params, new_state, new_mom, loss
+
+
+@jax.jit
+def _eval_batch(params, state, images, labels):
+    logits, _ = dense_forward(params, state, images, train=False)
+    return jnp.sum((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def evaluate(params, state, images, labels, batch=256):
+    n = images.shape[0]
+    correct = 0.0
+    for i in range(0, n - n % batch, batch):
+        correct += float(
+            _eval_batch(params, state, images[i : i + batch], labels[i : i + batch])
+        )
+    return correct / (n - n % batch)
+
+
+def train(train_set, val_set, *, epochs=18, batch=128, base_lr=0.1, wd=1e-4,
+          seed=0, verbose=True):
+    """Train CalibNet; returns (params, bn_state, val_accuracy)."""
+    tx, ty = train_set
+    params = init_params(jax.random.PRNGKey(seed))
+    state = init_bn_state()
+    mom = jax.tree.map(jnp.zeros_like, params)
+    n = tx.shape[0]
+    steps_per_epoch = n // batch
+    total_steps = epochs * steps_per_epoch
+    rng = np.random.default_rng(seed)
+    step = 0
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch : (i + 1) * batch]
+            xb = jnp.asarray(tx[idx])
+            # light augmentation: random horizontal flip per batch
+            if rng.random() < 0.5:
+                xb = xb[:, :, ::-1, :]
+            lr = base_lr * 0.5 * (1 + np.cos(np.pi * step / total_steps))
+            params, state, mom, loss = _train_step(
+                params, state, mom, xb, jnp.asarray(ty[idx]), lr, wd
+            )
+            step += 1
+        if verbose:
+            acc = evaluate(params, state, *map(jnp.asarray, val_set))
+            print(f"[train] epoch {ep + 1}/{epochs} loss={float(loss):.3f} val_acc={acc:.4f}")
+    val_acc = evaluate(params, state, *map(jnp.asarray, val_set))
+    return params, state, val_acc
+
+
+# --------------------------------------------------------------- folding
+
+
+def fold_bn(params, state):
+    """Fold BN into conv weights/biases -> [(w, b)] in model.forward order."""
+    folded = []
+    for i, spec in enumerate(common.LAYERS):
+        w = params[f"w{i}"]
+        if spec.kind == "linear":
+            folded.append((w, params[f"b{i}"]))
+            continue
+        scale = params[f"gamma{i}"] * jax.lax.rsqrt(state[f"var{i}"] + BN_EPS)
+        w_f = w * scale  # broadcast over cout (last axis of HWIO)
+        b_f = params[f"beta{i}"] - state[f"mean{i}"] * scale
+        folded.append((w_f, b_f))
+    return folded

@@ -1,0 +1,97 @@
+"""AOT path: lowering smoke + artifact invariants (fast, no full training)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, common
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_infer_fn_lowers_to_hlo_text(self):
+        fn, args = aot.make_infer_fn(4)
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_infer_arg_count(self):
+        _, args = aot.make_infer_fn(4)
+        # images + 10 * (w, b) + tau_w + tau_a
+        assert len(args) == 1 + 2 * common.NUM_LAYERS + 2
+
+    def test_train_step_lowers(self):
+        fn, args = aot.make_train_step_fn(4)
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert text.startswith("HloModule")
+
+    def test_train_step_arg_count(self):
+        _, args = aot.make_train_step_fn(4)
+        # images + labels + 10 * (w, b) + tau_w + tau_a + lr
+        assert len(args) == 2 + 2 * common.NUM_LAYERS + 3
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestArtifacts:
+    """Invariants of the real emitted artifacts (post `make artifacts`)."""
+
+    @pytest.fixture(scope="class")
+    def meta(self):
+        with open(os.path.join(ARTIFACT_DIR, "meta.json")) as f:
+            return json.load(f)
+
+    def test_meta_layer_table(self, meta):
+        assert meta["num_layers"] == common.NUM_LAYERS
+        for lm, spec in zip(meta["layers"], common.LAYERS):
+            assert lm["name"] == spec.name
+            assert lm["macs_per_image"] == spec.macs_per_image()
+
+    def test_weights_bin_size(self, meta):
+        total = sum(lm["w_size"] + lm["b_size"] for lm in meta["layers"])
+        sz = os.path.getsize(os.path.join(ARTIFACT_DIR, "weights.bin"))
+        assert sz == total * 4
+
+    def test_calib_set_sizes(self, meta):
+        n = meta["n_calib"]
+        img = os.path.getsize(os.path.join(ARTIFACT_DIR, "calib_images.bin"))
+        lab = os.path.getsize(os.path.join(ARTIFACT_DIR, "calib_labels.bin"))
+        assert img == n * 32 * 32 * 3 * 4
+        assert lab == n * 4
+
+    def test_dense_accuracy_recorded(self, meta):
+        assert meta["dense_val_accuracy"] > 0.7
+
+    def test_quantiles_monotone(self, meta):
+        for q in meta["weight_abs_quantiles"] + meta["act_abs_quantiles"]:
+            assert len(q) == 21
+            assert all(b >= a - 1e-9 for a, b in zip(q, q[1:]))
+
+    def test_golden_block_present(self, meta):
+        g = meta["golden"]
+        assert g["batch"] == common.EXPORT_BATCH
+        assert len(g["s_w_tau_ref"]) == common.NUM_LAYERS
+        assert 0.0 <= g["acc_tau0"] <= 1.0
+
+    def test_hlo_artifacts_exist_and_parse_header(self):
+        for name in ("model.hlo.txt", "train_step.hlo.txt"):
+            p = os.path.join(ARTIFACT_DIR, name)
+            with open(p) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule")
+
+    def test_golden_density_tau0_near_activation_density(self, meta):
+        """At tau=0 pair density reflects natural ReLU sparsity: < 1."""
+        d = meta["golden"]["pair_density_tau0"]
+        assert all(0.0 < x <= 1.0 for x in d)
+        # post-ReLU layers must show natural zeros
+        assert min(d[1:9]) < 0.999

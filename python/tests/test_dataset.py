@@ -1,0 +1,46 @@
+"""Synthetic dataset: determinism, shapes, learnable structure."""
+
+import numpy as np
+
+from compile import common, dataset
+
+
+class TestDataset:
+    def test_shapes_and_dtypes(self):
+        x, y = dataset.make_dataset(64, seed=1)
+        assert x.shape == (64, 32, 32, 3) and x.dtype == np.float32
+        assert y.shape == (64,) and y.dtype == np.int32
+
+    def test_deterministic(self):
+        a = dataset.make_dataset(16, seed=7)
+        b = dataset.make_dataset(16, seed=7)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_seed_changes_data(self):
+        a = dataset.make_dataset(16, seed=7)
+        b = dataset.make_dataset(16, seed=8)
+        assert not np.array_equal(a[0], b[0])
+
+    def test_labels_cover_classes(self):
+        _, y = dataset.make_dataset(500, seed=2)
+        assert set(np.unique(y)) == set(range(common.NUM_CLASSES))
+
+    def test_normalised(self):
+        x, _ = dataset.make_dataset(256, seed=3)
+        assert abs(float(x.mean())) < 0.05
+        assert 0.9 < float(x.std()) < 1.1
+
+    def test_classes_statistically_distinct(self):
+        """Per-class mean images must differ — the classes carry signal."""
+        x, y = dataset.make_dataset(800, seed=4)
+        means = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+        dists = []
+        for i in range(10):
+            for j in range(i + 1, 10):
+                dists.append(np.abs(means[i] - means[j]).mean())
+        assert min(dists) > 0.01
+
+    def test_train_val_split_disjoint_rng(self):
+        (tx, _), (vx, _) = dataset.train_val(n_train=32, n_val=32)
+        assert not np.array_equal(tx[:32], vx[:32])

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas SPE kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/thresholds/distributions; assert_allclose against
+ref.py.  This is the core numerical signal of the whole stack — the AOT
+artifact embeds exactly this kernel.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, spe
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, scale=1.0, sparsify=0.0):
+    v = rng.standard_normal(shape).astype(np.float32) * scale
+    if sparsify > 0:
+        v[rng.random(shape) < sparsify] = 0.0
+    return jnp.asarray(v)
+
+
+# ------------------------------------------------------------ exact cases
+
+
+class TestSpeMatmulBasics:
+    def test_zero_thresholds_is_dense_matmul(self):
+        rng = np.random.default_rng(0)
+        x, w = _rand(rng, (64, 27)), _rand(rng, (27, 16))
+        out, nnz = spe.spe_matmul(x, w, 0.0, 0.0)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-5, atol=1e-5)
+        assert float(nnz) == 64 * 27 * 16
+
+    def test_infinite_threshold_zeroes_everything(self):
+        rng = np.random.default_rng(1)
+        x, w = _rand(rng, (32, 8)), _rand(rng, (8, 4))
+        out, nnz = spe.spe_matmul(x, w, 1e9, 1e9)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+        assert float(nnz) == 0.0
+
+    def test_weight_only_clipping(self):
+        rng = np.random.default_rng(2)
+        x, w = _rand(rng, (16, 8)), _rand(rng, (8, 4))
+        out, _ = spe.spe_matmul(x, w, 0.5, 0.0)
+        wc = np.where(np.abs(np.asarray(w)) >= 0.5, np.asarray(w), 0.0)
+        np.testing.assert_allclose(out, np.asarray(x) @ wc, rtol=1e-5, atol=1e-5)
+
+    def test_activation_only_clipping(self):
+        rng = np.random.default_rng(3)
+        x, w = _rand(rng, (16, 8)), _rand(rng, (8, 4))
+        out, _ = spe.spe_matmul(x, w, 0.0, 0.5)
+        xc = np.where(np.abs(np.asarray(x)) >= 0.5, np.asarray(x), 0.0)
+        np.testing.assert_allclose(out, xc @ np.asarray(w), rtol=1e-5, atol=1e-5)
+
+    def test_threshold_boundary_value_survives(self):
+        # |v| == tau must be kept (>= semantics, matching the oracle)
+        x = jnp.asarray([[0.5, -0.5, 0.49]], dtype=jnp.float32)
+        w = jnp.ones((3, 1), dtype=jnp.float32)
+        out, nnz = spe.spe_matmul(x, w, 0.0, 0.5)
+        assert float(out[0, 0]) == 0.0  # 0.5 - 0.5 + 0
+        assert float(nnz) == 2.0
+
+    def test_pair_count_hand_computed(self):
+        # x row [1, 0], w = [[1, 1], [1, 1]] -> pairs via k=0 only: 1*2 = 2
+        x = jnp.asarray([[1.0, 0.0]])
+        w = jnp.ones((2, 2), dtype=jnp.float32)
+        _, nnz = spe.spe_matmul(x, w, 0.0, 0.0)
+        assert float(nnz) == 2.0
+
+    def test_padding_rows_not_counted(self):
+        # M=3 with block_m=2 pads one zero row; count must ignore it
+        rng = np.random.default_rng(4)
+        x, w = _rand(rng, (3, 5)), _rand(rng, (5, 4))
+        out, nnz = spe.spe_matmul(x, w, 0.0, 0.0, block_m=2)
+        _, nnz_ref = ref.spe_matmul_ref(x, w, 0.0, 0.0)
+        assert float(nnz) == float(nnz_ref)
+        np.testing.assert_allclose(out, np.asarray(x) @ np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("block_m", [1, 2, 7, 16, 64, 1024])
+    def test_block_size_invariance(self, block_m):
+        rng = np.random.default_rng(5)
+        x, w = _rand(rng, (33, 12), sparsify=0.4), _rand(rng, (12, 6), sparsify=0.4)
+        out, nnz = spe.spe_matmul(x, w, 0.3, 0.2, block_m=block_m)
+        out_r, nnz_r = ref.spe_matmul_ref(x, w, 0.3, 0.2)
+        np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-5)
+        assert float(nnz) == float(nnz_r)
+
+
+# ------------------------------------------------------- hypothesis sweep
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(1, 96))
+    k = draw(st.integers(1, 48))
+    n = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    tau_w = draw(st.floats(0.0, 2.0))
+    tau_a = draw(st.floats(0.0, 2.0))
+    scale = draw(st.sampled_from([0.1, 1.0, 10.0]))
+    sparsify = draw(st.sampled_from([0.0, 0.3, 0.8]))
+    block_m = draw(st.sampled_from([8, 32, 128]))
+    return m, k, n, seed, tau_w, tau_a, scale, sparsify, block_m
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(matmul_case())
+def test_kernel_matches_oracle(case):
+    m, k, n, seed, tau_w, tau_a, scale, sparsify, block_m = case
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), scale=scale, sparsify=sparsify)
+    w = _rand(rng, (k, n), scale=scale, sparsify=sparsify)
+    out, nnz = spe.spe_matmul(x, w, tau_w, tau_a, block_m=block_m)
+    out_r, nnz_r = ref.spe_matmul_ref(x, w, tau_w, tau_a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4 * scale * scale * k)
+    assert float(nnz) == float(nnz_r)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.5),
+                  st.floats(0.0, 1.5))
+def test_pair_density_bounds_and_monotonicity(seed, t1, t2):
+    """Pair count is monotone non-increasing in either threshold."""
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (24, 16)), _rand(rng, (16, 8))
+    lo, hi = sorted([t1, t2])
+    _, n_lo = spe.spe_matmul(x, w, lo, lo)
+    _, n_hi = spe.spe_matmul(x, w, hi, hi)
+    total = 24 * 16 * 8
+    assert 0.0 <= float(n_hi) <= float(n_lo) <= total
+
+
+# ---------------------------------------------------------------- dtypes
+
+
+class TestDtypes:
+    def test_bfloat16_inputs_upcast(self):
+        rng = np.random.default_rng(7)
+        x = _rand(rng, (16, 8)).astype(jnp.bfloat16).astype(jnp.float32)
+        w = _rand(rng, (8, 4)).astype(jnp.bfloat16).astype(jnp.float32)
+        out, nnz = spe.spe_matmul(x, w, 0.1, 0.1)
+        out_r, nnz_r = ref.spe_matmul_ref(x, w, 0.1, 0.1)
+        np.testing.assert_allclose(out, out_r, rtol=1e-4, atol=1e-4)
+        assert float(nnz) == float(nnz_r)
+
+    def test_fixed_point_grid_values(self):
+        # Q8.8-quantized values: counts must be exact, outputs exact-ish
+        rng = np.random.default_rng(8)
+        x = jnp.round(_rand(rng, (32, 16)) * 256) / 256
+        w = jnp.round(_rand(rng, (16, 8)) * 256) / 256
+        tau = 10 / 256.0
+        out, nnz = spe.spe_matmul(x, w, tau, tau)
+        out_r, nnz_r = ref.spe_matmul_ref(x, w, tau, tau)
+        np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-6)
+        assert float(nnz) == float(nnz_r)
+
+
+def test_clip_magnitude_matches_ref():
+    rng = np.random.default_rng(9)
+    v = _rand(rng, (100,))
+    np.testing.assert_array_equal(
+        np.asarray(spe.clip_magnitude(v, 0.7)),
+        np.asarray(ref.clip_magnitude(v, 0.7)),
+    )

@@ -1,0 +1,214 @@
+"""L2 correctness: CalibNet forward — shapes, im2col, stats, quantisation."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_params(seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    params = []
+    for spec in common.LAYERS:
+        w = rng.standard_normal(spec.weight_shape()).astype(np.float32) * scale
+        b = rng.standard_normal((spec.cout,)).astype(np.float32) * 0.01
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+    return params
+
+
+@pytest.fixture(scope="module")
+def params():
+    return rand_params()
+
+
+@pytest.fixture(scope="module")
+def images():
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.standard_normal((4, 32, 32, 3)).astype(np.float32))
+
+
+ZERO = jnp.zeros((common.NUM_LAYERS,))
+
+
+# ----------------------------------------------------------------- im2col
+
+
+class TestIm2col:
+    @pytest.mark.parametrize("idx", range(9))
+    def test_matches_lax_conv(self, idx):
+        """im2col @ reshaped-w must equal lax.conv for every conv layer."""
+        spec = common.LAYERS[idx]
+        rng = np.random.default_rng(idx)
+        x = jnp.asarray(rng.standard_normal(
+            (2, spec.in_hw, spec.in_hw, spec.cin)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal(
+            spec.weight_shape()).astype(np.float32))
+        patches = model.im2col(x, spec)
+        got = (patches @ w.reshape(spec.patch_k(), spec.cout)).reshape(
+            2, spec.out_hw, spec.out_hw, spec.cout)
+        want = jax.lax.conv_general_dilated(
+            x, w, (spec.stride, spec.stride),
+            [(spec.pad, spec.pad)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_patch_shape(self):
+        spec = common.LAYERS[0]
+        x = jnp.zeros((3, 32, 32, 3))
+        assert model.im2col(x, spec).shape == (3 * 32 * 32, 27)
+
+    def test_strided_patch_shape(self):
+        spec = common.LAYERS[3]  # stride 2, 16 -> 32
+        x = jnp.zeros((2, 32, 32, 16))
+        assert model.im2col(x, spec).shape == (2 * 16 * 16, 144)
+
+
+# ---------------------------------------------------------------- forward
+
+
+class TestForward:
+    def test_output_shapes(self, params, images):
+        logits, s_w, s_a, dens = model.forward(params, images, ZERO, ZERO,
+                                               use_pallas=False)
+        assert logits.shape == (4, common.NUM_CLASSES)
+        assert s_w.shape == s_a.shape == dens.shape == (common.NUM_LAYERS,)
+
+    def test_pallas_and_oracle_paths_agree(self, params, images):
+        tw = jnp.full((10,), 0.03)
+        ta = jnp.full((10,), 0.08)
+        a = model.forward(params, images, tw, ta, use_pallas=True)
+        b = model.forward(params, images, tw, ta, use_pallas=False)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-4, atol=1e-4)
+        for i in range(1, 4):
+            np.testing.assert_allclose(a[i], b[i], rtol=1e-5, atol=1e-6)
+
+    def test_stats_in_unit_range(self, params, images):
+        tw = jnp.full((10,), 0.05)
+        ta = jnp.full((10,), 0.05)
+        _, s_w, s_a, dens = model.forward(params, images, tw, ta,
+                                          use_pallas=False)
+        for v in (s_w, s_a, dens):
+            assert np.all(np.asarray(v) >= 0.0) and np.all(np.asarray(v) <= 1.0)
+
+    def test_zero_thresholds_give_zero_weight_sparsity(self, params, images):
+        _, s_w, _, _ = model.forward(params, images, ZERO, ZERO,
+                                     use_pallas=False)
+        # random normal weights have no exact zeros
+        np.testing.assert_array_equal(np.asarray(s_w), 0.0)
+
+    def test_sparsity_monotone_in_threshold(self, params, images):
+        outs = []
+        for t in [0.0, 0.05, 0.2]:
+            _, s_w, s_a, dens = model.forward(
+                params, images, jnp.full((10,), t), jnp.full((10,), t),
+                use_pallas=False)
+            outs.append((np.asarray(s_w), np.asarray(s_a), np.asarray(dens)))
+        for a, b in zip(outs, outs[1:]):
+            assert np.all(b[0] >= a[0])  # S_w non-decreasing
+            assert np.all(b[1] >= a[1])  # S_a non-decreasing
+            assert np.all(b[2] <= a[2] + 1e-6)  # density non-increasing
+
+    def test_huge_threshold_kills_network(self, params, images):
+        t = jnp.full((10,), 1e9)
+        logits, s_w, s_a, dens = model.forward(params, images, t, t,
+                                               use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(s_w), 1.0)
+        np.testing.assert_array_equal(np.asarray(dens), 0.0)
+
+    def test_per_layer_threshold_is_local(self, params, images):
+        """Raising only layer 7's tau_w must not change earlier stats."""
+        tw = np.zeros(10, np.float32)
+        base = model.forward(params, images, jnp.asarray(tw), ZERO,
+                             use_pallas=False)
+        tw[7] = 0.5
+        mod = model.forward(params, images, jnp.asarray(tw), ZERO,
+                            use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(base[1][:7]),
+                                      np.asarray(mod[1][:7]))
+        assert float(mod[1][7]) > float(base[1][7])
+
+    def test_batch_size_one(self, params):
+        img = jnp.zeros((1, 32, 32, 3))
+        logits, *_ = model.forward(params, img, ZERO, ZERO, use_pallas=False)
+        assert logits.shape == (1, common.NUM_CLASSES)
+
+
+# ----------------------------------------------------------- quantisation
+
+
+class TestQuantisation:
+    def test_fxp_idempotent(self):
+        rng = np.random.default_rng(1)
+        v = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+        q = model.fxp_quantize(v)
+        np.testing.assert_array_equal(np.asarray(model.fxp_quantize(q)),
+                                      np.asarray(q))
+
+    def test_fxp_grid(self):
+        v = jnp.asarray([0.1, -0.30078125, 200.0, -200.0], dtype=jnp.float32)
+        q = np.asarray(model.fxp_quantize(v))
+        assert q[0] == pytest.approx(np.round(0.1 * 256) / 256)
+        assert q[1] == -0.30078125  # already on grid
+        assert q[2] == common.FXP_MAX and q[3] == common.FXP_MIN
+
+    def test_quantize_changes_logits_but_little(self, params, images):
+        a = model.forward(params, images, ZERO, ZERO, quantize=True,
+                          use_pallas=False)
+        b = model.forward(params, images, ZERO, ZERO, quantize=False,
+                          use_pallas=False)
+        diff = np.abs(np.asarray(a[0]) - np.asarray(b[0])).max()
+        assert 0.0 < diff < 0.5
+
+
+# -------------------------------------------------------------- hypothesis
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(st.integers(0, 10_000), st.floats(0, 0.3), st.floats(0, 0.3))
+def test_forward_finite_and_consistent(seed, tw, ta):
+    params = rand_params(seed % 7)
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+    tws = jnp.full((10,), tw)
+    tas = jnp.full((10,), ta)
+    logits, s_w, s_a, dens = model.forward(params, imgs, tws, tas,
+                                           use_pallas=False)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.all((np.asarray(dens) >= 0) & (np.asarray(dens) <= 1))
+
+
+# ------------------------------------------------------------ common spec
+
+
+class TestCommonSpec:
+    def test_layer_count(self):
+        assert len(common.LAYERS) == 10
+
+    def test_macs_per_image_stem(self):
+        # 32*32 outputs * 27 patch * 16 filters
+        assert common.LAYERS[0].macs_per_image() == 32 * 32 * 27 * 16
+
+    def test_macs_per_image_fc(self):
+        assert common.LAYERS[9].macs_per_image() == 64 * 10
+
+    def test_total_params_reasonable(self):
+        assert 70_000 < common.total_params() < 90_000
+
+    def test_out_hw_strides(self):
+        assert [s.out_hw for s in common.LAYERS[:9]] == [32, 32, 32, 16, 16,
+                                                         16, 8, 8, 8]
+
+    def test_param_sizes_match_shapes(self):
+        for (w, b), spec in zip(common.param_sizes(), common.LAYERS):
+            assert b == spec.cout
+            prod = 1
+            for d in spec.weight_shape():
+                prod *= d
+            assert w == prod

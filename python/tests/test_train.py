@@ -1,0 +1,85 @@
+"""Training + BN folding correctness (build-time path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, dataset, model, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def tiny_run():
+    (tx, ty), (vx, vy) = dataset.train_val(n_train=1536, n_val=256)
+    params, state, acc = train.train((tx, ty), (vx, vy), epochs=3,
+                                     verbose=False)
+    return params, state, acc, (vx, vy)
+
+
+class TestTraining:
+    def test_init_shapes(self):
+        params = train.init_params(jax.random.PRNGKey(0))
+        for i, spec in enumerate(common.LAYERS):
+            assert params[f"w{i}"].shape == spec.weight_shape()
+            if spec.kind == "conv":
+                assert params[f"gamma{i}"].shape == (spec.cout,)
+
+    def test_learns_above_chance(self, tiny_run):
+        _, _, acc, _ = tiny_run
+        assert acc > 0.3  # 10 classes, chance = 0.1
+
+    def test_dense_forward_shapes(self, tiny_run):
+        params, state, _, (vx, _) = tiny_run
+        logits, _ = train.dense_forward(params, state, jnp.asarray(vx[:8]))
+        assert logits.shape == (8, common.NUM_CLASSES)
+
+    def test_bn_state_updated_in_train_mode(self):
+        params = train.init_params(jax.random.PRNGKey(0))
+        state = train.init_bn_state()
+        x = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((8, 32, 32, 3)).astype(np.float32))
+        _, new_state = train.dense_forward(params, state, x, train=True)
+        assert not np.allclose(np.asarray(new_state["mean0"]),
+                               np.asarray(state["mean0"]))
+
+    def test_bn_state_frozen_in_eval_mode(self):
+        params = train.init_params(jax.random.PRNGKey(0))
+        state = train.init_bn_state()
+        x = jnp.zeros((4, 32, 32, 3))
+        _, new_state = train.dense_forward(params, state, x, train=False)
+        np.testing.assert_array_equal(np.asarray(new_state["mean0"]),
+                                      np.asarray(state["mean0"]))
+
+
+class TestFolding:
+    def test_fold_exactness(self, tiny_run):
+        """Folded conv+bias forward == dense BN forward in eval mode."""
+        params, state, _, (vx, _) = tiny_run
+        folded = train.fold_bn(params, state)
+        imgs = jnp.asarray(vx[:16])
+        want, _ = train.dense_forward(params, state, imgs, train=False)
+        got, *_ = model.forward(folded, imgs,
+                                jnp.zeros(10), jnp.zeros(10),
+                                quantize=False, use_pallas=False)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_fold_output_structure(self, tiny_run):
+        params, state, _, _ = tiny_run
+        folded = train.fold_bn(params, state)
+        assert len(folded) == common.NUM_LAYERS
+        for (w, b), spec in zip(folded, common.LAYERS):
+            assert w.shape == spec.weight_shape()
+            assert b.shape == (spec.cout,)
+
+    def test_quantised_fold_still_accurate(self, tiny_run):
+        """Q8.8 quantisation must not destroy the trained network."""
+        params, state, acc, (vx, vy) = tiny_run
+        folded = [(model.fxp_quantize(w), model.fxp_quantize(b))
+                  for w, b in train.fold_bn(params, state)]
+        logits, *_ = model.forward(folded, jnp.asarray(vx[:256]),
+                                   jnp.zeros(10), jnp.zeros(10),
+                                   use_pallas=False)
+        qacc = float(model.accuracy(logits, jnp.asarray(vy[:256])))
+        assert qacc > acc - 0.1

@@ -1,0 +1,114 @@
+//! Regenerates **Fig. 1**: accuracy vs operation-density trade-off for
+//! MobileNetV2 — the HASS search's Pareto front against prior sparse
+//! implementations (dense, PASS-like, HPIPE-like, non-dataflow [6]).
+//!
+//! Output: `results/fig1_pareto.csv` with one labelled point per row
+//! (`series, op_density, accuracy`), plus the extracted front.
+
+use hass::arch::networks;
+use hass::baselines::{self, MemoryModel};
+use hass::coordinator::{search, SearchConfig, SearchMode, SurrogateEvaluator};
+use hass::dse::DseConfig;
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::{pareto_front, Point2, Table};
+use hass::sparsity::synthesize;
+
+fn main() {
+    let net = networks::mobilenet_v2();
+    let sp = synthesize(&net, 1);
+    let base_acc = 71.88; // torchvision MobileNetV2 top-1
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let dse = DseConfig::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    // HASS search trace: every evaluated operating point is a candidate
+    let ev = SurrogateEvaluator { net: net.clone(), sparsity: sp.clone(), base_acc };
+    let cfg = SearchConfig {
+        iterations: if quick { 24 } else { 96 },
+        mode: SearchMode::HardwareAware,
+        seed: 1,
+        ..Default::default()
+    };
+    eprintln!("[fig1] running {}-iteration HASS search on mobilenet_v2 ...", cfg.iterations);
+    let r = search(&ev, &net, &rm, &dev, &cfg);
+
+    let mut t = Table::new(&["series", "op_density", "accuracy"]);
+    let mut cloud: Vec<Point2> = Vec::new();
+    for rec in &r.records {
+        t.row(vec![
+            "hass".into(),
+            format!("{:.4}", rec.op_density),
+            format!("{:.3}", rec.accuracy),
+        ]);
+        cloud.push(Point2 {
+            label: format!("iter{}", rec.iter),
+            // Pareto: maximize accuracy AND maximize *sparsity* = 1-density
+            x: 1.0 - rec.op_density,
+            y: rec.accuracy,
+        });
+    }
+
+    // comparator points
+    let dense = baselines::dense_dataflow(&net, base_acc, &rm, &dev, &dse);
+    let pass = baselines::pass_like(&net, &sp, base_acc, &rm, &dev, &dse);
+    let hpipe = baselines::hpipe_like(&net, &sp, base_acc, 0.6, &rm, &dev, &dse);
+    let nd = baselines::non_dataflow_sparse(
+        &net,
+        &sp,
+        base_acc,
+        0.5,
+        2_048,
+        &MemoryModel::default(),
+        &rm,
+        &DeviceBudget::v7_690t(),
+    );
+    for b in [&dense, &pass, &hpipe, &nd] {
+        t.row(vec![
+            b.name.clone(),
+            format!("{:.4}", b.op_density),
+            format!("{:.3}", b.accuracy),
+        ]);
+    }
+
+    // extracted HASS front
+    let front = pareto_front(&cloud);
+    for &i in &front {
+        t.row(vec![
+            "hass-front".into(),
+            format!("{:.4}", 1.0 - cloud[i].x),
+            format!("{:.3}", cloud[i].y),
+        ]);
+    }
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "fig1_pareto").expect("write results");
+    eprintln!(
+        "[fig1] {} search points, {} on the front -> results/fig1_pareto.csv",
+        r.records.len(),
+        front.len()
+    );
+
+    // shape checks.  HPIPE prunes: the front must dominate it outright
+    // (as sparse, within noise of its accuracy).  PASS does not prune at
+    // all, so its accuracy is exact by construction — the paper's claim
+    // there is that HASS trades ≲1 accuracy point (with the real model;
+    // our one-shot surrogate is harsher) for *far* lower density.
+    let dominated = front.iter().any(|&i| {
+        (1.0 - cloud[i].x) <= hpipe.op_density + 1e-9 && cloud[i].y >= hpipe.accuracy - 0.75
+    });
+    assert!(
+        dominated,
+        "hpipe: not dominated by the HASS front (density {:.3}, acc {:.2})",
+        hpipe.op_density, hpipe.accuracy
+    );
+    let beats_pass = front.iter().any(|&i| {
+        (1.0 - cloud[i].x) <= pass.op_density - 0.15 && cloud[i].y >= pass.accuracy - 3.0
+    });
+    assert!(
+        beats_pass,
+        "pass: HASS front should reach far lower density at small accuracy cost"
+    );
+    eprintln!("[fig1] shape checks passed (front dominates hpipe; far sparser than pass)");
+}

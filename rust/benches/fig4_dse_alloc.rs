@@ -1,0 +1,100 @@
+//! Regenerates **Fig. 4**: DSE allocation for a sparse ResNet-18 workload
+//! — MAC per SPE and #SPEs across the 16 3×3 convolutional layers.
+//!
+//! The paper's observations to reproduce:
+//! * higher per-layer sparsity → fewer MACs per SPE, and
+//! * deeper layers (more filters, fewer spatial positions) → more
+//!   parallel SPEs to match the inter-layer rate.
+//!
+//! Output: `results/fig4_alloc.csv` (layer, sparsity, mac_per_spe, spes).
+
+use hass::arch::{networks, Op};
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::pruning::PruningPlan;
+use hass::sparsity::synthesize;
+
+fn main() {
+    let net = networks::resnet18();
+    let sp = synthesize(&net, 42);
+    let n = sp.layers.len();
+    // a "specific sparse workload": 70% weight-sparsity target, natural+
+    // mild activation pruning — per-layer statistics still differ
+    let mut x = vec![0.0; 2 * n];
+    for i in 0..n {
+        x[2 * i] = 0.7 / hass::pruning::MAX_SPARSITY;
+        x[2 * i + 1] = 0.3 / hass::pruning::MAX_SPARSITY;
+    }
+    let plan = PruningPlan::from_unit_point(&x, &sp);
+    let points = plan.points(&sp);
+
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    eprintln!(
+        "[fig4] resnet18 DSE: {:.0} img/s, {} DSP",
+        d.images_per_sec(&dev),
+        d.resources.dsp
+    );
+
+    let mut t = Table::new(&["layer", "pair_sparsity", "mac_per_spe", "i_par", "o_par", "spes"]);
+    let mut rows: Vec<(f64, u64, u64)> = Vec::new(); // (sparsity, mac, spes)
+    for ((l, des), pt) in net.compute_layers().iter().zip(&d.designs).zip(&points) {
+        if let Op::Conv { kernel: 3, groups: 1, .. } = l.op {
+            t.row(vec![
+                l.name.clone(),
+                format!("{:.4}", pt.pair_sparsity()),
+                des.n_mac.to_string(),
+                des.i_par.to_string(),
+                des.o_par.to_string(),
+                des.engines().to_string(),
+            ]);
+            rows.push((pt.pair_sparsity(), des.n_mac as u64, des.engines()));
+        }
+    }
+    assert_eq!(rows.len(), 16, "ResNet-18 has 16 3x3 conv layers");
+    print!("{}", t.to_markdown());
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "fig4_alloc").expect("write results");
+    eprintln!("[fig4] -> results/fig4_alloc.csv");
+
+    // shape checks (rank correlations over the 16 layers)
+    let spear_s_mac = spearman(
+        &rows.iter().map(|r| r.0).collect::<Vec<_>>(),
+        &rows.iter().map(|r| r.1 as f64).collect::<Vec<_>>(),
+    );
+    let depth: Vec<f64> = (0..rows.len()).map(|i| i as f64).collect();
+    let spear_depth_spes = spearman(&depth, &rows.iter().map(|r| r.2 as f64).collect::<Vec<_>>());
+    eprintln!(
+        "[fig4] rank-corr(sparsity, MAC/SPE) = {spear_s_mac:.2} (paper: negative); \
+         rank-corr(depth, #SPE trend) = {spear_depth_spes:.2}"
+    );
+    assert!(
+        spear_s_mac < 0.1,
+        "MAC/SPE should anti-correlate with sparsity: {spear_s_mac}"
+    );
+}
+
+/// Spearman rank correlation.
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let rank = |v: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&x, &y| v[x].total_cmp(&v[y]));
+        let mut r = vec![0.0; v.len()];
+        for (rankpos, &i) in idx.iter().enumerate() {
+            r[i] = rankpos as f64;
+        }
+        r
+    };
+    let ra = rank(a);
+    let rb = rank(b);
+    let n = a.len() as f64;
+    let ma = ra.iter().sum::<f64>() / n;
+    let mb = rb.iter().sum::<f64>() / n;
+    let cov: f64 = ra.iter().zip(&rb).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = ra.iter().map(|x| (x - ma).powi(2)).sum();
+    let vb: f64 = rb.iter().map(|y| (y - mb).powi(2)).sum();
+    cov / (va.sqrt() * vb.sqrt()).max(1e-12)
+}

@@ -1,0 +1,206 @@
+//! §Perf harness: wall-clock measurements of every hot path in the L3
+//! coordinator, plus the PJRT evaluation latency that dominates a
+//! measured search iteration.  Criterion is unavailable offline, so this
+//! is a manual steady-state timer (warmup + median of repeated runs).
+//!
+//! Targets (DESIGN.md §8):
+//! * DSE of a ResNet-50-scale graph   < 100 ms
+//! * simulator                        ≥ 10 M SPE-cycles/s
+//! * search-iteration overhead (everything but PJRT) < 10 % of iteration
+//!
+//! Output: `results/hotpath.csv`.
+
+use std::time::Instant;
+
+use hass::arch::networks;
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::optim::tpe::TpeOptimizer;
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::sparsity::SparsityPoint;
+
+fn median_ms(mut f: impl FnMut(), reps: usize) -> f64 {
+    f(); // warmup
+    let mut xs: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let mut t = Table::new(&["path", "metric", "value", "target", "pass"]);
+
+    // ---- DSE hot path -------------------------------------------------
+    // ResNet-50 does not fit one U250 (URAM), which would short-circuit
+    // the DSE; exercise its 54-layer graph on a two-device-class budget
+    let big = DeviceBudget {
+        name: "2xu250".into(),
+        dsp: 24_576,
+        lut: 3_456_000,
+        bram18k: 10_752,
+        uram: 2_560,
+        freq_mhz: 250.0,
+    };
+    for name in ["resnet18", "resnet50", "mobilenet_v2"] {
+        let net = networks::by_name(name).unwrap();
+        let n = net.compute_layers().len();
+        let points = vec![SparsityPoint { s_w: 0.6, s_a: 0.4 }; n];
+        let d = if name == "resnet50" { &big } else { &dev };
+        let ms = median_ms(
+            || {
+                std::hint::black_box(explore(&net, &points, &rm, d, &DseConfig::default()));
+            },
+            9,
+        );
+        let pass = ms < 100.0;
+        eprintln!("[hotpath] dse/{name}: {ms:.2} ms (target <100 ms) {}", ok(pass));
+        t.row(vec![
+            format!("dse/{name}"),
+            "median_ms".into(),
+            format!("{ms:.3}"),
+            "<100".into(),
+            pass.to_string(),
+        ]);
+    }
+
+    // ---- simulator throughput ------------------------------------------
+    {
+        let net = networks::calibnet();
+        let n = net.compute_layers().len();
+        let points = vec![SparsityPoint { s_w: 0.4, s_a: 0.4 }; n];
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let cfgs = stages_from_design(&net, &d.designs, &points, rm.fifo_depth);
+        // measure simulated *hardware work* per wall second: a highly
+        // parallel design packs thousands of busy engines into each
+        // pipeline cycle, so wall-cycles alone would under-credit the
+        // simulator exactly when it simulates the most
+        let mut engine_cycles = 0f64;
+        let images = 8;
+        let wall = median_ms(
+            || {
+                let rep = simulate(&net, &cfgs, images, SparsityDynamics::Stochastic { seed: 1 });
+                engine_cycles = rep
+                    .busy
+                    .iter()
+                    .zip(&d.designs)
+                    .map(|(b, des)| b * rep.total_cycles as f64 * des.engines() as f64)
+                    .sum();
+            },
+            5,
+        );
+        let eps = engine_cycles / (wall / 1e3);
+        let pass = eps > 10e6;
+        eprintln!(
+            "[hotpath] simulator: {:.1} M simulated SPE-cycles/s ({:.2e} SPE-cycles in {wall:.1} ms) {}",
+            eps / 1e6,
+            engine_cycles,
+            ok(pass)
+        );
+        t.row(vec![
+            "simulator".into(),
+            "spe_cycles_per_sec".into(),
+            format!("{eps:.3e}"),
+            ">1e7".into(),
+            pass.to_string(),
+        ]);
+    }
+
+    // ---- TPE ask/tell ----------------------------------------------------
+    {
+        let dim = 42; // 2 x 21 layers (ResNet-18)
+        let mut tpe = TpeOptimizer::with_defaults(dim, 1);
+        // preload a realistic history
+        for i in 0..96 {
+            let x: Vec<f64> = (0..dim).map(|d| ((i * d + 7) % 100) as f64 / 100.0).collect();
+            tpe.tell(x, -((i % 10) as f64));
+        }
+        let ms = median_ms(
+            || {
+                let x = tpe.ask();
+                std::hint::black_box(&x);
+            },
+            20,
+        );
+        let pass = ms < 10.0;
+        eprintln!("[hotpath] tpe/ask(dim=42,96obs): {ms:.3} ms {}", ok(pass));
+        t.row(vec![
+            "tpe/ask".into(),
+            "median_ms".into(),
+            format!("{ms:.4}"),
+            "<10".into(),
+            pass.to_string(),
+        ]);
+    }
+
+    // ---- PJRT evaluation + search-iteration overhead ---------------------
+    if hass::runtime::available(&hass::runtime::default_dir()) {
+        let rt = hass::runtime::ModelRuntime::load_default().expect("artifact");
+        let l = rt.n_layers();
+        let tau = vec![0.03; l];
+        let eval_ms = median_ms(
+            || {
+                std::hint::black_box(rt.evaluate(&tau, &tau, 1).unwrap());
+            },
+            5,
+        );
+        // coordinator overhead: everything a measured iteration does
+        // besides the PJRT evaluate (plan decode + DSE + objective)
+        let net = networks::calibnet();
+        let sp = rt.meta.measured_sparsity();
+        let n = sp.layers.len();
+        let points = vec![SparsityPoint { s_w: 0.5, s_a: 0.4 }; n];
+        let overhead_ms = median_ms(
+            || {
+                let plan = hass::pruning::PruningPlan::from_unit_point(&vec![0.5; 2 * n], &sp);
+                std::hint::black_box(&plan);
+                let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+                std::hint::black_box(&d);
+            },
+            9,
+        );
+        let frac = overhead_ms / (overhead_ms + eval_ms);
+        let pass = frac < 0.10;
+        eprintln!(
+            "[hotpath] pjrt/evaluate(64 imgs): {eval_ms:.1} ms; coordinator overhead {overhead_ms:.2} ms = {:.1}% of iteration {}",
+            frac * 100.0,
+            ok(pass)
+        );
+        t.row(vec![
+            "pjrt/evaluate_batch64".into(),
+            "median_ms".into(),
+            format!("{eval_ms:.2}"),
+            "-".into(),
+            "true".into(),
+        ]);
+        t.row(vec![
+            "search/overhead_fraction".into(),
+            "fraction".into(),
+            format!("{frac:.4}"),
+            "<0.10".into(),
+            pass.to_string(),
+        ]);
+    } else {
+        eprintln!("[hotpath] artifacts missing: skipping PJRT timings");
+    }
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "hotpath").expect("write results");
+    eprintln!("[hotpath] -> results/hotpath.csv");
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[ok]"
+    } else {
+        "[MISS]"
+    }
+}

@@ -1,0 +1,85 @@
+//! §V-A sanity (extra experiment from DESIGN.md): the analytical model
+//! (Eq. 1–3) against the cycle-level simulator over randomized layer
+//! configurations and sparsity points.
+//!
+//! Deterministic dynamics must track the model within a few percent
+//! (pipeline-fill effects only); stochastic dynamics quantify what
+//! run-time sparsity variance costs without the paper's buffering.
+//!
+//! Output: `results/model_vs_sim.csv` (one row per random config).
+
+use hass::arch::networks;
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::sparsity::SparsityPoint;
+use hass::util::rng::Rng;
+
+fn main() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let n = net.compute_layers().len();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cases = if quick { 6 } else { 20 };
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut t = Table::new(&[
+        "case", "s_w", "s_a", "dsp_budget", "model_thr", "sim_det_thr", "det_err_pct",
+        "sim_sto_thr", "sto_gap_pct",
+    ]);
+    let mut max_det_err: f64 = 0.0;
+    for case in 0..cases {
+        let s_w = rng.range(0.0, 0.8);
+        let s_a = rng.range(0.0, 0.7);
+        let dsp_budget = 64 + rng.below(2_000) as u64;
+        let dev = DeviceBudget {
+            name: "rand".into(),
+            dsp: dsp_budget,
+            lut: 2_000_000,
+            bram18k: 4_000,
+            uram: 512,
+            freq_mhz: 250.0,
+        };
+        // per-layer jitter around the uniform point
+        let points: Vec<SparsityPoint> = (0..n)
+            .map(|_| SparsityPoint {
+                s_w: (s_w + 0.1 * rng.gauss()).clamp(0.0, 0.9),
+                s_a: (s_a + 0.1 * rng.gauss()).clamp(0.0, 0.9),
+            })
+            .collect();
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let cfgs = stages_from_design(&net, &d.designs, &points, rm.fifo_depth);
+        let det = simulate(&net, &cfgs, 4, SparsityDynamics::Deterministic);
+        let sto = simulate(&net, &cfgs, 4, SparsityDynamics::Stochastic { seed: case as u64 });
+        assert!(!det.deadlocked && !sto.deadlocked, "case {case} deadlocked");
+        let det_err = (det.throughput / d.throughput - 1.0) * 100.0;
+        let sto_gap = (sto.throughput / d.throughput - 1.0) * 100.0;
+        max_det_err = max_det_err.max(det_err.abs());
+        t.row(vec![
+            case.to_string(),
+            format!("{s_w:.3}"),
+            format!("{s_a:.3}"),
+            dsp_budget.to_string(),
+            format!("{:.4e}", d.throughput),
+            format!("{:.4e}", det.throughput),
+            format!("{det_err:.2}"),
+            format!("{:.4e}", sto.throughput),
+            format!("{sto_gap:.2}"),
+        ]);
+        eprintln!(
+            "[model_vs_sim] case {case}: model {:.3e}, det {:+.2}%, stochastic {:+.2}%",
+            d.throughput, det_err, sto_gap
+        );
+    }
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "model_vs_sim").expect("write results");
+    eprintln!(
+        "[model_vs_sim] max |deterministic error| = {max_det_err:.2}% -> results/model_vs_sim.csv"
+    );
+    assert!(
+        max_det_err < 10.0,
+        "analytical model deviates from the simulator by {max_det_err}%"
+    );
+}

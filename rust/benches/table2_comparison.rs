@@ -1,0 +1,234 @@
+//! Regenerates **Table II**: comparison with state-of-the-art sparse
+//! DNN-FPGA accelerators across ResNet-18/50, MobileNetV2, MobileNetV3-S/L.
+//!
+//! Columns mirror the paper: accuracy, platform, DSPs, kLUTs, BRAM18k,
+//! images/s, images/cycle/DSP.  Rows per network: Dense dataflow,
+//! non-dataflow sparse ([6]-style, on its 7V690T), HPIPE-like [5],
+//! PASS-like [4], and Ours (HASS search).  Absolute numbers come from our
+//! calibrated models, not the authors' testbeds — the claim reproduced is
+//! the *shape*: dataflow ≫ non-dataflow in throughput, sparse > dense in
+//! efficiency, HASS > single-axis baselines (DESIGN.md §4).
+//!
+//! ResNet-50 exceeds a single U250 (408 Mb of 16-bit weights vs 360 Mb
+//! URAM), so — like fpgaConvNet — it maps through §V-A.4 partitioning
+//! with full reconfiguration; its row reports the folded pipeline.
+
+use hass::arch::networks;
+use hass::baselines::{self, MemoryModel};
+use hass::coordinator::{search, SearchConfig, SearchMode, SurrogateEvaluator};
+use hass::dse::{explore, partition::partition, partition::DEFAULT_RECONFIG_SECS, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::sparsity::synthesize;
+use hass::util::rng::Rng;
+
+/// Paper Table II dense top-1 accuracies (our surrogate base points).
+fn base_acc(net: &str) -> f64 {
+    match net {
+        "resnet18" => 69.75,
+        "resnet50" => 76.13,
+        "mobilenet_v2" => 71.88,
+        "mobilenet_v3_small" => 67.42,
+        "mobilenet_v3_large" => 74.04,
+        _ => 75.0,
+    }
+}
+
+fn main() {
+    let rm = ResourceModel::default();
+    let u250 = DeviceBudget::u250();
+    let v7 = DeviceBudget::v7_690t();
+    let dse = DseConfig::default();
+    let nets = ["resnet18", "resnet50", "mobilenet_v2", "mobilenet_v3_small", "mobilenet_v3_large"];
+
+    let mut t = Table::new(&[
+        "network", "work", "accuracy", "platform", "dsp", "klut", "bram18k", "images_per_s",
+        "images_per_cycle_per_dsp",
+    ]);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 16 } else { 64 };
+
+    for name in nets {
+        let net = networks::by_name(name).unwrap();
+        let sp = synthesize(&net, 1);
+        let acc0 = base_acc(name);
+        let single_device_fits = {
+            let n = net.compute_layers().len();
+            let minimal = vec![hass::hardware::LayerDesign::MINIMAL; n];
+            u250.fits(&rm.network(&net, &minimal))
+        };
+        eprintln!("[table2] {name} (single-device: {single_device_fits}) ...");
+
+        // when the network exceeds one U250 every dataflow design maps
+        // through §V-A.4 partitioning — baselines included, for fairness
+        let repartition = |b: &baselines::BaselineResult,
+                           points: &[hass::sparsity::SparsityPoint],
+                           seed: u64|
+         -> baselines::BaselineResult {
+            if single_device_fits {
+                return b.clone();
+            }
+            let mut rng = Rng::new(seed);
+            let part = partition(
+                &net, points, &rm, &u250, &dse, 4_096, DEFAULT_RECONFIG_SECS, &mut rng,
+            )
+            .expect("partitioned mapping");
+            let dsp = part.designs.iter().map(|d| d.resources.dsp).max().unwrap_or(0);
+            let lut = part.designs.iter().map(|d| d.resources.lut).max().unwrap_or(0);
+            let bram = part.designs.iter().map(|d| d.resources.bram18k).max().unwrap_or(0);
+            baselines::BaselineResult {
+                images_per_sec: part.images_per_sec,
+                resources: hass::hardware::resources::Resources {
+                    dsp,
+                    lut,
+                    bram18k: bram,
+                    uram: 0,
+                },
+                efficiency: part.images_per_sec / u250.freq_hz() / dsp.max(1) as f64,
+                ..b.clone()
+            }
+        };
+
+        // ---- Dense dataflow -----------------------------------------
+        let n_l = net.compute_layers().len();
+        let dense_pts = vec![hass::sparsity::SparsityPoint::DENSE; n_l];
+        let dense = repartition(
+            &baselines::dense_dataflow(&net, acc0, &rm, &u250, &dse),
+            &dense_pts,
+            11,
+        );
+        push(&mut t, name, "dense", &dense, "u250");
+
+        // ---- non-dataflow sparse ([6]-style, 7V690T) ------------------
+        let nd = baselines::non_dataflow_sparse(
+            &net, &sp, acc0, 0.5, 2_048, &MemoryModel::default(), &rm, &v7,
+        );
+        push(&mut t, name, "non-dataflow[6]", &nd, "7v690t");
+
+        // ---- HPIPE-like (weight sparsity only) ------------------------
+        let hp_pts: Vec<hass::sparsity::SparsityPoint> = {
+            let mut x = vec![0.0; 2 * n_l];
+            for i in 0..n_l {
+                x[2 * i] = 0.6 / hass::pruning::MAX_SPARSITY;
+            }
+            hass::pruning::PruningPlan::from_unit_point(&x, &sp)
+                .points(&sp)
+                .iter()
+                .map(|p| hass::sparsity::SparsityPoint { s_a: 0.0, ..*p })
+                .collect()
+        };
+        let hp = repartition(
+            &baselines::hpipe_like(&net, &sp, acc0, 0.6, &rm, &u250, &dse),
+            &hp_pts,
+            12,
+        );
+        push(&mut t, name, "hpipe[5]", &hp, "u250");
+
+        // ---- PASS-like (activation sparsity only) ---------------------
+        let pa_pts: Vec<hass::sparsity::SparsityPoint> = sp
+            .natural_points()
+            .into_iter()
+            .map(|p| hass::sparsity::SparsityPoint { s_w: 0.0, ..p })
+            .collect();
+        let pa = repartition(
+            &baselines::pass_like(&net, &sp, acc0, &rm, &u250, &dse),
+            &pa_pts,
+            13,
+        );
+        push(&mut t, name, "pass[4]", &pa, "u250");
+
+        // ---- Ours: HASS ------------------------------------------------
+        let ev = SurrogateEvaluator { net: net.clone(), sparsity: sp.clone(), base_acc: acc0 };
+        let cfg = SearchConfig {
+            iterations: iters,
+            mode: SearchMode::HardwareAware,
+            seed: 3,
+            ..Default::default()
+        };
+        let r = search(&ev, &net, &rm, &u250, &cfg);
+        let b = r.best_record();
+        let pts = hass::coordinator::Evaluate::eval(&ev, &b.plan).points;
+        let ours = if single_device_fits {
+            baselines::BaselineResult {
+                name: "hass".into(),
+                accuracy: b.accuracy,
+                images_per_sec: b.images_per_sec,
+                resources: explore(&net, &pts, &rm, &u250, &dse).resources,
+                op_density: b.op_density,
+                efficiency: b.efficiency,
+            }
+        } else {
+            // partitioned mapping (ResNet-50 path)
+            let mut rng = Rng::new(5);
+            let part = partition(
+                &net, &pts, &rm, &u250, &dse, 4_096, DEFAULT_RECONFIG_SECS, &mut rng,
+            )
+            .expect("partitioned mapping");
+            let dsp = part.designs.iter().map(|d| d.resources.dsp).max().unwrap_or(0);
+            let lut = part.designs.iter().map(|d| d.resources.lut).max().unwrap_or(0);
+            let bram = part.designs.iter().map(|d| d.resources.bram18k).max().unwrap_or(0);
+            baselines::BaselineResult {
+                name: "hass".into(),
+                accuracy: b.accuracy,
+                images_per_sec: part.images_per_sec,
+                resources: hass::hardware::resources::Resources { dsp, lut, bram18k: bram, uram: 0 },
+                op_density: b.op_density,
+                efficiency: part.images_per_sec / u250.freq_hz() / dsp.max(1) as f64,
+            }
+        };
+        push(&mut t, name, "ours(HASS)", &ours, "u250");
+    }
+
+    print!("{}", t.to_markdown());
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "table2").expect("write results");
+    eprintln!("[table2] -> results/table2.{{csv,md}}");
+
+    // sanity of the reproduced shape (who wins)
+    check_shape(&t);
+}
+
+fn push(t: &mut Table, net: &str, work: &str, b: &baselines::BaselineResult, platform: &str) {
+    t.row(vec![
+        net.to_string(),
+        work.to_string(),
+        format!("{:.2}", b.accuracy),
+        platform.to_string(),
+        b.resources.dsp.to_string(),
+        (b.resources.lut / 1000).to_string(),
+        b.resources.bram18k.to_string(),
+        format!("{:.0}", b.images_per_sec),
+        format!("{:.3e}", b.efficiency),
+    ]);
+}
+
+fn check_shape(t: &Table) {
+    // for every network: ours(HASS) efficiency >= dense, and the dataflow
+    // designs beat the non-dataflow one on throughput
+    let mut by_net: std::collections::HashMap<String, Vec<&Vec<String>>> = Default::default();
+    for r in &t.rows {
+        by_net.entry(r[0].clone()).or_default().push(r);
+    }
+    for (net, rows) in by_net {
+        let get = |work: &str, idx: usize| -> f64 {
+            rows.iter()
+                .find(|r| r[1] == work)
+                .map(|r| r[idx].parse().unwrap_or(0.0))
+                .unwrap_or(0.0)
+        };
+        let eff_ours = get("ours(HASS)", 8);
+        let eff_dense = get("dense", 8);
+        let thr_ours = get("ours(HASS)", 7);
+        let thr_nd = get("non-dataflow[6]", 7);
+        assert!(
+            eff_ours > eff_dense,
+            "{net}: HASS efficiency {eff_ours} !> dense {eff_dense}"
+        );
+        assert!(
+            thr_ours > thr_nd,
+            "{net}: dataflow throughput {thr_ours} !> non-dataflow {thr_nd}"
+        );
+    }
+    eprintln!("[table2] shape checks passed (HASS > dense efficiency; dataflow > non-dataflow)");
+}

@@ -1,0 +1,319 @@
+//! Dataflow-graph IR for DNN workloads.
+//!
+//! A [`Network`] is the left-hand side of the paper's Fig. 3: a sequence of
+//! dataflow nodes, each a hardware component.  Compute nodes (convolutions
+//! and linear layers — the paper's "blue nodes") are the resource-intensive
+//! ones the sparse engines accelerate; the rest (pooling, elementwise add,
+//! activations) are cheap streaming components assumed rate-matched.
+//!
+//! The five evaluation geometries of the paper (ResNet-18/50, MobileNetV2,
+//! MobileNetV3-S/L, exact torchvision shapes at 224x224) plus the really
+//! executed CalibNet are built in [`networks`].
+
+pub mod networks;
+
+/// Operator of a dataflow node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// 2-D convolution (grouped; `groups == cin == cout` is depthwise).
+    Conv {
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        cin: usize,
+        cout: usize,
+        groups: usize,
+    },
+    /// Fully connected.
+    Linear { cin: usize, cout: usize },
+    /// Max/avg pooling window.
+    Pool { kernel: usize, stride: usize, channels: usize },
+    /// Global average pool to 1x1.
+    GlobalPool { channels: usize },
+    /// Elementwise residual add.
+    Add { channels: usize },
+    /// Elementwise activation (ReLU / hard-swish / sigmoid-mul for SE).
+    Act { channels: usize },
+}
+
+/// One dataflow node plus its input spatial size.
+#[derive(Clone, Debug)]
+pub struct LayerDesc {
+    pub name: String,
+    pub op: Op,
+    /// spatial edge length of the input feature map (1 for vector input)
+    pub in_hw: usize,
+    /// true for nodes on a side branch (projection shortcuts, SE blocks):
+    /// they tap the main pipeline rather than extending it, so the linear
+    /// chain validation skips them when propagating shapes.
+    pub branch: bool,
+}
+
+impl LayerDesc {
+    /// Is this a compute ("blue") node mapped onto sparse engines?
+    pub fn is_compute(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::Linear { .. })
+    }
+
+    /// Output spatial edge length.
+    pub fn out_hw(&self) -> usize {
+        match &self.op {
+            Op::Conv { stride, .. } | Op::Pool { stride, .. } => {
+                self.in_hw.div_ceil(*stride)
+            }
+            Op::GlobalPool { .. } | Op::Linear { .. } => 1,
+            Op::Add { .. } | Op::Act { .. } => self.in_hw,
+        }
+    }
+
+    /// Output channels.
+    pub fn out_channels(&self) -> usize {
+        match &self.op {
+            Op::Conv { cout, .. } => *cout,
+            Op::Linear { cout, .. } => *cout,
+            Op::Pool { channels, .. }
+            | Op::GlobalPool { channels }
+            | Op::Add { channels }
+            | Op::Act { channels } => *channels,
+        }
+    }
+
+    /// Dot-product length K of one output (the paper's full vector length
+    /// before input-parallel splitting): k*k*cin/groups for conv.
+    pub fn patch_k(&self) -> usize {
+        match &self.op {
+            Op::Conv { kernel, cin, groups, .. } => kernel * kernel * cin / groups,
+            Op::Linear { cin, .. } => *cin,
+            _ => 0,
+        }
+    }
+
+    /// Number of output elements per image.
+    pub fn outputs_per_image(&self) -> usize {
+        match &self.op {
+            Op::Conv { cout, .. } => self.out_hw() * self.out_hw() * cout,
+            Op::Linear { cout, .. } => *cout,
+            _ => 0,
+        }
+    }
+
+    /// Dense MAC count per image, C_l (including zero operands).
+    pub fn macs_per_image(&self) -> u64 {
+        (self.outputs_per_image() as u64) * (self.patch_k() as u64)
+    }
+
+    /// Weight parameter count.
+    pub fn weight_count(&self) -> u64 {
+        match &self.op {
+            Op::Conv { kernel, cin, cout, groups, .. } => {
+                (kernel * kernel * cin / groups * cout) as u64
+            }
+            Op::Linear { cin, cout } => (cin * cout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Input-channel extent available for i-parallelism (paper's I).
+    pub fn i_extent(&self) -> usize {
+        match &self.op {
+            Op::Conv { cin, groups, .. } => cin / groups,
+            Op::Linear { cin, .. } => *cin,
+            _ => 1,
+        }
+    }
+
+    /// Output-filter extent available for o-parallelism (paper's O).
+    pub fn o_extent(&self) -> usize {
+        match &self.op {
+            Op::Conv { cout, .. } => *cout,
+            Op::Linear { cout, .. } => *cout,
+            _ => 1,
+        }
+    }
+}
+
+/// A whole workload: dataflow graph in topological (pipeline) order.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl Network {
+    /// Indices of compute layers (the DSE design variables).
+    pub fn compute_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_compute())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn compute_layers(&self) -> Vec<&LayerDesc> {
+        self.layers.iter().filter(|l| l.is_compute()).collect()
+    }
+
+    /// Total dense MACs per image.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs_per_image()).sum()
+    }
+
+    /// Total weight parameters.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_count()).sum()
+    }
+
+    /// Structural sanity: spatial sizes must chain, channel counts match.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut hw = self.input_hw;
+        let mut ch = self.input_channels;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.branch {
+                // side branches only need internally consistent geometry
+                if let Op::Conv { kernel, stride, .. } = &l.op {
+                    if *stride == 0 || *kernel == 0 {
+                        return Err(format!("{}: branch layer {i} bad geometry", self.name));
+                    }
+                }
+                continue;
+            }
+            if l.in_hw != hw {
+                return Err(format!(
+                    "{}: layer {i} ({}) expects in_hw {} but pipeline provides {hw}",
+                    self.name, l.name, l.in_hw
+                ));
+            }
+            let expect_cin = match &l.op {
+                Op::Conv { cin, .. } => Some(*cin),
+                Op::Linear { cin, .. } => Some(*cin),
+                Op::Pool { channels, .. }
+                | Op::GlobalPool { channels }
+                | Op::Add { channels }
+                | Op::Act { channels } => Some(*channels),
+            };
+            if let Some(c) = expect_cin {
+                if c != ch {
+                    return Err(format!(
+                        "{}: layer {i} ({}) expects {c} channels, pipeline provides {ch}",
+                        self.name, l.name
+                    ));
+                }
+            }
+            if let Op::Conv { kernel, pad, stride, .. } = &l.op {
+                // same-padding family used throughout torchvision models
+                if *pad > *kernel || *stride == 0 {
+                    return Err(format!("{}: layer {i} bad geometry", self.name));
+                }
+            }
+            hw = l.out_hw();
+            ch = l.out_channels();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, k: usize, s: usize, cin: usize, cout: usize, hw: usize) -> LayerDesc {
+        LayerDesc {
+            name: name.into(),
+            op: Op::Conv { kernel: k, stride: s, pad: (k - 1) / 2, cin, cout, groups: 1 },
+            in_hw: hw,
+            branch: false,
+        }
+    }
+
+    #[test]
+    fn conv_geometry() {
+        let l = conv("c", 3, 1, 3, 16, 32);
+        assert_eq!(l.out_hw(), 32);
+        assert_eq!(l.patch_k(), 27);
+        assert_eq!(l.outputs_per_image(), 32 * 32 * 16);
+        assert_eq!(l.macs_per_image(), 32 * 32 * 16 * 27);
+        assert_eq!(l.weight_count(), 27 * 16);
+    }
+
+    #[test]
+    fn strided_conv_halves_spatial() {
+        let l = conv("c", 3, 2, 16, 32, 32);
+        assert_eq!(l.out_hw(), 16);
+    }
+
+    #[test]
+    fn depthwise_conv() {
+        let l = LayerDesc {
+            name: "dw".into(),
+            op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 32, cout: 32, groups: 32 },
+            in_hw: 16,
+            branch: false,
+        };
+        assert_eq!(l.patch_k(), 9);
+        assert_eq!(l.macs_per_image(), 16 * 16 * 32 * 9);
+        assert_eq!(l.weight_count(), 9 * 32);
+        assert_eq!(l.i_extent(), 1);
+    }
+
+    #[test]
+    fn linear_layer() {
+        let l = LayerDesc {
+            name: "fc".into(),
+            op: Op::Linear { cin: 512, cout: 1000 },
+            in_hw: 1,
+            branch: false,
+        };
+        assert_eq!(l.macs_per_image(), 512_000);
+        assert_eq!(l.out_hw(), 1);
+        assert!(l.is_compute());
+    }
+
+    #[test]
+    fn pool_is_not_compute() {
+        let l = LayerDesc {
+            name: "p".into(),
+            op: Op::Pool { kernel: 2, stride: 2, channels: 64 },
+            in_hw: 8,
+            branch: false,
+        };
+        assert!(!l.is_compute());
+        assert_eq!(l.macs_per_image(), 0);
+        assert_eq!(l.out_hw(), 4);
+    }
+
+    #[test]
+    fn validate_catches_spatial_mismatch() {
+        let net = Network {
+            name: "bad".into(),
+            input_hw: 32,
+            input_channels: 3,
+            layers: vec![conv("a", 3, 2, 3, 8, 32), conv("b", 3, 1, 8, 8, 32)],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_channel_mismatch() {
+        let net = Network {
+            name: "bad".into(),
+            input_hw: 32,
+            input_channels: 3,
+            layers: vec![conv("a", 3, 1, 3, 8, 32), conv("b", 3, 1, 16, 8, 32)],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_accepts_chain() {
+        let net = Network {
+            name: "ok".into(),
+            input_hw: 32,
+            input_channels: 3,
+            layers: vec![conv("a", 3, 2, 3, 8, 32), conv("b", 3, 1, 8, 8, 16)],
+        };
+        assert!(net.validate().is_ok());
+    }
+}

@@ -1,0 +1,513 @@
+//! Network zoo: the paper's five evaluation geometries (exact torchvision
+//! shapes, 224x224 ImageNet input) plus the really-executed CalibNet.
+//!
+//! Every builder tracks spatial sizes exactly and is `validate()`d in
+//! tests; total MAC/parameter counts are pinned against the published
+//! torchvision numbers (ResNet-18 ≈ 1.81 GMACs / 11.7 M params, ...).
+
+use super::{LayerDesc, Network, Op};
+
+struct B {
+    layers: Vec<LayerDesc>,
+    hw: usize,
+    ch: usize,
+}
+
+impl B {
+    fn new(hw: usize, ch: usize) -> Self {
+        B { layers: Vec::new(), hw, ch }
+    }
+
+    fn conv(&mut self, name: &str, k: usize, s: usize, cout: usize) -> &mut Self {
+        self.conv_g(name, k, s, cout, 1)
+    }
+
+    fn conv_g(&mut self, name: &str, k: usize, s: usize, cout: usize, groups: usize) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Conv {
+                kernel: k,
+                stride: s,
+                pad: (k - 1) / 2,
+                cin: self.ch,
+                cout,
+                groups,
+            },
+            in_hw: self.hw,
+            branch: false,
+        });
+        self.hw = self.hw.div_ceil(s);
+        self.ch = cout;
+        self
+    }
+
+    fn dw(&mut self, name: &str, k: usize, s: usize) -> &mut Self {
+        let c = self.ch;
+        self.conv_g(name, k, s, c, c)
+    }
+
+    /// Side-branch conv (projection shortcut): consumes `(hw, cin)` from an
+    /// earlier tap point, does not advance the main chain.
+    fn branch_conv(&mut self, name: &str, k: usize, s: usize, cin: usize, cout: usize, hw: usize) {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Conv { kernel: k, stride: s, pad: (k - 1) / 2, cin, cout, groups: 1 },
+            in_hw: hw,
+            branch: true,
+        });
+    }
+
+    /// Side-branch linear (SE block FC), spatial 1.
+    fn branch_linear(&mut self, name: &str, cin: usize, cout: usize) {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Linear { cin, cout },
+            in_hw: 1,
+            branch: true,
+        });
+    }
+
+    fn act(&mut self, name: &str) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Act { channels: self.ch },
+            in_hw: self.hw,
+            branch: false,
+        });
+        self
+    }
+
+    fn add(&mut self, name: &str) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Add { channels: self.ch },
+            in_hw: self.hw,
+            branch: false,
+        });
+        self
+    }
+
+    fn pool(&mut self, name: &str, k: usize, s: usize) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Pool { kernel: k, stride: s, channels: self.ch },
+            in_hw: self.hw,
+            branch: false,
+        });
+        self.hw = self.hw.div_ceil(s);
+        self
+    }
+
+    fn gap(&mut self, name: &str) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::GlobalPool { channels: self.ch },
+            in_hw: self.hw,
+            branch: false,
+        });
+        self.hw = 1;
+        self
+    }
+
+    fn linear(&mut self, name: &str, cout: usize) -> &mut Self {
+        self.layers.push(LayerDesc {
+            name: name.into(),
+            op: Op::Linear { cin: self.ch, cout },
+            in_hw: 1,
+            branch: false,
+        });
+        self.ch = cout;
+        self
+    }
+
+    fn finish(self, name: &str, input_hw: usize, input_channels: usize) -> Network {
+        let net = Network {
+            name: name.into(),
+            input_hw,
+            input_channels,
+            layers: self.layers,
+        };
+        debug_assert_eq!(net.validate(), Ok(()));
+        net
+    }
+}
+
+// ------------------------------------------------------------- CalibNet
+
+/// The really-executed calibration network (matches python/compile/common.py).
+pub fn calibnet() -> Network {
+    let mut b = B::new(32, 3);
+    b.conv("stem", 3, 1, 16).act("stem.relu");
+    // block 1: identity shortcut
+    b.conv("b1.conv1", 3, 1, 16).act("b1.relu1");
+    b.conv("b1.conv2", 3, 1, 16).add("b1.add").act("b1.relu2");
+    // block 2: projection shortcut, stride 2
+    b.conv("b2.conv1", 3, 2, 32).act("b2.relu1");
+    b.conv("b2.conv2", 3, 1, 32);
+    b.branch_conv("b2.down", 1, 2, 16, 32, 32);
+    b.add("b2.add").act("b2.relu2");
+    // block 3
+    b.conv("b3.conv1", 3, 2, 64).act("b3.relu1");
+    b.conv("b3.conv2", 3, 1, 64);
+    b.branch_conv("b3.down", 1, 2, 32, 64, 16);
+    b.add("b3.add").act("b3.relu2");
+    b.gap("gap").linear("fc", 10);
+    b.finish("calibnet", 32, 3)
+}
+
+/// Order in which CalibNet's compute layers appear in the AOT artifact
+/// (python side: stem, b1.conv1, b1.conv2, b2.conv1, b2.conv2, b2.down,
+/// b3.conv1, b3.conv2, b3.down, fc).
+pub fn calibnet_artifact_order() -> Vec<&'static str> {
+    vec![
+        "stem", "b1.conv1", "b1.conv2", "b2.conv1", "b2.conv2", "b2.down",
+        "b3.conv1", "b3.conv2", "b3.down", "fc",
+    ]
+}
+
+// ------------------------------------------------------------ ResNet-18
+
+fn basic_block(b: &mut B, name: &str, cout: usize, stride: usize) {
+    let cin = b.ch;
+    let hw_in = b.hw;
+    b.conv(&format!("{name}.conv1"), 3, stride, cout).act(&format!("{name}.relu1"));
+    b.conv(&format!("{name}.conv2"), 3, 1, cout);
+    if stride != 1 || cin != cout {
+        b.branch_conv(&format!("{name}.down"), 1, stride, cin, cout, hw_in);
+    }
+    b.add(&format!("{name}.add")).act(&format!("{name}.relu2"));
+}
+
+pub fn resnet18() -> Network {
+    let mut b = B::new(224, 3);
+    b.conv("conv1", 7, 2, 64).act("relu1").pool("maxpool", 3, 2);
+    for (stage, (c, s)) in [(64, 1), (128, 2), (256, 2), (512, 2)].iter().enumerate() {
+        for blk in 0..2 {
+            let stride = if blk == 0 { *s } else { 1 };
+            basic_block(&mut b, &format!("layer{}.{}", stage + 1, blk), *c, stride);
+        }
+    }
+    b.gap("avgpool").linear("fc", 1000);
+    b.finish("resnet18", 224, 3)
+}
+
+// ------------------------------------------------------------ ResNet-50
+
+fn bottleneck(b: &mut B, name: &str, mid: usize, cout: usize, stride: usize) {
+    let cin = b.ch;
+    let hw_in = b.hw;
+    b.conv(&format!("{name}.conv1"), 1, 1, mid).act(&format!("{name}.relu1"));
+    b.conv(&format!("{name}.conv2"), 3, stride, mid).act(&format!("{name}.relu2"));
+    b.conv(&format!("{name}.conv3"), 1, 1, cout);
+    if stride != 1 || cin != cout {
+        b.branch_conv(&format!("{name}.down"), 1, stride, cin, cout, hw_in);
+    }
+    b.add(&format!("{name}.add")).act(&format!("{name}.relu3"));
+}
+
+pub fn resnet50() -> Network {
+    let mut b = B::new(224, 3);
+    b.conv("conv1", 7, 2, 64).act("relu1").pool("maxpool", 3, 2);
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (64, 256, 3, 1),
+        (128, 512, 4, 2),
+        (256, 1024, 6, 2),
+        (512, 2048, 3, 2),
+    ];
+    for (si, (mid, cout, blocks, s)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let stride = if blk == 0 { *s } else { 1 };
+            bottleneck(&mut b, &format!("layer{}.{}", si + 1, blk), *mid, *cout, stride);
+        }
+    }
+    b.gap("avgpool").linear("fc", 1000);
+    b.finish("resnet50", 224, 3)
+}
+
+// ---------------------------------------------------------- MobileNetV2
+
+fn inverted_residual(b: &mut B, name: &str, expand: usize, cout: usize, stride: usize) {
+    let cin = b.ch;
+    let hidden = cin * expand;
+    if expand != 1 {
+        b.conv(&format!("{name}.expand"), 1, 1, hidden).act(&format!("{name}.act1"));
+    }
+    b.dw(&format!("{name}.dw"), 3, stride).act(&format!("{name}.act2"));
+    b.conv(&format!("{name}.project"), 1, 1, cout);
+    if stride == 1 && cin == cout {
+        b.add(&format!("{name}.add"));
+    }
+}
+
+pub fn mobilenet_v2() -> Network {
+    let mut b = B::new(224, 3);
+    b.conv("stem", 3, 2, 32).act("stem.act");
+    // (expand t, channels c, repeats n, stride s) — torchvision table
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut idx = 0;
+    for (t, c, n, s) in cfg {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            inverted_residual(&mut b, &format!("ir{idx}"), t, c, stride);
+            idx += 1;
+        }
+    }
+    b.conv("head", 1, 1, 1280).act("head.act");
+    b.gap("gap").linear("fc", 1000);
+    b.finish("mobilenet_v2", 224, 3)
+}
+
+// ---------------------------------------------------------- MobileNetV3
+
+#[allow(clippy::too_many_arguments)]
+fn mbv3_block(b: &mut B, name: &str, k: usize, exp: usize, cout: usize, se: bool, stride: usize) {
+    let cin = b.ch;
+    if exp != cin {
+        b.conv(&format!("{name}.expand"), 1, 1, exp).act(&format!("{name}.act1"));
+    }
+    b.dw(&format!("{name}.dw"), k, stride).act(&format!("{name}.act2"));
+    if se {
+        // squeeze-excitation: GAP -> fc1 -> relu -> fc2 -> hsigmoid-mul.
+        // torchvision uses squeeze = make_divisible(exp / 4, 8).
+        let sq = make_divisible(exp / 4, 8);
+        b.branch_linear(&format!("{name}.se.fc1"), exp, sq);
+        b.branch_linear(&format!("{name}.se.fc2"), sq, exp);
+    }
+    b.conv(&format!("{name}.project"), 1, 1, cout);
+    if stride == 1 && cin == cout {
+        b.add(&format!("{name}.add"));
+    }
+}
+
+fn make_divisible(v: usize, d: usize) -> usize {
+    let new = std::cmp::max(d, (v + d / 2) / d * d);
+    if (new as f64) < 0.9 * v as f64 {
+        new + d
+    } else {
+        new
+    }
+}
+
+pub fn mobilenet_v3_large() -> Network {
+    let mut b = B::new(224, 3);
+    b.conv("stem", 3, 2, 16).act("stem.hs");
+    // (k, exp, out, SE, stride) — torchvision mobilenet_v3_large
+    let cfg: [(usize, usize, usize, bool, usize); 15] = [
+        (3, 16, 16, false, 1),
+        (3, 64, 24, false, 2),
+        (3, 72, 24, false, 1),
+        (5, 72, 40, true, 2),
+        (5, 120, 40, true, 1),
+        (5, 120, 40, true, 1),
+        (3, 240, 80, false, 2),
+        (3, 200, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 184, 80, false, 1),
+        (3, 480, 112, true, 1),
+        (3, 672, 112, true, 1),
+        (5, 672, 160, true, 2),
+        (5, 960, 160, true, 1),
+        (5, 960, 160, true, 1),
+    ];
+    for (i, (k, e, c, se, s)) in cfg.iter().enumerate() {
+        mbv3_block(&mut b, &format!("blk{i}"), *k, *e, *c, *se, *s);
+    }
+    b.conv("head", 1, 1, 960).act("head.hs");
+    b.gap("gap").linear("fc1", 1280).act("fc1.hs").linear("fc2", 1000);
+    b.finish("mobilenet_v3_large", 224, 3)
+}
+
+pub fn mobilenet_v3_small() -> Network {
+    let mut b = B::new(224, 3);
+    b.conv("stem", 3, 2, 16).act("stem.hs");
+    let cfg: [(usize, usize, usize, bool, usize); 11] = [
+        (3, 16, 16, true, 2),
+        (3, 72, 24, false, 2),
+        (3, 88, 24, false, 1),
+        (5, 96, 40, true, 2),
+        (5, 240, 40, true, 1),
+        (5, 240, 40, true, 1),
+        (5, 120, 48, true, 1),
+        (5, 144, 48, true, 1),
+        (5, 288, 96, true, 2),
+        (5, 576, 96, true, 1),
+        (5, 576, 96, true, 1),
+    ];
+    for (i, (k, e, c, se, s)) in cfg.iter().enumerate() {
+        mbv3_block(&mut b, &format!("blk{i}"), *k, *e, *c, *se, *s);
+    }
+    b.conv("head", 1, 1, 576).act("head.hs");
+    b.gap("gap").linear("fc1", 1024).act("fc1.hs").linear("fc2", 1000);
+    b.finish("mobilenet_v3_small", 224, 3)
+}
+
+/// Look a network up by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "calibnet" => Some(calibnet()),
+        "resnet18" => Some(resnet18()),
+        "resnet50" => Some(resnet50()),
+        "mobilenet_v2" | "mbv2" => Some(mobilenet_v2()),
+        "mobilenet_v3_small" | "mbv3s" => Some(mobilenet_v3_small()),
+        "mobilenet_v3_large" | "mbv3l" => Some(mobilenet_v3_large()),
+        _ => None,
+    }
+}
+
+pub const ALL_NETWORKS: [&str; 6] = [
+    "calibnet",
+    "resnet18",
+    "resnet50",
+    "mobilenet_v2",
+    "mobilenet_v3_small",
+    "mobilenet_v3_large",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_validate() {
+        for name in ALL_NETWORKS {
+            let net = by_name(name).unwrap();
+            net.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn resnet18_macs_and_params_match_torchvision() {
+        let net = resnet18();
+        // torchvision: 1.814 GMACs, 11.69 M params
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((1.75..1.90).contains(&gmacs), "resnet18 gmacs {gmacs}");
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((11.0..12.0).contains(&params), "resnet18 params {params}M");
+    }
+
+    #[test]
+    fn resnet50_macs_and_params_match_torchvision() {
+        let net = resnet50();
+        // torchvision: 4.09 GMACs, 25.6 M params (conv+fc weights ≈ 25.5 M)
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((3.95..4.25).contains(&gmacs), "resnet50 gmacs {gmacs}");
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((25.0..26.0).contains(&params), "resnet50 params {params}M");
+    }
+
+    #[test]
+    fn mobilenet_v2_macs_match_torchvision() {
+        let net = mobilenet_v2();
+        // torchvision: 0.30 GMACs, 3.4 M params
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((0.28..0.33).contains(&gmacs), "mbv2 gmacs {gmacs}");
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((3.1..3.6).contains(&params), "mbv2 params {params}M");
+    }
+
+    #[test]
+    fn mobilenet_v3_large_macs_match_torchvision() {
+        let net = mobilenet_v3_large();
+        // torchvision: 0.217 GMACs, 5.5 M params
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((0.20..0.24).contains(&gmacs), "mbv3l gmacs {gmacs}");
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((5.0..6.0).contains(&params), "mbv3l params {params}M");
+    }
+
+    #[test]
+    fn mobilenet_v3_small_macs_match_torchvision() {
+        let net = mobilenet_v3_small();
+        // torchvision: 0.057 GMACs, 2.5 M params
+        let gmacs = net.total_macs() as f64 / 1e9;
+        assert!((0.050..0.065).contains(&gmacs), "mbv3s gmacs {gmacs}");
+        let params = net.total_weights() as f64 / 1e6;
+        assert!((2.0..3.0).contains(&params), "mbv3s params {params}M");
+    }
+
+    #[test]
+    fn calibnet_matches_python_side() {
+        let net = calibnet();
+        // python common.total_params() ∈ (70k, 90k) — weights only here
+        let params = net.total_weights();
+        assert!((70_000..90_000).contains(&params), "calibnet params {params}");
+        assert_eq!(net.compute_layers().len(), 10);
+    }
+
+    #[test]
+    fn calibnet_artifact_order_covers_all_compute_layers() {
+        let net = calibnet();
+        let names: Vec<_> = net.compute_layers().iter().map(|l| l.name.clone()).collect();
+        let mut order = calibnet_artifact_order();
+        order.sort_unstable();
+        let mut got: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        got.sort_unstable();
+        assert_eq!(order, got);
+    }
+
+    #[test]
+    fn resnet18_has_16_3x3_convs_for_fig4() {
+        // The paper's Fig. 4 speaks of 16 3x3 conv layers in ResNet-18
+        let net = resnet18();
+        let n3x3 = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, Op::Conv { kernel: 3, .. }))
+            .count();
+        assert_eq!(n3x3, 16);
+    }
+
+    #[test]
+    fn resnet18_spatial_chain() {
+        let net = resnet18();
+        // last compute layer before fc must see 7x7 maps
+        let last_conv = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, Op::Conv { .. }) && !l.branch)
+            .next_back()
+            .unwrap();
+        assert_eq!(last_conv.in_hw, 7);
+    }
+
+    #[test]
+    fn mbv2_depthwise_identified() {
+        let net = mobilenet_v2();
+        let dw = net
+            .layers
+            .iter()
+            .find(|l| l.name == "ir1.dw")
+            .unwrap();
+        match dw.op {
+            Op::Conv { groups, cin, cout, .. } => {
+                assert_eq!(groups, cin);
+                assert_eq!(cin, cout);
+                assert_eq!(dw.patch_k(), 9);
+            }
+            _ => panic!("not a conv"),
+        }
+    }
+
+    #[test]
+    fn make_divisible_matches_torchvision_rule() {
+        assert_eq!(make_divisible(16, 8), 16);
+        // 18 rounds to 16, but 16 < 0.9*18 so the rule bumps up a step
+        assert_eq!(make_divisible(18, 8), 24);
+        assert_eq!(make_divisible(30, 8), 32);
+        assert_eq!(make_divisible(4, 8), 8);
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert!(by_name("mbv2").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

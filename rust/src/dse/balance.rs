@@ -1,0 +1,215 @@
+//! Intra-layer balancing strategy (paper §IV "Balancing Strategy").
+//!
+//! Under unstructured pruning, per-input-channel / per-output-filter
+//! densities differ, so the i×o SPEs of a layer would run at imbalanced
+//! rates and stall the pipeline.  At compile time the paper assigns the
+//! I input channels and O output filters to the i×o engines with
+//! simulated annealing, minimizing the spread of engine processing rates.
+//!
+//! An engine's work is the sum of pair densities of the (channel, filter)
+//! slice it owns; the slowest engine sets the layer's group time, so the
+//! objective is the **maximum** engine load (normalized by the mean —
+//! 1.0 is a perfect balance).
+
+use crate::optim::anneal::{anneal, AnnealSchedule};
+use crate::util::rng::Rng;
+
+/// Assignment of channels/filters to engine groups.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// channel index -> input-engine group in [0, i_par)
+    pub chan_group: Vec<usize>,
+    /// filter index -> output-engine group in [0, o_par)
+    pub filt_group: Vec<usize>,
+}
+
+/// Result of the balancing SA.
+#[derive(Clone, Debug)]
+pub struct BalanceResult {
+    pub assignment: Assignment,
+    /// max/mean engine load before SA (contiguous assignment)
+    pub imbalance_before: f64,
+    /// max/mean engine load after SA
+    pub imbalance_after: f64,
+}
+
+/// Max-over-mean engine load of an assignment.
+///
+/// `chan_density[c]` and `filt_density[f]` are relative density
+/// multipliers; engine (gi, go) load = Σ_{c∈gi} d_c · Σ_{f∈go} d_f
+/// (separable because every (c, f) pair in the slice is processed).
+pub fn imbalance(
+    chan_density: &[f64],
+    filt_density: &[f64],
+    asg: &Assignment,
+    i_par: usize,
+    o_par: usize,
+) -> f64 {
+    let mut chan_load = vec![0.0; i_par];
+    for (c, &g) in asg.chan_group.iter().enumerate() {
+        chan_load[g] += chan_density[c];
+    }
+    let mut filt_load = vec![0.0; o_par];
+    for (f, &g) in asg.filt_group.iter().enumerate() {
+        filt_load[g] += filt_density[f];
+    }
+    let mut max_load = 0.0f64;
+    let mut sum = 0.0;
+    for &cl in &chan_load {
+        for &fl in &filt_load {
+            let l = cl * fl;
+            max_load = max_load.max(l);
+            sum += l;
+        }
+    }
+    let mean = sum / (i_par * o_par) as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    max_load / mean
+}
+
+/// Contiguous round-robin starting point (what naive folding would do).
+pub fn contiguous_assignment(n_chan: usize, n_filt: usize, i_par: usize, o_par: usize) -> Assignment {
+    Assignment {
+        chan_group: (0..n_chan).map(|c| c * i_par / n_chan).collect(),
+        filt_group: (0..n_filt).map(|f| f * o_par / n_filt).collect(),
+    }
+}
+
+/// Solve the allocation problem with SA (paper's Balancing Strategy).
+pub fn balance(
+    chan_density: &[f64],
+    filt_density: &[f64],
+    i_par: usize,
+    o_par: usize,
+    schedule: &AnnealSchedule,
+    rng: &mut Rng,
+) -> BalanceResult {
+    assert!(i_par >= 1 && o_par >= 1);
+    assert!(chan_density.len() >= i_par, "need >= one channel per group");
+    assert!(filt_density.len() >= o_par, "need >= one filter per group");
+    let init = contiguous_assignment(chan_density.len(), filt_density.len(), i_par, o_par);
+    let before = imbalance(chan_density, filt_density, &init, i_par, o_par);
+    if i_par == 1 && o_par == 1 {
+        return BalanceResult { assignment: init, imbalance_before: before, imbalance_after: before };
+    }
+    let energy =
+        |a: &Assignment| imbalance(chan_density, filt_density, a, i_par, o_par);
+    let neighbor = move |a: &Assignment, r: &mut Rng| {
+        let mut b = a.clone();
+        // swap two items within one side (preserves group sizes) or move
+        // one item to another group (changes sizes) with equal odds
+        let side_chan = r.bool(0.5) && i_par > 1;
+        if side_chan || o_par == 1 {
+            if r.bool(0.5) {
+                let x = r.below(b.chan_group.len());
+                let y = r.below(b.chan_group.len());
+                b.chan_group.swap(x, y);
+            } else {
+                let x = r.below(b.chan_group.len());
+                b.chan_group[x] = r.below(i_par);
+            }
+        } else if r.bool(0.5) {
+            let x = r.below(b.filt_group.len());
+            let y = r.below(b.filt_group.len());
+            b.filt_group.swap(x, y);
+        } else {
+            let x = r.below(b.filt_group.len());
+            b.filt_group[x] = r.below(o_par);
+        }
+        b
+    };
+    let (best, after) = anneal(init, energy, neighbor, schedule, rng);
+    BalanceResult { assignment: best, imbalance_before: before, imbalance_after: after }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn skewed(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0.4 * rng.gauss()).exp()).collect()
+    }
+
+    #[test]
+    fn uniform_density_is_already_balanced() {
+        let cd = vec![1.0; 16];
+        let fd = vec![1.0; 16];
+        let asg = contiguous_assignment(16, 16, 4, 4);
+        assert!((imbalance(&cd, &fd, &asg, 4, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sa_reduces_imbalance_on_skewed_densities() {
+        let cd = skewed(32, 1);
+        let fd = skewed(64, 2);
+        let mut rng = Rng::new(3);
+        let r = balance(&cd, &fd, 4, 8, &AnnealSchedule::default(), &mut rng);
+        assert!(
+            r.imbalance_after <= r.imbalance_before,
+            "{} -> {}",
+            r.imbalance_before,
+            r.imbalance_after
+        );
+        assert!(r.imbalance_after < 1.25, "still imbalanced: {}", r.imbalance_after);
+    }
+
+    #[test]
+    fn single_engine_needs_no_balancing() {
+        let cd = skewed(8, 4);
+        let fd = skewed(8, 5);
+        let mut rng = Rng::new(6);
+        let r = balance(&cd, &fd, 1, 1, &AnnealSchedule::default(), &mut rng);
+        assert!((r.imbalance_after - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        forall(30, 0x1B, |rng| {
+            let n = 4 + rng.below(30);
+            let m = 4 + rng.below(30);
+            let cd: Vec<f64> = (0..n).map(|_| rng.range(0.1, 2.0)).collect();
+            let fd: Vec<f64> = (0..m).map(|_| rng.range(0.1, 2.0)).collect();
+            let asg = contiguous_assignment(n, m, 2, 2);
+            assert!(imbalance(&cd, &fd, &asg, 2, 2) >= 1.0 - 1e-12);
+        });
+    }
+
+    #[test]
+    fn assignment_groups_stay_in_range() {
+        let cd = skewed(20, 7);
+        let fd = skewed(24, 8);
+        let mut rng = Rng::new(9);
+        let r = balance(&cd, &fd, 4, 6, &AnnealSchedule { iters: 500, ..Default::default() }, &mut rng);
+        assert!(r.assignment.chan_group.iter().all(|&g| g < 4));
+        assert!(r.assignment.filt_group.iter().all(|&g| g < 6));
+        assert_eq!(r.assignment.chan_group.len(), 20);
+        assert_eq!(r.assignment.filt_group.len(), 24);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cd = skewed(16, 10);
+        let fd = skewed(16, 11);
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            balance(&cd, &fd, 4, 4, &AnnealSchedule::default(), &mut rng).imbalance_after
+        };
+        assert_eq!(run(12).to_bits(), run(12).to_bits());
+    }
+
+    #[test]
+    fn adversarial_bimodal_distribution() {
+        // half the channels are 10x denser: contiguous grouping is terrible
+        let mut cd = vec![0.2; 16];
+        cd.extend(vec![2.0; 16]);
+        let fd = vec![1.0; 8];
+        let mut rng = Rng::new(13);
+        let r = balance(&cd, &fd, 4, 2, &AnnealSchedule::default(), &mut rng);
+        assert!(r.imbalance_before > 1.5, "setup not adversarial: {}", r.imbalance_before);
+        assert!(r.imbalance_after < 1.1, "SA failed: {}", r.imbalance_after);
+    }
+}

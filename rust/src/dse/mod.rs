@@ -1,0 +1,537 @@
+//! Design Space Exploration of the sparse dataflow accelerator (paper §V-A).
+//!
+//! The DSE takes a network, its per-layer sparsity operating points, a
+//! resource model and a device budget, and produces one [`LayerDesign`]
+//! per compute layer:
+//!
+//! 1. **Performance model** (Eq. 2–3) — layer throughput from the SPE
+//!    cycle model; network throughput is the pipeline minimum.
+//! 2. **Rate balancing** (Eq. 4–5) — every non-bottleneck layer is
+//!    re-fitted to the *cheapest* design that still meets the pipeline
+//!    rate, releasing resources ([`balance_rates`]).
+//! 3. **Resource-constrained incrementing** (§V-A.3) — from the
+//!    resource-minimal design, repeatedly raise the parallelism of the
+//!    slowest layer one step, re-balance, and stop when the budget is
+//!    exhausted ([`explore`]).
+//! 4. **Partitioning & reconfiguration** (§V-A.4) — [`partition`].
+
+pub mod balance;
+pub mod partition;
+
+use crate::arch::Network;
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::{ResourceModel, Resources};
+use crate::hardware::{divisors, LayerDesign};
+use crate::sparsity::SparsityPoint;
+use crate::util::ceil_div;
+
+/// A complete accelerator design for one network on one device.
+#[derive(Clone, Debug)]
+pub struct NetworkDesign {
+    /// one design per compute layer, in `compute_indices` order
+    pub designs: Vec<LayerDesign>,
+    /// pipeline throughput, images per cycle (Eq. 3)
+    pub throughput: f64,
+    pub resources: Resources,
+}
+
+impl NetworkDesign {
+    /// Images per second at the device clock.
+    pub fn images_per_sec(&self, dev: &DeviceBudget) -> f64 {
+        self.throughput * dev.freq_hz()
+    }
+
+    /// The paper's headline efficiency metric: images / cycle / DSP.
+    pub fn efficiency(&self) -> f64 {
+        self.throughput / self.resources.dsp.max(1) as f64
+    }
+}
+
+/// Pipeline throughput of a candidate design — Eq. 3 (min over layers).
+pub fn network_throughput(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+) -> f64 {
+    let compute = net.compute_layers();
+    assert_eq!(compute.len(), designs.len());
+    assert_eq!(compute.len(), points.len());
+    compute
+        .iter()
+        .zip(designs.iter().zip(points))
+        .map(|(l, (d, p))| d.throughput(l, *p))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Index of the slowest compute layer (the pipeline bottleneck).
+pub fn bottleneck(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+) -> usize {
+    let compute = net.compute_layers();
+    let mut worst = 0;
+    let mut worst_th = f64::INFINITY;
+    for (i, (l, (d, p))) in compute.iter().zip(designs.iter().zip(points)).enumerate() {
+        let th = d.throughput(l, *p);
+        if th < worst_th {
+            worst_th = th;
+            worst = i;
+        }
+    }
+    worst
+}
+
+/// Candidate `n_mac` values worth considering for a layer: for every
+/// achievable initiation interval `t` there is a unique minimal N, so the
+/// whole [1, M] range collapses to ~2·√M distinct useful points.
+pub fn useful_n_macs(m_len: usize, density: f64) -> Vec<usize> {
+    let useful = (density * m_len as f64).max(1.0);
+    let t_max = useful.ceil() as u64;
+    let mut out: Vec<usize> = Vec::new();
+    let mut t = 1u64;
+    while t <= t_max {
+        let n = ((useful / t as f64).ceil() as usize).clamp(1, m_len);
+        if out.last() != Some(&n) {
+            out.push(n);
+        }
+        // skip t values that map to the same n
+        let t_next = (useful / (n.saturating_sub(1)).max(1) as f64).ceil() as u64;
+        t = t.max(t_next).max(t + 1);
+        if n == 1 {
+            break;
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Budget-normalized scalar cost of a resource bundle: each dimension is
+/// divided by the device budget, so "cheapest" tracks whichever resource
+/// actually binds on this device (LUTs on a U250 ResNet-18, DSPs on a
+/// DSP-starved part, ...).
+pub fn norm_cost(r: &Resources, dev: &DeviceBudget) -> f64 {
+    let mut c = r.dsp as f64 / dev.dsp.max(1) as f64
+        + r.lut as f64 / dev.lut.max(1) as f64
+        + r.bram18k as f64 / dev.bram18k.max(1) as f64;
+    if dev.uram > 0 {
+        c += r.uram as f64 / dev.uram as f64;
+    } else if r.uram > 0 {
+        c += f64::INFINITY; // no URAM on this device
+    }
+    c
+}
+
+/// Cheapest design (by [`norm_cost`]) for layer `li` of `net` achieving
+/// throughput ≥ `min_thr` under sparsity `point` — Eq. 4's inner
+/// minimization.  Returns `None` if even full parallelism misses.
+pub fn cheapest_design_achieving(
+    net: &Network,
+    li: usize,
+    point: SparsityPoint,
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    min_thr: f64,
+) -> Option<LayerDesign> {
+    let layer = net.compute_layers()[li];
+    if min_thr <= 0.0 {
+        return Some(LayerDesign::MINIMAL);
+    }
+    let budget_cycles = (1.0 / min_thr).floor().max(1.0) as u64;
+    let mut best: Option<(LayerDesign, f64)> = None;
+    for &o in &divisors(layer.o_extent()) {
+        let groups = ceil_div(layer.outputs_per_image() as u64, o as u64);
+        // SPE must finish one output group within budget_cycles/groups
+        let t_budget = budget_cycles / groups;
+        if t_budget == 0 {
+            continue; // even t=1 per group is too slow at this o
+        }
+        for &i in &divisors(layer.i_extent()) {
+            let probe = LayerDesign { i_par: i, o_par: o, n_mac: 1 };
+            let m = probe.m_len(layer);
+            let useful = (point.pair_density() * m as f64).max(0.0);
+            // minimal N with ceil(useful/N) <= t_budget
+            let n = if useful <= t_budget as f64 {
+                1
+            } else {
+                (useful / t_budget as f64).ceil() as usize
+            };
+            if n > m {
+                continue;
+            }
+            let d = LayerDesign { i_par: i, o_par: o, n_mac: n.max(1) };
+            if !d.feasible(layer) || d.throughput(layer, point) < min_thr {
+                continue;
+            }
+            let r = rm.layer(layer, &d);
+            let c = norm_cost(&r, dev);
+            if best.as_ref().is_none_or(|(_, bc)| c < *bc) {
+                best = Some((d, c));
+            }
+        }
+    }
+    best.map(|(d, _)| d)
+}
+
+/// Total resources of the non-compute streaming nodes (constant per net).
+fn aux_total(net: &Network, rm: &ResourceModel) -> Resources {
+    net.layers
+        .iter()
+        .filter(|l| !l.is_compute())
+        .map(|l| rm.aux_node(l))
+        .sum()
+}
+
+/// Rate balancing — Eq. 4–5.  Refit every layer to the cheapest design
+/// that still sustains the current pipeline throughput.  The bottleneck
+/// layer itself is also refitted (its own rate is the target), which can
+/// only shed resources, never lower the pipeline minimum.
+pub fn balance_rates(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+) -> Vec<LayerDesign> {
+    let thr = network_throughput(net, designs, points);
+    designs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            cheapest_design_achieving(net, i, points[i], rm, dev, thr).unwrap_or(*d)
+        })
+        .collect()
+}
+
+/// Configuration of the incrementing loop.
+#[derive(Clone, Debug)]
+pub struct DseConfig {
+    /// hard cap on incrementing iterations (safety)
+    pub max_iters: usize,
+    /// re-run rate balancing every this many accepted increments
+    pub balance_every: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig { max_iters: 100_000, balance_every: 64 }
+    }
+}
+
+/// Resource-constrained exploration (§V-A.3).  The paper grows the
+/// slowest layer step by step and rate-balances after every step; the
+/// fixed point of that loop is "the largest pipeline rate λ whose
+/// cheapest rate-λ design (Eq. 4 per layer) fits the budget".  Per-layer
+/// minimal cost is monotone in λ, so we find that fixed point directly by
+/// bisection over λ — same result, deterministic, and orders of magnitude
+/// fewer model evaluations than replaying every increment.
+pub fn explore(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+) -> NetworkDesign {
+    let compute = net.compute_layers();
+    assert_eq!(compute.len(), points.len());
+    let aux = aux_total(net, rm);
+    let minimal = vec![LayerDesign::MINIMAL; compute.len()];
+    let min_res = rm.network(net, &minimal);
+    // an over-budget minimal design means the network cannot map at all;
+    // return it anyway (caller checks `dev.fits`)
+    if !dev.fits(&min_res) {
+        let throughput = network_throughput(net, &minimal, points);
+        return NetworkDesign { designs: minimal, throughput, resources: min_res };
+    }
+
+    // cheapest whole-network design at pipeline rate lam (None: infeasible)
+    let design_at = |lam: f64| -> Option<(Vec<LayerDesign>, Resources)> {
+        let mut designs = Vec::with_capacity(compute.len());
+        let mut total = aux;
+        for i in 0..compute.len() {
+            let d = cheapest_design_achieving(net, i, points[i], rm, dev, lam)?;
+            total = total + rm.layer(compute[i], &d);
+            designs.push(d);
+        }
+        if dev.fits(&total) {
+            Some((designs, total))
+        } else {
+            None
+        }
+    };
+
+    // feasible lower bound: the minimal design's rate
+    let mut lo = network_throughput(net, &minimal, points);
+    // structural upper bound: full output parallelism, one cycle per group
+    let hi_struct = compute
+        .iter()
+        .map(|l| 1.0 / ceil_div(l.outputs_per_image() as u64, l.o_extent() as u64) as f64)
+        .fold(f64::INFINITY, f64::min);
+    let mut best = design_at(lo).unwrap_or((minimal.clone(), min_res));
+    if let Some(b) = design_at(hi_struct) {
+        // the whole structural ceiling fits (device much larger than net)
+        let throughput = network_throughput(net, &b.0, points);
+        return NetworkDesign { designs: b.0, throughput, resources: b.1 };
+    }
+    let mut hi = hi_struct;
+    // log-space bisection: stop when the bracket is tight or iters are out
+    let iters = cfg.max_iters.min(64).max(16);
+    for _ in 0..iters {
+        if hi / lo < 1.0 + 1e-9 {
+            break;
+        }
+        let mid = (lo * hi).sqrt();
+        match design_at(mid) {
+            Some(b) => {
+                lo = mid;
+                best = b;
+            }
+            None => hi = mid,
+        }
+    }
+    let (designs, resources) = best;
+    let throughput = network_throughput(net, &designs, points);
+    NetworkDesign { designs, throughput, resources }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::sparsity::SparsityPoint;
+    use crate::util::prop::forall;
+
+    fn setup(name: &str, s: f64) -> (Network, Vec<SparsityPoint>, ResourceModel) {
+        let net = networks::by_name(name).unwrap();
+        let n = net.compute_layers().len();
+        let points = vec![SparsityPoint { s_w: s, s_a: s }; n];
+        (net, points, ResourceModel::default())
+    }
+
+    #[test]
+    fn minimal_design_throughput_is_pipeline_min() {
+        let (net, points, _) = setup("calibnet", 0.0);
+        let designs = vec![LayerDesign::MINIMAL; points.len()];
+        let thr = network_throughput(&net, &designs, &points);
+        let per: Vec<f64> = net
+            .compute_layers()
+            .iter()
+            .zip(designs.iter().zip(&points))
+            .map(|(l, (d, p))| d.throughput(l, *p))
+            .collect();
+        assert!((thr - per.iter().cloned().fold(f64::INFINITY, f64::min)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn bottleneck_is_largest_layer_at_minimal() {
+        let (net, points, _) = setup("calibnet", 0.0);
+        let designs = vec![LayerDesign::MINIMAL; points.len()];
+        let b = bottleneck(&net, &designs, &points);
+        // several layers tie at the max MAC count; the bottleneck must be
+        // one of them (at MINIMAL design, cycles/image == macs/image)
+        let macs: Vec<u64> = net.compute_layers().iter().map(|l| l.macs_per_image()).collect();
+        let max_m = *macs.iter().max().unwrap();
+        assert_eq!(macs[b], max_m);
+    }
+
+    #[test]
+    fn useful_n_macs_covers_extremes() {
+        let ns = useful_n_macs(144, 1.0);
+        assert!(ns.contains(&1));
+        assert!(ns.contains(&144));
+        assert!(ns.len() < 40, "should be ~2sqrt(M): {}", ns.len());
+    }
+
+    #[test]
+    fn useful_n_macs_shrinks_with_density() {
+        let dense = useful_n_macs(256, 1.0);
+        let sparse = useful_n_macs(256, 0.25);
+        assert!(sparse.last().unwrap() <= dense.last().unwrap());
+    }
+
+    #[test]
+    fn cheapest_design_meets_rate() {
+        let (net, points, rm) = setup("calibnet", 0.3);
+        // ask for a moderate rate on layer 0
+        let target = 1e-5;
+        let dev = DeviceBudget::u250();
+        let d = cheapest_design_achieving(&net, 0, points[0], &rm, &dev, target).unwrap();
+        let l = net.compute_layers()[0];
+        assert!(d.throughput(l, points[0]) >= target);
+    }
+
+    #[test]
+    fn cheapest_design_none_when_impossible() {
+        let (net, points, rm) = setup("calibnet", 0.0);
+        assert!(cheapest_design_achieving(&net, 0, points[0], &rm, &DeviceBudget::u250(), 1.0).is_none());
+    }
+
+    #[test]
+    fn cheapest_design_is_minimal_for_zero_rate() {
+        let (net, points, rm) = setup("calibnet", 0.0);
+        let d = cheapest_design_achieving(&net, 0, points[0], &rm, &DeviceBudget::u250(), 0.0).unwrap();
+        assert_eq!(d, LayerDesign::MINIMAL);
+    }
+
+    #[test]
+    fn balance_never_lowers_pipeline_throughput() {
+        let (net, points, rm) = setup("calibnet", 0.4);
+        forall(25, 0xBA1A, |rng| {
+            // random feasible design
+            let designs: Vec<LayerDesign> = net
+                .compute_layers()
+                .iter()
+                .map(|l| {
+                    let is = divisors(l.i_extent());
+                    let os = divisors(l.o_extent());
+                    let i = *rng.choice(&is);
+                    let o = *rng.choice(&os);
+                    let d = LayerDesign { i_par: i, o_par: o, n_mac: 1 };
+                    let m = d.m_len(l);
+                    LayerDesign { n_mac: 1 + rng.below(m), ..d }
+                })
+                .collect();
+            let before = network_throughput(&net, &designs, &points);
+            let balanced = balance_rates(&net, &designs, &points, &rm, &DeviceBudget::u250());
+            let after = network_throughput(&net, &balanced, &points);
+            assert!(
+                after >= before * (1.0 - 1e-12),
+                "balance lowered throughput {before} -> {after}"
+            );
+        });
+    }
+
+    #[test]
+    fn balance_never_raises_resources() {
+        let (net, points, rm) = setup("calibnet", 0.4);
+        forall(25, 0xBA1B, |rng| {
+            let designs: Vec<LayerDesign> = net
+                .compute_layers()
+                .iter()
+                .map(|l| {
+                    let os = divisors(l.o_extent());
+                    let o = *rng.choice(&os);
+                    let d = LayerDesign { i_par: 1, o_par: o, n_mac: 1 };
+                    let m = d.m_len(l);
+                    LayerDesign { n_mac: 1 + rng.below(m), ..d }
+                })
+                .collect();
+            let before = rm.network(&net, &designs);
+            let balanced = balance_rates(&net, &designs, &points, &rm, &DeviceBudget::u250());
+            let after = rm.network(&net, &balanced);
+            assert!(after.dsp <= before.dsp, "dsp {} -> {}", before.dsp, after.dsp);
+        });
+    }
+
+    #[test]
+    fn explore_fits_budget() {
+        let (net, points, rm) = setup("calibnet", 0.3);
+        let dev = DeviceBudget::u250();
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        assert!(dev.fits(&d.resources), "{:?}", d.resources);
+        assert!(d.throughput > 0.0);
+    }
+
+    #[test]
+    fn explore_beats_minimal_design() {
+        let (net, points, rm) = setup("calibnet", 0.3);
+        let dev = DeviceBudget::u250();
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let minimal = vec![LayerDesign::MINIMAL; points.len()];
+        let min_thr = network_throughput(&net, &minimal, &points);
+        assert!(
+            d.throughput > min_thr * 10.0,
+            "DSE barely improved: {} vs {}",
+            d.throughput,
+            min_thr
+        );
+    }
+
+    #[test]
+    fn explore_uses_more_resources_on_bigger_device() {
+        let (net, points, rm) = setup("calibnet", 0.3);
+        let small = DeviceBudget {
+            name: "small".into(),
+            dsp: 64,
+            lut: 200_000,
+            bram18k: 600,
+            uram: 64,
+            freq_mhz: 250.0,
+        };
+        let big = DeviceBudget::u250();
+        let ds = explore(&net, &points, &rm, &small, &DseConfig::default());
+        let db = explore(&net, &points, &rm, &big, &DseConfig::default());
+        assert!(db.throughput >= ds.throughput);
+        assert!(small.fits(&ds.resources));
+    }
+
+    #[test]
+    fn sparser_network_reaches_higher_throughput_per_dsp() {
+        // the core sparse-dataflow claim: at a fixed budget, sparsity buys
+        // throughput per DSP
+        let rm = ResourceModel::default();
+        let net = networks::calibnet();
+        let dev = DeviceBudget {
+            name: "cap".into(),
+            dsp: 512,
+            lut: 600_000,
+            bram18k: 2_000,
+            uram: 256,
+            freq_mhz: 250.0,
+        };
+        let n = net.compute_layers().len();
+        let dense = explore(
+            &net,
+            &vec![SparsityPoint::DENSE; n],
+            &rm,
+            &dev,
+            &DseConfig::default(),
+        );
+        let sparse = explore(
+            &net,
+            &vec![SparsityPoint { s_w: 0.6, s_a: 0.5 }; n],
+            &rm,
+            &dev,
+            &DseConfig::default(),
+        );
+        assert!(
+            sparse.efficiency() > dense.efficiency() * 1.5,
+            "sparse {} vs dense {}",
+            sparse.efficiency(),
+            dense.efficiency()
+        );
+    }
+
+    #[test]
+    fn explore_is_deterministic() {
+        let (net, points, rm) = setup("calibnet", 0.25);
+        let dev = DeviceBudget::u250();
+        let a = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let b = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        assert_eq!(a.designs, b.designs);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    }
+
+    #[test]
+    fn explore_handles_resnet18_scale() {
+        let (net, points, rm) = setup("resnet18", 0.5);
+        let dev = DeviceBudget::u250();
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        assert!(dev.fits(&d.resources));
+        // ResNet-18 at 224x224 should reach paper-order throughput:
+        // thousands of images/s at 250 MHz
+        let ips = d.images_per_sec(&dev);
+        assert!(ips > 100.0, "unreasonably slow: {ips} img/s");
+    }
+
+    #[test]
+    fn efficiency_metric_definition() {
+        let d = NetworkDesign {
+            designs: vec![],
+            throughput: 1e-5,
+            resources: Resources { dsp: 100, lut: 0, bram18k: 0, uram: 0 },
+        };
+        assert!((d.efficiency() - 1e-7).abs() < 1e-20);
+    }
+}

@@ -1,0 +1,325 @@
+//! Device partitioning & full reconfiguration (paper §V-A.4).
+//!
+//! When a network does not fit one device, the dataflow pipeline is folded
+//! at block level: contiguous layer ranges ("partitions") are computed one
+//! after another on the same FPGA with **full reconfiguration** between
+//! them.  Reconfiguration costs wall-clock time, amortized by batching:
+//!
+//! ```text
+//! time(batch) = Σ_p batch / θ_p   +   P · T_reconfig
+//! ```
+//!
+//! A simulated-annealing solver picks the number of partitions and the
+//! split points, trading reconfiguration overhead against the parallelism
+//! each (smaller) partition can afford from the full device.
+
+use crate::arch::Network;
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
+use crate::optim::anneal::{anneal, AnnealSchedule};
+use crate::sparsity::SparsityPoint;
+use crate::util::rng::Rng;
+
+use super::{explore, DseConfig, NetworkDesign};
+
+/// U250 full-bitstream reconfiguration time (order of 100 ms via PCIe),
+/// the paper amortizes it with large batches [1].
+pub const DEFAULT_RECONFIG_SECS: f64 = 0.1;
+
+/// One partitioned mapping of a network.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    /// split points: partition p covers compute layers
+    /// `bounds[p]..bounds[p+1]`; `bounds[0] == 0`,
+    /// `bounds.last() == n_compute_layers`
+    pub bounds: Vec<usize>,
+    /// per-partition DSE result
+    pub designs: Vec<NetworkDesign>,
+    /// end-to-end throughput in images/s at `batch`
+    pub images_per_sec: f64,
+    pub batch: usize,
+}
+
+impl Partitioning {
+    pub fn n_partitions(&self) -> usize {
+        self.bounds.len() - 1
+    }
+}
+
+/// Sub-network view covering compute layers `[lo, hi)` of `net` (plus the
+/// non-compute nodes between them, which belong to the partition's
+/// pipeline stretch).
+fn slice_network(net: &Network, lo: usize, hi: usize) -> (Network, Vec<usize>) {
+    let idx = net.compute_indices();
+    let start_node = idx[lo];
+    let end_node = if hi < idx.len() { idx[hi] } else { net.layers.len() };
+    let layers: Vec<_> = net.layers[start_node..end_node].to_vec();
+    let input_hw = layers[0].in_hw;
+    let input_channels = match &layers[0].op {
+        crate::arch::Op::Conv { cin, .. } => *cin,
+        crate::arch::Op::Linear { cin, .. } => *cin,
+        _ => net.input_channels,
+    };
+    let sub = Network {
+        name: format!("{}[{lo}..{hi}]", net.name),
+        input_hw,
+        input_channels,
+        layers,
+    };
+    (sub, (lo..hi).collect())
+}
+
+/// Evaluate a set of split bounds: DSE each partition on the full device,
+/// then combine with the reconfiguration-amortization formula.
+pub fn evaluate_bounds(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    bounds: &[usize],
+    batch: usize,
+    reconfig_secs: f64,
+) -> Option<Partitioning> {
+    let mut designs = Vec::with_capacity(bounds.len() - 1);
+    let mut secs_per_batch = (bounds.len() - 1) as f64 * reconfig_secs;
+    for w in bounds.windows(2) {
+        let (sub, pt_idx) = slice_network(net, w[0], w[1]);
+        let sub_points: Vec<SparsityPoint> = pt_idx.iter().map(|&i| points[i]).collect();
+        let d = explore(&sub, &sub_points, rm, dev, cfg);
+        if !dev.fits(&d.resources) {
+            return None; // partition still too large for the device
+        }
+        secs_per_batch += batch as f64 / d.images_per_sec(dev);
+        designs.push(d);
+    }
+    Some(Partitioning {
+        bounds: bounds.to_vec(),
+        designs,
+        images_per_sec: batch as f64 / secs_per_batch,
+        batch,
+    })
+}
+
+/// SA over split points (paper: "the decisions of where to split the
+/// partition and the number of partitions are given by a simulated
+/// annealing solver").
+pub fn partition(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    batch: usize,
+    reconfig_secs: f64,
+    rng: &mut Rng,
+) -> Option<Partitioning> {
+    let n = net.compute_layers().len();
+    assert_eq!(n, points.len());
+    // single partition first: if the whole net maps, no need to fold
+    if let Some(p) =
+        evaluate_bounds(net, points, rm, dev, cfg, &[0, n], batch, reconfig_secs)
+    {
+        // still let SA try to beat it (a fold can win when the single-
+        // device design is budget-starved), starting from the 1-partition
+        // solution
+        let best_single = p.images_per_sec;
+        let sa = anneal_partitions(net, points, rm, dev, cfg, batch, reconfig_secs, rng, 2);
+        return match sa {
+            Some(q) if q.images_per_sec > best_single => Some(q),
+            _ => Some(p),
+        };
+    }
+    // network does not fit whole: SA over increasing partition counts
+    for max_parts in [2, 3, 4, 6, 8] {
+        if let Some(p) =
+            anneal_partitions(net, points, rm, dev, cfg, batch, reconfig_secs, rng, max_parts)
+        {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[allow(clippy::too_many_arguments)]
+fn anneal_partitions(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    batch: usize,
+    reconfig_secs: f64,
+    rng: &mut Rng,
+    n_parts: usize,
+) -> Option<Partitioning> {
+    let n = net.compute_layers().len();
+    if n_parts > n {
+        return None;
+    }
+    // initial bounds: equal op-count split
+    let ops: Vec<f64> = net.compute_layers().iter().map(|l| l.macs_per_image() as f64).collect();
+    let total: f64 = ops.iter().sum();
+    let mut bounds = vec![0usize];
+    let mut acc = 0.0;
+    for (i, &o) in ops.iter().enumerate() {
+        acc += o;
+        if bounds.len() < n_parts && acc >= total * bounds.len() as f64 / n_parts as f64 {
+            bounds.push(i + 1);
+        }
+    }
+    while bounds.len() < n_parts + 1 {
+        bounds.push(n);
+    }
+    *bounds.last_mut().unwrap() = n;
+    bounds.dedup();
+    if bounds.len() < 2 {
+        return None;
+    }
+
+    let energy = |b: &Vec<usize>| {
+        match evaluate_bounds(net, points, rm, dev, cfg, b, batch, reconfig_secs) {
+            Some(p) => -p.images_per_sec,
+            None => f64::INFINITY, // infeasible split
+        }
+    };
+    let neighbor = |b: &Vec<usize>, r: &mut Rng| {
+        let mut c = b.clone();
+        if c.len() > 2 {
+            // nudge one interior bound by ±1 within its neighbours
+            let i = 1 + r.below(c.len() - 2);
+            let lo = c[i - 1] + 1;
+            let hi = c[i + 1].saturating_sub(1);
+            if hi >= lo {
+                let delta: i64 = if r.bool(0.5) { 1 } else { -1 };
+                let v = (c[i] as i64 + delta).clamp(lo as i64, hi as i64) as usize;
+                c[i] = v;
+            }
+        }
+        c
+    };
+    // DSE per energy call is costly: keep the schedule short
+    let schedule = AnnealSchedule { iters: 40, t0: 0.3, t1: 1e-3 };
+    let (best, e) = anneal(bounds, energy, neighbor, &schedule, rng);
+    if e.is_finite() {
+        evaluate_bounds(net, points, rm, dev, cfg, &best, batch, reconfig_secs)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+
+    fn tiny_device() -> DeviceBudget {
+        DeviceBudget {
+            name: "tiny".into(),
+            dsp: 48,
+            lut: 120_000,
+            bram18k: 400,
+            uram: 64,
+            freq_mhz: 250.0,
+        }
+    }
+
+    fn setup() -> (Network, Vec<SparsityPoint>, ResourceModel, DseConfig) {
+        let net = networks::calibnet();
+        let n = net.compute_layers().len();
+        (
+            net,
+            vec![SparsityPoint { s_w: 0.3, s_a: 0.3 }; n],
+            ResourceModel::default(),
+            DseConfig { max_iters: 2_000, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn slice_covers_all_layers_exactly_once() {
+        let (net, _, _, _) = setup();
+        let n = net.compute_layers().len();
+        let bounds = [0usize, 3, 7, n];
+        let mut covered = Vec::new();
+        for w in bounds.windows(2) {
+            let (sub, idx) = slice_network(&net, w[0], w[1]);
+            assert_eq!(sub.compute_layers().len(), w[1] - w[0]);
+            covered.extend(idx);
+        }
+        assert_eq!(covered, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn whole_network_single_partition_when_it_fits() {
+        let (net, points, rm, cfg) = setup();
+        let dev = DeviceBudget::u250();
+        let mut rng = Rng::new(1);
+        let p = partition(&net, &points, &rm, &dev, &cfg, 256, DEFAULT_RECONFIG_SECS, &mut rng)
+            .unwrap();
+        assert_eq!(p.n_partitions(), 1);
+        assert!(p.images_per_sec > 0.0);
+    }
+
+    #[test]
+    fn folding_on_tiny_device() {
+        let (net, points, rm, cfg) = setup();
+        let dev = tiny_device();
+        let mut rng = Rng::new(2);
+        let p = partition(&net, &points, &rm, &dev, &cfg, 1024, DEFAULT_RECONFIG_SECS, &mut rng)
+            .unwrap();
+        // every partition must individually fit
+        for d in &p.designs {
+            assert!(dev.fits(&d.resources));
+        }
+        // bounds cover [0, n] monotonically
+        let n = net.compute_layers().len();
+        assert_eq!(*p.bounds.first().unwrap(), 0);
+        assert_eq!(*p.bounds.last().unwrap(), n);
+        assert!(p.bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn larger_batch_amortizes_reconfiguration() {
+        let (net, points, rm, cfg) = setup();
+        let dev = tiny_device();
+        let mut rng = Rng::new(3);
+        let small = partition(&net, &points, &rm, &dev, &cfg, 32, DEFAULT_RECONFIG_SECS, &mut rng)
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let large = partition(&net, &points, &rm, &dev, &cfg, 4096, DEFAULT_RECONFIG_SECS, &mut rng)
+            .unwrap();
+        assert!(
+            large.images_per_sec > small.images_per_sec,
+            "batch amortization violated: {} vs {}",
+            large.images_per_sec,
+            small.images_per_sec
+        );
+    }
+
+    #[test]
+    fn zero_reconfig_time_prefers_more_partitions_or_ties() {
+        let (net, points, rm, cfg) = setup();
+        let dev = tiny_device();
+        let mut rng = Rng::new(4);
+        let with_cost =
+            partition(&net, &points, &rm, &dev, &cfg, 256, 1.0, &mut rng).unwrap();
+        let mut rng = Rng::new(4);
+        let free = partition(&net, &points, &rm, &dev, &cfg, 256, 0.0, &mut rng).unwrap();
+        assert!(free.images_per_sec >= with_cost.images_per_sec);
+    }
+
+    #[test]
+    fn evaluate_bounds_rejects_oversized_partition() {
+        let (net, points, rm, cfg) = setup();
+        let bad_dev = DeviceBudget {
+            name: "nano".into(),
+            dsp: 2,
+            lut: 4_000,
+            bram18k: 8,
+            uram: 0,
+            freq_mhz: 100.0,
+        };
+        let n = net.compute_layers().len();
+        assert!(evaluate_bounds(&net, &points, &rm, &bad_dev, &cfg, &[0, n], 64, 0.1).is_none());
+    }
+}

@@ -1,0 +1,125 @@
+//! FPGA device resource budgets (paper §VI platforms).
+
+use super::resources::Resources;
+
+/// Resource envelope + clock of a target device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceBudget {
+    pub name: String,
+    pub dsp: u64,
+    pub lut: u64,
+    pub bram18k: u64,
+    pub uram: u64,
+    pub freq_mhz: f64,
+}
+
+impl DeviceBudget {
+    /// AMD Xilinx Alveo U250 (the paper's main platform, 250 MHz designs).
+    pub fn u250() -> Self {
+        DeviceBudget {
+            name: "u250".into(),
+            dsp: 12_288,
+            lut: 1_728_000,
+            bram18k: 5_376,
+            uram: 1_280,
+            freq_mhz: 250.0,
+        }
+    }
+
+    /// Xilinx Virtex-7 690T (platform of the non-dataflow comparator [6]).
+    pub fn v7_690t() -> Self {
+        DeviceBudget {
+            name: "7v690t".into(),
+            dsp: 3_600,
+            lut: 433_200,
+            bram18k: 2_940,
+            uram: 0,
+            freq_mhz: 150.0,
+        }
+    }
+
+    /// Intel Stratix 10 GX2800 (HPIPE's platform; ALMs ≈ 2 LUT-equivalents).
+    pub fn stratix10() -> Self {
+        DeviceBudget {
+            name: "stratix10".into(),
+            dsp: 5_760,
+            lut: 1_866_240, // 933,120 ALMs x 2
+            bram18k: 11_721, // 2x M20K count in 18k-equivalents (approx)
+            uram: 0,
+            freq_mhz: 390.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "u250" => Some(Self::u250()),
+            "7v690t" | "v7" => Some(Self::v7_690t()),
+            "stratix10" => Some(Self::stratix10()),
+            _ => None,
+        }
+    }
+
+    /// Does a design fit this device?
+    pub fn fits(&self, r: &Resources) -> bool {
+        r.dsp <= self.dsp && r.lut <= self.lut && r.bram18k <= self.bram18k && r.uram <= self.uram
+    }
+
+    /// Fraction of the binding resource consumed (for reporting).
+    pub fn utilization(&self, r: &Resources) -> f64 {
+        let fr = [
+            r.dsp as f64 / self.dsp as f64,
+            r.lut as f64 / self.lut as f64,
+            r.bram18k as f64 / self.bram18k as f64,
+            if self.uram > 0 { r.uram as f64 / self.uram as f64 } else { 0.0 },
+        ];
+        fr.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Cycles per second.
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_mhz * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u250_matches_table2_envelope() {
+        let d = DeviceBudget::u250();
+        // the paper's largest reported design uses 12234 DSPs / 1728 kLUT /
+        // 5376 BRAM18k — all must fit the budget
+        assert!(d.dsp >= 12_234);
+        assert!(d.lut >= 1_728_000);
+        assert!(d.bram18k >= 5_376);
+    }
+
+    #[test]
+    fn fits_checks_every_dimension() {
+        let d = DeviceBudget::u250();
+        let ok = Resources { dsp: 100, lut: 1000, bram18k: 10, uram: 0 };
+        assert!(d.fits(&ok));
+        for bad in [
+            Resources { dsp: d.dsp + 1, ..ok },
+            Resources { lut: d.lut + 1, ..ok },
+            Resources { bram18k: d.bram18k + 1, ..ok },
+            Resources { uram: d.uram + 1, ..ok },
+        ] {
+            assert!(!d.fits(&bad));
+        }
+    }
+
+    #[test]
+    fn utilization_is_max_fraction() {
+        let d = DeviceBudget::u250();
+        let r = Resources { dsp: d.dsp / 2, lut: d.lut / 4, bram18k: 0, uram: 0 };
+        assert!((d.utilization(&r) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(DeviceBudget::by_name("u250").unwrap().name, "u250");
+        assert!(DeviceBudget::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,263 @@
+//! Hardware model of the sparse dataflow accelerator (paper §IV).
+//!
+//! Each compute layer is implemented by `i_par × o_par` Sparse vector
+//! dot-Product Engines (SPEs).  A full dot product of length K (the
+//! layer's `patch_k`) is split over `i_par` engines (input-channel
+//! parallelism), so each engine consumes `M = ⌈K / i_par⌉` weight/
+//! activation pairs per output; `o_par` filters are computed in parallel
+//! (output-filter parallelism); `n_mac` MAC units (DSPs) inside each SPE
+//! consume the *non-zero* pairs dispatched by the round-robin arbiter.
+//!
+//! The initiation interval of an SPE is the paper's Eq. 1:
+//!
+//! ```text
+//! t(S̄) = ⌈ (1 − S̄) · M / N ⌉        (≥ 1 cycle to emit)
+//! ```
+//!
+//! and layer throughput (Eq. 2) follows from iterating the SPEs over the
+//! `outputs_per_image / o_par` output groups.
+
+pub mod device;
+pub mod resources;
+
+use crate::arch::LayerDesc;
+use crate::sparsity::SparsityPoint;
+use crate::util::ceil_div;
+
+/// Parallelism configuration of one layer (the DSE design variables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerDesign {
+    /// input-channel parallelism i ∈ [1, I]
+    pub i_par: usize,
+    /// output-filter parallelism o ∈ [1, O]
+    pub o_par: usize,
+    /// MAC (DSP) units per SPE, N ∈ [1, M]
+    pub n_mac: usize,
+}
+
+impl LayerDesign {
+    /// The fully sequential, resource-minimal starting point (DSE §V-A.3).
+    pub const MINIMAL: LayerDesign = LayerDesign { i_par: 1, o_par: 1, n_mac: 1 };
+
+    /// Pairs per output handled by one SPE.
+    pub fn m_len(&self, layer: &LayerDesc) -> usize {
+        ceil_div(layer.patch_k() as u64, self.i_par as u64) as usize
+    }
+
+    /// SPE initiation interval t(S̄) in cycles — Eq. 1.
+    pub fn spe_cycles(&self, layer: &LayerDesc, point: SparsityPoint) -> u64 {
+        let m = self.m_len(layer) as f64;
+        let useful = point.pair_density() * m;
+        ((useful / self.n_mac as f64).ceil() as u64).max(1)
+    }
+
+    /// Cycles to process one image through this layer.
+    pub fn cycles_per_image(&self, layer: &LayerDesc, point: SparsityPoint) -> u64 {
+        let groups = ceil_div(layer.outputs_per_image() as u64, self.o_par as u64);
+        groups * self.spe_cycles(layer, point)
+    }
+
+    /// Layer throughput in images per cycle — Eq. 2.
+    pub fn throughput(&self, layer: &LayerDesc, point: SparsityPoint) -> f64 {
+        1.0 / self.cycles_per_image(layer, point) as f64
+    }
+
+    /// DSPs consumed (one 16-bit MAC per DSP).
+    pub fn dsp(&self) -> u64 {
+        (self.i_par * self.o_par * self.n_mac) as u64
+    }
+
+    /// Number of SPE instances.
+    pub fn engines(&self) -> u64 {
+        (self.i_par * self.o_par) as u64
+    }
+
+    /// Is this design realizable for the layer's extents?
+    pub fn feasible(&self, layer: &LayerDesc) -> bool {
+        self.i_par >= 1
+            && self.o_par >= 1
+            && self.n_mac >= 1
+            && self.i_par <= layer.i_extent()
+            && self.o_par <= layer.o_extent()
+            && self.n_mac <= self.m_len(layer)
+    }
+
+    /// Enumerate the (strictly more parallel) one-step neighbours used by
+    /// the resource-constrained incrementing loop: bump one of i/o/N to
+    /// its next feasible value.
+    pub fn increments(&self, layer: &LayerDesc) -> Vec<LayerDesign> {
+        let mut out = Vec::new();
+        if let Some(i2) = next_divisor(layer.i_extent(), self.i_par) {
+            let d = LayerDesign { i_par: i2, ..*self };
+            // splitting K shrinks M; clamp n_mac into the new M
+            let d = LayerDesign { n_mac: d.n_mac.min(d.m_len(layer).max(1)), ..d };
+            if d.feasible(layer) {
+                out.push(d);
+            }
+        }
+        if let Some(o2) = next_divisor(layer.o_extent(), self.o_par) {
+            let d = LayerDesign { o_par: o2, ..*self };
+            if d.feasible(layer) {
+                out.push(d);
+            }
+        }
+        let m = self.m_len(layer);
+        if self.n_mac < m {
+            // next value that actually reduces t for dense input:
+            // smallest n' > n with ceil(M/n') < ceil(M/n)
+            let cur = ceil_div(m as u64, self.n_mac as u64);
+            let mut n2 = self.n_mac + 1;
+            while n2 < m && ceil_div(m as u64, n2 as u64) >= cur {
+                n2 += 1;
+            }
+            let d = LayerDesign { n_mac: n2.min(m), ..*self };
+            if d.feasible(layer) && d != *self {
+                out.push(d);
+            }
+        }
+        out
+    }
+}
+
+/// Smallest divisor of `extent` strictly greater than `cur` (parallelism
+/// levels divide the extent so folding is remainder-free).
+pub fn next_divisor(extent: usize, cur: usize) -> Option<usize> {
+    ((cur + 1)..=extent).find(|v| extent % v == 0)
+}
+
+/// All divisors of an extent (ascending) — the feasible parallelism levels.
+pub fn divisors(extent: usize) -> Vec<usize> {
+    (1..=extent).filter(|v| extent % v == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Op;
+    use crate::util::prop::forall;
+
+    fn conv_layer() -> LayerDesc {
+        LayerDesc {
+            name: "c".into(),
+            op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 16, cout: 32, groups: 1 },
+            in_hw: 16,
+            branch: false,
+        }
+    }
+
+    #[test]
+    fn eq1_dense_matches_paper_example() {
+        // dense: t = M / N exactly when N | M
+        let l = conv_layer(); // K = 144
+        let d = LayerDesign { i_par: 1, o_par: 1, n_mac: 12 };
+        assert_eq!(d.m_len(&l), 144);
+        assert_eq!(d.spe_cycles(&l, SparsityPoint::DENSE), 12);
+    }
+
+    #[test]
+    fn eq1_half_sparse_halves_cycles() {
+        let l = conv_layer();
+        let d = LayerDesign { i_par: 1, o_par: 1, n_mac: 12 };
+        let p = SparsityPoint { s_w: 0.5, s_a: 0.0 };
+        assert_eq!(d.spe_cycles(&l, p), 6);
+    }
+
+    #[test]
+    fn eq1_never_below_one_cycle() {
+        let l = conv_layer();
+        let d = LayerDesign { i_par: 1, o_par: 1, n_mac: 144 };
+        let p = SparsityPoint { s_w: 0.99, s_a: 0.99 };
+        assert_eq!(d.spe_cycles(&l, p), 1);
+    }
+
+    #[test]
+    fn eq2_throughput_scales_with_o_par() {
+        let l = conv_layer();
+        let p = SparsityPoint::DENSE;
+        let d1 = LayerDesign { i_par: 1, o_par: 1, n_mac: 4 };
+        let d2 = LayerDesign { i_par: 1, o_par: 4, n_mac: 4 };
+        let r = d2.throughput(&l, p) / d1.throughput(&l, p);
+        assert!((r - 4.0).abs() < 1e-9, "ratio {r}");
+    }
+
+    #[test]
+    fn i_par_splits_dot_product() {
+        let l = conv_layer(); // K = 144
+        let d = LayerDesign { i_par: 4, o_par: 1, n_mac: 1 };
+        assert_eq!(d.m_len(&l), 36);
+        assert!(d.feasible(&l));
+    }
+
+    #[test]
+    fn infeasible_when_exceeding_extents() {
+        let l = conv_layer();
+        assert!(!LayerDesign { i_par: 17, o_par: 1, n_mac: 1 }.feasible(&l));
+        assert!(!LayerDesign { i_par: 1, o_par: 33, n_mac: 1 }.feasible(&l));
+        assert!(!LayerDesign { i_par: 1, o_par: 1, n_mac: 145 }.feasible(&l));
+    }
+
+    #[test]
+    fn increments_strictly_increase_dense_throughput_or_dsp() {
+        let l = conv_layer();
+        forall(100, 0xD5E, |rng| {
+            let i = *rng.choice(&divisors(l.i_extent()));
+            let o = *rng.choice(&divisors(l.o_extent()));
+            let d0 = LayerDesign { i_par: i, o_par: o, n_mac: 1 };
+            let m = d0.m_len(&l);
+            let d0 = LayerDesign { n_mac: 1 + rng.below(m), ..d0 };
+            if !d0.feasible(&l) {
+                return;
+            }
+            for d in d0.increments(&l) {
+                assert!(d.feasible(&l), "infeasible increment {d:?} from {d0:?}");
+                let t0 = d0.throughput(&l, SparsityPoint::DENSE);
+                let t1 = d.throughput(&l, SparsityPoint::DENSE);
+                assert!(
+                    t1 > t0 * (1.0 - 1e-12),
+                    "no gain: {d0:?} -> {d:?} ({t0} -> {t1})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn minimal_design_has_one_dsp() {
+        assert_eq!(LayerDesign::MINIMAL.dsp(), 1);
+    }
+
+    #[test]
+    fn next_divisor_walks_divisor_lattice() {
+        assert_eq!(next_divisor(16, 1), Some(2));
+        assert_eq!(next_divisor(16, 2), Some(4));
+        assert_eq!(next_divisor(16, 16), None);
+        assert_eq!(next_divisor(12, 4), Some(6));
+    }
+
+    #[test]
+    fn throughput_monotone_in_sparsity() {
+        let l = conv_layer();
+        let d = LayerDesign { i_par: 2, o_par: 4, n_mac: 8 };
+        let mut last = 0.0;
+        for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let p = SparsityPoint { s_w: s, s_a: s };
+            let th = d.throughput(&l, p);
+            assert!(th >= last);
+            last = th;
+        }
+    }
+
+    #[test]
+    fn depthwise_layer_design_space() {
+        let l = LayerDesc {
+            name: "dw".into(),
+            op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 32, cout: 32, groups: 32 },
+            in_hw: 8,
+            branch: false,
+        };
+        // depthwise: i_extent = 1, K = 9
+        assert_eq!(l.i_extent(), 1);
+        let d = LayerDesign { i_par: 1, o_par: 8, n_mac: 9 };
+        assert!(d.feasible(&l));
+        assert_eq!(d.spe_cycles(&l, SparsityPoint::DENSE), 1);
+    }
+}

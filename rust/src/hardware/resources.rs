@@ -1,0 +1,271 @@
+//! Resource regression model (paper §V-A.3: "resource utilization of each
+//! sparse computation engine is modeled on the basis of the regression
+//! model").
+//!
+//! The coefficients below are calibrated so that full-network designs land
+//! in the envelope the paper reports in Table II (e.g. sparse ResNet-18 on
+//! a U250: ~12.2k DSP, ~1.68M LUT, ~4.8k BRAM18k at 2819 img/s).  We model:
+//!
+//! * **DSP**  — one 16-bit MAC per DSP slice: `i·o·N`.
+//! * **LUT**  — per-SPE clip/zero-filter front end (∝ M), the round-robin
+//!   arbiter (∝ N·log2 M fan-in mux tree), accumulator/adder tree (∝ N),
+//!   the skipped-zero counter (∝ log2 M), plus per-layer streaming glue.
+//! * **BRAM18k** — sliding-window line buffers for convs, inter-layer
+//!   FIFOs (the paper's buffering strategy), and per-SPE non-zero pair
+//!   buffers.  Weights live in URAM (U250) — Table II's BRAM columns are
+//!   far below what 16-bit weights would need, so the paper's designs
+//!   clearly keep weights out of BRAM18k for the big models.
+//! * **URAM** — 16-bit weight storage, 288 Kb blocks.
+
+use crate::arch::{LayerDesc, Network, Op};
+use crate::util::ceil_div;
+
+use super::LayerDesign;
+
+/// A bundle of FPGA resources.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub dsp: u64,
+    pub lut: u64,
+    pub bram18k: u64,
+    pub uram: u64,
+}
+
+impl std::ops::Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            dsp: self.dsp + o.dsp,
+            lut: self.lut + o.lut,
+            bram18k: self.bram18k + o.bram18k,
+            uram: self.uram + o.uram,
+        }
+    }
+}
+
+impl std::iter::Sum for Resources {
+    fn sum<I: Iterator<Item = Resources>>(iter: I) -> Resources {
+        iter.fold(Resources::default(), |a, b| a + b)
+    }
+}
+
+/// Regression coefficients (see module docs).
+#[derive(Clone, Debug)]
+pub struct ResourceModel {
+    /// LUTs per SPE, constant part (control FSM, handshake)
+    pub lut_spe_base: f64,
+    /// LUTs per clip/zero-filter input lane (∝ M)
+    pub lut_per_m: f64,
+    /// LUTs per arbiter output port per log2(M) (mux tree)
+    pub lut_arbiter: f64,
+    /// LUTs per MAC (operand regs + control)
+    pub lut_per_mac: f64,
+    /// LUTs per layer streaming glue (FIFO handshake, counters)
+    pub lut_layer_base: f64,
+    /// LUTs per non-compute node (pool/add/act streaming logic)
+    pub lut_aux_node: f64,
+    /// inter-layer FIFO depth in words (buffering strategy default)
+    pub fifo_depth: u64,
+    /// datapath bit width
+    pub bits: u64,
+    /// non-zero pair buffer depth per SPE (arbiter prefetch window)
+    pub pair_buffer: u64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        ResourceModel {
+            lut_spe_base: 90.0,
+            lut_per_m: 3.2,
+            lut_arbiter: 11.0,
+            lut_per_mac: 38.0,
+            lut_layer_base: 850.0,
+            lut_aux_node: 600.0,
+            fifo_depth: 512,
+            bits: 16,
+            pair_buffer: 64,
+        }
+    }
+}
+
+const BRAM18K_BITS: u64 = 18 * 1024;
+const URAM_BITS: u64 = 288 * 1024;
+
+fn log2_ceil(x: u64) -> u64 {
+    (64 - x.max(1).leading_zeros() as u64).max(1)
+}
+
+impl ResourceModel {
+    /// Resources of one compute layer under a design point.
+    pub fn layer(&self, layer: &LayerDesc, d: &LayerDesign) -> Resources {
+        debug_assert!(layer.is_compute());
+        let engines = d.engines();
+        let m = d.m_len(layer) as u64;
+        let n = d.n_mac as u64;
+
+        let dsp = d.dsp();
+
+        let lut_spe = self.lut_spe_base
+            + self.lut_per_m * m as f64
+            + self.lut_arbiter * (n as f64) * log2_ceil(m) as f64
+            + self.lut_per_mac * n as f64;
+        let lut = (engines as f64 * lut_spe + self.lut_layer_base) as u64;
+
+        // --- BRAM: line buffers + inter-layer FIFO + pair buffers
+        let mut bram_bits = 0u64;
+        if let Op::Conv { kernel, cin, .. } = layer.op {
+            // sliding window: (k-1) full rows + k pixels, every input channel
+            if kernel > 1 {
+                bram_bits += ((kernel - 1) * layer.in_hw * cin) as u64 * self.bits;
+            }
+        }
+        // input FIFO: depth x (i_par lanes x bits)
+        bram_bits += self.fifo_depth * d.i_par as u64 * self.bits;
+        // per-SPE non-zero pair prefetch buffers: two operands per slot
+        bram_bits += engines * self.pair_buffer * 2 * self.bits;
+        // BRAM granularity: line buffers are per-channel-group banks;
+        // approximate banking overhead with a 1.25 packing factor
+        let bram18k = ceil_div((bram_bits as f64 * 1.25) as u64, BRAM18K_BITS);
+
+        // --- URAM: 16-bit weights, banked per engine
+        let w_bits = layer.weight_count() * self.bits;
+        let bank_bits = ceil_div(w_bits, engines);
+        let uram = engines * ceil_div(bank_bits, URAM_BITS);
+
+        Resources { dsp, lut, bram18k, uram }
+    }
+
+    /// Resources of non-compute streaming nodes (pool/add/act...).
+    pub fn aux_node(&self, layer: &LayerDesc) -> Resources {
+        let lut = match layer.op {
+            Op::Pool { .. } | Op::GlobalPool { .. } => self.lut_aux_node as u64 * 2,
+            Op::Add { .. } => self.lut_aux_node as u64,
+            Op::Act { .. } => (self.lut_aux_node / 2.0) as u64,
+            _ => 0,
+        };
+        // pooling needs line buffers too
+        let bram18k = match layer.op {
+            Op::Pool { kernel, channels, .. } if kernel > 1 => ceil_div(
+                ((kernel - 1) * layer.in_hw * channels) as u64 * self.bits,
+                BRAM18K_BITS,
+            ),
+            _ => 0,
+        };
+        Resources { dsp: 0, lut, bram18k, uram: 0 }
+    }
+
+    /// Whole-network resources for per-compute-layer designs (in
+    /// `compute_indices` order).
+    pub fn network(&self, net: &Network, designs: &[LayerDesign]) -> Resources {
+        let idx = net.compute_indices();
+        assert_eq!(idx.len(), designs.len(), "one design per compute layer");
+        let mut total = Resources::default();
+        let mut di = 0;
+        for (li, l) in net.layers.iter().enumerate() {
+            if idx.contains(&li) {
+                total = total + self.layer(l, &designs[di]);
+                di += 1;
+            } else {
+                total = total + self.aux_node(l);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::hardware::LayerDesign;
+
+    fn conv_layer() -> LayerDesc {
+        LayerDesc {
+            name: "c".into(),
+            op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 64, cout: 64, groups: 1 },
+            in_hw: 14,
+            branch: false,
+        }
+    }
+
+    #[test]
+    fn dsp_is_product_of_parallelism() {
+        let rm = ResourceModel::default();
+        let l = conv_layer();
+        let d = LayerDesign { i_par: 2, o_par: 4, n_mac: 8 };
+        assert_eq!(rm.layer(&l, &d).dsp, 64);
+    }
+
+    #[test]
+    fn lut_grows_with_every_knob() {
+        let rm = ResourceModel::default();
+        let l = conv_layer();
+        let base = LayerDesign { i_par: 1, o_par: 1, n_mac: 4 };
+        let r0 = rm.layer(&l, &base).lut;
+        for d in [
+            LayerDesign { i_par: 2, ..base },
+            LayerDesign { o_par: 2, ..base },
+            LayerDesign { n_mac: 8, ..base },
+        ] {
+            assert!(rm.layer(&l, &d).lut > r0, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn uram_covers_weights() {
+        let rm = ResourceModel::default();
+        let l = conv_layer(); // 9*64*64 = 36864 weights = 589824 bits = 2 URAM
+        let d = LayerDesign::MINIMAL;
+        let r = rm.layer(&l, &d);
+        assert_eq!(r.uram, 2);
+    }
+
+    #[test]
+    fn uram_banking_overhead_with_engines() {
+        let rm = ResourceModel::default();
+        let l = conv_layer();
+        let many = LayerDesign { i_par: 8, o_par: 8, n_mac: 1 };
+        // banked into 64 engines: per-bank remainder rounds up per engine
+        assert!(rm.layer(&l, &many).uram >= rm.layer(&l, &LayerDesign::MINIMAL).uram);
+    }
+
+    #[test]
+    fn line_buffer_only_for_spatial_kernels() {
+        let rm = ResourceModel::default();
+        let l1 = LayerDesc {
+            name: "pw".into(),
+            op: Op::Conv { kernel: 1, stride: 1, pad: 0, cin: 64, cout: 64, groups: 1 },
+            in_hw: 14,
+            branch: false,
+        };
+        let r1 = rm.layer(&l1, &LayerDesign::MINIMAL);
+        let r3 = rm.layer(&conv_layer(), &LayerDesign::MINIMAL);
+        assert!(r3.bram18k > r1.bram18k);
+    }
+
+    #[test]
+    fn network_totals_sum_layers() {
+        let rm = ResourceModel::default();
+        let net = networks::calibnet();
+        let designs = vec![LayerDesign::MINIMAL; net.compute_layers().len()];
+        let total = rm.network(&net, &designs);
+        assert!(total.dsp == net.compute_layers().len() as u64);
+        assert!(total.lut > 0 && total.bram18k > 0);
+    }
+
+    #[test]
+    fn resources_add_and_sum() {
+        let a = Resources { dsp: 1, lut: 2, bram18k: 3, uram: 4 };
+        let b = Resources { dsp: 10, lut: 20, bram18k: 30, uram: 40 };
+        let s: Resources = [a, b].into_iter().sum();
+        assert_eq!(s, Resources { dsp: 11, lut: 22, bram18k: 33, uram: 44 });
+    }
+
+    #[test]
+    #[should_panic(expected = "one design per compute layer")]
+    fn network_rejects_wrong_design_count() {
+        let rm = ResourceModel::default();
+        let net = networks::calibnet();
+        rm.network(&net, &[LayerDesign::MINIMAL]);
+    }
+}

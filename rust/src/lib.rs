@@ -1,0 +1,37 @@
+//! # HASS — Hardware-Aware Sparsity Search for Dataflow DNN Accelerators
+//!
+//! Reproduction of Yu et al., *HASS: Hardware-Aware Sparsity Search for
+//! Dataflow DNN Accelerator* (2024), as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L1 (Pallas)** — the Sparse vector dot-Product Engine (SPE) hot spot
+//!   (clip → zero-filter/count → MAC) as a Pallas kernel, compiled at
+//!   build time (`python/compile/kernels/spe.py`).
+//! * **L2 (JAX)** — the calibration CNN forward pass with per-layer clip
+//!   thresholds as *runtime inputs*, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! * **L3 (this crate)** — everything the paper's system contributes:
+//!   the TPE multi-objective search (Eq. 6), the accelerator design-space
+//!   exploration (Eq. 1–5: SPE cycle model, rate balancing, incremental
+//!   parallelism growth, device partitioning), the cycle-level dataflow
+//!   simulator that validates the analytical model, the resource model
+//!   calibrated to the paper's Table II, and baseline design generators
+//!   (dense / PASS-like / HPIPE-like / non-dataflow).
+//!
+//! Python never runs on the search path: the Rust coordinator executes the
+//! AOT artifact through PJRT (`runtime`) to measure accuracy and sparsity,
+//! then prices candidate designs with the hardware model (`hardware`,
+//! `dse`).
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod dse;
+pub mod hardware;
+pub mod metrics;
+pub mod optim;
+pub mod pruning;
+pub mod runtime;
+pub mod simulator;
+pub mod sparsity;
+pub mod util;

@@ -1,0 +1,334 @@
+//! `hass` — launcher for the HASS system (paper: Yu et al., 2024).
+//!
+//! Subcommands:
+//!
+//! * `search`    — hardware-aware (or software-only) TPE sparsity search
+//! * `dse`       — design-space exploration at a fixed sparsity
+//! * `simulate`  — cycle-level simulation of a DSE result
+//! * `partition` — multi-partition mapping with full reconfiguration
+//! * `evaluate`  — run the AOT CalibNet artifact at given thresholds (PJRT)
+//! * `networks`  — list the built-in network geometries
+//!
+//! Run `hass <subcommand> --help` for per-command flags.
+
+use hass::arch::networks;
+use hass::baselines;
+use hass::coordinator::{
+    search, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+};
+use hass::dse::{self, explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::{fmt, Table};
+use hass::runtime::ModelRuntime;
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::sparsity::{synthesize, SparsityPoint};
+use hass::util::cli::Cli;
+use hass::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let sub = args.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let code = match sub {
+        "search" => cmd_search(&args[2..]),
+        "dse" => cmd_dse(&args[2..]),
+        "simulate" => cmd_simulate(&args[2..]),
+        "partition" => cmd_partition(&args[2..]),
+        "evaluate" => cmd_evaluate(&args[2..]),
+        "networks" => cmd_networks(),
+        _ => {
+            eprintln!(
+                "usage: hass <search|dse|simulate|partition|evaluate|networks> [flags]\n\
+                 HASS: Hardware-Aware Sparsity Search for dataflow DNN accelerators."
+            );
+            if sub == "help" || sub == "--help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_or_die(cli: Cli, args: &[String]) -> hass::util::cli::Parsed {
+    let usage = cli.usage();
+    match cli.parse_from(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}\n{usage}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn device_or_die(name: &str) -> DeviceBudget {
+    DeviceBudget::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown device '{name}' (u250 | 7v690t | stratix10)");
+        std::process::exit(2);
+    })
+}
+
+fn network_or_die(name: &str) -> hass::arch::Network {
+    networks::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown network '{name}'; see `hass networks`");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_search(args: &[String]) -> i32 {
+    let cli = Cli::new("hardware-aware sparsity search (TPE, Eq. 6)")
+        .opt("network", "calibnet", "target geometry (see `hass networks`)")
+        .opt("device", "u250", "device budget")
+        .opt("iters", "96", "TPE iterations")
+        .opt("seed", "0", "search seed")
+        .opt("mode", "hw", "objective: hw (Eq. 6) | sw (accuracy+sparsity)")
+        .opt("evaluator", "auto", "auto | measured (PJRT) | surrogate")
+        .opt("batches", "4", "calibration batches per measured evaluation")
+        .opt("journal", "", "CSV path for the per-iteration journal");
+    let p = parse_or_die(cli, args);
+    let net = network_or_die(p.get("network"));
+    let dev = device_or_die(p.get("device"));
+    let rm = ResourceModel::default();
+    let mode = match p.get("mode") {
+        "sw" => SearchMode::SoftwareOnly,
+        _ => SearchMode::HardwareAware,
+    };
+    let cfg = SearchConfig {
+        iterations: p.get_usize("iters"),
+        seed: p.get_u64("seed"),
+        mode,
+        ..Default::default()
+    };
+    let want_measured = match p.get("evaluator") {
+        "measured" => true,
+        "surrogate" => false,
+        _ => net.name == "calibnet" && hass::runtime::available(&hass::runtime::default_dir()),
+    };
+    let result = if want_measured {
+        if net.name != "calibnet" {
+            eprintln!("measured evaluator only supports the calibnet geometry");
+            return 2;
+        }
+        let rt = match ModelRuntime::load_default() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("failed to load AOT artifact: {e:#}\nrun `make artifacts` first");
+                return 1;
+            }
+        };
+        println!(
+            "[search] measured evaluator: {} (dense val acc {:.2}%)",
+            rt.meta.model,
+            rt.meta.dense_val_accuracy * 100.0
+        );
+        let ev = MeasuredEvaluator::new(rt, p.get_usize("batches"));
+        search(&ev, &net, &rm, &dev, &cfg)
+    } else {
+        let ev = SurrogateEvaluator {
+            sparsity: synthesize(&net, cfg.seed),
+            net: net.clone(),
+            base_acc: 76.0,
+        };
+        println!("[search] surrogate evaluator on {}", net.name);
+        search(&ev, &net, &rm, &dev, &cfg)
+    };
+    let b = result.best_record();
+    println!(
+        "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
+        b.iter, b.accuracy, b.avg_sparsity, b.images_per_sec, b.dsp, b.efficiency
+    );
+    let journal = p.get("journal");
+    if !journal.is_empty() {
+        std::fs::write(journal, result.to_table().to_csv()).expect("write journal");
+        println!("[search] journal -> {journal}");
+    }
+    0
+}
+
+fn cmd_dse(args: &[String]) -> i32 {
+    let cli = Cli::new("design-space exploration at fixed sparsity (Eq. 1-5)")
+        .opt("network", "resnet18", "target geometry")
+        .opt("device", "u250", "device budget")
+        .opt("sw", "0.5", "uniform weight sparsity")
+        .opt("sa", "0.5", "uniform activation sparsity")
+        .flag("per-layer", "print the per-layer allocation (Fig. 4 view)");
+    let p = parse_or_die(cli, args);
+    let net = network_or_die(p.get("network"));
+    let dev = device_or_die(p.get("device"));
+    let rm = ResourceModel::default();
+    let n = net.compute_layers().len();
+    let points = vec![SparsityPoint { s_w: p.get_f64("sw"), s_a: p.get_f64("sa") }; n];
+    let t0 = std::time::Instant::now();
+    let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    println!(
+        "[dse] {} on {}: {:.0} img/s | {} DSP | {} kLUT | {} BRAM18k | {} URAM | eff {:.3e} (in {:?})",
+        net.name,
+        dev.name,
+        d.images_per_sec(&dev),
+        d.resources.dsp,
+        d.resources.lut / 1000,
+        d.resources.bram18k,
+        d.resources.uram,
+        d.efficiency(),
+        t0.elapsed()
+    );
+    if p.get_bool("per-layer") {
+        let mut t = Table::new(&["layer", "i_par", "o_par", "mac_per_spe", "spes", "dsp", "thr"]);
+        for (l, des) in net.compute_layers().iter().zip(&d.designs) {
+            t.row(vec![
+                l.name.clone(),
+                des.i_par.to_string(),
+                des.o_par.to_string(),
+                des.n_mac.to_string(),
+                des.engines().to_string(),
+                des.dsp().to_string(),
+                fmt(des.throughput(l, points[0])),
+            ]);
+        }
+        print!("{}", t.to_markdown());
+    }
+    0
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cli = Cli::new("cycle-level simulation of a DSE design (validates Eq. 1-3)")
+        .opt("network", "calibnet", "target geometry")
+        .opt("device", "u250", "device budget")
+        .opt("sw", "0.5", "uniform weight sparsity")
+        .opt("sa", "0.5", "uniform activation sparsity")
+        .opt("images", "4", "images to stream")
+        .opt("seed", "0", "stochastic dynamics seed (0 = deterministic)");
+    let p = parse_or_die(cli, args);
+    let net = network_or_die(p.get("network"));
+    let dev = device_or_die(p.get("device"));
+    let rm = ResourceModel::default();
+    let n = net.compute_layers().len();
+    let points = vec![SparsityPoint { s_w: p.get_f64("sw"), s_a: p.get_f64("sa") }; n];
+    let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    let cfgs = stages_from_design(&net, &d.designs, &points, rm.fifo_depth);
+    let dynamics = match p.get_u64("seed") {
+        0 => SparsityDynamics::Deterministic,
+        s => SparsityDynamics::Stochastic { seed: s },
+    };
+    let t0 = std::time::Instant::now();
+    let rep = simulate(&net, &cfgs, p.get_usize("images"), dynamics);
+    println!(
+        "[sim] {} imgs in {} cycles | sim {:.4e} img/cyc vs model {:.4e} ({:+.1}%) | wall {:?}{}",
+        rep.images,
+        rep.total_cycles,
+        rep.throughput,
+        d.throughput,
+        (rep.throughput / d.throughput - 1.0) * 100.0,
+        t0.elapsed(),
+        if rep.deadlocked { " [DEADLOCKED]" } else { "" }
+    );
+    0
+}
+
+fn cmd_partition(args: &[String]) -> i32 {
+    let cli = Cli::new("multi-partition mapping with full reconfiguration (§V-A.4)")
+        .opt("network", "resnet50", "target geometry")
+        .opt("device", "7v690t", "device budget (small devices fold)")
+        .opt("sw", "0.5", "uniform weight sparsity")
+        .opt("sa", "0.5", "uniform activation sparsity")
+        .opt("batch", "1024", "batch size amortizing reconfiguration")
+        .opt("seed", "0", "annealing seed");
+    let p = parse_or_die(cli, args);
+    let net = network_or_die(p.get("network"));
+    let dev = device_or_die(p.get("device"));
+    let rm = ResourceModel::default();
+    let n = net.compute_layers().len();
+    let points = vec![SparsityPoint { s_w: p.get_f64("sw"), s_a: p.get_f64("sa") }; n];
+    let mut rng = Rng::new(p.get_u64("seed"));
+    let cfg = DseConfig { max_iters: 5_000, ..Default::default() };
+    match dse::partition::partition(
+        &net,
+        &points,
+        &rm,
+        &dev,
+        &cfg,
+        p.get_usize("batch"),
+        dse::partition::DEFAULT_RECONFIG_SECS,
+        &mut rng,
+    ) {
+        Some(part) => {
+            println!(
+                "[partition] {} on {}: {} partition(s), {:.0} img/s at batch {}",
+                net.name,
+                dev.name,
+                part.n_partitions(),
+                part.images_per_sec,
+                part.batch
+            );
+            for (i, w) in part.bounds.windows(2).enumerate() {
+                let d = &part.designs[i];
+                println!(
+                    "  part {i}: layers {}..{} | {} DSP | {:.0} img/s",
+                    w[0],
+                    w[1],
+                    d.resources.dsp,
+                    d.images_per_sec(&dev)
+                );
+            }
+            0
+        }
+        None => {
+            eprintln!("[partition] could not map {} onto {}", net.name, dev.name);
+            1
+        }
+    }
+}
+
+fn cmd_evaluate(args: &[String]) -> i32 {
+    let cli = Cli::new("evaluate the AOT CalibNet artifact at thresholds (PJRT)")
+        .opt("tau-w", "0.05", "uniform weight threshold")
+        .opt("tau-a", "0.05", "uniform activation threshold")
+        .opt("batches", "4", "calibration batches");
+    let p = parse_or_die(cli, args);
+    let rt = match ModelRuntime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load AOT artifact: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let l = rt.n_layers();
+    let tw = vec![p.get_f64("tau-w"); l];
+    let ta = vec![p.get_f64("tau-a"); l];
+    let out = rt.evaluate(&tw, &ta, p.get_usize("batches")).expect("evaluation");
+    println!(
+        "[evaluate] {} imgs: accuracy {:.2}% (dense {:.2}%)",
+        out.images,
+        out.accuracy * 100.0,
+        rt.meta.dense_val_accuracy * 100.0
+    );
+    let mut t = Table::new(&["layer", "S_w", "S_a", "pair_density"]);
+    for i in 0..l {
+        t.row(vec![
+            rt.meta.layers[i].name.clone(),
+            format!("{:.4}", out.s_w[i]),
+            format!("{:.4}", out.s_a[i]),
+            format!("{:.4}", out.pair_density[i]),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    0
+}
+
+fn cmd_networks() -> i32 {
+    let mut t = Table::new(&["name", "layers", "compute", "GMACs", "params(M)"]);
+    for name in networks::ALL_NETWORKS {
+        let net = networks::by_name(name).unwrap();
+        t.row(vec![
+            net.name.clone(),
+            net.layers.len().to_string(),
+            net.compute_layers().len().to_string(),
+            format!("{:.3}", net.total_macs() as f64 / 1e9),
+            format!("{:.2}", net.total_weights() as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+    let _ = baselines::MemoryModel::default(); // keep the module linked
+    0
+}

@@ -1,0 +1,208 @@
+//! Result emitters: CSV / markdown tables and Pareto-front extraction —
+//! everything the bench harness uses to regenerate the paper's tables and
+//! figures into `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A rectangular results table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for r in &self.rows {
+            let esc: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            s.push_str(&esc.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let n = self.headers.len();
+        // column widths for alignment
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let line = |cells: &[String], w: &[usize]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect();
+            format!("| {} |\n", padded.join(" | "))
+        };
+        s.push_str(&line(&self.headers, &w));
+        let sep: Vec<String> = (0..n).map(|i| "-".repeat(w[i])).collect();
+        s.push_str(&line(&sep, &w));
+        for r in &self.rows {
+            s.push_str(&line(r, &w));
+        }
+        s
+    }
+
+    /// Write both `.csv` and `.md` forms next to each other.
+    pub fn write_files(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.md")))?;
+        f.write_all(self.to_markdown().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// A labelled 2-D point for Pareto analysis (both axes maximized; negate
+/// a coordinate to minimize it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point2 {
+    pub label: String,
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Indices of the non-dominated points (maximize x and y). Stable order:
+/// sorted by x descending within the front.
+pub fn pareto_front(points: &[Point2]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[b]
+            .x
+            .total_cmp(&points[a].x)
+            .then(points[b].y.total_cmp(&points[a].y))
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].y > best_y {
+            front.push(i);
+            best_y = points[i].y;
+        }
+    }
+    front
+}
+
+/// Format a float compactly for tables (3 significant decimals).
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 0.01 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(label: &str, x: f64, y: f64) -> Point2 {
+        Point2 { label: label.into(), x, y }
+    }
+
+    #[test]
+    fn csv_round_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    fn markdown_has_separator() {
+        let mut t = Table::new(&["col"]);
+        t.row(vec!["v".into()]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].contains("---"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pareto_extracts_non_dominated() {
+        let pts = vec![
+            p("dominated", 1.0, 1.0),
+            p("front-a", 3.0, 2.0),
+            p("front-b", 2.0, 5.0),
+            p("dominated2", 2.0, 2.0),
+            p("front-c", 1.5, 6.0),
+        ];
+        let f = pareto_front(&pts);
+        let labels: Vec<&str> = f.iter().map(|&i| pts[i].label.as_str()).collect();
+        assert_eq!(labels, vec!["front-a", "front-b", "front-c"]);
+    }
+
+    #[test]
+    fn pareto_single_point() {
+        let pts = vec![p("solo", 1.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn pareto_all_on_front_when_tradeoff() {
+        let pts: Vec<Point2> =
+            (0..5).map(|i| p(&format!("p{i}"), i as f64, -(i as f64))).collect();
+        assert_eq!(pareto_front(&pts).len(), 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(4895.0), "4895");
+        assert_eq!(fmt(69.75), "69.8");
+        assert_eq!(fmt(0.92), "0.920");
+        assert!(fmt(3.42e-9).contains('e'));
+    }
+
+    #[test]
+    fn write_files_creates_artifacts() {
+        let dir = std::env::temp_dir().join("hass_metrics_test");
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into()]);
+        t.write_files(&dir, "t").unwrap();
+        assert!(dir.join("t.csv").exists());
+        assert!(dir.join("t.md").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

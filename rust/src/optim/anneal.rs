@@ -1,0 +1,148 @@
+//! Generic simulated annealing — the paper uses SA twice: for the
+//! intra-layer balancing assignment (§IV "Balancing Strategy") and for
+//! device partitioning / reconfiguration trade-offs (§V-A.4).
+
+use crate::util::rng::Rng;
+
+/// Geometric cooling schedule.
+#[derive(Clone, Debug)]
+pub struct AnnealSchedule {
+    pub iters: usize,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Default for AnnealSchedule {
+    fn default() -> Self {
+        AnnealSchedule { iters: 2000, t0: 1.0, t1: 1e-3 }
+    }
+}
+
+impl AnnealSchedule {
+    fn temp(&self, i: usize) -> f64 {
+        let f = i as f64 / self.iters.max(1) as f64;
+        self.t0 * (self.t1 / self.t0).powf(f)
+    }
+}
+
+/// Minimize `energy` over states reachable via `neighbor`.
+/// Returns the best state seen and its energy.
+pub fn anneal<S: Clone>(
+    init: S,
+    energy: impl Fn(&S) -> f64,
+    neighbor: impl Fn(&S, &mut Rng) -> S,
+    schedule: &AnnealSchedule,
+    rng: &mut Rng,
+) -> (S, f64) {
+    let mut cur = init.clone();
+    let mut cur_e = energy(&cur);
+    let mut best = cur.clone();
+    let mut best_e = cur_e;
+    for i in 0..schedule.iters {
+        let t = schedule.temp(i);
+        let cand = neighbor(&cur, rng);
+        let cand_e = energy(&cand);
+        let accept = cand_e <= cur_e || rng.bool(((cur_e - cand_e) / t.max(1e-300)).exp());
+        if accept {
+            cur = cand;
+            cur_e = cand_e;
+            if cur_e < best_e {
+                best = cur.clone();
+                best_e = cur_e;
+            }
+        }
+    }
+    (best, best_e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut rng = Rng::new(1);
+        let (x, e) = anneal(
+            5.0f64,
+            |x| (x - 2.0) * (x - 2.0),
+            |x, r| x + r.normal(0.0, 0.3),
+            &AnnealSchedule::default(),
+            &mut rng,
+        );
+        assert!(e < 0.01, "x={x} e={e}");
+    }
+
+    #[test]
+    fn best_energy_never_worse_than_init() {
+        let mut rng = Rng::new(2);
+        let init = 100.0f64;
+        let init_e = init * init;
+        let (_, e) = anneal(
+            init,
+            |x| x * x,
+            |x, r| x + r.normal(0.0, 1.0),
+            &AnnealSchedule { iters: 100, ..Default::default() },
+            &mut rng,
+        );
+        assert!(e <= init_e);
+    }
+
+    #[test]
+    fn escapes_local_minimum() {
+        // double well: local min at x=-1 (e=0.5), global at x=1 (e=0)
+        let well = |x: &f64| {
+            let a = (x + 1.0) * (x + 1.0) + 0.5;
+            let b = (x - 1.0) * (x - 1.0);
+            a.min(b)
+        };
+        let mut rng = Rng::new(3);
+        let (x, e) = anneal(
+            -1.0f64,
+            well,
+            |x, r| x + r.normal(0.0, 0.5),
+            &AnnealSchedule { iters: 5000, t0: 2.0, t1: 1e-4 },
+            &mut rng,
+        );
+        assert!(e < 0.05, "stuck at x={x} e={e}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            anneal(
+                0.0f64,
+                |x| x.sin() + x * x * 0.01,
+                |x, r| x + r.normal(0.0, 0.5),
+                &AnnealSchedule::default(),
+                &mut rng,
+            )
+            .1
+        };
+        assert_eq!(run(9).to_bits(), run(9).to_bits());
+    }
+
+    #[test]
+    fn discrete_state_assignment() {
+        // assign 10 weights to 3 bins minimizing max bin load
+        let weights = [5.0, 3.0, 8.0, 2.0, 7.0, 1.0, 4.0, 6.0, 2.0, 5.0];
+        let energy = |assign: &Vec<usize>| {
+            let mut loads = [0.0f64; 3];
+            for (w, &b) in weights.iter().zip(assign) {
+                loads[b] += w;
+            }
+            loads.iter().cloned().fold(0.0, f64::max)
+        };
+        let neighbor = |a: &Vec<usize>, r: &mut Rng| {
+            let mut b = a.clone();
+            let i = r.below(b.len());
+            b[i] = r.below(3);
+            b
+        };
+        let mut rng = Rng::new(4);
+        let init = vec![0; 10];
+        let (_, e) = anneal(init, energy, neighbor, &AnnealSchedule::default(), &mut rng);
+        // total = 43, perfect balance ≈ 14.33; SA should get close
+        assert!(e <= 17.0, "max load {e}");
+    }
+}

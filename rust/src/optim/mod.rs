@@ -1,0 +1,43 @@
+//! Search algorithms: Tree-structured Parzen Estimator (the paper's §V-B
+//! multi-objective search engine, [17]), generic simulated annealing (the
+//! paper's solver for intra-layer SPE balancing and device partitioning),
+//! and a random-search baseline used in tests and ablations.
+
+pub mod anneal;
+pub mod tpe;
+
+pub use anneal::{anneal, AnnealSchedule};
+pub use tpe::TpeOptimizer;
+
+use crate::util::rng::Rng;
+
+/// Random search over the unit hypercube — baseline for TPE ablations.
+pub struct RandomSearch {
+    pub dim: usize,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        RandomSearch { dim, rng: Rng::new(seed) }
+    }
+
+    pub fn ask(&mut self) -> Vec<f64> {
+        (0..self.dim).map(|_| self.rng.f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_search_in_bounds() {
+        let mut rs = RandomSearch::new(5, 1);
+        for _ in 0..100 {
+            let x = rs.ask();
+            assert_eq!(x.len(), 5);
+            assert!(x.iter().all(|v| (0.0..1.0).contains(v)));
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! One-shot magnitude (L1) pruning (paper §III).
+//!
+//! Pruning decisions are *thresholds*: per-layer τ_w on |w| and τ_a on |a|.
+//! The search space exposed to the optimizer is the unit hypercube
+//! [0,1]^(2·L): each coordinate is a target *sparsity* (not a raw
+//! threshold), mapped through the layer's [`TransferCurve`] to the τ that
+//! achieves it.  Searching in sparsity space keeps the TPE geometry
+//! uniform across layers whose weight scales differ by orders of
+//! magnitude (the per-layer statistic diversity of [14], [16]).
+//!
+//! Uniform-threshold mode (one τ_w, one τ_a shared by every layer) is the
+//! paper's simple baseline; per-layer mode is what HASS searches.
+
+use crate::arch::Network;
+use crate::sparsity::{NetworkSparsity, SparsityPoint};
+use crate::util::clampf;
+
+/// Upper bound on searchable sparsity per tensor: pruning everything in a
+/// layer destroys the network and wastes search budget, so the optimizer's
+/// unit interval maps onto [0, MAX_SPARSITY].
+pub const MAX_SPARSITY: f64 = 0.95;
+
+/// A concrete one-shot pruning decision for a whole network.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruningPlan {
+    /// per-compute-layer weight thresholds τ_w
+    pub tau_w: Vec<f64>,
+    /// per-compute-layer activation thresholds τ_a
+    pub tau_a: Vec<f64>,
+}
+
+impl PruningPlan {
+    /// The no-op plan (dense network, natural activation zeros only).
+    pub fn dense(n_layers: usize) -> Self {
+        PruningPlan { tau_w: vec![0.0; n_layers], tau_a: vec![0.0; n_layers] }
+    }
+
+    /// Uniform thresholds across all layers (paper's baseline mode).
+    pub fn uniform(n_layers: usize, tau_w: f64, tau_a: f64) -> Self {
+        PruningPlan { tau_w: vec![tau_w; n_layers], tau_a: vec![tau_a; n_layers] }
+    }
+
+    /// Decode an optimizer point `x ∈ [0,1]^(2L)` into thresholds via the
+    /// per-layer transfer curves: `x[2i]` is layer i's weight-sparsity
+    /// target, `x[2i+1]` its activation-sparsity target.
+    pub fn from_unit_point(x: &[f64], sparsity: &NetworkSparsity) -> Self {
+        let n = sparsity.layers.len();
+        assert_eq!(x.len(), 2 * n, "expect 2 coords per compute layer");
+        let mut tau_w = Vec::with_capacity(n);
+        let mut tau_a = Vec::with_capacity(n);
+        for (i, prof) in sparsity.layers.iter().enumerate() {
+            let sw = clampf(x[2 * i], 0.0, 1.0) * MAX_SPARSITY;
+            let sa_target = clampf(x[2 * i + 1], 0.0, 1.0) * MAX_SPARSITY;
+            tau_w.push(prof.weight_curve.tau_for(sw));
+            // activation threshold may not reduce sparsity below natural
+            let sa = sa_target.max(prof.act_curve.frac_at_zero());
+            tau_a.push(prof.act_curve.tau_for(sa));
+        }
+        PruningPlan { tau_w, tau_a }
+    }
+
+    /// Sparsity operating points this plan reaches under a sparsity model.
+    pub fn points(&self, sparsity: &NetworkSparsity) -> Vec<SparsityPoint> {
+        sparsity.points(&self.tau_w, &self.tau_a)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.tau_w.len()
+    }
+}
+
+/// Software pruning metrics (paper's f_spa and the Fig. 1 x-axis).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparsityMetrics {
+    /// average of (S_w + S_a)/2 across layers, op-weighted — f_spa
+    pub avg_sparsity: f64,
+    /// op-weighted mean pair density (1 − S̄) — Fig. 1's operation density
+    pub op_density: f64,
+    /// fraction of weight parameters pruned (storage view)
+    pub weight_sparsity: f64,
+}
+
+/// Compute software metrics of a pruning operating point over a network.
+/// `points` must be in `Network::compute_indices()` order.
+pub fn metrics(net: &Network, points: &[SparsityPoint]) -> SparsityMetrics {
+    let compute = net.compute_layers();
+    assert_eq!(compute.len(), points.len());
+    let mut ops_total = 0.0;
+    let mut ops_dense_weighted_spa = 0.0;
+    let mut density_weighted = 0.0;
+    let mut w_total = 0.0;
+    let mut w_pruned = 0.0;
+    for (l, p) in compute.iter().zip(points) {
+        let ops = l.macs_per_image() as f64;
+        ops_total += ops;
+        ops_dense_weighted_spa += ops * 0.5 * (p.s_w + p.s_a);
+        density_weighted += ops * p.pair_density();
+        let w = l.weight_count() as f64;
+        w_total += w;
+        w_pruned += w * p.s_w;
+    }
+    SparsityMetrics {
+        avg_sparsity: ops_dense_weighted_spa / ops_total.max(1.0),
+        op_density: density_weighted / ops_total.max(1.0),
+        weight_sparsity: w_pruned / w_total.max(1.0),
+    }
+}
+
+/// Accuracy-response surrogate for target geometries we cannot execute
+/// (DESIGN.md §1.1): accuracy degrades smoothly with the op-weighted
+/// fraction of values pruned *beyond the natural zeros* (post-ReLU zeros
+/// are already zero — removing them costs nothing, which is exactly
+/// PASS's free lunch), with a cliff once any single layer loses almost
+/// everything.  The *measured* path (CalibNet via PJRT) replaces this in
+/// the HASS loop; baselines and target-geometry benches rank with it.
+pub fn surrogate_accuracy(
+    base_acc: f64,
+    net: &Network,
+    points: &[SparsityPoint],
+    natural: &[SparsityPoint],
+) -> f64 {
+    assert_eq!(points.len(), natural.len());
+    let compute = net.compute_layers();
+    let mut ops_total = 0.0;
+    let mut excess_weighted = 0.0;
+    let mut layer_damage = 0.0;
+    let mut worst_excess = 0.0f64;
+    for ((l, p), nat) in compute.iter().zip(points).zip(natural) {
+        let ops = l.macs_per_image() as f64;
+        // fraction of *previously non-zero* values removed
+        let ew = clampf((p.s_w - nat.s_w) / (1.0 - nat.s_w).max(1e-9), 0.0, 1.0);
+        let ea = clampf((p.s_a - nat.s_a) / (1.0 - nat.s_a).max(1e-9), 0.0, 1.0);
+        ops_total += ops;
+        excess_weighted += ops * 0.5 * (ew + ea);
+        // per-layer collapse: losing >85% of a layer's live pairs damages
+        // the features it feeds forward, proportionally to the layer's
+        // share of the network's compute
+        let pair_excess = 1.0 - (1.0 - ew) * (1.0 - ea);
+        let over = ((pair_excess - 0.85).max(0.0) / 0.15).powi(2);
+        layer_damage += ops * over * 30.0;
+        worst_excess = worst_excess.max(pair_excess);
+    }
+    let s = excess_weighted / ops_total.max(1.0);
+    // smooth part: quadratic loss in aggregate *excess* sparsity
+    let smooth = 1.45 * s.powi(2) + 0.12 * s;
+    // total-collapse backstop: even a tiny layer at ~complete pruning
+    // severs the network
+    let backstop = if worst_excess > 0.97 { (worst_excess - 0.97) * 400.0 } else { 0.0 };
+    (base_acc - smooth * 12.0 - layer_damage / ops_total.max(1.0) - backstop).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::sparsity::synthesize;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn dense_plan_is_all_zero_thresholds() {
+        let p = PruningPlan::dense(4);
+        assert_eq!(p.tau_w, vec![0.0; 4]);
+        assert_eq!(p.tau_a, vec![0.0; 4]);
+        assert_eq!(p.n_layers(), 4);
+    }
+
+    #[test]
+    fn unit_point_decodes_to_target_sparsity() {
+        let net = networks::resnet18();
+        let prof = synthesize(&net, 1);
+        let n = prof.layers.len();
+        let mut x = vec![0.0; 2 * n];
+        x[0] = 0.5; // first layer weight-sparsity target = 0.475
+        let plan = PruningPlan::from_unit_point(&x, &prof);
+        let pts = plan.points(&prof);
+        assert!((pts[0].s_w - 0.5 * MAX_SPARSITY).abs() < 0.02, "{:?}", pts[0]);
+        // untouched layers stay at zero weight sparsity
+        assert!(pts[1].s_w < 1e-6);
+    }
+
+    #[test]
+    fn activation_sparsity_never_below_natural() {
+        let net = networks::calibnet();
+        let prof = synthesize(&net, 2);
+        let n = prof.layers.len();
+        let plan = PruningPlan::from_unit_point(&vec![0.0; 2 * n], &prof);
+        for (p, l) in plan.points(&prof).iter().zip(&prof.layers) {
+            assert!(p.s_a >= l.act_curve.frac_at_zero() - 1e-9);
+        }
+    }
+
+    #[test]
+    fn unit_point_monotone_in_coordinates() {
+        let net = networks::calibnet();
+        let prof = synthesize(&net, 3);
+        let n = prof.layers.len();
+        forall(40, 0x9121, |rng| {
+            let x: Vec<f64> = (0..2 * n).map(|_| rng.f64()).collect();
+            let mut y = x.clone();
+            let i = rng.below(2 * n);
+            y[i] = (y[i] + 0.3).min(1.0);
+            let px = PruningPlan::from_unit_point(&x, &prof).points(&prof);
+            let py = PruningPlan::from_unit_point(&y, &prof).points(&prof);
+            let li = i / 2;
+            if i % 2 == 0 {
+                assert!(py[li].s_w >= px[li].s_w - 1e-9);
+            } else {
+                assert!(py[li].s_a >= px[li].s_a - 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn metrics_dense_network() {
+        let net = networks::calibnet();
+        let pts = vec![SparsityPoint::DENSE; net.compute_layers().len()];
+        let m = metrics(&net, &pts);
+        assert!((m.op_density - 1.0).abs() < 1e-12);
+        assert!(m.avg_sparsity.abs() < 1e-12);
+        assert!(m.weight_sparsity.abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_weighted_by_ops() {
+        let net = networks::calibnet();
+        let n = net.compute_layers().len();
+        // sparsify only the largest layer -> metrics move more than for
+        // the smallest layer
+        let ops: Vec<u64> = net.compute_layers().iter().map(|l| l.macs_per_image()).collect();
+        let big = ops.iter().enumerate().max_by_key(|(_, &o)| o).unwrap().0;
+        let small = ops.iter().enumerate().min_by_key(|(_, &o)| o).unwrap().0;
+        let mk = |idx: usize| {
+            let mut pts = vec![SparsityPoint::DENSE; n];
+            pts[idx] = SparsityPoint { s_w: 0.8, s_a: 0.0 };
+            metrics(&net, &pts).avg_sparsity
+        };
+        assert!(mk(big) > mk(small));
+    }
+
+    #[test]
+    fn op_density_is_one_minus_pair_sparsity_for_uniform() {
+        let net = networks::resnet18();
+        let n = net.compute_layers().len();
+        let pts = vec![SparsityPoint { s_w: 0.5, s_a: 0.5 }; n];
+        let m = metrics(&net, &pts);
+        assert!((m.op_density - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn surrogate_accuracy_monotone_decreasing() {
+        let net = networks::resnet18();
+        let n = net.compute_layers().len();
+        let natural = vec![SparsityPoint::DENSE; n];
+        let mut last = f64::INFINITY;
+        for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let pts = vec![SparsityPoint { s_w: s, s_a: s }; n];
+            let a = surrogate_accuracy(70.0, &net, &pts, &natural);
+            assert!(a <= last + 1e-9, "not monotone at {s}");
+            last = a;
+        }
+    }
+
+    #[test]
+    fn surrogate_accuracy_cliff_on_layer_collapse() {
+        let net = networks::resnet18();
+        let n = net.compute_layers().len();
+        let natural = vec![SparsityPoint::DENSE; n];
+        // collapse the biggest layer: near-total pruning of a major layer
+        // must cost far more than mild uniform pruning of everything
+        let ops: Vec<u64> = net.compute_layers().iter().map(|l| l.macs_per_image()).collect();
+        let big = ops.iter().enumerate().max_by_key(|(_, &o)| o).unwrap().0;
+        let mut pts = vec![SparsityPoint::DENSE; n];
+        pts[big] = SparsityPoint { s_w: 0.97, s_a: 0.95 }; // pair sparsity ~0.9985
+        let collapsed = surrogate_accuracy(70.0, &net, &pts, &natural);
+        let mild = surrogate_accuracy(
+            70.0,
+            &net,
+            &vec![SparsityPoint { s_w: 0.3, s_a: 0.3 }; n],
+            &natural,
+        );
+        assert!(collapsed < mild - 8.0, "collapsed {collapsed} vs mild {mild}");
+    }
+
+    #[test]
+    fn surrogate_accuracy_natural_zeros_are_free() {
+        // pruning exactly at the natural activation zero-rate must not
+        // cost anything (PASS's free lunch)
+        let net = networks::resnet18();
+        let n = net.compute_layers().len();
+        let natural = vec![SparsityPoint { s_w: 0.0, s_a: 0.5 }; n];
+        let at_natural = vec![SparsityPoint { s_w: 0.0, s_a: 0.5 }; n];
+        let a = surrogate_accuracy(70.0, &net, &at_natural, &natural);
+        assert!((a - 70.0).abs() < 1e-9, "natural zeros cost accuracy: {a}");
+        // pruning beyond natural does cost
+        let beyond = vec![SparsityPoint { s_w: 0.0, s_a: 0.8 }; n];
+        assert!(surrogate_accuracy(70.0, &net, &beyond, &natural) < 70.0);
+    }
+
+    #[test]
+    fn uniform_plan_broadcasts() {
+        let p = PruningPlan::uniform(3, 0.1, 0.2);
+        assert_eq!(p.tau_w, vec![0.1; 3]);
+        assert_eq!(p.tau_a, vec![0.2; 3]);
+    }
+}

@@ -1,0 +1,363 @@
+//! Artifact loaders: `meta.json`, `weights.bin`, calibration data.
+//!
+//! These are the build-time outputs of `python/compile/aot.py`; the Rust
+//! side never talks to Python — it reads these files and the HLO text.
+
+use std::path::{Path, PathBuf};
+
+use crate::sparsity::{LayerProfile, NetworkSparsity, TransferCurve};
+use crate::util::json::Json;
+
+/// One compute layer as described by the artifact metadata.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: String,
+    pub kernel: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    pub patch_k: usize,
+    pub macs_per_image: u64,
+    pub weight_shape: Vec<usize>,
+    pub w_offset: usize,
+    pub w_size: usize,
+    pub b_offset: usize,
+    pub b_size: usize,
+}
+
+/// Golden outputs recorded at export time (Rust↔Python integration tests).
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub batch: usize,
+    pub tau_ref: f64,
+    pub logits_sum_tau0: f64,
+    pub acc_tau0: f64,
+    pub s_w_tau_ref: Vec<f64>,
+    pub s_a_tau_ref: Vec<f64>,
+    pub pair_density_tau_ref: Vec<f64>,
+    pub pair_density_tau0: Vec<f64>,
+    pub logits_first8_tau_ref: Vec<f64>,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub model: String,
+    pub export_batch: usize,
+    pub num_layers: usize,
+    pub num_classes: usize,
+    pub img_size: usize,
+    pub img_channels: usize,
+    pub fxp_scale: f64,
+    pub dense_val_accuracy: f64,
+    pub n_calib: usize,
+    pub quantile_pts: Vec<f64>,
+    pub weight_abs_quantiles: Vec<Vec<f64>>,
+    pub act_abs_quantiles: Vec<Vec<f64>>,
+    pub layers: Vec<LayerMeta>,
+    pub golden: Golden,
+}
+
+fn f64s(j: &Json) -> Vec<f64> {
+    j.as_f64_vec().expect("number array")
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta, String> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .map_err(|e| format!("meta.json: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("meta.json: {e:?}"))?;
+        let layers = j
+            .req("layers")
+            .as_arr()
+            .expect("layers array")
+            .iter()
+            .map(|l| LayerMeta {
+                name: l.req("name").as_str().unwrap().to_string(),
+                kind: l.req("kind").as_str().unwrap().to_string(),
+                kernel: l.req("kernel").as_usize().unwrap(),
+                stride: l.req("stride").as_usize().unwrap(),
+                cin: l.req("cin").as_usize().unwrap(),
+                cout: l.req("cout").as_usize().unwrap(),
+                in_hw: l.req("in_hw").as_usize().unwrap(),
+                out_hw: l.req("out_hw").as_usize().unwrap(),
+                patch_k: l.req("patch_k").as_usize().unwrap(),
+                macs_per_image: l.req("macs_per_image").as_f64().unwrap() as u64,
+                weight_shape: l
+                    .req("weight_shape")
+                    .as_f64_vec()
+                    .unwrap()
+                    .iter()
+                    .map(|&v| v as usize)
+                    .collect(),
+                w_offset: l.req("w_offset").as_usize().unwrap(),
+                w_size: l.req("w_size").as_usize().unwrap(),
+                b_offset: l.req("b_offset").as_usize().unwrap(),
+                b_size: l.req("b_size").as_usize().unwrap(),
+            })
+            .collect();
+        let g = j.req("golden");
+        let golden = Golden {
+            batch: g.req("batch").as_usize().unwrap(),
+            tau_ref: g.req("tau_ref").as_f64().unwrap(),
+            logits_sum_tau0: g.req("logits_sum_tau0").as_f64().unwrap(),
+            acc_tau0: g.req("acc_tau0").as_f64().unwrap(),
+            s_w_tau_ref: f64s(g.req("s_w_tau_ref")),
+            s_a_tau_ref: f64s(g.req("s_a_tau_ref")),
+            pair_density_tau_ref: f64s(g.req("pair_density_tau_ref")),
+            pair_density_tau0: f64s(g.req("pair_density_tau0")),
+            logits_first8_tau_ref: f64s(g.req("logits_first8_tau_ref")),
+        };
+        Ok(Meta {
+            model: j.req("model").as_str().unwrap().to_string(),
+            export_batch: j.req("export_batch").as_usize().unwrap(),
+            num_layers: j.req("num_layers").as_usize().unwrap(),
+            num_classes: j.req("num_classes").as_usize().unwrap(),
+            img_size: j.req("img_size").as_usize().unwrap(),
+            img_channels: j.req("img_channels").as_usize().unwrap(),
+            fxp_scale: j.req("fxp_scale").as_f64().unwrap(),
+            dense_val_accuracy: j.req("dense_val_accuracy").as_f64().unwrap(),
+            n_calib: j.req("n_calib").as_usize().unwrap(),
+            quantile_pts: f64s(j.req("quantile_pts")),
+            weight_abs_quantiles: j
+                .req("weight_abs_quantiles")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(f64s)
+                .collect(),
+            act_abs_quantiles: j
+                .req("act_abs_quantiles")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(f64s)
+                .collect(),
+            layers,
+            golden,
+        })
+    }
+
+    /// The *measured* sparsity model of the calibration network: transfer
+    /// curves straight from the artifact's |w|/|a| quantile tables.
+    pub fn measured_sparsity(&self) -> NetworkSparsity {
+        let layers = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerProfile {
+                name: l.name.clone(),
+                weight_curve: TransferCurve::from_quantiles(
+                    &self.quantile_pts,
+                    &self.weight_abs_quantiles[i],
+                ),
+                act_curve: TransferCurve::from_quantiles(
+                    &self.quantile_pts,
+                    &self.act_abs_quantiles[i],
+                ),
+                channel_imbalance: vec![1.0; l.cin.min(64)],
+            })
+            .collect();
+        NetworkSparsity { network: self.model.clone(), layers }
+    }
+}
+
+/// Raw f32 LE file reader.
+pub fn read_f32s(path: &Path) -> Result<Vec<f32>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("{}: not a multiple of 4 bytes", path.display()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Raw i32 LE file reader.
+pub fn read_i32s(path: &Path) -> Result<Vec<i32>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("{}: not a multiple of 4 bytes", path.display()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Network parameters sliced out of `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    /// per-layer (weight tensor, bias vector) in artifact order
+    pub params: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Weights {
+    pub fn load(dir: &Path, meta: &Meta) -> Result<Weights, String> {
+        let flat = read_f32s(&dir.join("weights.bin"))?;
+        let mut params = Vec::with_capacity(meta.layers.len());
+        for l in &meta.layers {
+            let w = flat
+                .get(l.w_offset..l.w_offset + l.w_size)
+                .ok_or_else(|| format!("weights.bin too short for {}", l.name))?
+                .to_vec();
+            let b = flat
+                .get(l.b_offset..l.b_offset + l.b_size)
+                .ok_or_else(|| format!("weights.bin too short for {} bias", l.name))?
+                .to_vec();
+            params.push((w, b));
+        }
+        Ok(Weights { params })
+    }
+}
+
+/// Calibration/validation dataset (NHWC f32 images + i32 labels).
+#[derive(Clone, Debug)]
+pub struct CalibData {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub img_elems: usize,
+}
+
+impl CalibData {
+    pub fn load(dir: &Path, meta: &Meta) -> Result<CalibData, String> {
+        let images = read_f32s(&dir.join("calib_images.bin"))?;
+        let labels = read_i32s(&dir.join("calib_labels.bin"))?;
+        let img_elems = meta.img_size * meta.img_size * meta.img_channels;
+        if images.len() != labels.len() * img_elems {
+            return Err(format!(
+                "calib data mismatch: {} pixels vs {} labels x {img_elems}",
+                images.len(),
+                labels.len()
+            ));
+        }
+        Ok(CalibData { n: labels.len(), images, labels, img_elems })
+    }
+
+    /// Borrow batch `b` of size `batch` (images slice, labels slice).
+    pub fn batch(&self, b: usize, batch: usize) -> (&[f32], &[i32]) {
+        let lo = b * batch;
+        let hi = ((b + 1) * batch).min(self.n);
+        (&self.images[lo * self.img_elems..hi * self.img_elems], &self.labels[lo..hi])
+    }
+
+    pub fn n_batches(&self, batch: usize) -> usize {
+        self.n / batch
+    }
+}
+
+/// Default artifact directory: `$HASS_ARTIFACTS` or `artifacts/` relative
+/// to the crate root (works from `cargo test`/`cargo bench`/examples).
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HASS_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("artifacts")
+}
+
+/// True if all artifacts needed by the runtime are present.
+pub fn available(dir: &Path) -> bool {
+    ["model.hlo.txt", "meta.json", "weights.bin", "calib_images.bin", "calib_labels.bin"]
+        .iter()
+        .all(|f| dir.join(f).exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        default_dir()
+    }
+
+    #[test]
+    fn meta_parses() {
+        if !available(&dir()) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Meta::load(&dir()).unwrap();
+        assert_eq!(m.num_layers, 10);
+        assert_eq!(m.layers.len(), 10);
+        assert_eq!(m.golden.batch, m.export_batch);
+        assert_eq!(m.quantile_pts.len(), m.weight_abs_quantiles[0].len());
+        assert!(m.dense_val_accuracy > 0.5, "training failed upstream?");
+    }
+
+    #[test]
+    fn meta_layer_geometry_consistent() {
+        if !available(&dir()) {
+            return;
+        }
+        let m = Meta::load(&dir()).unwrap();
+        for l in &m.layers {
+            let wsize: usize = l.weight_shape.iter().product();
+            assert_eq!(wsize, l.w_size, "{}", l.name);
+            assert_eq!(l.b_size, l.cout, "{}", l.name);
+            if l.kind == "conv" {
+                assert_eq!(l.patch_k, l.kernel * l.kernel * l.cin, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_load_and_slice() {
+        if !available(&dir()) {
+            return;
+        }
+        let m = Meta::load(&dir()).unwrap();
+        let w = Weights::load(&dir(), &m).unwrap();
+        assert_eq!(w.params.len(), m.layers.len());
+        for ((wv, bv), l) in w.params.iter().zip(&m.layers) {
+            assert_eq!(wv.len(), l.w_size);
+            assert_eq!(bv.len(), l.b_size);
+            // quantized Q8.8 values are multiples of 1/256 within range
+            for &v in wv.iter().take(50) {
+                assert!((v * m.fxp_scale as f32).fract().abs() < 1e-3, "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn calib_data_loads() {
+        if !available(&dir()) {
+            return;
+        }
+        let m = Meta::load(&dir()).unwrap();
+        let d = CalibData::load(&dir(), &m).unwrap();
+        assert_eq!(d.n, m.n_calib);
+        assert!(d.labels.iter().all(|&l| (l as usize) < m.num_classes));
+        let (imgs, labels) = d.batch(0, m.export_batch);
+        assert_eq!(labels.len(), m.export_batch);
+        assert_eq!(imgs.len(), m.export_batch * d.img_elems);
+    }
+
+    #[test]
+    fn measured_sparsity_curves_are_monotone() {
+        if !available(&dir()) {
+            return;
+        }
+        let m = Meta::load(&dir()).unwrap();
+        let sp = m.measured_sparsity();
+        assert_eq!(sp.layers.len(), m.num_layers);
+        for l in &sp.layers {
+            for w in l.weight_curve.taus.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+            // activations post-ReLU have natural zero mass except layer 0
+            // (the raw image input); at least *some* layer must show it
+        }
+        let max_zero = sp
+            .layers
+            .iter()
+            .map(|l| l.act_curve.frac_at_zero())
+            .fold(0.0f64, f64::max);
+        assert!(max_zero > 0.2, "no natural activation sparsity: {max_zero}");
+    }
+}

@@ -1,0 +1,598 @@
+//! Cycle-level simulator of the sparse dataflow pipeline (paper §IV).
+//!
+//! Validates the analytical model (Eq. 1–3) that the DSE trusts, and
+//! exposes the dynamic effects the model abstracts away: per-group
+//! sparsity variance, inter-layer FIFO backpressure, and pipeline fill.
+//!
+//! **Model.**  Each compute layer is a pipeline *stage* with `i×o` SPEs
+//! processing one *output group* (`o_par` outputs) at a time.  A group's
+//! duration is `max_e ⌈k_e / N⌉` over its engines, where `k_e` is the
+//! engine's non-zero pair count — sampled per group around the calibrated
+//! density (the run-time dynamism of activation sparsity).  Stages are
+//! connected by FIFOs; a stage can start a group only when
+//!
+//! * its own SPEs are free,
+//! * the upstream stage has produced the input the group's window needs
+//!   (tracked as a fraction of the upstream image, plus the sliding-window
+//!   skew of a k×k kernel), and
+//! * the downstream FIFO has space (backpressure).
+//!
+//! The simulation is discrete-event (completion-time driven), so cost is
+//! O(total groups · L), independent of per-cycle idling.
+
+use crate::arch::{LayerDesc, Network, Op};
+use crate::hardware::LayerDesign;
+use crate::sparsity::SparsityPoint;
+use crate::util::ceil_div;
+use crate::util::rng::Rng;
+
+/// Per-stage simulation parameters.
+#[derive(Clone, Debug)]
+pub struct StageConfig {
+    pub design: LayerDesign,
+    pub point: SparsityPoint,
+    /// relative per-engine density multipliers (mean 1.0); length must be
+    /// `design.engines()` or empty for perfectly balanced engines
+    pub engine_imbalance: Vec<f64>,
+    /// inter-layer FIFO capacity, in *output elements* of this stage
+    pub fifo_capacity: u64,
+}
+
+/// What the simulator measures for one run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// true if the pipeline wedged (a config error: FIFO smaller than the
+    /// consumer's window needs) — results are then meaningless
+    pub deadlocked: bool,
+    /// total cycles from first input to last output
+    pub total_cycles: u64,
+    /// steady-state throughput estimate: images/cycle over the back half
+    pub throughput: f64,
+    /// per-stage busy fraction (cycles computing / total)
+    pub busy: Vec<f64>,
+    /// per-stage cycles lost waiting for input
+    pub starved: Vec<u64>,
+    /// per-stage cycles lost blocked on a full output FIFO
+    pub blocked: Vec<u64>,
+    /// images simulated
+    pub images: usize,
+}
+
+/// Variance model for the per-group non-zero pair count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SparsityDynamics {
+    /// every group sees exactly the calibrated mean density (validates the
+    /// analytical model: simulator must match Eq. 1–3)
+    Deterministic,
+    /// binomial-like variance around the mean (normal approximation),
+    /// modelling run-time activation dynamism
+    Stochastic { seed: u64 },
+}
+
+struct Stage {
+    layer: LayerDesc,
+    cfg: StageConfig,
+    /// groups per image
+    groups: u64,
+    /// pairs per output in one SPE
+    m_len: usize,
+    // dynamic state
+    next_group: u64,
+    busy_until: u64,
+    /// completed groups (over all images)
+    done: u64,
+    busy_cycles: u64,
+    starved_cycles: u64,
+    blocked_cycles: u64,
+    last_event: u64,
+    /// fractional work carried across group boundaries: the SPE's
+    /// non-zero-pair prefetch buffer lets the arbiter keep MACs busy
+    /// across groups, so per-group rounding does not quantize to whole
+    /// cycles (paper §IV: "pre-fetch data in a buffer to keep the
+    /// hardware operators busy at each cycle")
+    work_carry: f64,
+}
+
+impl Stage {
+    /// Upstream image fraction needed before group `g` (within an image)
+    /// can start: its share of the image plus the sliding-window skew.
+    fn input_fraction_needed(&self, g_in_image: u64) -> f64 {
+        let frac = (g_in_image + 1) as f64 / self.groups as f64;
+        let skew = match self.layer.op {
+            Op::Conv { kernel, .. } if kernel > 1 => {
+                // need `kernel` rows of input before the first output row
+                kernel as f64 / self.layer.in_hw.max(1) as f64
+            }
+            _ => 0.0,
+        };
+        (frac + skew).min(1.0)
+    }
+
+    /// Sample the group duration in cycles.
+    fn group_cycles(&mut self, rng: Option<&mut Rng>) -> u64 {
+        let d = self.cfg.point.pair_density();
+        let m = self.m_len as f64;
+        let n = self.cfg.design.n_mac as f64;
+        let engines = self.cfg.design.engines() as usize;
+        match rng {
+            None => {
+                // deterministic: exactly the analytical Eq. 1
+                ((d * m / n).ceil() as u64).max(1)
+            }
+            Some(rng) => {
+                // per-engine binomial (normal approx), imbalance-scaled;
+                // group waits for its slowest engine
+                let mut worst = 1.0f64;
+                for e in 0..engines {
+                    let imb = self
+                        .cfg
+                        .engine_imbalance
+                        .get(e)
+                        .copied()
+                        .unwrap_or(1.0);
+                    let mean = (d * imb).clamp(0.0, 1.0) * m;
+                    let var = (d * imb).clamp(0.0, 1.0) * (1.0 - (d * imb).clamp(0.0, 1.0)) * m;
+                    let k = (mean + rng.gauss() * var.sqrt()).round().clamp(0.0, m);
+                    worst = worst.max(k / n);
+                }
+                // work-conserving rounding via the pair-prefetch buffer:
+                // leftover fractional cycles carry into the next group
+                // instead of quantizing every group up to a whole cycle
+                let t_raw = worst + self.work_carry;
+                let t = t_raw.floor();
+                if t < 1.0 {
+                    self.work_carry = 0.0; // emission takes the cycle anyway
+                    1
+                } else {
+                    self.work_carry = t_raw - t;
+                    t as u64
+                }
+            }
+        }
+    }
+}
+
+/// Build stage configs straight from a DSE result (balanced engines,
+/// default FIFO depth from the resource model's `fifo_depth`).
+pub fn stages_from_design(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+    fifo_depth: u64,
+) -> Vec<StageConfig> {
+    let compute = net.compute_layers();
+    assert_eq!(compute.len(), designs.len());
+    assert_eq!(compute.len(), points.len());
+    designs
+        .iter()
+        .zip(points)
+        .map(|(d, p)| StageConfig {
+            design: *d,
+            point: *p,
+            engine_imbalance: Vec::new(),
+            fifo_capacity: fifo_depth.max(d.o_par as u64 * 2),
+        })
+        .collect()
+}
+
+/// Simulate `images` images through the pipeline.
+pub fn simulate(
+    net: &Network,
+    configs: &[StageConfig],
+    images: usize,
+    dynamics: SparsityDynamics,
+) -> SimReport {
+    let compute: Vec<LayerDesc> = net.compute_layers().into_iter().cloned().collect();
+    assert_eq!(compute.len(), configs.len());
+    assert!(images > 0);
+    let mut rng = match dynamics {
+        SparsityDynamics::Deterministic => None,
+        SparsityDynamics::Stochastic { seed } => Some(Rng::new(seed)),
+    };
+    let mut stages: Vec<Stage> = compute
+        .iter()
+        .zip(configs)
+        .map(|(l, c)| {
+            let groups = ceil_div(l.outputs_per_image() as u64, c.design.o_par as u64);
+            let m_len = c.design.m_len(l);
+            Stage {
+                layer: l.clone(),
+                cfg: c.clone(),
+                groups,
+                m_len,
+                next_group: 0,
+                busy_until: 0,
+                done: 0,
+                busy_cycles: 0,
+                starved_cycles: 0,
+                blocked_cycles: 0,
+                last_event: 0,
+                work_carry: 0.0,
+            }
+        })
+        .collect();
+    let n = stages.len();
+    let total_groups: u64 = stages.iter().map(|s| s.groups).sum::<u64>() * images as u64;
+
+    let mut now = 0u64;
+    let mut committed = 0u64;
+    // steady-state throughput is measured from *image* completion times at
+    // the sink: the last stage often bursts through one image's groups, so
+    // group-level timing would wildly overestimate throughput.
+    let mut image_done: Vec<u64> = vec![0; images];
+    let mut deadlocked = false;
+
+    while committed < total_groups {
+        // try to start any idle stage
+        let mut started = false;
+        for i in 0..n {
+            if stages[i].busy_until > now {
+                continue;
+            }
+            let img = stages[i].next_group / stages[i].groups;
+            if img >= images as u64 {
+                continue; // finished all its work
+            }
+            let g_in_image = stages[i].next_group % stages[i].groups;
+            // 1) input availability
+            let input_ok = if i == 0 {
+                true // source streams freely
+            } else {
+                let need = stages[i].input_fraction_needed(g_in_image);
+                let up = &stages[i - 1];
+                let up_done_in_img = up
+                    .done
+                    .saturating_sub(img * up.groups)
+                    .min(up.groups);
+                // upstream must already be past this image
+                up.done >= img * up.groups
+                    && (up_done_in_img as f64 / up.groups as f64) >= need - 1e-12
+            };
+            // 2) downstream FIFO space: our produced-but-unconsumed output.
+            // A k×k downstream conv absorbs its sliding window into its own
+            // line buffer, so that window counts as extra capacity; groups
+            // the downstream has *started* have already drained their input.
+            let space_ok = if i + 1 == n {
+                true // sink always drains
+            } else {
+                let my_out = stages[i].done * stages[i].cfg.design.o_par as u64;
+                let down = &stages[i + 1];
+                let my_total = stages[i].groups * stages[i].cfg.design.o_par as u64;
+                let per_down_group = my_total as f64 / down.groups as f64;
+                let consumed = (down.next_group as f64 * per_down_group) as u64;
+                let window = (down.input_fraction_needed(0) * my_total as f64) as u64;
+                my_out.saturating_sub(consumed)
+                    <= stages[i].cfg.fifo_capacity
+                        + window
+                        + stages[i].cfg.design.o_par as u64
+            };
+            if input_ok && space_ok {
+                let t = stages[i].group_cycles(rng.as_mut());
+                stages[i].busy_until = now + t;
+                stages[i].busy_cycles += t;
+                stages[i].next_group += 1;
+                stages[i].last_event = now + t;
+                started = true;
+            }
+        }
+        if !started {
+            // advance time to the earliest completion
+            let next = stages
+                .iter()
+                .filter(|s| s.busy_until > now)
+                .map(|s| s.busy_until)
+                .min();
+            let Some(next) = next else {
+                // pipeline wedged: FIFO capacity below the consumer's
+                // window needs — report it instead of spinning forever
+                deadlocked = true;
+                break;
+            };
+            // account idle reasons between now and next
+            for i in 0..n {
+                if stages[i].busy_until <= now {
+                    let img = stages[i].next_group / stages[i].groups;
+                    if img >= images as u64 {
+                        continue;
+                    }
+                    let g = stages[i].next_group % stages[i].groups;
+                    let starving = i > 0 && {
+                        let need = stages[i].input_fraction_needed(g);
+                        let up = &stages[i - 1];
+                        let up_done = up.done.saturating_sub(img * up.groups).min(up.groups);
+                        up.done < img * up.groups
+                            || (up_done as f64 / up.groups as f64) < need - 1e-12
+                    };
+                    if starving {
+                        stages[i].starved_cycles += next - now;
+                    } else {
+                        stages[i].blocked_cycles += next - now;
+                    }
+                }
+            }
+            now = next;
+            // commit completions
+            for (i, s) in stages.iter_mut().enumerate() {
+                if s.busy_until == now && s.done < s.next_group {
+                    let newly = s.next_group - s.done;
+                    s.done = s.next_group;
+                    committed += newly;
+                    if i + 1 == n {
+                        // record sink-side image completion times
+                        let done_imgs = (s.done / s.groups).min(images as u64) as usize;
+                        for t in image_done.iter_mut().take(done_imgs) {
+                            if *t == 0 {
+                                *t = now;
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            // commit any zero-latency bookkeeping (done lags next_group
+            // until completion time passes)
+            for s in stages.iter_mut() {
+                if s.busy_until <= now && s.done < s.next_group {
+                    committed += s.next_group - s.done;
+                    s.done = s.next_group;
+                }
+            }
+        }
+    }
+    let total_cycles = stages.iter().map(|s| s.busy_until).max().unwrap_or(0);
+    for t in image_done.iter_mut() {
+        if *t == 0 {
+            *t = total_cycles;
+        }
+    }
+    // steady-state throughput: skip the pipeline-fill image(s), measure
+    // sink-side inter-image spacing over the rest
+    let throughput = if images >= 2 {
+        let fill = image_done[0];
+        let span = image_done[images - 1].saturating_sub(fill).max(1);
+        (images - 1) as f64 / span as f64
+    } else {
+        1.0 / total_cycles.max(1) as f64
+    };
+    SimReport {
+        deadlocked,
+        total_cycles,
+        throughput,
+        busy: stages
+            .iter()
+            .map(|s| s.busy_cycles as f64 / total_cycles.max(1) as f64)
+            .collect(),
+        starved: stages.iter().map(|s| s.starved_cycles).collect(),
+        blocked: stages.iter().map(|s| s.blocked_cycles).collect(),
+        images,
+    }
+}
+
+/// Moving-window buffer-size heuristic (paper §IV "Buffering Strategy",
+/// after PASS [4]): simulate with stochastic sparsity, find per-stage the
+/// FIFO depth that absorbs the observed rate variance — the 99th
+/// percentile of the occupancy a window of `window` groups would need.
+pub fn buffer_sizes(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+    window: usize,
+    seed: u64,
+) -> Vec<u64> {
+    let compute = net.compute_layers();
+    let mut rng = Rng::new(seed);
+    compute
+        .iter()
+        .zip(designs.iter().zip(points))
+        .map(|(l, (d, p))| {
+            // sample `window` group durations; the depth must cover the
+            // excess production of a fast upstream burst: approximate by
+            // o_par * (p99 window sum - mean window sum) / mean group time
+            let m = d.m_len(l) as f64;
+            let n = d.n_mac as f64;
+            let dens = p.pair_density();
+            let mean_t = (dens * m / n).ceil().max(1.0);
+            let mut sums: Vec<f64> = Vec::with_capacity(64);
+            for _ in 0..64 {
+                let mut s = 0.0;
+                for _ in 0..window {
+                    let var = dens * (1.0 - dens) * m;
+                    let k = (dens * m + rng.gauss() * var.sqrt()).clamp(0.0, m);
+                    s += (k / n).ceil().max(1.0);
+                }
+                sums.push(s);
+            }
+            sums.sort_by(f64::total_cmp);
+            let p99 = sums[(sums.len() * 99 / 100).min(sums.len() - 1)];
+            let mean = mean_t * window as f64;
+            let excess_groups = ((p99 - mean) / mean_t).ceil().max(1.0);
+            (excess_groups as u64 + 1) * d.o_par as u64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::dse::{explore, network_throughput, DseConfig};
+    use crate::hardware::device::DeviceBudget;
+    use crate::hardware::resources::ResourceModel;
+
+    fn small_net() -> Network {
+        // calibnet is the smallest full network we model
+        networks::calibnet()
+    }
+
+    fn uniform_points(net: &Network, s: f64) -> Vec<SparsityPoint> {
+        vec![SparsityPoint { s_w: s, s_a: s }; net.compute_layers().len()]
+    }
+
+    fn modest_designs(net: &Network) -> Vec<LayerDesign> {
+        // o_par chosen to make the sim fast but non-trivial
+        net.compute_layers()
+            .iter()
+            .map(|l| {
+                let o = crate::hardware::divisors(l.o_extent())
+                    .into_iter()
+                    .filter(|&o| o <= 16)
+                    .next_back()
+                    .unwrap_or(1);
+                LayerDesign { i_par: 1, o_par: o, n_mac: (l.patch_k() / 4).max(1) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_sim_matches_analytical_model() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.4);
+        let designs = modest_designs(&net);
+        let cfgs = stages_from_design(&net, &designs, &points, 4096);
+        let rep = simulate(&net, &cfgs, 6, SparsityDynamics::Deterministic);
+        let model = network_throughput(&net, &designs, &points);
+        let ratio = rep.throughput / model;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "sim {} vs model {model} (ratio {ratio})",
+            rep.throughput
+        );
+    }
+
+    #[test]
+    fn dense_slower_than_sparse_in_sim() {
+        let net = small_net();
+        let designs = modest_designs(&net);
+        let dense = stages_from_design(&net, &designs, &uniform_points(&net, 0.0), 4096);
+        let sparse = stages_from_design(&net, &designs, &uniform_points(&net, 0.6), 4096);
+        let rd = simulate(&net, &dense, 4, SparsityDynamics::Deterministic);
+        let rs = simulate(&net, &sparse, 4, SparsityDynamics::Deterministic);
+        assert!(
+            rs.throughput > rd.throughput * 1.5,
+            "sparse {} dense {}",
+            rs.throughput,
+            rd.throughput
+        );
+    }
+
+    #[test]
+    fn stochastic_close_to_deterministic_on_average() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.5);
+        let designs = modest_designs(&net);
+        let cfgs = stages_from_design(&net, &designs, &points, 4096);
+        let det = simulate(&net, &cfgs, 6, SparsityDynamics::Deterministic);
+        let sto = simulate(&net, &cfgs, 6, SparsityDynamics::Stochastic { seed: 1 });
+        let ratio = sto.throughput / det.throughput;
+        // max-over-engines variance costs some throughput; the prefetch
+        // buffer's work-conserving rounding can also *beat* Eq. 1's
+        // per-group ceil — both effects stay within ~±40%
+        assert!((0.6..=1.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bottleneck_stage_is_busiest() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.3);
+        let designs = modest_designs(&net);
+        let cfgs = stages_from_design(&net, &designs, &points, 4096);
+        let rep = simulate(&net, &cfgs, 6, SparsityDynamics::Deterministic);
+        let b = crate::dse::bottleneck(&net, &designs, &points);
+        let busiest = rep
+            .busy
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(busiest, b, "busy: {:?}", rep.busy);
+    }
+
+    #[test]
+    fn tiny_fifo_causes_backpressure() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.3);
+        let designs = modest_designs(&net);
+        let mut tight = stages_from_design(&net, &designs, &points, 4096);
+        for c in tight.iter_mut() {
+            c.fifo_capacity = c.design.o_par as u64; // minimum legal
+        }
+        let loose = stages_from_design(&net, &designs, &points, 1 << 20);
+        let rt = simulate(&net, &tight, 4, SparsityDynamics::Deterministic);
+        let rl = simulate(&net, &loose, 4, SparsityDynamics::Deterministic);
+        assert!(rt.throughput <= rl.throughput * 1.001);
+        assert!(
+            rt.blocked.iter().sum::<u64>() >= rl.blocked.iter().sum::<u64>(),
+            "tight {:?} loose {:?}",
+            rt.blocked,
+            rl.blocked
+        );
+    }
+
+    #[test]
+    fn sim_composes_with_dse_result() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.4);
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget {
+            name: "mini".into(),
+            dsp: 256,
+            lut: 400_000,
+            bram18k: 1500,
+            uram: 128,
+            freq_mhz: 250.0,
+        };
+        let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let cfgs = stages_from_design(&net, &d.designs, &points, rm.fifo_depth);
+        let rep = simulate(&net, &cfgs, 4, SparsityDynamics::Deterministic);
+        let ratio = rep.throughput / d.throughput;
+        assert!(
+            (0.8..=1.2).contains(&ratio),
+            "sim {} vs dse {} ratio {ratio}",
+            rep.throughput,
+            d.throughput
+        );
+    }
+
+    #[test]
+    fn stochastic_deterministic_per_seed() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.5);
+        let designs = modest_designs(&net);
+        let cfgs = stages_from_design(&net, &designs, &points, 4096);
+        let a = simulate(&net, &cfgs, 3, SparsityDynamics::Stochastic { seed: 9 });
+        let b = simulate(&net, &cfgs, 3, SparsityDynamics::Stochastic { seed: 9 });
+        assert_eq!(a.total_cycles, b.total_cycles);
+        let c = simulate(&net, &cfgs, 3, SparsityDynamics::Stochastic { seed: 10 });
+        assert_ne!(a.total_cycles, c.total_cycles);
+    }
+
+    #[test]
+    fn buffer_sizes_grow_with_variance() {
+        let net = small_net();
+        let designs = modest_designs(&net);
+        // high variance point (density 0.5) vs near-deterministic (0.99)
+        let hi_var = vec![SparsityPoint { s_w: 0.3, s_a: 0.3 }; designs.len()];
+        let lo_var = vec![SparsityPoint { s_w: 0.0, s_a: 0.0 }; designs.len()];
+        let bh = buffer_sizes(&net, &designs, &hi_var, 16, 1);
+        let bl = buffer_sizes(&net, &designs, &lo_var, 16, 1);
+        let sh: u64 = bh.iter().sum();
+        let sl: u64 = bl.iter().sum();
+        assert!(sh >= sl, "hi {sh} lo {sl}");
+        assert!(bh.iter().all(|&b| b >= 1));
+    }
+
+    #[test]
+    fn more_images_amortize_pipeline_fill() {
+        let net = small_net();
+        let points = uniform_points(&net, 0.4);
+        let designs = modest_designs(&net);
+        let cfgs = stages_from_design(&net, &designs, &points, 4096);
+        let short = simulate(&net, &cfgs, 2, SparsityDynamics::Deterministic);
+        let long = simulate(&net, &cfgs, 8, SparsityDynamics::Deterministic);
+        // fill cost is constant, so avg images/cycle improves with length
+        let avg_short = short.images as f64 / short.total_cycles as f64;
+        let avg_long = long.images as f64 / long.total_cycles as f64;
+        assert!(avg_long >= avg_short * 0.99);
+    }
+}

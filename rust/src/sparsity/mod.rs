@@ -1,0 +1,370 @@
+//! Sparsity statistics substrate.
+//!
+//! Two sources feed the DSE with per-layer sparsity:
+//!
+//! 1. **Measured** — the CalibNet AOT artifact is executed on calibration
+//!    data; its per-layer |w|/|a| quantile tables (meta.json) become
+//!    [`TransferCurve`]s and its counter output gives exact pair densities.
+//! 2. **Synthesized** — for the five target geometries (which we cannot
+//!    execute) curves are generated from parametric distributions whose
+//!    *form* is validated against the measured ones: Laplace weights with
+//!    He-scaled diversity, rectified-Gaussian activations with a natural
+//!    zero rate that grows with depth (DESIGN.md §1.1).
+//!
+//! The paper's S̄ (average sparsity of an activation/weight *pair*,
+//! Eq. 1) is derived as `1 − (1−S_w)(1−S_a)` under independence; the
+//! measured path replaces this with the exact counter value.
+
+use crate::arch::Network;
+use crate::util::rng::Rng;
+use crate::util::{clampf, erf};
+
+/// Monotone threshold→sparsity transfer curve: `frac[i]` of the values
+/// have magnitude < `taus[i]`.
+#[derive(Clone, Debug)]
+pub struct TransferCurve {
+    pub taus: Vec<f64>,
+    pub frac: Vec<f64>,
+}
+
+impl TransferCurve {
+    /// From a quantile table: `qs[i]` is the |v| quantile at rank `pts[i]`.
+    pub fn from_quantiles(pts: &[f64], qs: &[f64]) -> Self {
+        assert_eq!(pts.len(), qs.len());
+        assert!(!pts.is_empty());
+        // enforce monotone taus (quantiles can repeat at 0)
+        let mut taus = qs.to_vec();
+        for i in 1..taus.len() {
+            if taus[i] < taus[i - 1] {
+                taus[i] = taus[i - 1];
+            }
+        }
+        TransferCurve { taus, frac: pts.to_vec() }
+    }
+
+    /// Laplace(0, b) magnitudes: P(|v| < τ) = 1 − exp(−τ/b).
+    pub fn laplace(b: f64, n_pts: usize) -> Self {
+        let mut taus = Vec::with_capacity(n_pts);
+        let mut frac = Vec::with_capacity(n_pts);
+        for i in 0..n_pts {
+            let f = i as f64 / (n_pts - 1) as f64 * 0.999;
+            taus.push(-b * (1.0 - f).ln());
+            frac.push(f);
+        }
+        TransferCurve { taus, frac }
+    }
+
+    /// Post-ReLU activations: a point mass `p0` at exactly zero plus a
+    /// half-normal(σ) positive part: S(τ) = p0 + (1−p0)·erf(τ/(σ√2)).
+    pub fn rectified_gaussian(p0: f64, sigma: f64, n_pts: usize) -> Self {
+        let mut taus = Vec::with_capacity(n_pts);
+        let mut frac = Vec::with_capacity(n_pts);
+        for i in 0..n_pts {
+            let tau = 4.0 * sigma * i as f64 / (n_pts - 1) as f64;
+            taus.push(tau);
+            frac.push(clampf(
+                p0 + (1.0 - p0) * erf(tau / (sigma * std::f64::consts::SQRT_2)),
+                0.0,
+                1.0,
+            ));
+        }
+        TransferCurve { taus, frac }
+    }
+
+    /// Fraction of values with magnitude below `tau` (piecewise linear).
+    pub fn sparsity_at(&self, tau: f64) -> f64 {
+        let ts = &self.taus;
+        if tau <= ts[0] {
+            // below the first recorded quantile: only the exact-zero mass
+            return if tau > 0.0 { self.frac[0] } else { self.frac_at_zero() };
+        }
+        if tau >= *ts.last().unwrap() {
+            return *self.frac.last().unwrap();
+        }
+        let mut i = 0;
+        while ts[i + 1] < tau {
+            i += 1;
+        }
+        let span = ts[i + 1] - ts[i];
+        if span <= 0.0 {
+            return self.frac[i + 1];
+        }
+        let t = (tau - ts[i]) / span;
+        self.frac[i] + t * (self.frac[i + 1] - self.frac[i])
+    }
+
+    /// Natural sparsity at τ=0 (exact-zero mass: leading flat region).
+    pub fn frac_at_zero(&self) -> f64 {
+        let mut f = 0.0;
+        for i in 0..self.taus.len() {
+            if self.taus[i] <= 0.0 {
+                f = self.frac[i];
+            } else {
+                break;
+            }
+        }
+        f
+    }
+
+    /// Smallest τ achieving sparsity ≥ s (inverse transfer; clamped).
+    pub fn tau_for(&self, s: f64) -> f64 {
+        let s = clampf(s, 0.0, *self.frac.last().unwrap());
+        if s <= self.frac[0] {
+            return self.taus[0];
+        }
+        let mut i = 0;
+        while self.frac[i + 1] < s {
+            i += 1;
+        }
+        let span = self.frac[i + 1] - self.frac[i];
+        if span <= 0.0 {
+            return self.taus[i + 1];
+        }
+        let t = (s - self.frac[i]) / span;
+        self.taus[i] + t * (self.taus[i + 1] - self.taus[i])
+    }
+}
+
+/// Sparsity operating point of one layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsityPoint {
+    /// weight sparsity S_w ∈ [0,1)
+    pub s_w: f64,
+    /// activation sparsity S_a ∈ [0,1)
+    pub s_a: f64,
+}
+
+impl SparsityPoint {
+    pub const DENSE: SparsityPoint = SparsityPoint { s_w: 0.0, s_a: 0.0 };
+
+    /// Probability that a weight/activation *pair* is computable (both
+    /// non-zero), assuming independence — the paper's (1 − S̄).
+    pub fn pair_density(&self) -> f64 {
+        (1.0 - self.s_w) * (1.0 - self.s_a)
+    }
+
+    /// The paper's S̄ — probability at least one operand of a pair is zero.
+    pub fn pair_sparsity(&self) -> f64 {
+        1.0 - self.pair_density()
+    }
+}
+
+/// Full per-layer sparsity description of one compute layer.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub name: String,
+    pub weight_curve: TransferCurve,
+    pub act_curve: TransferCurve,
+    /// Relative per-input-channel density multipliers (mean 1.0) capturing
+    /// the intra-layer imbalance the paper's SA balancing strategy targets.
+    pub channel_imbalance: Vec<f64>,
+}
+
+impl LayerProfile {
+    /// Operating point reached by thresholds (τ_w, τ_a).
+    pub fn point(&self, tau_w: f64, tau_a: f64) -> SparsityPoint {
+        SparsityPoint {
+            s_w: self.weight_curve.sparsity_at(tau_w),
+            s_a: self.act_curve.sparsity_at(tau_a),
+        }
+    }
+}
+
+/// Per-network sparsity model: one profile per compute layer, in
+/// `Network::compute_indices()` order.
+#[derive(Clone, Debug)]
+pub struct NetworkSparsity {
+    pub network: String,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl NetworkSparsity {
+    /// Operating points for per-layer thresholds.
+    pub fn points(&self, tau_w: &[f64], tau_a: &[f64]) -> Vec<SparsityPoint> {
+        assert_eq!(tau_w.len(), self.layers.len());
+        assert_eq!(tau_a.len(), self.layers.len());
+        self.layers
+            .iter()
+            .zip(tau_w.iter().zip(tau_a))
+            .map(|(l, (&tw, &ta))| l.point(tw, ta))
+            .collect()
+    }
+
+    /// Dense points (no pruning) with only natural activation zeros.
+    pub fn natural_points(&self) -> Vec<SparsityPoint> {
+        self.layers
+            .iter()
+            .map(|l| SparsityPoint {
+                s_w: l.weight_curve.frac_at_zero(),
+                s_a: l.act_curve.frac_at_zero(),
+            })
+            .collect()
+    }
+}
+
+/// Synthesize a plausible sparsity model for a target geometry
+/// (deterministic in `seed`; see module docs for the distribution family).
+pub fn synthesize(net: &Network, seed: u64) -> NetworkSparsity {
+    let mut rng = Rng::new(seed ^ hash_name(&net.name));
+    let compute = net.compute_layers();
+    let depth = compute.len().max(2);
+    let mut layers = Vec::with_capacity(depth);
+    for (d, l) in compute.iter().enumerate() {
+        let fan_in = l.patch_k().max(1) as f64;
+        // He-init folded weights: scale b ≈ sqrt(2/fan_in), with layer-
+        // level diversity (the per-layer statistic diversity the paper
+        // cites [14], [16]).
+        let b = (2.0 / fan_in).sqrt() * (0.7 + 0.6 * rng.f64());
+        // natural activation zero rate grows with depth: early layers
+        // ~0.2–0.4, late layers ~0.5–0.7 (PASS's observation)
+        let frac_depth = d as f64 / (depth - 1) as f64;
+        let p0 = clampf(0.22 + 0.45 * frac_depth + 0.06 * rng.gauss(), 0.05, 0.85);
+        let sigma = 0.5 + 0.5 * rng.f64();
+        // per-channel imbalance: lognormal-ish multipliers, mean ≈ 1
+        let n_ch = l.i_extent().min(64).max(1);
+        let mut imb: Vec<f64> = (0..n_ch)
+            .map(|_| (0.25 * rng.gauss()).exp())
+            .collect();
+        let mean: f64 = imb.iter().sum::<f64>() / imb.len() as f64;
+        imb.iter_mut().for_each(|v| *v /= mean);
+        layers.push(LayerProfile {
+            name: l.name.clone(),
+            weight_curve: TransferCurve::laplace(b, 21),
+            act_curve: TransferCurve::rectified_gaussian(p0, sigma, 21),
+            channel_imbalance: imb,
+        });
+    }
+    NetworkSparsity { network: net.name.clone(), layers }
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn laplace_curve_is_monotone_and_bounded() {
+        let c = TransferCurve::laplace(0.1, 21);
+        for w in c.frac.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        for w in c.taus.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(c.sparsity_at(0.0) < 1e-9);
+        assert!(c.sparsity_at(10.0) > 0.99);
+    }
+
+    #[test]
+    fn laplace_curve_matches_closed_form() {
+        let b = 0.2;
+        let c = TransferCurve::laplace(b, 101);
+        for &tau in &[0.05, 0.1, 0.3] {
+            let want = 1.0 - (-tau / b).exp();
+            let got = c.sparsity_at(tau);
+            assert!((got - want).abs() < 0.01, "tau {tau}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rectified_gaussian_has_zero_mass() {
+        let c = TransferCurve::rectified_gaussian(0.4, 1.0, 21);
+        assert!((c.frac_at_zero() - 0.4).abs() < 1e-9);
+        assert!(c.sparsity_at(0.0001) >= 0.4);
+    }
+
+    #[test]
+    fn tau_for_inverts_sparsity_at() {
+        let c = TransferCurve::laplace(0.15, 21);
+        forall(50, 0xA11CE, |rng| {
+            let s = rng.range(0.05, 0.95);
+            let tau = c.tau_for(s);
+            let back = c.sparsity_at(tau);
+            assert!((back - s).abs() < 0.02, "s={s} tau={tau} back={back}");
+        });
+    }
+
+    #[test]
+    fn from_quantiles_roundtrip() {
+        // 21-pt quantile table of |v| ~ U(0, 1): quantile(r) = r
+        let pts: Vec<f64> = (0..21).map(|i| i as f64 / 20.0).collect();
+        let c = TransferCurve::from_quantiles(&pts, &pts);
+        assert!((c.sparsity_at(0.5) - 0.5).abs() < 1e-9);
+        assert!((c.tau_for(0.25) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pair_density_independence() {
+        let p = SparsityPoint { s_w: 0.5, s_a: 0.5 };
+        assert!((p.pair_density() - 0.25).abs() < 1e-12);
+        assert!((p.pair_sparsity() - 0.75).abs() < 1e-12);
+        assert!((SparsityPoint::DENSE.pair_density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_per_seed_and_network() {
+        let net = networks::resnet18();
+        let a = synthesize(&net, 7);
+        let b = synthesize(&net, 7);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.weight_curve.taus, y.weight_curve.taus);
+            assert_eq!(x.channel_imbalance, y.channel_imbalance);
+        }
+        let c = synthesize(&net, 8);
+        assert_ne!(a.layers[0].weight_curve.taus, c.layers[0].weight_curve.taus);
+    }
+
+    #[test]
+    fn synthesize_covers_all_compute_layers() {
+        for name in networks::ALL_NETWORKS {
+            let net = networks::by_name(name).unwrap();
+            let prof = synthesize(&net, 1);
+            assert_eq!(prof.layers.len(), net.compute_layers().len());
+        }
+    }
+
+    #[test]
+    fn deeper_layers_have_higher_natural_activation_sparsity() {
+        let net = networks::resnet18();
+        let prof = synthesize(&net, 3);
+        let first = prof.layers[0].act_curve.frac_at_zero();
+        let last = prof.layers.last().unwrap().act_curve.frac_at_zero();
+        assert!(last > first, "depth trend violated: {first} -> {last}");
+    }
+
+    #[test]
+    fn channel_imbalance_mean_is_one() {
+        let net = networks::resnet50();
+        let prof = synthesize(&net, 5);
+        for l in &prof.layers {
+            let m: f64 = l.channel_imbalance.iter().sum::<f64>()
+                / l.channel_imbalance.len() as f64;
+            assert!((m - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn points_shape_and_monotonicity() {
+        let net = networks::calibnet();
+        let prof = synthesize(&net, 11);
+        let n = prof.layers.len();
+        let lo = prof.points(&vec![0.0; n], &vec![0.0; n]);
+        let hi = prof.points(&vec![1.0; n], &vec![1.0; n]);
+        for (a, b) in lo.iter().zip(&hi) {
+            assert!(b.s_w >= a.s_w);
+            assert!(b.s_a >= a.s_a);
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Minimal CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative argument parser: register options, then parse.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &str) -> Self {
+        Cli { about: about.to_string(), ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\noptions:\n", self.about);
+        for o in &self.opts {
+            let d = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse from an explicit argv slice (no program name).  Returns Err
+    /// with usage text on unknown options or `--help`.
+    pub fn parse_from(mut self, args: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?
+                    .clone();
+                let val = if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .ok_or_else(|| format!("option --{key} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        let mut values = self.values;
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.entry(o.name.clone()).or_insert_with(|| d.clone());
+            }
+        }
+        Ok(Parsed { values, positionals: self.positionals })
+    }
+
+    /// Parse the process argv (skipping program name and subcommand count).
+    pub fn parse_env(self, skip: usize) -> Result<Parsed, String> {
+        let args: Vec<String> = std::env::args().skip(skip).collect();
+        self.parse_from(&args)
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("option --{key} not registered"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> f64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects a number"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.values.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = Cli::new("t")
+            .opt("iters", "96", "iterations")
+            .parse_from(&args(&[]))
+            .unwrap();
+        assert_eq!(p.get_usize("iters"), 96);
+    }
+
+    #[test]
+    fn parses_separate_and_inline_values() {
+        let p = Cli::new("t")
+            .opt("a", "0", "")
+            .opt("b", "0", "")
+            .parse_from(&args(&["--a", "3", "--b=7"]))
+            .unwrap();
+        assert_eq!(p.get_usize("a"), 3);
+        assert_eq!(p.get_usize("b"), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = Cli::new("t")
+            .flag("verbose", "")
+            .parse_from(&args(&["pos1", "--verbose", "pos2"]))
+            .unwrap();
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let r = Cli::new("t").parse_from(&args(&["--nope", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let r = Cli::new("about-text")
+            .opt("x", "1", "the x")
+            .parse_from(&args(&["--help"]));
+        let u = r.unwrap_err();
+        assert!(u.contains("about-text") && u.contains("--x"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Cli::new("t").opt("x", "1", "").parse_from(&args(&["--x"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        let r = Cli::new("t").flag("f", "").parse_from(&args(&["--f=1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn get_f64_parses() {
+        let p = Cli::new("t")
+            .opt("lam", "0.5", "")
+            .parse_from(&args(&["--lam", "2.25"]))
+            .unwrap();
+        assert_eq!(p.get_f64("lam"), 2.25);
+    }
+}

@@ -1,0 +1,91 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (serde_json,
+//! clap, rand, proptest, criterion) are unavailable.  Everything the
+//! system needs from them is implemented here, tested like any other
+//! module:
+//!
+//! * [`json`] — a minimal, strict JSON parser/serializer (for `meta.json`,
+//!   config files, journals and result artifacts),
+//! * [`rng`] — deterministic `SplitMix64`/`Xoshiro256**` RNG with the
+//!   distributions the search stack needs,
+//! * [`cli`] — flag parsing for the launcher and examples,
+//! * [`prop`] — a tiny property-based-testing harness (seed-reporting
+//!   random-case runner) standing in for proptest.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(v: f64, lo: f64, hi: f64) -> f64 {
+    v.max(lo).min(hi)
+}
+
+/// Abramowitz–Stegun 7.1.26 approximation of erf (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // against known table values
+        assert!((erf(0.0) - 0.0).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        // the A&S 7.1.26 approximation has |err| < 1.5e-7 (e.g. erf(0)
+        // evaluates to ~7.5e-8, not exactly 0), so tolerances follow that
+        for &x in &[0.0, 0.5, 1.0, 2.5] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 2e-7);
+        }
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

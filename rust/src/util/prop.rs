@@ -1,0 +1,77 @@
+//! Tiny property-based-testing harness (proptest is unavailable offline).
+//!
+//! `forall(n, seed, f)` runs `f` against `n` independently seeded RNG
+//! streams; on failure it reports the failing case seed so the case can be
+//! replayed exactly (`forall_one(seed, f)`).  No shrinking — failing seeds
+//! are deterministic and the generators used in this codebase produce
+//! small cases by construction.
+
+use super::rng::Rng;
+
+/// Run a property over `n` random cases.  Panics (with the case seed) on
+/// the first failing case.
+pub fn forall<F: Fn(&mut Rng)>(n: usize, seed: u64, f: F) {
+    for case in 0..n {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case}/{n} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn forall_one<F: Fn(&mut Rng)>(case_seed: u64, f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(50, 1, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(100, 2, |rng| {
+                assert!(rng.f64() < 0.5, "value too large");
+            });
+        });
+        let e = r.unwrap_err();
+        // the re-panic message is a formatted String; Box<dyn Any>'s Debug
+        // impl hides it, so downcast explicitly
+        let msg = e.downcast_ref::<String>().expect("string panic payload");
+        assert!(msg.contains("replay seed"), "got: {msg}");
+    }
+
+    #[test]
+    fn cases_use_distinct_streams() {
+        use std::cell::RefCell;
+        let seen = RefCell::new(Vec::new());
+        forall(20, 3, |rng| {
+            seen.borrow_mut().push(rng.next_u64());
+        });
+        let mut v = seen.into_inner();
+        v.sort_unstable();
+        v.dedup();
+        assert_eq!(v.len(), 20);
+    }
+}

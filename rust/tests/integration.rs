@@ -1,0 +1,230 @@
+//! Cross-module integration tests: the full pipeline from the AOT
+//! artifact through search, DSE, simulation and reporting.
+//!
+//! Tests that need the PJRT artifact skip (with a note) when
+//! `artifacts/` has not been built — `make artifacts` first.
+
+use hass::arch::networks;
+use hass::baselines;
+use hass::coordinator::{
+    search, Evaluate, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+};
+use hass::dse::{explore, network_throughput, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::pruning::PruningPlan;
+use hass::runtime::{available, default_dir, ModelRuntime};
+use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::sparsity::synthesize;
+
+fn have_artifacts() -> bool {
+    if available(&default_dir()) {
+        true
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn measured_search_improves_objective_and_keeps_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = ModelRuntime::load_default().unwrap();
+    let ev = MeasuredEvaluator::new(rt, 1);
+    let net = networks::calibnet();
+    let cfg = SearchConfig {
+        iterations: 14,
+        mode: SearchMode::HardwareAware,
+        seed: 1,
+        ..Default::default()
+    };
+    let r = search(&ev, &net, &ResourceModel::default(), &DeviceBudget::u250(), &cfg);
+    assert_eq!(r.records.len(), 14);
+    let best = r.best_record();
+    // the dense plan is always reachable, so the best objective must not
+    // sacrifice more than a few accuracy points at λ = [0.1, 0.15, 0.1]
+    assert!(
+        best.accuracy > 55.0,
+        "search settled on a broken operating point: {:.1}%",
+        best.accuracy
+    );
+    // and must have found *some* sparsity (natural activation zeros alone
+    // give a few percent)
+    assert!(best.avg_sparsity > 0.05, "no sparsity found: {}", best.avg_sparsity);
+}
+
+#[test]
+fn measured_points_feed_dse_and_simulator() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = ModelRuntime::load_default().unwrap();
+    let ev = MeasuredEvaluator::new(rt, 1);
+    let net = networks::calibnet();
+    let n = net.compute_layers().len();
+    let plan = PruningPlan::from_unit_point(&vec![0.4; 2 * n], ev.sparsity_model());
+    let point = ev.eval(&plan);
+    assert_eq!(point.points.len(), n);
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let d = explore(&net, &point.points, &rm, &dev, &DseConfig::default());
+    assert!(dev.fits(&d.resources));
+    let cfgs = stages_from_design(&net, &d.designs, &point.points, rm.fifo_depth);
+    let rep = simulate(&net, &cfgs, 3, SparsityDynamics::Deterministic);
+    assert!(!rep.deadlocked);
+    let ratio = rep.throughput / d.throughput;
+    assert!((0.9..1.1).contains(&ratio), "sim/model ratio {ratio}");
+}
+
+#[test]
+fn runtime_accuracy_reacts_to_real_thresholds() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = ModelRuntime::load_default().unwrap();
+    let l = rt.n_layers();
+    // thresholds at the 60% weight quantile of each layer, from meta
+    let sp = rt.meta.measured_sparsity();
+    let tau_w: Vec<f64> = sp.layers.iter().map(|p| p.weight_curve.tau_for(0.6)).collect();
+    let tau_a = vec![0.0; l];
+    let out = rt.evaluate(&tau_w, &tau_a, 2).unwrap();
+    // measured weight sparsity must land near the 60% target per layer
+    for (i, &s) in out.s_w.iter().enumerate() {
+        assert!((s - 0.6).abs() < 0.08, "layer {i}: S_w {s} (target 0.6)");
+    }
+    // a trained CalibNet tolerates 60% one-shot pruning reasonably well
+    assert!(out.accuracy > 0.5, "accuracy collapsed: {}", out.accuracy);
+}
+
+#[test]
+fn surrogate_and_measured_paths_share_the_search_machinery() {
+    // same geometry, two evaluators — both must run through `search`
+    let net = networks::calibnet();
+    let cfg = SearchConfig {
+        iterations: 6,
+        mode: SearchMode::HardwareAware,
+        seed: 2,
+        ..Default::default()
+    };
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let sur = SurrogateEvaluator {
+        net: net.clone(),
+        sparsity: synthesize(&net, 3),
+        base_acc: 90.0,
+    };
+    let r1 = search(&sur, &net, &rm, &dev, &cfg);
+    assert_eq!(r1.records.len(), 6);
+    if have_artifacts() {
+        let rt = ModelRuntime::load_default().unwrap();
+        let mev = MeasuredEvaluator::new(rt, 1);
+        let r2 = search(&mev, &net, &rm, &dev, &cfg);
+        assert_eq!(r2.records.len(), 6);
+    }
+}
+
+#[test]
+fn baselines_and_hass_rank_as_the_paper_claims() {
+    // capped device: efficiency differences must show
+    let net = networks::calibnet();
+    let sp = synthesize(&net, 1);
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget { dsp: 768, ..DeviceBudget::u250() };
+    let dse = DseConfig::default();
+    let dense = baselines::dense_dataflow(&net, 90.0, &rm, &dev, &dse);
+    let pass = baselines::pass_like(&net, &sp, 90.0, &rm, &dev, &dse);
+    let ev = SurrogateEvaluator { net: net.clone(), sparsity: sp, base_acc: 90.0 };
+    let cfg = SearchConfig {
+        iterations: 24,
+        mode: SearchMode::HardwareAware,
+        seed: 4,
+        ..Default::default()
+    };
+    let hass_best = search(&ev, &net, &rm, &dev, &cfg);
+    let b = hass_best.best_record();
+    assert!(
+        pass.efficiency > dense.efficiency,
+        "activation sparsity must beat dense: {} vs {}",
+        pass.efficiency,
+        dense.efficiency
+    );
+    assert!(
+        b.efficiency > pass.efficiency,
+        "HASS (both axes) must beat PASS (one axis): {} vs {}",
+        b.efficiency,
+        pass.efficiency
+    );
+}
+
+#[test]
+fn partitioned_resnet50_matches_throughput_model() {
+    use hass::dse::partition::{evaluate_bounds, DEFAULT_RECONFIG_SECS};
+    let net = networks::resnet50();
+    let n = net.compute_layers().len();
+    let points = vec![hass::sparsity::SparsityPoint { s_w: 0.5, s_a: 0.4 }; n];
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let cfg = DseConfig::default();
+    // a hand-picked 2-way split must be feasible on the U250
+    let p = evaluate_bounds(
+        &net, &points, &rm, &dev, &cfg, &[0, n / 2, n], 4096, DEFAULT_RECONFIG_SECS,
+    )
+    .expect("2-way split fits");
+    assert_eq!(p.n_partitions(), 2);
+    for d in &p.designs {
+        assert!(dev.fits(&d.resources));
+    }
+    // end-to-end rate must respect the per-partition bound
+    let slowest = p
+        .designs
+        .iter()
+        .map(|d| d.images_per_sec(&dev))
+        .fold(f64::INFINITY, f64::min);
+    assert!(p.images_per_sec <= slowest * 1.0001);
+}
+
+#[test]
+fn end_to_end_deterministic_reproducibility() {
+    // the whole surrogate pipeline, twice, bit-identical
+    let run = || {
+        let net = networks::resnet18();
+        let sp = synthesize(&net, 9);
+        let ev = SurrogateEvaluator { net: net.clone(), sparsity: sp, base_acc: 69.75 };
+        let cfg = SearchConfig {
+            iterations: 10,
+            mode: SearchMode::HardwareAware,
+            seed: 5,
+            ..Default::default()
+        };
+        let r = search(&ev, &net, &ResourceModel::default(), &DeviceBudget::u250(), &cfg);
+        r.records.iter().map(|x| x.objective.to_bits()).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn dse_design_survives_simulator_stress() {
+    // stochastic dynamics + tight FIFOs: no deadlock, bounded slowdown
+    let net = networks::calibnet();
+    let n = net.compute_layers().len();
+    let points = vec![hass::sparsity::SparsityPoint { s_w: 0.6, s_a: 0.5 }; n];
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
+    let model = network_throughput(&net, &d.designs, &points);
+    for seed in [1u64, 2, 3] {
+        let mut cfgs = stages_from_design(&net, &d.designs, &points, 64);
+        for c in cfgs.iter_mut() {
+            c.fifo_capacity = (c.design.o_par as u64 * 4).max(16);
+        }
+        let rep = simulate(&net, &cfgs, 3, SparsityDynamics::Stochastic { seed });
+        assert!(!rep.deadlocked, "seed {seed} deadlocked");
+        assert!(
+            rep.throughput > model * 0.3,
+            "seed {seed}: stochastic collapse {} vs {model}",
+            rep.throughput
+        );
+    }
+}
