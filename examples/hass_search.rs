@@ -13,7 +13,7 @@
 //! Flags: `--iters N --batches K --seed S --journal results/e2e.csv`
 
 use hass::arch::networks;
-use hass::coordinator::{search, MeasuredEvaluator, SearchConfig, SearchMode};
+use hass::coordinator::{search, EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::runtime::ModelRuntime;
@@ -24,6 +24,9 @@ fn main() {
     let cli = Cli::new("end-to-end HASS search over the AOT CalibNet artifact")
         .opt("iters", "32", "TPE iterations")
         .opt("batches", "4", "calibration batches per evaluation (64 imgs each)")
+        .opt("batch", "4", "candidates per TPE generation, evaluated in parallel")
+        .opt("threads", "0", "evaluation worker threads (0 = auto)")
+        .flag("no-cache", "disable the DSE design cache")
         .opt("seed", "0", "search seed")
         .opt("device", "u250", "device budget")
         .opt("journal", "results/e2e_search.csv", "journal CSV path");
@@ -59,6 +62,11 @@ fn main() {
         iterations: p.get_usize("iters"),
         seed: p.get_u64("seed"),
         mode: SearchMode::HardwareAware,
+        engine: EngineConfig {
+            threads: p.get_usize("threads"),
+            cache: !p.get_bool("no-cache"),
+            ..EngineConfig::batched(p.get_usize("batch"))
+        },
         ..Default::default()
     };
     let ev = MeasuredEvaluator::new(rt, p.get_usize("batches"));
@@ -70,6 +78,13 @@ fn main() {
         "[e2e] {} iterations in {wall:?} ({:.2} s/iter)",
         cfg.iterations,
         wall.as_secs_f64() / cfg.iterations as f64
+    );
+    println!(
+        "[e2e] engine: {} generations x batch {} on {} thread(s) | cache hit rate {:.0}%",
+        result.stats.generations,
+        result.stats.batch,
+        result.stats.threads,
+        result.stats.cache_hit_rate() * 100.0
     );
     println!(
         "[e2e] best @ iter {}: accuracy {:.2}% (dense {:.2}%) | avg sparsity {:.3}",

@@ -1,0 +1,168 @@
+//! §Perf harness for the batched search engine: wall-clock of the full
+//! search loop at generation sizes 1/2/4/8 with the design cache on and
+//! off, against the serial seed path (batch 1, no cache, exact pricing).
+//!
+//! The engine's determinism contract says thread count and cache state
+//! never change results; this bench exercises that end to end (cache
+//! on/off at the same batch must agree bit-for-bit on the best objective)
+//! while measuring what batching + memoization buy in wall time.
+//!
+//! Output: `results/engine_scaling.json` (+ a human-readable table on
+//! stderr).  Run: `cargo bench --bench engine_scaling [-- --quick]`.
+
+use std::time::Instant;
+
+use hass::arch::networks;
+use hass::coordinator::{search, EngineConfig, SearchConfig, SurrogateEvaluator};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::sparsity::synthesize;
+
+struct Run {
+    batch: usize,
+    cache: bool,
+    quant_bits: u32,
+    wall_ms: f64,
+    speedup: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    best_objective: f64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 12 } else { 32 };
+    let seed = 1u64;
+
+    let net = networks::resnet18();
+    let ev = SurrogateEvaluator {
+        net: net.clone(),
+        sparsity: synthesize(&net, 1),
+        base_acc: 69.75,
+    };
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let run_once = |engine: EngineConfig| {
+        let cfg = SearchConfig { iterations: iters, seed, engine, ..Default::default() };
+        let t0 = Instant::now();
+        let r = search(&ev, &net, &rm, &dev, &cfg);
+        (t0.elapsed().as_secs_f64() * 1e3, r)
+    };
+
+    // serial seed path: one candidate at a time, every pricing from scratch
+    let serial_cfg = EngineConfig { batch: 1, threads: 1, cache: false, quant_bits: 0 };
+    run_once(serial_cfg); // warmup
+    let (baseline_ms, baseline) = run_once(serial_cfg);
+    eprintln!(
+        "[engine_scaling] serial baseline: {iters} iters in {baseline_ms:.0} ms \
+         (best objective {:.4}, {cores} cores available)",
+        baseline.best_record().objective
+    );
+
+    let mut runs: Vec<Run> = Vec::new();
+    for &batch in &[1usize, 2, 4, 8] {
+        for &cache in &[false, true] {
+            let engine = EngineConfig {
+                batch,
+                threads: 0, // auto: min(batch, cores)
+                cache,
+                quant_bits: 12,
+            };
+            let (wall_ms, r) = run_once(engine);
+            eprintln!(
+                "[engine_scaling] batch {batch} cache {}: {wall_ms:.0} ms \
+                 ({:.2}x vs serial) | cache {} hit / {} miss",
+                if cache { "on " } else { "off" },
+                baseline_ms / wall_ms,
+                r.stats.cache_hits,
+                r.stats.cache_misses,
+            );
+            runs.push(Run {
+                batch,
+                cache,
+                quant_bits: 12,
+                wall_ms,
+                speedup: baseline_ms / wall_ms,
+                cache_hits: r.stats.cache_hits,
+                cache_misses: r.stats.cache_misses,
+                best_objective: r.best_record().objective,
+            });
+        }
+    }
+
+    // determinism spot-check: at the same batch + quantization, cache
+    // on/off must agree bit-for-bit on the journal's best objective
+    for pair in runs.chunks(2) {
+        assert_eq!(
+            pair[0].best_objective.to_bits(),
+            pair[1].best_objective.to_bits(),
+            "cache changed results at batch {}",
+            pair[0].batch
+        );
+    }
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).expect("results dir");
+
+    // human-readable table
+    let mut t = Table::new(&["batch", "cache", "wall_ms", "speedup_vs_serial", "hits", "misses"]);
+    for r in &runs {
+        t.row(vec![
+            r.batch.to_string(),
+            r.cache.to_string(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:.2}", r.speedup),
+            r.cache_hits.to_string(),
+            r.cache_misses.to_string(),
+        ]);
+    }
+    t.write_files(&dir, "engine_scaling").expect("write results");
+
+    // JSON summary for the bench trajectory
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"network\": \"{}\",\n", net.name));
+    json.push_str(&format!("  \"iterations\": {iters},\n"));
+    json.push_str(&format!("  \"seed\": {seed},\n"));
+    json.push_str(&format!("  \"cores\": {cores},\n"));
+    json.push_str(&format!("  \"serial_baseline_ms\": {baseline_ms:.3},\n"));
+    json.push_str("  \"runs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"batch\": {}, \"cache\": {}, \"quant_bits\": {}, \"wall_ms\": {:.3}, \
+             \"speedup_vs_serial\": {:.3}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"best_objective\": {:.6}}}{}\n",
+            r.batch,
+            r.cache,
+            r.quant_bits,
+            r.wall_ms,
+            r.speedup,
+            r.cache_hits,
+            r.cache_misses,
+            r.best_objective,
+            if i + 1 == runs.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = dir.join("engine_scaling.json");
+    std::fs::write(&path, json).expect("write json");
+
+    let k4 = runs
+        .iter()
+        .find(|r| r.batch == 4 && r.cache)
+        .expect("k=4 cached run present");
+    eprintln!(
+        "[engine_scaling] batch 4 + cache: {:.2}x vs the serial seed path -> {}",
+        k4.speedup,
+        path.display()
+    );
+    if cores > 1 && k4.speedup < 1.5 {
+        eprintln!(
+            "[engine_scaling] WARNING: expected > 1.5x at batch 4 on a \
+             multi-core host, measured {:.2}x",
+            k4.speedup
+        );
+    }
+}

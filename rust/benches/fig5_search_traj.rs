@@ -8,7 +8,7 @@
 //! efficiency.  Output: `results/fig5_traj.csv` (iter, hw_aware, sw_only).
 
 use hass::arch::networks;
-use hass::coordinator::{search, SearchConfig, SearchMode, SurrogateEvaluator};
+use hass::coordinator::{search, EngineConfig, SearchConfig, SearchMode, SurrogateEvaluator};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
@@ -37,12 +37,19 @@ fn main() {
             (SearchMode::SoftwareOnly, &mut sw_avg),
         ] {
             // no warm-start anchors: Fig. 5 measures the *objective*
-            // difference between the two searches, not the anchoring
+            // difference between the two searches, not the anchoring.
+            // 4-candidate generations evaluated in parallel with memoized
+            // pricings.  Note batching IS algorithmic (frozen-model
+            // generations after TPE startup, 2^-12 pricing grid), so the
+            // curves are the batched engine's trajectories, not the seed's
+            // serial ones — the hw-vs-sw comparison itself is unaffected
+            // because both arms run the identical configuration.
             let cfg = SearchConfig {
                 iterations: iters,
                 mode,
                 seed,
                 warm_start: false,
+                engine: EngineConfig::batched(4),
                 ..Default::default()
             };
             let r = search(&ev, &net, &rm, &dev, &cfg);

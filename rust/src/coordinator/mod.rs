@@ -1,4 +1,4 @@
-//! The HASS search loop (paper §V-B) — the system's L3 contribution.
+//! The HASS search loop (paper §V-B) — evaluator backends + entry point.
 //!
 //! Each iteration: TPE proposes per-layer sparsity targets → thresholds
 //! (τ_w, τ_a) via the transfer curves → the *evaluator* measures accuracy
@@ -9,11 +9,16 @@
 //! max  f_acc + λ1·f_spa + λ2·f_thr − λ3·f_dsp
 //! ```
 //!
-//! is fed back to TPE.  Two evaluator backends exist:
+//! is fed back to TPE.  The loop itself lives in [`crate::engine`] — a
+//! batched, parallel, cache-backed pipeline; [`search`] is the stable
+//! serial-compatible entry point ([`SearchConfig::engine`] selects the
+//! generation size / thread count / pricing cache).  This module keeps the
+//! two production [`CandidateEvaluator`] backends:
 //!
 //! * [`MeasuredEvaluator`] — executes the AOT CalibNet artifact through
 //!   PJRT; accuracy and per-layer pair densities are *measured*, the
-//!   paper's real co-design loop (Python never runs).
+//!   paper's real co-design loop (Python never runs).  Needs the `pjrt`
+//!   build feature; without it the runtime loader errors out cleanly.
 //! * [`SurrogateEvaluator`] — the DESIGN.md §1.1 substitution for target
 //!   geometries we cannot execute (ResNet-18/50, MobileNet): synthesized
 //!   transfer curves + a calibrated accuracy-response surrogate.
@@ -22,33 +27,22 @@
 //! objective sees only accuracy + sparsity, hardware metrics are still
 //! *recorded* (to plot efficiency) but do not guide the search.
 
+use std::sync::Mutex;
+
 use crate::arch::Network;
-use crate::dse::{explore, DseConfig};
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
-use crate::metrics::Table;
-use crate::optim::tpe::{TpeConfig, TpeOptimizer};
 use crate::pruning::{self, PruningPlan};
 use crate::runtime::ModelRuntime;
 use crate::sparsity::{NetworkSparsity, SparsityPoint};
 use crate::util::clampf;
 
-/// Accuracy + reached operating points for one pruning plan.
-#[derive(Clone, Debug)]
-pub struct EvalPoint {
-    pub accuracy: f64,
-    pub points: Vec<SparsityPoint>,
-}
-
-/// Measurement backend of the search loop.
-pub trait Evaluate {
-    /// Sparsity model used to decode optimizer coordinates into thresholds.
-    fn sparsity_model(&self) -> &NetworkSparsity;
-    /// Evaluate a pruning plan: accuracy + per-layer operating points.
-    fn eval(&self, plan: &PruningPlan) -> EvalPoint;
-    /// Reference (unpruned) accuracy, for reporting drops.
-    fn base_accuracy(&self) -> f64;
-}
+pub use crate::engine::{
+    CandidateEvaluator, Engine, EngineConfig, EngineStats, EvalPoint, SearchConfig,
+    SearchMode, SearchRecord, SearchResult,
+};
+/// Historical name of [`CandidateEvaluator`], kept for downstream callers.
+pub use crate::engine::CandidateEvaluator as Evaluate;
 
 /// Analytic evaluator for target geometries (no executable model).
 pub struct SurrogateEvaluator {
@@ -57,7 +51,7 @@ pub struct SurrogateEvaluator {
     pub base_acc: f64,
 }
 
-impl Evaluate for SurrogateEvaluator {
+impl CandidateEvaluator for SurrogateEvaluator {
     fn sparsity_model(&self) -> &NetworkSparsity {
         &self.sparsity
     }
@@ -76,9 +70,15 @@ impl Evaluate for SurrogateEvaluator {
 }
 
 /// PJRT-backed evaluator: the real measured path over the AOT artifact.
+///
+/// The runtime lives behind a `Mutex` so the compiler — not a comment —
+/// enforces that PJRT executions are serialized when the engine evaluates
+/// a generation on several threads (the executable handle is a shared
+/// C++ resource; see the `Send` rationale on the runtime itself).
 pub struct MeasuredEvaluator {
-    pub rt: ModelRuntime,
+    rt: Mutex<ModelRuntime>,
     sparsity: NetworkSparsity,
+    base_acc: f64,
     /// calibration batches per evaluation (speed/precision trade-off)
     pub n_batches: usize,
 }
@@ -86,18 +86,24 @@ pub struct MeasuredEvaluator {
 impl MeasuredEvaluator {
     pub fn new(rt: ModelRuntime, n_batches: usize) -> Self {
         let sparsity = rt.meta.measured_sparsity();
-        MeasuredEvaluator { rt, sparsity, n_batches }
+        let base_acc = rt.meta.dense_val_accuracy * 100.0;
+        MeasuredEvaluator { rt: Mutex::new(rt), sparsity, base_acc, n_batches }
+    }
+
+    /// Hand the runtime back (e.g. to reuse it outside the search).
+    pub fn into_runtime(self) -> ModelRuntime {
+        self.rt.into_inner().unwrap()
     }
 }
 
-impl Evaluate for MeasuredEvaluator {
+impl CandidateEvaluator for MeasuredEvaluator {
     fn sparsity_model(&self) -> &NetworkSparsity {
         &self.sparsity
     }
 
     fn eval(&self, plan: &PruningPlan) -> EvalPoint {
-        let out = self
-            .rt
+        let rt = self.rt.lock().unwrap();
+        let out = rt
             .evaluate(&plan.tau_w, &plan.tau_a, self.n_batches)
             .expect("PJRT evaluation failed");
         // fold the *measured* pair density into the operating point: keep
@@ -116,125 +122,14 @@ impl Evaluate for MeasuredEvaluator {
     }
 
     fn base_accuracy(&self) -> f64 {
-        self.rt.meta.dense_val_accuracy * 100.0
-    }
-}
-
-/// Which metrics the objective sees (Fig. 5's two curves).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SearchMode {
-    /// Eq. 6: accuracy + sparsity + throughput − DSPs (HASS)
-    HardwareAware,
-    /// accuracy + sparsity only (the traditional flow of Fig. 2a)
-    SoftwareOnly,
-}
-
-/// Search hyper-parameters.
-#[derive(Clone, Debug)]
-pub struct SearchConfig {
-    pub iterations: usize,
-    pub mode: SearchMode,
-    pub seed: u64,
-    /// λ1 (sparsity), λ2 (throughput), λ3 (DSP) of Eq. 6
-    pub lambda: [f64; 3],
-    /// anchor the optimizer with the dense and two mild uniform plans
-    /// before random startup — one-shot pruning response surfaces are
-    /// cliff-heavy, and without an anchor a short search may never sample
-    /// the high-accuracy region at all
-    pub warm_start: bool,
-    pub tpe: TpeConfig,
-    pub dse: DseConfig,
-}
-
-impl Default for SearchConfig {
-    fn default() -> Self {
-        SearchConfig {
-            iterations: 96, // the paper's Fig. 5 budget
-            mode: SearchMode::HardwareAware,
-            seed: 0,
-            // normalization heuristics (paper §V-B): keep accuracy the
-            // dominant term so the search tolerates <1-point drops only,
-            // with hardware terms strong enough to steer among equals
-            lambda: [0.10, 0.15, 0.10],
-            warm_start: true,
-            tpe: TpeConfig::default(),
-            dse: DseConfig::default(),
-        }
-    }
-}
-
-/// One journal line of the search.
-#[derive(Clone, Debug)]
-pub struct SearchRecord {
-    pub iter: usize,
-    pub accuracy: f64,
-    pub avg_sparsity: f64,
-    pub op_density: f64,
-    pub images_per_sec: f64,
-    pub dsp: u64,
-    /// images / cycle / DSP (the paper's efficiency metric)
-    pub efficiency: f64,
-    pub objective: f64,
-    pub plan: PruningPlan,
-}
-
-/// Search output: full journal + index of the best Eq.6 iteration.
-#[derive(Clone, Debug)]
-pub struct SearchResult {
-    pub records: Vec<SearchRecord>,
-    pub best: usize,
-    /// dense reference used for throughput normalization
-    pub dense_images_per_sec: f64,
-}
-
-impl SearchResult {
-    pub fn best_record(&self) -> &SearchRecord {
-        &self.records[self.best]
-    }
-
-    /// Fig. 5's y-axis: the computation efficiency of the *incumbent* —
-    /// the best design so far **by the search's own objective**.  (A
-    /// running max of efficiency would credit the software-only search
-    /// for efficient points it visits but would never select.)
-    pub fn efficiency_trajectory(&self) -> Vec<f64> {
-        let mut best_obj = f64::NEG_INFINITY;
-        let mut best_eff = 0.0f64;
-        self.records
-            .iter()
-            .map(|r| {
-                if r.objective > best_obj {
-                    best_obj = r.objective;
-                    best_eff = r.efficiency;
-                }
-                best_eff
-            })
-            .collect()
-    }
-
-    /// Journal as a table (one row per iteration).
-    pub fn to_table(&self) -> Table {
-        let mut t = Table::new(&[
-            "iter", "accuracy", "avg_sparsity", "op_density", "images_per_sec", "dsp",
-            "images_per_cycle_per_dsp", "objective",
-        ]);
-        for r in &self.records {
-            t.row(vec![
-                r.iter.to_string(),
-                format!("{:.3}", r.accuracy),
-                format!("{:.4}", r.avg_sparsity),
-                format!("{:.4}", r.op_density),
-                format!("{:.1}", r.images_per_sec),
-                r.dsp.to_string(),
-                format!("{:.4e}", r.efficiency),
-                format!("{:.4}", r.objective),
-            ]);
-        }
-        t
+        self.base_acc
     }
 }
 
 /// Run the HASS search: `evaluator` measures software metrics, the DSE
 /// prices hardware on `target` (same compute-layer count) under `dev`.
+/// Thin wrapper over [`Engine::search`]; `cfg.engine` controls batching,
+/// threading and the design cache (defaults reproduce the serial loop).
 pub fn search(
     evaluator: &dyn Evaluate,
     target: &Network,
@@ -242,71 +137,14 @@ pub fn search(
     dev: &DeviceBudget,
     cfg: &SearchConfig,
 ) -> SearchResult {
-    let n = evaluator.sparsity_model().layers.len();
-    assert_eq!(
-        n,
-        target.compute_layers().len(),
-        "evaluator and target geometry disagree on layer count"
-    );
-    // dense reference design for throughput normalization (f_thr scale)
-    let dense = explore(target, &vec![SparsityPoint::DENSE; n], rm, dev, &cfg.dse);
-    let dense_ips = dense.images_per_sec(dev).max(1e-9);
-    let base_acc = evaluator.base_accuracy().max(1e-9);
-
-    let mut tpe = TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone());
-    let mut records = Vec::with_capacity(cfg.iterations);
-    for iter in 0..cfg.iterations {
-        let x = if cfg.warm_start && iter < 3 {
-            // anchors: dense, mild, moderate uniform plans
-            vec![[0.0, 0.15, 0.35][iter]; 2 * n]
-        } else {
-            tpe.ask()
-        };
-        let plan = PruningPlan::from_unit_point(&x, evaluator.sparsity_model());
-        let ev = evaluator.eval(&plan);
-        let m = pruning::metrics(target, &ev.points);
-        let design = explore(target, &ev.points, rm, dev, &cfg.dse);
-        let ips = design.images_per_sec(dev);
-
-        let f_acc = ev.accuracy / base_acc; // ∈ [0, 1]
-        let f_spa = m.avg_sparsity; // ∈ [0, 1)
-        // saturating throughput gain: ∈ (0, 2), =1 at the dense reference.
-        // An unbounded ratio would swamp the accuracy term on networks
-        // where sparsity buys 10-20x (the λ "normalization" of Eq. 6).
-        let raw = ips / dense_ips;
-        let f_thr = 2.0 * raw / (1.0 + raw);
-        let f_dsp = design.resources.dsp as f64 / dev.dsp.max(1) as f64;
-        let objective = match cfg.mode {
-            SearchMode::HardwareAware => {
-                f_acc + cfg.lambda[0] * f_spa + cfg.lambda[1] * f_thr - cfg.lambda[2] * f_dsp
-            }
-            SearchMode::SoftwareOnly => f_acc + cfg.lambda[0] * f_spa,
-        };
-        records.push(SearchRecord {
-            iter,
-            accuracy: ev.accuracy,
-            avg_sparsity: m.avg_sparsity,
-            op_density: m.op_density,
-            images_per_sec: ips,
-            dsp: design.resources.dsp,
-            efficiency: design.efficiency(),
-            objective,
-        plan});
-        tpe.tell(x, objective);
-    }
-    let best = records
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.objective.total_cmp(&b.1.objective))
-        .map(|(i, _)| i)
-        .unwrap();
-    SearchResult { records, best, dense_images_per_sec: dense_ips }
+    Engine::new(evaluator, target, rm, dev).search(cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::networks;
+    use crate::dse::DseConfig;
     use crate::sparsity::synthesize;
 
     fn quick_cfg(iters: usize, mode: SearchMode, seed: u64) -> SearchConfig {
@@ -444,5 +282,22 @@ mod tests {
         ));
         assert!(pruned.accuracy < dense.accuracy);
         assert!(pruned.points.iter().all(|p| p.s_w > 0.5));
+    }
+
+    #[test]
+    fn wrapper_and_engine_agree() {
+        // coordinator::search is a thin shim over Engine::search — same
+        // config, same evaluator, bit-identical journal
+        let ev = surrogate(8);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        let cfg = quick_cfg(6, SearchMode::HardwareAware, 17);
+        let a = search(&ev, &net, &rm, &dev, &cfg);
+        let b = Engine::new(&ev, &net, &rm, &dev).search(&cfg);
+        assert_eq!(a.best, b.best);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits());
+        }
     }
 }

@@ -23,7 +23,7 @@ use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::{ResourceModel, Resources};
 use crate::hardware::{divisors, LayerDesign};
 use crate::sparsity::SparsityPoint;
-use crate::util::ceil_div;
+use crate::util::{ceil_div, clampf};
 
 /// A complete accelerator design for one network on one device.
 #[derive(Clone, Debug)]
@@ -85,7 +85,16 @@ pub fn bottleneck(
 /// Candidate `n_mac` values worth considering for a layer: for every
 /// achievable initiation interval `t` there is a unique minimal N, so the
 /// whole [1, M] range collapses to ~2·√M distinct useful points.
+///
+/// Degenerate inputs are guarded: a zero-length pair stream (`m_len == 0`)
+/// or a fully-pruned layer (`density == 0.0`, or NaN) still returns `[1]`
+/// — a single-MAC SPE is always a valid (if idle) design, and callers
+/// iterate over this list assuming it is non-empty.
 pub fn useful_n_macs(m_len: usize, density: f64) -> Vec<usize> {
+    if m_len == 0 {
+        return vec![1];
+    }
+    let density = clampf(density, 0.0, 1.0); // NaN collapses to 0.0
     let useful = (density * m_len as f64).max(1.0);
     let t_max = useful.ceil() as u64;
     let mut out: Vec<usize> = Vec::new();
@@ -348,6 +357,34 @@ mod tests {
         let dense = useful_n_macs(256, 1.0);
         let sparse = useful_n_macs(256, 0.25);
         assert!(sparse.last().unwrap() <= dense.last().unwrap());
+    }
+
+    #[test]
+    fn useful_n_macs_degenerate_inputs_return_single_mac() {
+        // fully pruned layer: no useful pairs, but the design list must
+        // still offer the minimal SPE
+        assert_eq!(useful_n_macs(144, 0.0), vec![1]);
+        // zero-length pair stream (e.g. a degenerate 1x1 geometry probe)
+        assert_eq!(useful_n_macs(0, 1.0), vec![1]);
+        assert_eq!(useful_n_macs(0, 0.0), vec![1]);
+        // out-of-range densities are clamped rather than trusted
+        assert_eq!(useful_n_macs(16, -3.0), vec![1]);
+        let over = useful_n_macs(16, 7.5);
+        assert_eq!(over, useful_n_macs(16, 1.0));
+        // NaN density degrades to the fully-pruned case
+        assert_eq!(useful_n_macs(16, f64::NAN), vec![1]);
+    }
+
+    #[test]
+    fn useful_n_macs_always_nonempty_and_sorted() {
+        for m in [0usize, 1, 7, 64, 333] {
+            for d in [0.0, 0.01, 0.5, 1.0] {
+                let ns = useful_n_macs(m, d);
+                assert!(!ns.is_empty(), "m={m} d={d}");
+                assert!(ns.windows(2).all(|w| w[0] < w[1]), "m={m} d={d}: {ns:?}");
+                assert!(ns.iter().all(|&n| n >= 1 && n <= m.max(1)), "m={m} d={d}");
+            }
+        }
     }
 
     #[test]

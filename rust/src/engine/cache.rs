@@ -1,0 +1,272 @@
+//! Memoization of DSE pricings.
+//!
+//! `dse::explore` dominates the cost of a search iteration on the
+//! surrogate path (and is the entire hardware-pricing cost on the measured
+//! path).  It is a pure function of (network, sparsity points, resource
+//! model, device), and within one search the network / resource model /
+//! device are fixed — so a [`DesignCache`] keyed by the sparsity points
+//! plus a device fingerprint makes repeated pricings O(1).
+//!
+//! Exact f64 keys alone would almost never collide between TPE proposals;
+//! the engine therefore *snaps* operating points to a dyadic grid with
+//! [`quantize_points`] before pricing.  Snapping is applied whether or not
+//! the cache is enabled, so turning the cache on or off never changes
+//! results — a cache hit returns bit-for-bit what recomputation would.
+//! `quant_bits = 0` disables snapping (exact keys), which is the engine
+//! default so the serial path reproduces the pre-engine seed behavior.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dse::NetworkDesign;
+use crate::hardware::device::DeviceBudget;
+use crate::sparsity::SparsityPoint;
+
+/// Snap each operating point to multiples of `2^-bits` (0 = identity).
+///
+/// At the engine's batched default of 12 bits the grid step is ~2.4e-4
+/// sparsity — far below anything the hardware model resolves — while
+/// nearby proposals from a converging optimizer collapse onto shared keys.
+pub fn quantize_points(points: &[SparsityPoint], bits: u32) -> Vec<SparsityPoint> {
+    if bits == 0 {
+        return points.to_vec();
+    }
+    let grid = (1u64 << bits.min(52)) as f64;
+    points
+        .iter()
+        .map(|p| SparsityPoint {
+            s_w: (p.s_w * grid).round() / grid,
+            s_a: (p.s_a * grid).round() / grid,
+        })
+        .collect()
+}
+
+/// Cache key: device fingerprint + the exact bit patterns of the (already
+/// snapped) per-layer operating points.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    device: u64,
+    points: Vec<(u64, u64)>,
+}
+
+fn point_bits(points: &[SparsityPoint]) -> Vec<(u64, u64)> {
+    points.iter().map(|p| (p.s_w.to_bits(), p.s_a.to_bits())).collect()
+}
+
+/// FNV-1a fingerprint of the device budget (name + resource counts).
+fn device_fingerprint(dev: &DeviceBudget) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in dev.name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h = mix(h, dev.dsp);
+    h = mix(h, dev.lut);
+    h = mix(h, dev.bram18k);
+    h = mix(h, dev.uram);
+    h = mix(h, dev.freq_mhz.to_bits());
+    h
+}
+
+/// Thread-safe memo table for [`crate::dse::explore`] results.
+///
+/// Shared by reference across a generation's evaluation threads; lookups
+/// and inserts take a short-lived lock, the pricing itself runs unlocked
+/// (two threads racing on the same key both compute the same deterministic
+/// design, so the duplicate work is benign and rare).
+pub struct DesignCache {
+    device: u64,
+    map: Mutex<HashMap<Key, NetworkDesign>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DesignCache {
+    pub fn new(dev: &DeviceBudget) -> Self {
+        DesignCache {
+            device: device_fingerprint(dev),
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn key(&self, points: &[SparsityPoint]) -> Key {
+        Key { device: self.device, points: point_bits(points) }
+    }
+
+    /// Return the cached design for `points`, or price via `compute` and
+    /// remember the result.  `points` should already be snapped (see
+    /// [`quantize_points`]); the key is their exact bit pattern.
+    pub fn get_or_compute<F>(&self, points: &[SparsityPoint], compute: F) -> NetworkDesign
+    where
+        F: FnOnce() -> NetworkDesign,
+    {
+        let key = self.key(points);
+        if let Some(d) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return d.clone();
+        }
+        let d = compute();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key, d.clone());
+        d
+    }
+
+    /// Pre-seed an entry (e.g. the dense reference design) without
+    /// touching the hit/miss counters.
+    pub fn insert(&self, points: &[SparsityPoint], design: NetworkDesign) {
+        let key = self.key(points);
+        self.map.lock().unwrap().insert(key, design);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::resources::Resources;
+
+    fn design(dsp: u64) -> NetworkDesign {
+        NetworkDesign {
+            designs: vec![],
+            throughput: 1e-5,
+            resources: Resources { dsp, lut: 0, bram18k: 0, uram: 0 },
+        }
+    }
+
+    fn pts(vals: &[(f64, f64)]) -> Vec<SparsityPoint> {
+        vals.iter().map(|&(s_w, s_a)| SparsityPoint { s_w, s_a }).collect()
+    }
+
+    #[test]
+    fn miss_then_hit_counts_and_returns_cached_value() {
+        let cache = DesignCache::new(&DeviceBudget::u250());
+        let p = pts(&[(0.5, 0.25), (0.125, 0.0)]);
+        let mut computes = 0;
+        let a = cache.get_or_compute(&p, || {
+            computes += 1;
+            design(42)
+        });
+        let b = cache.get_or_compute(&p, || {
+            computes += 1;
+            design(999) // must not be called
+        });
+        assert_eq!(computes, 1);
+        assert_eq!(a.resources.dsp, 42);
+        assert_eq!(b.resources.dsp, 42);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_points_are_distinct_entries() {
+        let cache = DesignCache::new(&DeviceBudget::u250());
+        cache.get_or_compute(&pts(&[(0.5, 0.5)]), || design(1));
+        cache.get_or_compute(&pts(&[(0.5, 0.5000001)]), || design(2));
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn quantization_collapses_nearby_points() {
+        // at 8 bits the grid step is 1/256 ≈ 3.9e-3: points 1e-4 apart snap
+        // to the same representative, points far apart stay distinct
+        let a = quantize_points(&pts(&[(0.5000, 0.3000)]), 8);
+        let b = quantize_points(&pts(&[(0.5001, 0.2999)]), 8);
+        let c = quantize_points(&pts(&[(0.6000, 0.3000)]), 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // snapped values are exact multiples of the grid
+        assert_eq!(a[0].s_w, 128.0 / 256.0);
+    }
+
+    #[test]
+    fn zero_bits_is_identity() {
+        let p = pts(&[(0.123456789, 0.987654321)]);
+        let q = quantize_points(&p, 0);
+        assert_eq!(p[0].s_w.to_bits(), q[0].s_w.to_bits());
+        assert_eq!(p[0].s_a.to_bits(), q[0].s_a.to_bits());
+    }
+
+    #[test]
+    fn quantization_error_is_bounded_by_grid() {
+        let p = pts(&[(0.777, 0.333)]);
+        for bits in [8u32, 12, 16] {
+            let q = quantize_points(&p, bits);
+            let step = 1.0 / (1u64 << bits) as f64;
+            assert!((q[0].s_w - 0.777).abs() <= step / 2.0 + 1e-15);
+            assert!((q[0].s_a - 0.333).abs() <= step / 2.0 + 1e-15);
+        }
+    }
+
+    #[test]
+    fn preseeded_entry_hits_without_miss() {
+        let cache = DesignCache::new(&DeviceBudget::u250());
+        let p = pts(&[(0.0, 0.0)]);
+        cache.insert(&p, design(7));
+        let d = cache.get_or_compute(&p, || design(1000));
+        assert_eq!(d.resources.dsp, 7);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 0);
+    }
+
+    #[test]
+    fn different_devices_never_share_entries() {
+        let u250 = DesignCache::new(&DeviceBudget::u250());
+        let small = DeviceBudget {
+            name: "small".into(),
+            dsp: 64,
+            lut: 200_000,
+            bram18k: 600,
+            uram: 64,
+            freq_mhz: 250.0,
+        };
+        assert_ne!(u250.device, DesignCache::new(&small).device);
+    }
+
+    #[test]
+    fn concurrent_lookups_are_consistent() {
+        let cache = DesignCache::new(&DeviceBudget::u250());
+        let p = pts(&[(0.25, 0.75)]);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let d = cache.get_or_compute(&p, || design(5));
+                        assert_eq!(d.resources.dsp, 5);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 1);
+        // every lookup either hit or missed; at least the first missed
+        assert_eq!(cache.hits() + cache.misses(), 200);
+        assert!(cache.misses() >= 1);
+    }
+}

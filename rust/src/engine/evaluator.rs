@@ -1,0 +1,39 @@
+//! The candidate-evaluation seam of the search engine.
+//!
+//! [`CandidateEvaluator`] is the pluggable measurement backend: given a
+//! pruning plan it returns accuracy plus the reached per-layer sparsity
+//! operating points.  The two production backends live in
+//! [`crate::coordinator`] ([`MeasuredEvaluator`](crate::coordinator::MeasuredEvaluator)
+//! over the PJRT artifact, [`SurrogateEvaluator`](crate::coordinator::SurrogateEvaluator)
+//! for target geometries we cannot execute); tests and tools can supply
+//! their own.
+//!
+//! The trait requires `Sync` because the engine evaluates one generation's
+//! candidates concurrently with scoped threads, sharing the evaluator by
+//! reference.  Implementations whose backing executor is not thread-safe
+//! (e.g. a PJRT client) must serialize internally — correctness of the
+//! search does not depend on intra-generation evaluation order.
+
+use crate::pruning::PruningPlan;
+use crate::sparsity::{NetworkSparsity, SparsityPoint};
+
+/// Accuracy + reached operating points for one pruning plan.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub accuracy: f64,
+    pub points: Vec<SparsityPoint>,
+}
+
+/// Measurement backend of the search loop.
+///
+/// Evaluations must be *pure* with respect to the plan: the engine may
+/// evaluate candidates of one generation in any order, on any thread, and
+/// relies on `eval(plan)` returning the same value either way.
+pub trait CandidateEvaluator: Sync {
+    /// Sparsity model used to decode optimizer coordinates into thresholds.
+    fn sparsity_model(&self) -> &NetworkSparsity;
+    /// Evaluate a pruning plan: accuracy + per-layer operating points.
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint;
+    /// Reference (unpruned) accuracy, for reporting drops.
+    fn base_accuracy(&self) -> f64;
+}

@@ -1,0 +1,603 @@
+//! Batched, parallel, cache-backed candidate-evaluation engine — the
+//! execution substrate of the HASS search loop (paper §V-B).
+//!
+//! The search couples TPE sparsity proposals with DSE hardware pricing
+//! (Eq. 6); its throughput is dominated by per-candidate evaluation cost.
+//! This module restructures the loop around that insight:
+//!
+//! * **Pluggable evaluation** — [`CandidateEvaluator`] (see [`evaluator`])
+//!   abstracts the measurement backend, so the measured PJRT path, the
+//!   surrogate path, and test doubles all drive the same engine.
+//! * **Batched proposals** — each generation asks the optimizer for
+//!   `batch` candidates at once ([`TpeOptimizer::suggest_batch`]), with
+//!   the Parzen model frozen at generation start (synchronous batch
+//!   Bayesian optimization), and feeds all results back in candidate
+//!   order ([`TpeOptimizer::observe_batch`]).
+//! * **Parallel evaluation** — a generation's candidates are evaluated
+//!   concurrently with `std::thread::scope`; every worker writes into its
+//!   own index-addressed slot, and records / optimizer updates are reduced
+//!   in candidate order, so results are **bit-for-bit independent of the
+//!   thread count**.
+//! * **Memoized pricing** — [`DesignCache`] (see [`cache`]) memoizes
+//!   `dse::explore` keyed by (device, quantized operating points).
+//!   Quantization is applied whether or not the cache is on, so the cache
+//!   can **never** change results either.
+//!
+//! # Determinism contract
+//!
+//! A search result is a pure function of `(evaluator, target, device,
+//! SearchConfig{seed, iterations, …}, EngineConfig{batch, quant_bits})`.
+//! `EngineConfig::threads` and `EngineConfig::cache` are execution knobs
+//! only: any thread count and either cache setting reproduce the same
+//! journal bit-for-bit.  `batch` *is* algorithmic (a frozen-model
+//! generation of k proposals is not the same sequence as k serial
+//! ask/tell rounds — the standard batched-BO trade-off), except during
+//! TPE's random-startup phase, where proposals are model-free and the
+//! candidate stream is identical for every batch size.
+//!
+//! `EngineConfig::default()` (batch 1, exact keys) reproduces the
+//! pre-engine serial loop exactly; [`crate::coordinator::search`] is now a
+//! thin wrapper over [`Engine::search`].
+//!
+//! [`TpeOptimizer::suggest_batch`]: crate::optim::tpe::TpeOptimizer::suggest_batch
+//! [`TpeOptimizer::observe_batch`]: crate::optim::tpe::TpeOptimizer::observe_batch
+
+pub mod cache;
+pub mod evaluator;
+
+pub use cache::{quantize_points, DesignCache};
+pub use evaluator::{CandidateEvaluator, EvalPoint};
+
+use crate::arch::Network;
+use crate::dse::{explore, DseConfig};
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
+use crate::metrics::Table;
+use crate::optim::tpe::{TpeConfig, TpeOptimizer};
+use crate::pruning::{self, PruningPlan};
+use crate::sparsity::SparsityPoint;
+
+/// Which metrics the objective sees (Fig. 5's two curves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Eq. 6: accuracy + sparsity + throughput − DSPs (HASS)
+    HardwareAware,
+    /// accuracy + sparsity only (the traditional flow of Fig. 2a)
+    SoftwareOnly,
+}
+
+/// Execution shape of the engine: generation size, worker threads, and
+/// pricing memoization.  See the module docs for the determinism contract.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// candidates proposed and evaluated per TPE generation (1 = the
+    /// seed-serial ask/tell loop)
+    pub batch: usize,
+    /// evaluation worker threads; 0 = min(batch, available parallelism)
+    pub threads: usize,
+    /// memoize `dse::explore` results across candidates
+    pub cache: bool,
+    /// snap operating points to a 2^-bits grid before pricing (0 = exact;
+    /// >0 makes nearby candidates share cache entries)
+    pub quant_bits: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { batch: 1, threads: 0, cache: true, quant_bits: 0 }
+    }
+}
+
+impl EngineConfig {
+    /// A sensible parallel configuration: k-candidate generations, auto
+    /// threads, cache with a 2^-12 (~2.4e-4 sparsity) pricing grid.
+    pub fn batched(k: usize) -> Self {
+        EngineConfig { batch: k.max(1), threads: 0, cache: true, quant_bits: 12 }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let t = if self.threads == 0 { hw } else { self.threads };
+        t.clamp(1, self.batch.max(1))
+    }
+}
+
+/// Search hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub iterations: usize,
+    pub mode: SearchMode,
+    pub seed: u64,
+    /// λ1 (sparsity), λ2 (throughput), λ3 (DSP) of Eq. 6
+    pub lambda: [f64; 3],
+    /// anchor the optimizer with the dense and two mild uniform plans
+    /// before random startup — one-shot pruning response surfaces are
+    /// cliff-heavy, and without an anchor a short search may never sample
+    /// the high-accuracy region at all
+    pub warm_start: bool,
+    pub tpe: TpeConfig,
+    pub dse: DseConfig,
+    pub engine: EngineConfig,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            iterations: 96, // the paper's Fig. 5 budget
+            mode: SearchMode::HardwareAware,
+            seed: 0,
+            // normalization heuristics (paper §V-B): keep accuracy the
+            // dominant term so the search tolerates <1-point drops only,
+            // with hardware terms strong enough to steer among equals
+            lambda: [0.10, 0.15, 0.10],
+            warm_start: true,
+            tpe: TpeConfig::default(),
+            dse: DseConfig::default(),
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// One journal line of the search.
+#[derive(Clone, Debug)]
+pub struct SearchRecord {
+    pub iter: usize,
+    pub accuracy: f64,
+    pub avg_sparsity: f64,
+    pub op_density: f64,
+    pub images_per_sec: f64,
+    pub dsp: u64,
+    /// images / cycle / DSP (the paper's efficiency metric)
+    pub efficiency: f64,
+    pub objective: f64,
+    pub plan: PruningPlan,
+}
+
+/// Execution counters of one engine run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// candidates evaluated (== iterations)
+    pub evaluations: usize,
+    /// TPE generations (== ceil(iterations / batch))
+    pub generations: usize,
+    /// worker threads used per generation
+    pub threads: usize,
+    pub batch: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl EngineStats {
+    /// Fraction of pricings served from the design cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let t = (self.cache_hits + self.cache_misses) as f64;
+        if t == 0.0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / t
+        }
+    }
+}
+
+/// Search output: full journal + index of the best Eq.6 iteration.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub records: Vec<SearchRecord>,
+    pub best: usize,
+    /// dense reference used for throughput normalization
+    pub dense_images_per_sec: f64,
+    pub stats: EngineStats,
+}
+
+impl SearchResult {
+    pub fn best_record(&self) -> &SearchRecord {
+        &self.records[self.best]
+    }
+
+    /// Fig. 5's y-axis: the computation efficiency of the *incumbent* —
+    /// the best design so far **by the search's own objective**.  (A
+    /// running max of efficiency would credit the software-only search
+    /// for efficient points it visits but would never select.)
+    pub fn efficiency_trajectory(&self) -> Vec<f64> {
+        let mut best_obj = f64::NEG_INFINITY;
+        let mut best_eff = 0.0f64;
+        self.records
+            .iter()
+            .map(|r| {
+                if r.objective > best_obj {
+                    best_obj = r.objective;
+                    best_eff = r.efficiency;
+                }
+                best_eff
+            })
+            .collect()
+    }
+
+    /// Journal as a table (one row per iteration).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "iter", "accuracy", "avg_sparsity", "op_density", "images_per_sec", "dsp",
+            "images_per_cycle_per_dsp", "objective",
+        ]);
+        for r in &self.records {
+            t.row(vec![
+                r.iter.to_string(),
+                format!("{:.3}", r.accuracy),
+                format!("{:.4}", r.avg_sparsity),
+                format!("{:.4}", r.op_density),
+                format!("{:.1}", r.images_per_sec),
+                r.dsp.to_string(),
+                format!("{:.4e}", r.efficiency),
+                format!("{:.4}", r.objective),
+            ]);
+        }
+        t
+    }
+}
+
+/// Per-generation evaluation context shared (immutably) by the workers.
+struct EvalCtx<'a> {
+    cache: Option<&'a DesignCache>,
+    quant_bits: u32,
+    dense_ips: f64,
+    base_acc: f64,
+    mode: SearchMode,
+    lambda: [f64; 3],
+    dse: &'a DseConfig,
+}
+
+/// The batched search engine: an evaluator plus the fixed hardware-side
+/// context (target geometry, resource model, device budget).
+pub struct Engine<'a> {
+    pub evaluator: &'a dyn CandidateEvaluator,
+    pub target: &'a Network,
+    pub rm: &'a ResourceModel,
+    pub dev: &'a DeviceBudget,
+}
+
+/// Warm-start anchor plans: dense, mild, moderate uniform sparsity.
+const ANCHORS: [f64; 3] = [0.0, 0.15, 0.35];
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        evaluator: &'a dyn CandidateEvaluator,
+        target: &'a Network,
+        rm: &'a ResourceModel,
+        dev: &'a DeviceBudget,
+    ) -> Self {
+        Engine { evaluator, target, rm, dev }
+    }
+
+    /// Run the HASS search (Eq. 6 objective, or software-only).
+    pub fn search(&self, cfg: &SearchConfig) -> SearchResult {
+        let n = self.evaluator.sparsity_model().layers.len();
+        assert_eq!(
+            n,
+            self.target.compute_layers().len(),
+            "evaluator and target geometry disagree on layer count"
+        );
+        // dense reference design for throughput normalization (f_thr scale)
+        let dense_points =
+            quantize_points(&vec![SparsityPoint::DENSE; n], cfg.engine.quant_bits);
+        let dense = explore(self.target, &dense_points, self.rm, self.dev, &cfg.dse);
+        let dense_ips = dense.images_per_sec(self.dev).max(1e-9);
+        let base_acc = self.evaluator.base_accuracy().max(1e-9);
+
+        let cache = DesignCache::new(self.dev);
+        if cfg.engine.cache {
+            cache.insert(&dense_points, dense);
+        }
+        let batch = cfg.engine.batch.max(1);
+        let threads = cfg.engine.resolved_threads();
+        let ctx = EvalCtx {
+            cache: if cfg.engine.cache { Some(&cache) } else { None },
+            quant_bits: cfg.engine.quant_bits,
+            dense_ips,
+            base_acc,
+            mode: cfg.mode,
+            lambda: cfg.lambda,
+            dse: &cfg.dse,
+        };
+
+        let mut tpe = TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone());
+        let mut records: Vec<SearchRecord> = Vec::with_capacity(cfg.iterations);
+        let mut generations = 0usize;
+        while records.len() < cfg.iterations {
+            let start = records.len();
+            let g = batch.min(cfg.iterations - start);
+            // --- propose: anchors first, then a frozen-model TPE batch ---
+            let n_anchor =
+                if cfg.warm_start { 3usize.saturating_sub(start).min(g) } else { 0 };
+            let mut xs: Vec<Vec<f64>> = Vec::with_capacity(g);
+            for j in 0..n_anchor {
+                xs.push(vec![ANCHORS[start + j]; 2 * n]);
+            }
+            xs.extend(tpe.suggest_batch(g - n_anchor));
+            // --- evaluate the generation (possibly in parallel) ----------
+            let recs = self.run_generation(start, &xs, &ctx, threads);
+            // --- reduce in candidate order: journal + optimizer ----------
+            let mut observed = Vec::with_capacity(g);
+            for (x, rec) in xs.into_iter().zip(&recs) {
+                observed.push((x, rec.objective));
+            }
+            records.extend(recs);
+            tpe.observe_batch(observed);
+            generations += 1;
+        }
+        let best = records
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.objective.total_cmp(&b.1.objective))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let stats = EngineStats {
+            evaluations: records.len(),
+            generations,
+            threads,
+            batch,
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+        };
+        SearchResult { records, best, dense_images_per_sec: dense_ips, stats }
+    }
+
+    /// Evaluate one generation.  Workers write into index-addressed slots
+    /// (contiguous chunks per thread), so the returned order — and thus
+    /// every downstream reduction — is independent of scheduling.
+    fn run_generation(
+        &self,
+        base_iter: usize,
+        xs: &[Vec<f64>],
+        ctx: &EvalCtx<'_>,
+        threads: usize,
+    ) -> Vec<SearchRecord> {
+        let g = xs.len();
+        let threads = threads.clamp(1, g.max(1));
+        let mut out: Vec<Option<SearchRecord>> = Vec::new();
+        out.resize_with(g, || None);
+        if threads <= 1 {
+            for (j, (slot, x)) in out.iter_mut().zip(xs).enumerate() {
+                *slot = Some(self.evaluate_candidate(base_iter + j, x, ctx));
+            }
+        } else {
+            let chunk = g.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ci, (xc, oc)) in
+                    xs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+                {
+                    let off = base_iter + ci * chunk;
+                    s.spawn(move || {
+                        for (j, (slot, x)) in oc.iter_mut().zip(xc).enumerate() {
+                            *slot = Some(self.evaluate_candidate(off + j, x, ctx));
+                        }
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|o| o.expect("generation slot filled")).collect()
+    }
+
+    /// Full evaluation of one candidate: decode → measure → price → score.
+    fn evaluate_candidate(&self, iter: usize, x: &[f64], ctx: &EvalCtx<'_>) -> SearchRecord {
+        let plan = PruningPlan::from_unit_point(x, self.evaluator.sparsity_model());
+        let ev = self.evaluator.eval(&plan);
+        let m = pruning::metrics(self.target, &ev.points);
+        let pts = quantize_points(&ev.points, ctx.quant_bits);
+        let design = match ctx.cache {
+            Some(c) => c.get_or_compute(&pts, || {
+                explore(self.target, &pts, self.rm, self.dev, ctx.dse)
+            }),
+            None => explore(self.target, &pts, self.rm, self.dev, ctx.dse),
+        };
+        let ips = design.images_per_sec(self.dev);
+
+        let f_acc = ev.accuracy / ctx.base_acc; // ∈ [0, 1]
+        let f_spa = m.avg_sparsity; // ∈ [0, 1)
+        // saturating throughput gain: ∈ (0, 2), =1 at the dense reference.
+        // An unbounded ratio would swamp the accuracy term on networks
+        // where sparsity buys 10-20x (the λ "normalization" of Eq. 6).
+        let raw = ips / ctx.dense_ips;
+        let f_thr = 2.0 * raw / (1.0 + raw);
+        let f_dsp = design.resources.dsp as f64 / self.dev.dsp.max(1) as f64;
+        let objective = match ctx.mode {
+            SearchMode::HardwareAware => {
+                f_acc + ctx.lambda[0] * f_spa + ctx.lambda[1] * f_thr
+                    - ctx.lambda[2] * f_dsp
+            }
+            SearchMode::SoftwareOnly => f_acc + ctx.lambda[0] * f_spa,
+        };
+        SearchRecord {
+            iter,
+            accuracy: ev.accuracy,
+            avg_sparsity: m.avg_sparsity,
+            op_density: m.op_density,
+            images_per_sec: ips,
+            dsp: design.resources.dsp,
+            efficiency: design.efficiency(),
+            objective,
+            plan,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::coordinator::SurrogateEvaluator;
+    use crate::sparsity::synthesize;
+
+    fn surrogate(seed: u64) -> SurrogateEvaluator {
+        let net = networks::calibnet();
+        let sparsity = synthesize(&net, seed);
+        SurrogateEvaluator { net, sparsity, base_acc: 85.0 }
+    }
+
+    fn cfg(iters: usize, seed: u64, engine: EngineConfig) -> SearchConfig {
+        SearchConfig {
+            iterations: iters,
+            seed,
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            engine,
+            ..Default::default()
+        }
+    }
+
+    fn run(ev: &SurrogateEvaluator, c: &SearchConfig) -> SearchResult {
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        Engine::new(ev, &net, &rm, &dev).search(c)
+    }
+
+    fn objective_bits(r: &SearchResult) -> Vec<u64> {
+        r.records.iter().map(|x| x.objective.to_bits()).collect()
+    }
+
+    /// The satellite determinism contract: a k=4 generation evaluated on 4
+    /// worker threads with the design cache on reproduces — bit for bit —
+    /// the same schedule evaluated serially (1 thread) with every pricing
+    /// recomputed from scratch.
+    #[test]
+    fn parallel_k4_with_cache_matches_serial_k1_threads() {
+        let ev = surrogate(11);
+        let serial = run(
+            &ev,
+            &cfg(
+                20,
+                7,
+                EngineConfig { batch: 4, threads: 1, cache: false, quant_bits: 0 },
+            ),
+        );
+        let parallel = run(
+            &ev,
+            &cfg(
+                20,
+                7,
+                EngineConfig { batch: 4, threads: 4, cache: true, quant_bits: 0 },
+            ),
+        );
+        assert_eq!(objective_bits(&serial), objective_bits(&parallel));
+        assert_eq!(serial.best, parallel.best);
+        assert_eq!(serial.best_record().plan, parallel.best_record().plan);
+        assert_eq!(
+            serial.best_record().objective.to_bits(),
+            parallel.best_record().objective.to_bits()
+        );
+        assert_eq!(serial.efficiency_trajectory(), parallel.efficiency_trajectory());
+    }
+
+    #[test]
+    fn odd_thread_counts_also_match() {
+        let ev = surrogate(12);
+        let a = run(
+            &ev,
+            &cfg(
+                13, // not divisible by the batch: exercises the short tail
+                3,
+                EngineConfig { batch: 5, threads: 1, cache: true, quant_bits: 12 },
+            ),
+        );
+        let b = run(
+            &ev,
+            &cfg(
+                13,
+                3,
+                EngineConfig { batch: 5, threads: 3, cache: true, quant_bits: 12 },
+            ),
+        );
+        assert_eq!(objective_bits(&a), objective_bits(&b));
+        assert_eq!(a.records.len(), 13);
+    }
+
+    /// During TPE random startup the model is frozen at None for every
+    /// batch size, so the candidate stream — and the journal — is
+    /// identical whether the engine runs generations of 1, 2 or 4.
+    #[test]
+    fn startup_prefix_identical_across_batch_sizes() {
+        let ev = surrogate(13);
+        let n_startup = TpeConfig::default().n_startup; // 10
+        let base = run(&ev, &cfg(n_startup, 5, EngineConfig::default()));
+        for k in [2usize, 4] {
+            let batched = run(
+                &ev,
+                &cfg(
+                    n_startup,
+                    5,
+                    EngineConfig { batch: k, threads: 2, cache: true, quant_bits: 0 },
+                ),
+            );
+            assert_eq!(
+                objective_bits(&base),
+                objective_bits(&batched),
+                "batch {k} diverged during random startup"
+            );
+        }
+    }
+
+    /// Quantized pricing is applied with the cache on *and* off, so the
+    /// cache cannot change results even on the approximate grid.
+    #[test]
+    fn cache_on_off_identical_with_quantized_pricing() {
+        let ev = surrogate(14);
+        let on = run(
+            &ev,
+            &cfg(
+                16,
+                9,
+                EngineConfig { batch: 4, threads: 2, cache: true, quant_bits: 12 },
+            ),
+        );
+        let off = run(
+            &ev,
+            &cfg(
+                16,
+                9,
+                EngineConfig { batch: 4, threads: 2, cache: false, quant_bits: 12 },
+            ),
+        );
+        assert_eq!(objective_bits(&on), objective_bits(&off));
+        assert_eq!(on.best, off.best);
+        // the disabled cache reports no traffic
+        assert_eq!(off.stats.cache_hits + off.stats.cache_misses, 0);
+        // the enabled cache saw every pricing
+        assert_eq!(on.stats.cache_hits + on.stats.cache_misses, 16);
+    }
+
+    #[test]
+    fn stats_count_generations_and_evaluations() {
+        let ev = surrogate(15);
+        let r = run(
+            &ev,
+            &cfg(
+                10,
+                2,
+                EngineConfig { batch: 4, threads: 2, cache: true, quant_bits: 0 },
+            ),
+        );
+        assert_eq!(r.stats.evaluations, 10);
+        assert_eq!(r.stats.generations, 3); // 4 + 4 + 2
+        assert_eq!(r.stats.batch, 4);
+        assert!(r.stats.threads >= 1);
+        assert_eq!(r.records.len(), 10);
+        for (i, rec) in r.records.iter().enumerate() {
+            assert_eq!(rec.iter, i, "journal order must follow candidate order");
+        }
+    }
+
+    #[test]
+    fn batch_larger_than_budget_is_clamped() {
+        let ev = surrogate(16);
+        let r = run(
+            &ev,
+            &cfg(
+                3,
+                1,
+                EngineConfig { batch: 8, threads: 0, cache: true, quant_bits: 0 },
+            ),
+        );
+        assert_eq!(r.records.len(), 3);
+        assert_eq!(r.stats.generations, 1);
+        assert!(r.best < 3);
+    }
+}

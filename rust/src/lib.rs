@@ -22,11 +22,25 @@
 //! AOT artifact through PJRT (`runtime`) to measure accuracy and sparsity,
 //! then prices candidate designs with the hardware model (`hardware`,
 //! `dse`).
+//!
+//! ## The search engine (`engine`)
+//!
+//! All search entry points run on the batched candidate-evaluation
+//! pipeline in [`engine`]: the [`engine::CandidateEvaluator`] trait makes
+//! measurement backends pluggable, [`engine::DesignCache`] memoizes DSE
+//! pricings keyed by (device, quantized operating points), TPE proposes
+//! whole generations at once (`suggest_batch`/`observe_batch`), and each
+//! generation is evaluated concurrently with scoped threads.  Thread count
+//! and cache state never change results — parallel runs reproduce serial
+//! journals bit for bit (see the module docs for the exact determinism
+//! contract).  [`coordinator`] keeps the production evaluators and the
+//! stable `search()` entry point on top of the engine.
 
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;
 pub mod dse;
+pub mod engine;
 pub mod hardware;
 pub mod metrics;
 pub mod optim;

@@ -14,7 +14,7 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+    search, EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
 };
 use hass::dse::{self, explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
@@ -85,6 +85,10 @@ fn cmd_search(args: &[String]) -> i32 {
         .opt("mode", "hw", "objective: hw (Eq. 6) | sw (accuracy+sparsity)")
         .opt("evaluator", "auto", "auto | measured (PJRT) | surrogate")
         .opt("batches", "4", "calibration batches per measured evaluation")
+        .opt("batch", "1", "candidates per TPE generation, evaluated in parallel")
+        .opt("threads", "0", "evaluation worker threads (0 = auto)")
+        .opt("quant", "0", "pricing quantization bits (0 = exact; 12 is a good cache grid)")
+        .flag("no-cache", "disable the DSE design cache")
         .opt("journal", "", "CSV path for the per-iteration journal");
     let p = parse_or_die(cli, args);
     let net = network_or_die(p.get("network"));
@@ -94,10 +98,17 @@ fn cmd_search(args: &[String]) -> i32 {
         "sw" => SearchMode::SoftwareOnly,
         _ => SearchMode::HardwareAware,
     };
+    let engine = EngineConfig {
+        batch: p.get_usize("batch").max(1),
+        threads: p.get_usize("threads"),
+        cache: !p.get_bool("no-cache"),
+        quant_bits: p.get_usize("quant") as u32,
+    };
     let cfg = SearchConfig {
         iterations: p.get_usize("iters"),
         seed: p.get_u64("seed"),
         mode,
+        engine,
         ..Default::default()
     };
     let want_measured = match p.get("evaluator") {
@@ -137,6 +148,16 @@ fn cmd_search(args: &[String]) -> i32 {
     println!(
         "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
         b.iter, b.accuracy, b.avg_sparsity, b.images_per_sec, b.dsp, b.efficiency
+    );
+    let s = &result.stats;
+    println!(
+        "[search] engine: {} generations x batch {} on {} thread(s) | design cache {} hit / {} miss ({:.0}% hit rate)",
+        s.generations,
+        s.batch,
+        s.threads,
+        s.cache_hits,
+        s.cache_misses,
+        s.cache_hit_rate() * 100.0
     );
     let journal = p.get("journal");
     if !journal.is_empty() {

@@ -68,10 +68,19 @@ impl TpeOptimizer {
         self.obs.push((x, y));
     }
 
-    /// Propose the next point to evaluate.
-    pub fn ask(&mut self) -> Vec<f64> {
+    /// Record a whole generation of evaluated points, in candidate order.
+    /// Equivalent to calling [`tell`](Self::tell) for each pair.
+    pub fn observe_batch(&mut self, batch: Vec<(Vec<f64>, f64)>) {
+        for (x, y) in batch {
+            self.tell(x, y);
+        }
+    }
+
+    /// Fit the good/bad Parzen models from the current observations.
+    /// `None` during the random-startup phase.  Deterministic (no RNG).
+    fn fit(&self) -> Option<ParzenModel> {
         if self.obs.len() < self.cfg.n_startup {
-            return (0..self.dim).map(|_| self.rng.f64()).collect();
+            return None;
         }
         // split observations: top γ fraction (at least 1) are "good"
         let mut order: Vec<usize> = (0..self.obs.len()).collect();
@@ -88,14 +97,21 @@ impl TpeOptimizer {
         let bad_kdes: Vec<Kde> = (0..self.dim)
             .map(|d| Kde::fit(bad.iter().map(|x| x[d]).collect()))
             .collect();
+        Some(ParzenModel { good: good_kdes, bad: bad_kdes })
+    }
 
+    /// Draw one proposal from a fitted model (uniform when `None`).
+    fn propose(&mut self, model: Option<&ParzenModel>) -> Vec<f64> {
+        let Some(m) = model else {
+            return (0..self.dim).map(|_| self.rng.f64()).collect();
+        };
         let mut best_x = None;
         let mut best_score = f64::NEG_INFINITY;
         for _ in 0..self.cfg.n_candidates {
-            let x: Vec<f64> = good_kdes.iter().map(|k| k.sample(&mut self.rng)).collect();
+            let x: Vec<f64> = m.good.iter().map(|k| k.sample(&mut self.rng)).collect();
             let mut score = 0.0;
             for d in 0..self.dim {
-                score += good_kdes[d].log_pdf(x[d]) - bad_kdes[d].log_pdf(x[d]);
+                score += m.good[d].log_pdf(x[d]) - m.bad[d].log_pdf(x[d]);
             }
             if score > best_score {
                 best_score = score;
@@ -104,6 +120,31 @@ impl TpeOptimizer {
         }
         best_x.unwrap()
     }
+
+    /// Propose the next point to evaluate.
+    pub fn ask(&mut self) -> Vec<f64> {
+        let model = self.fit();
+        self.propose(model.as_ref())
+    }
+
+    /// Propose `k` points for one generation, with the Parzen model
+    /// *frozen* at the current observation set (synchronous batch BO).
+    ///
+    /// Because [`ask`](Self::ask) refits from the same observations when
+    /// nothing is told in between, `suggest_batch(k)` consumes the RNG
+    /// exactly like `k` successive `ask()` calls and returns the identical
+    /// proposals — the batch API is a pure fast path, not a different
+    /// algorithm, until observations land between proposals.
+    pub fn suggest_batch(&mut self, k: usize) -> Vec<Vec<f64>> {
+        let model = self.fit();
+        (0..k).map(|_| self.propose(model.as_ref())).collect()
+    }
+}
+
+/// Frozen per-dimension good/bad KDEs used to score one generation.
+struct ParzenModel {
+    good: Vec<Kde>,
+    bad: Vec<Kde>,
 }
 
 /// 1-D Parzen window on [0,1]: mixture of truncated Gaussians centred on
@@ -236,6 +277,74 @@ mod tests {
     fn rejects_nan_objective() {
         let mut tpe = TpeOptimizer::with_defaults(1, 3);
         tpe.tell(vec![0.1], f64::NAN);
+    }
+
+    #[test]
+    fn suggest_batch_matches_successive_asks() {
+        // same seed, same telling history: a frozen-model batch of k must
+        // reproduce k back-to-back asks bit for bit (no tells in between)
+        let seed = 21;
+        let mut a = TpeOptimizer::with_defaults(3, seed);
+        let mut b = TpeOptimizer::with_defaults(3, seed);
+        // get both past startup with identical histories *and* identical
+        // RNG consumption (both must ask)
+        for _ in 0..12 {
+            let xa = a.ask();
+            let xb = b.ask();
+            assert_eq!(xa, xb);
+            let y = surrogate(&xa);
+            a.tell(xa, y);
+            b.tell(xb, y);
+        }
+        let batch = a.suggest_batch(4);
+        let serial: Vec<Vec<f64>> = (0..4).map(|_| b.ask()).collect();
+        for (xa, xb) in batch.iter().zip(&serial) {
+            for (va, vb) in xa.iter().zip(xb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn suggest_batch_is_random_during_startup() {
+        let mut tpe = TpeOptimizer::with_defaults(2, 9);
+        let xs = tpe.suggest_batch(5);
+        assert_eq!(xs.len(), 5);
+        for x in &xs {
+            assert_eq!(x.len(), 2);
+            assert!(x.iter().all(|v| (0.0..1.0).contains(v)));
+        }
+        // startup proposals must differ from each other (fresh RNG draws)
+        assert_ne!(xs[0], xs[1]);
+    }
+
+    #[test]
+    fn observe_batch_equals_sequential_tells() {
+        let mut a = TpeOptimizer::with_defaults(2, 4);
+        let mut b = TpeOptimizer::with_defaults(2, 4);
+        let pts: Vec<(Vec<f64>, f64)> =
+            (0..6).map(|i| (vec![0.1 * i as f64, 0.5], i as f64)).collect();
+        a.observe_batch(pts.clone());
+        for (x, y) in pts {
+            b.tell(x, y);
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.best().unwrap().1, b.best().unwrap().1);
+        // subsequent proposals agree (same obs, same rng state)
+        assert_eq!(a.ask(), b.ask());
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let mut tpe = TpeOptimizer::with_defaults(2, 8);
+        let before = tpe.len();
+        let xs = tpe.suggest_batch(0);
+        assert!(xs.is_empty());
+        tpe.observe_batch(Vec::new());
+        assert_eq!(tpe.len(), before);
+        // and the RNG was not touched: next ask matches a fresh twin's
+        let mut twin = TpeOptimizer::with_defaults(2, 8);
+        assert_eq!(tpe.ask(), twin.ask());
     }
 
     #[test]

@@ -7,18 +7,46 @@
 //! loop.  Thresholds are *runtime inputs* of the artifact, so every TPE
 //! iteration reuses one compiled executable — no recompilation, no Python.
 //!
-//! The HLO interchange is **text** (`HloModuleProto::from_text_file`): the
-//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
-//! instruction ids); the text parser reassigns ids (see aot_recipe.md).
+//! ## Build features
+//!
+//! The PJRT executor needs the vendored `xla` + `anyhow` crates, which the
+//! offline default build does not have.  The real implementation lives in
+//! [`pjrt`] behind `--features pjrt`; without the feature, [`ModelRuntime`]
+//! is a stub whose loaders return a clear [`RuntimeError`], so every
+//! binary, example and bench still compiles and falls back to the
+//! surrogate path at run time.  The artifact *loaders* ([`artifacts`]) are
+//! plain `std` and always available.
 
 pub mod artifacts;
 pub mod train;
 
-use std::path::Path;
-
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+pub(crate) mod pjrt;
 
 pub use artifacts::{available, default_dir, CalibData, Meta, Weights};
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::ModelRuntime;
+
+/// Error of the dependency-free runtime surface (the `pjrt` build uses
+/// `anyhow` internally instead).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// What a build without the `pjrt` feature tells callers of the runtime.
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "HASS was built without the `pjrt` feature: the measured \
+evaluator needs the vendored `xla` + `anyhow` crates (see rust/Cargo.toml). \
+Rebuild with `cargo build --features pjrt` in an environment that provides \
+them, or use the surrogate evaluator";
 
 /// Outputs of one forward pass.
 #[derive(Clone, Debug)]
@@ -44,50 +72,42 @@ pub struct EvalResult {
     pub images: usize,
 }
 
-/// The compiled model + resident weights + calibration data.
+/// Top-1 accuracy of a row-major logits block against labels.
+pub fn top1_accuracy(logits: &[f32], labels: &[i32], num_classes: usize) -> f64 {
+    let mut hit = 0usize;
+    for (row, &y) in logits.chunks_exact(num_classes).zip(labels) {
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .unwrap_or(-1);
+        if pred == y {
+            hit += 1;
+        }
+    }
+    hit as f64 / labels.len().max(1) as f64
+}
+
+/// Stub runtime for builds without the `pjrt` feature: same shape as the
+/// real [`pjrt::ModelRuntime`]-struct, but its loaders always fail with a
+/// [`RuntimeError`] explaining how to enable the measured path.  No value
+/// of this type can exist at run time.
+#[cfg(not(feature = "pjrt"))]
 pub struct ModelRuntime {
     pub meta: Meta,
     pub data: CalibData,
-    exe: xla::PjRtLoadedExecutable,
-    /// interleaved (w, b) literals in artifact order, resident across calls
-    weight_literals: Vec<xla::Literal>,
 }
 
-pub(crate) fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "literal shape {:?} vs {} values", dims, data.len());
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
-}
-
+#[cfg(not(feature = "pjrt"))]
 impl ModelRuntime {
-    /// Load everything from an artifact directory (see `make artifacts`).
-    pub fn load(dir: &Path) -> Result<ModelRuntime> {
-        let meta = Meta::load(dir).map_err(anyhow::Error::msg)?;
-        let weights = Weights::load(dir, &meta).map_err(anyhow::Error::msg)?;
-        let data = CalibData::load(dir, &meta).map_err(anyhow::Error::msg)?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            dir.join("model.hlo.txt").to_str().unwrap(),
-        )
-        .context("parse model.hlo.txt")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compile model")?;
-        let mut weight_literals = Vec::with_capacity(meta.layers.len() * 2);
-        for (l, (w, b)) in meta.layers.iter().zip(&weights.params) {
-            weight_literals.push(f32_literal(&l.weight_shape, w)?);
-            weight_literals.push(f32_literal(&[l.b_size], b)?);
-        }
-        Ok(ModelRuntime { meta, data, exe, weight_literals })
+    /// Always fails: the executor is not compiled in.
+    pub fn load(_dir: &std::path::Path) -> Result<ModelRuntime, RuntimeError> {
+        Err(RuntimeError(NO_PJRT.to_string()))
     }
 
-    /// Load from the default artifact directory.
-    pub fn load_default() -> Result<ModelRuntime> {
+    /// Always fails: the executor is not compiled in.
+    pub fn load_default() -> Result<ModelRuntime, RuntimeError> {
         Self::load(&default_dir())
     }
 
@@ -96,88 +116,29 @@ impl ModelRuntime {
         self.meta.num_layers
     }
 
-    /// Run one batch (must be exactly `meta.export_batch` images).
-    pub fn infer(&self, images: &[f32], tau_w: &[f64], tau_a: &[f64]) -> Result<InferOutput> {
-        let m = &self.meta;
-        let img_dims = [m.export_batch, m.img_size, m.img_size, m.img_channels];
-        anyhow::ensure!(
-            images.len() == img_dims.iter().product::<usize>(),
-            "batch must be exactly export_batch={}",
-            m.export_batch
-        );
-        anyhow::ensure!(tau_w.len() == m.num_layers && tau_a.len() == m.num_layers);
-        let img_lit = f32_literal(&img_dims, images)?;
-        let tw: Vec<f32> = tau_w.iter().map(|&v| v as f32).collect();
-        let ta: Vec<f32> = tau_a.iter().map(|&v| v as f32).collect();
-        let tw_lit = f32_literal(&[m.num_layers], &tw)?;
-        let ta_lit = f32_literal(&[m.num_layers], &ta)?;
-
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weight_literals.len());
-        args.push(&img_lit);
-        for w in &self.weight_literals {
-            args.push(w);
-        }
-        args.push(&tw_lit);
-        args.push(&ta_lit);
-
-        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (logits, s_w, s_a, dens) = result.to_tuple4()?;
-        Ok(InferOutput {
-            logits: logits.to_vec::<f32>()?,
-            s_w: s_w.to_vec::<f32>()?,
-            s_a: s_a.to_vec::<f32>()?,
-            pair_density: dens.to_vec::<f32>()?,
-        })
+    /// Unreachable in practice (no stub value can be constructed).
+    pub fn infer(
+        &self,
+        _images: &[f32],
+        _tau_w: &[f64],
+        _tau_a: &[f64],
+    ) -> Result<InferOutput, RuntimeError> {
+        Err(RuntimeError(NO_PJRT.to_string()))
     }
 
     /// Top-1 accuracy of a logits block against labels.
     pub fn accuracy(&self, logits: &[f32], labels: &[i32]) -> f64 {
-        let c = self.meta.num_classes;
-        let mut hit = 0usize;
-        for (row, &y) in logits.chunks_exact(c).zip(labels) {
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i as i32)
-                .unwrap_or(-1);
-            if pred == y {
-                hit += 1;
-            }
-        }
-        hit as f64 / labels.len().max(1) as f64
+        top1_accuracy(logits, labels, self.meta.num_classes)
     }
 
-    /// Evaluate thresholds over `n_batches` calibration batches — the
-    /// search loop's inner measurement (accuracy + measured sparsity).
-    pub fn evaluate(&self, tau_w: &[f64], tau_a: &[f64], n_batches: usize) -> Result<EvalResult> {
-        let batch = self.meta.export_batch;
-        let avail = self.data.n_batches(batch);
-        let n_batches = n_batches.min(avail).max(1);
-        let l = self.meta.num_layers;
-        let mut s_w = vec![0.0f64; l];
-        let mut s_a = vec![0.0f64; l];
-        let mut dens = vec![0.0f64; l];
-        let mut hits = 0.0f64;
-        let mut total = 0usize;
-        for b in 0..n_batches {
-            let (imgs, labels) = self.data.batch(b, batch);
-            let out = self.infer(imgs, tau_w, tau_a)?;
-            hits += self.accuracy(&out.logits, labels) * labels.len() as f64;
-            total += labels.len();
-            for i in 0..l {
-                s_w[i] += out.s_w[i] as f64;
-                s_a[i] += out.s_a[i] as f64;
-                dens[i] += out.pair_density[i] as f64;
-            }
-        }
-        let k = n_batches as f64;
-        for i in 0..l {
-            s_w[i] /= k;
-            s_a[i] /= k;
-            dens[i] /= k;
-        }
-        Ok(EvalResult { accuracy: hits / total as f64, s_w, s_a, pair_density: dens, images: total })
+    /// Unreachable in practice (no stub value can be constructed).
+    pub fn evaluate(
+        &self,
+        _tau_w: &[f64],
+        _tau_a: &[f64],
+        _n_batches: usize,
+    ) -> Result<EvalResult, RuntimeError> {
+        Err(RuntimeError(NO_PJRT.to_string()))
     }
 }
 
@@ -185,100 +146,27 @@ impl ModelRuntime {
 mod tests {
     use super::*;
 
-    fn runtime() -> Option<ModelRuntime> {
-        let dir = default_dir();
-        if !available(&dir) {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return None;
-        }
-        Some(ModelRuntime::load(&dir).expect("runtime load"))
+    #[test]
+    fn top1_accuracy_counts_argmax_hits() {
+        // 3 classes, 3 rows: argmax = 2, 0, 1; labels hit 2 of 3
+        let logits = [0.1f32, 0.2, 0.9, 1.0, 0.0, 0.5, 0.3, 0.8, 0.4];
+        let labels = [2i32, 0, 2];
+        let acc = top1_accuracy(&logits, &labels, 3);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]
-    fn loads_and_matches_golden_accuracy() {
-        let Some(rt) = runtime() else { return };
-        let l = rt.n_layers();
-        let out = rt.evaluate(&vec![0.0; l], &vec![0.0; l], 1).unwrap();
-        let want = rt.meta.golden.acc_tau0;
-        assert!(
-            (out.accuracy - want).abs() < 1e-6,
-            "batch-0 accuracy {} vs golden {want}",
-            out.accuracy
-        );
+    fn top1_accuracy_empty_is_zero() {
+        assert_eq!(top1_accuracy(&[], &[], 10), 0.0);
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn golden_logits_match_python() {
-        let Some(rt) = runtime() else { return };
-        let l = rt.n_layers();
-        let tau = vec![rt.meta.golden.tau_ref; l];
-        let (imgs, _) = rt.data.batch(0, rt.meta.export_batch);
-        let out = rt.infer(imgs, &tau, &tau).unwrap();
-        for (i, &want) in rt.meta.golden.logits_first8_tau_ref.iter().enumerate() {
-            let got = out.logits[i] as f64;
-            assert!(
-                (got - want).abs() < 1e-3 * want.abs().max(1.0),
-                "logit {i}: rust {got} vs python {want}"
-            );
-        }
-    }
-
-    #[test]
-    fn golden_sparsity_counters_match_python() {
-        let Some(rt) = runtime() else { return };
-        let l = rt.n_layers();
-        let tau = vec![rt.meta.golden.tau_ref; l];
-        let (imgs, _) = rt.data.batch(0, rt.meta.export_batch);
-        let out = rt.infer(imgs, &tau, &tau).unwrap();
-        for i in 0..l {
-            let sw = out.s_w[i] as f64;
-            let sa = out.s_a[i] as f64;
-            let pd = out.pair_density[i] as f64;
-            assert!((sw - rt.meta.golden.s_w_tau_ref[i]).abs() < 1e-5, "s_w[{i}]");
-            assert!((sa - rt.meta.golden.s_a_tau_ref[i]).abs() < 1e-5, "s_a[{i}]");
-            assert!((pd - rt.meta.golden.pair_density_tau_ref[i]).abs() < 1e-5, "pd[{i}]");
-        }
-    }
-
-    #[test]
-    fn thresholds_increase_sparsity_and_reduce_density() {
-        let Some(rt) = runtime() else { return };
-        let l = rt.n_layers();
-        let lo = rt.evaluate(&vec![0.0; l], &vec![0.0; l], 1).unwrap();
-        let hi = rt.evaluate(&vec![0.1; l], &vec![0.1; l], 1).unwrap();
-        for i in 0..l {
-            assert!(hi.s_w[i] >= lo.s_w[i] - 1e-9, "layer {i}");
-            assert!(hi.pair_density[i] <= lo.pair_density[i] + 1e-9, "layer {i}");
-        }
-    }
-
-    #[test]
-    fn extreme_pruning_destroys_accuracy() {
-        let Some(rt) = runtime() else { return };
-        let l = rt.n_layers();
-        let big = rt.evaluate(&vec![10.0; l], &vec![10.0; l], 1).unwrap();
-        assert!(big.accuracy < 0.4, "pruning everything kept acc {}", big.accuracy);
-        // everything below threshold: density collapses
-        assert!(big.pair_density.iter().all(|&d| d < 0.05));
-    }
-
-    #[test]
-    fn measured_transfer_curve_predicts_measured_sparsity() {
-        // the meta.json quantile curves must agree with what the compiled
-        // model actually measures — this ties the sparsity substrate to
-        // the PJRT path
-        let Some(rt) = runtime() else { return };
-        let sp = rt.meta.measured_sparsity();
-        let l = rt.n_layers();
-        let tau = 0.05;
-        let out = rt.evaluate(&vec![tau; l], &vec![0.0; l], 1).unwrap();
-        for i in 0..l {
-            let predicted = sp.layers[i].weight_curve.sparsity_at(tau);
-            let measured = out.s_w[i];
-            assert!(
-                (predicted - measured).abs() < 0.06,
-                "layer {i}: curve {predicted} vs measured {measured}"
-            );
-        }
+    fn stub_loader_explains_missing_feature() {
+        let err = ModelRuntime::load_default().err().expect("stub must not load");
+        assert!(err.to_string().contains("pjrt"), "unhelpful error: {err}");
+        // the alternate format used by the CLI error paths also works
+        let msg = format!("{err:#}");
+        assert!(msg.contains("surrogate"));
     }
 }

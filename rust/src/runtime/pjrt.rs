@@ -1,0 +1,255 @@
+//! The real PJRT-backed [`ModelRuntime`] (build feature `pjrt`).
+//!
+//! Compiles `model.hlo.txt` on the PJRT CPU client (`xla` crate), keeps
+//! the weights resident as literals, and serves batched
+//! `(accuracy, S_w, S_a, pair-density)` evaluations to the search loop.
+//! Thresholds are *runtime inputs* of the artifact, so every TPE iteration
+//! reuses one compiled executable — no recompilation, no Python.
+//!
+//! The HLO interchange is **text** (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids); the text parser reassigns ids (see aot_recipe.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{default_dir, CalibData, Meta, Weights};
+use super::{EvalResult, InferOutput};
+
+/// The compiled model + resident weights + calibration data.
+pub struct ModelRuntime {
+    pub meta: Meta,
+    pub data: CalibData,
+    exe: xla::PjRtLoadedExecutable,
+    /// interleaved (w, b) literals in artifact order, resident across calls
+    weight_literals: Vec<xla::Literal>,
+}
+
+// SAFETY: the PJRT C API is documented thread-compatible — client,
+// executable and literal handles are not thread-affine, they just must not
+// be used concurrently.  The `xla` bindings simply never declare auto
+// traits for their raw-pointer wrappers.  `Send` (move/borrow from one
+// thread at a time) is therefore sound; concurrent use is prevented by
+// callers holding the runtime in a `Mutex` (see
+// `coordinator::MeasuredEvaluator`), which the compiler enforces because
+// this type is deliberately NOT `Sync`.
+unsafe impl Send for ModelRuntime {}
+
+pub(crate) fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {:?} vs {} values", dims, data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+impl ModelRuntime {
+    /// Load everything from an artifact directory (see `make artifacts`).
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let meta = Meta::load(dir).map_err(anyhow::Error::msg)?;
+        let weights = Weights::load(dir, &meta).map_err(anyhow::Error::msg)?;
+        let data = CalibData::load(dir, &meta).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            dir.join("model.hlo.txt").to_str().unwrap(),
+        )
+        .context("parse model.hlo.txt")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile model")?;
+        let mut weight_literals = Vec::with_capacity(meta.layers.len() * 2);
+        for (l, (w, b)) in meta.layers.iter().zip(&weights.params) {
+            weight_literals.push(f32_literal(&l.weight_shape, w)?);
+            weight_literals.push(f32_literal(&[l.b_size], b)?);
+        }
+        Ok(ModelRuntime { meta, data, exe, weight_literals })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<ModelRuntime> {
+        Self::load(&default_dir())
+    }
+
+    /// Number of compute layers (threshold vector length).
+    pub fn n_layers(&self) -> usize {
+        self.meta.num_layers
+    }
+
+    /// Run one batch (must be exactly `meta.export_batch` images).
+    pub fn infer(&self, images: &[f32], tau_w: &[f64], tau_a: &[f64]) -> Result<InferOutput> {
+        let m = &self.meta;
+        let img_dims = [m.export_batch, m.img_size, m.img_size, m.img_channels];
+        anyhow::ensure!(
+            images.len() == img_dims.iter().product::<usize>(),
+            "batch must be exactly export_batch={}",
+            m.export_batch
+        );
+        anyhow::ensure!(tau_w.len() == m.num_layers && tau_a.len() == m.num_layers);
+        let img_lit = f32_literal(&img_dims, images)?;
+        let tw: Vec<f32> = tau_w.iter().map(|&v| v as f32).collect();
+        let ta: Vec<f32> = tau_a.iter().map(|&v| v as f32).collect();
+        let tw_lit = f32_literal(&[m.num_layers], &tw)?;
+        let ta_lit = f32_literal(&[m.num_layers], &ta)?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weight_literals.len());
+        args.push(&img_lit);
+        for w in &self.weight_literals {
+            args.push(w);
+        }
+        args.push(&tw_lit);
+        args.push(&ta_lit);
+
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, s_w, s_a, dens) = result.to_tuple4()?;
+        Ok(InferOutput {
+            logits: logits.to_vec::<f32>()?,
+            s_w: s_w.to_vec::<f32>()?,
+            s_a: s_a.to_vec::<f32>()?,
+            pair_density: dens.to_vec::<f32>()?,
+        })
+    }
+
+    /// Top-1 accuracy of a logits block against labels.
+    pub fn accuracy(&self, logits: &[f32], labels: &[i32]) -> f64 {
+        super::top1_accuracy(logits, labels, self.meta.num_classes)
+    }
+
+    /// Evaluate thresholds over `n_batches` calibration batches — the
+    /// search loop's inner measurement (accuracy + measured sparsity).
+    pub fn evaluate(&self, tau_w: &[f64], tau_a: &[f64], n_batches: usize) -> Result<EvalResult> {
+        let batch = self.meta.export_batch;
+        let avail = self.data.n_batches(batch);
+        let n_batches = n_batches.min(avail).max(1);
+        let l = self.meta.num_layers;
+        let mut s_w = vec![0.0f64; l];
+        let mut s_a = vec![0.0f64; l];
+        let mut dens = vec![0.0f64; l];
+        let mut hits = 0.0f64;
+        let mut total = 0usize;
+        for b in 0..n_batches {
+            let (imgs, labels) = self.data.batch(b, batch);
+            let out = self.infer(imgs, tau_w, tau_a)?;
+            hits += self.accuracy(&out.logits, labels) * labels.len() as f64;
+            total += labels.len();
+            for i in 0..l {
+                s_w[i] += out.s_w[i] as f64;
+                s_a[i] += out.s_a[i] as f64;
+                dens[i] += out.pair_density[i] as f64;
+            }
+        }
+        let k = n_batches as f64;
+        for i in 0..l {
+            s_w[i] /= k;
+            s_a[i] /= k;
+            dens[i] /= k;
+        }
+        Ok(EvalResult { accuracy: hits / total as f64, s_w, s_a, pair_density: dens, images: total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifacts::available;
+    use super::*;
+
+    fn runtime() -> Option<ModelRuntime> {
+        let dir = default_dir();
+        if !available(&dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(ModelRuntime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_and_matches_golden_accuracy() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.n_layers();
+        let out = rt.evaluate(&vec![0.0; l], &vec![0.0; l], 1).unwrap();
+        let want = rt.meta.golden.acc_tau0;
+        assert!(
+            (out.accuracy - want).abs() < 1e-6,
+            "batch-0 accuracy {} vs golden {want}",
+            out.accuracy
+        );
+    }
+
+    #[test]
+    fn golden_logits_match_python() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.n_layers();
+        let tau = vec![rt.meta.golden.tau_ref; l];
+        let (imgs, _) = rt.data.batch(0, rt.meta.export_batch);
+        let out = rt.infer(imgs, &tau, &tau).unwrap();
+        for (i, &want) in rt.meta.golden.logits_first8_tau_ref.iter().enumerate() {
+            let got = out.logits[i] as f64;
+            assert!(
+                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                "logit {i}: rust {got} vs python {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn golden_sparsity_counters_match_python() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.n_layers();
+        let tau = vec![rt.meta.golden.tau_ref; l];
+        let (imgs, _) = rt.data.batch(0, rt.meta.export_batch);
+        let out = rt.infer(imgs, &tau, &tau).unwrap();
+        for i in 0..l {
+            let sw = out.s_w[i] as f64;
+            let sa = out.s_a[i] as f64;
+            let pd = out.pair_density[i] as f64;
+            assert!((sw - rt.meta.golden.s_w_tau_ref[i]).abs() < 1e-5, "s_w[{i}]");
+            assert!((sa - rt.meta.golden.s_a_tau_ref[i]).abs() < 1e-5, "s_a[{i}]");
+            assert!((pd - rt.meta.golden.pair_density_tau_ref[i]).abs() < 1e-5, "pd[{i}]");
+        }
+    }
+
+    #[test]
+    fn thresholds_increase_sparsity_and_reduce_density() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.n_layers();
+        let lo = rt.evaluate(&vec![0.0; l], &vec![0.0; l], 1).unwrap();
+        let hi = rt.evaluate(&vec![0.1; l], &vec![0.1; l], 1).unwrap();
+        for i in 0..l {
+            assert!(hi.s_w[i] >= lo.s_w[i] - 1e-9, "layer {i}");
+            assert!(hi.pair_density[i] <= lo.pair_density[i] + 1e-9, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn extreme_pruning_destroys_accuracy() {
+        let Some(rt) = runtime() else { return };
+        let l = rt.n_layers();
+        let big = rt.evaluate(&vec![10.0; l], &vec![10.0; l], 1).unwrap();
+        assert!(big.accuracy < 0.4, "pruning everything kept acc {}", big.accuracy);
+        // everything below threshold: density collapses
+        assert!(big.pair_density.iter().all(|&d| d < 0.05));
+    }
+
+    #[test]
+    fn measured_transfer_curve_predicts_measured_sparsity() {
+        // the meta.json quantile curves must agree with what the compiled
+        // model actually measures — this ties the sparsity substrate to
+        // the PJRT path
+        let Some(rt) = runtime() else { return };
+        let sp = rt.meta.measured_sparsity();
+        let l = rt.n_layers();
+        let tau = 0.05;
+        let out = rt.evaluate(&vec![tau; l], &vec![0.0; l], 1).unwrap();
+        for i in 0..l {
+            let predicted = sp.layers[i].weight_curve.sparsity_at(tau);
+            let measured = out.s_w[i];
+            assert!(
+                (predicted - measured).abs() < 0.06,
+                "layer {i}: curve {predicted} vs measured {measured}"
+            );
+        }
+    }
+}

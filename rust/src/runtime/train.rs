@@ -5,14 +5,24 @@
 //! gradient (the keep-mask is d/dw of the clip), so running steps after
 //! one-shot pruning is masked fine-tuning — accuracy recovery at fixed
 //! sparsity, entirely from Rust through PJRT.
+//!
+//! Like [`super::ModelRuntime`], the executor needs the `pjrt` build
+//! feature; without it [`TrainRuntime`] is a stub whose loader returns a
+//! [`RuntimeError`](super::RuntimeError) so callers can fall back cleanly.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use super::artifacts::{CalibData, Meta, Weights};
+#[cfg(feature = "pjrt")]
+use super::pjrt::f32_literal;
 
 /// Training-step executor holding mutable parameters.
+#[cfg(feature = "pjrt")]
 pub struct TrainRuntime {
     pub meta: Meta,
     pub data: CalibData,
@@ -22,6 +32,7 @@ pub struct TrainRuntime {
     batch: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainRuntime {
     pub fn load(dir: &Path) -> Result<TrainRuntime> {
         let meta = Meta::load(dir).map_err(anyhow::Error::msg)?;
@@ -53,7 +64,7 @@ impl TrainRuntime {
             [lo * self.data.img_elems..(lo + self.batch) * self.data.img_elems];
         let labels = &self.data.labels[lo..lo + self.batch];
 
-        let img_lit = super::f32_literal(
+        let img_lit = f32_literal(
             &[self.batch, m.img_size, m.img_size, m.img_channels],
             imgs,
         )?;
@@ -67,14 +78,14 @@ impl TrainRuntime {
         )?;
         let tw: Vec<f32> = tau_w.iter().map(|&v| v as f32).collect();
         let ta: Vec<f32> = tau_a.iter().map(|&v| v as f32).collect();
-        let tw_lit = super::f32_literal(&[m.num_layers], &tw)?;
-        let ta_lit = super::f32_literal(&[m.num_layers], &ta)?;
-        let lr_lit = super::f32_literal(&[], &[lr])?;
+        let tw_lit = f32_literal(&[m.num_layers], &tw)?;
+        let ta_lit = f32_literal(&[m.num_layers], &ta)?;
+        let lr_lit = f32_literal(&[], &[lr])?;
 
         let mut param_lits = Vec::with_capacity(m.num_layers * 2);
         for (l, (w, bias)) in m.layers.iter().zip(&self.params) {
-            param_lits.push(super::f32_literal(&l.weight_shape, w)?);
-            param_lits.push(super::f32_literal(&[l.b_size], bias)?);
+            param_lits.push(f32_literal(&l.weight_shape, w)?);
+            param_lits.push(f32_literal(&[l.b_size], bias)?);
         }
         let mut args: Vec<&xla::Literal> = vec![&img_lit, &lbl_lit];
         for p in &param_lits {
@@ -105,13 +116,52 @@ impl TrainRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn meta_train_batch(dir: &Path) -> Result<usize> {
     let text = std::fs::read_to_string(dir.join("meta.json"))?;
     let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e:?}"))?;
     Ok(j.req("train_batch").as_usize().unwrap())
 }
 
-#[cfg(test)]
+/// Stub training runtime for builds without the `pjrt` feature: the loader
+/// always fails with a clear error, so no value of this type exists at run
+/// time (see [`super::ModelRuntime`]'s stub for the pattern).
+#[cfg(not(feature = "pjrt"))]
+pub struct TrainRuntime {
+    pub meta: super::Meta,
+    pub data: super::CalibData,
+    /// current (w, b) per layer — updated by every step
+    pub params: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl TrainRuntime {
+    /// Always fails: the executor is not compiled in.
+    pub fn load(_dir: &std::path::Path) -> Result<TrainRuntime, super::RuntimeError> {
+        Err(super::RuntimeError(
+            "masked fine-tuning needs the `pjrt` build feature (vendored `xla` \
+             + `anyhow`); rebuild with `cargo build --features pjrt`"
+                .to_string(),
+        ))
+    }
+
+    pub fn batch(&self) -> usize {
+        0
+    }
+
+    /// Unreachable in practice (no stub value can be constructed).
+    pub fn step(
+        &mut self,
+        _b: usize,
+        _tau_w: &[f64],
+        _tau_a: &[f64],
+        _lr: f32,
+    ) -> Result<f32, super::RuntimeError> {
+        Err(super::RuntimeError("built without the `pjrt` feature".to_string()))
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::super::artifacts::{available, default_dir};
     use super::*;
