@@ -13,7 +13,9 @@
 //! Flags: `--iters N --batches K --seed S --journal results/e2e.csv`
 
 use hass::arch::networks;
-use hass::coordinator::{search, EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode};
+use hass::coordinator::{
+    search, search_sharded, EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode,
+};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::runtime::ModelRuntime;
@@ -29,6 +31,12 @@ fn main() {
         .flag("no-cache", "disable the DSE design cache")
         .opt("seed", "0", "search seed")
         .opt("device", "u250", "device budget")
+        .opt(
+            "devices",
+            "",
+            "comma-separated budgets for a sharded multi-device search \
+             (e.g. u250,7v690t,stratix10; overrides --device)",
+        )
         .opt("journal", "results/e2e_search.csv", "journal CSV path");
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match cli.parse_from(&args) {
@@ -56,7 +64,6 @@ fn main() {
 
     // ---- search ------------------------------------------------------
     let net = networks::calibnet();
-    let dev = DeviceBudget::by_name(p.get("device")).expect("device");
     let rm = ResourceModel::default();
     let cfg = SearchConfig {
         iterations: p.get_usize("iters"),
@@ -70,6 +77,48 @@ fn main() {
         ..Default::default()
     };
     let ev = MeasuredEvaluator::new(rt, p.get_usize("batches"));
+
+    // ---- sharded multi-device sweep (--devices a,b,...) --------------
+    let devices = DeviceBudget::parse_list(p.get("devices")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if devices.len() >= 2 {
+        let t0 = std::time::Instant::now();
+        let r = search_sharded(&ev, &net, &rm, &devices, &cfg);
+        println!(
+            "[e2e] sharded search: {} devices x {} iterations in {:?} | \
+             shared cache {} entries, {} hit / {} miss",
+            r.stats.devices,
+            cfg.iterations,
+            t0.elapsed(),
+            r.stats.cache_entries,
+            r.stats.cache_hits,
+            r.stats.cache_misses
+        );
+        print!("{}", r.summary_table().to_markdown());
+        println!("[e2e] cross-device pareto front:");
+        print!("{}", r.pareto_table().to_markdown());
+        let journal = p.get("journal");
+        if !journal.is_empty() {
+            match r.write_journals(journal) {
+                Ok(paths) => {
+                    for path in paths {
+                        println!("[e2e] journal -> {path}");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[e2e] failed to write journals: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        return;
+    }
+    let dev = devices
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| DeviceBudget::by_name(p.get("device")).expect("device"));
     let t0 = std::time::Instant::now();
     let result = search(&ev, &net, &rm, &dev, &cfg);
     let wall = t0.elapsed();

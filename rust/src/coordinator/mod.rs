@@ -38,8 +38,9 @@ use crate::sparsity::{NetworkSparsity, SparsityPoint};
 use crate::util::clampf;
 
 pub use crate::engine::{
-    CandidateEvaluator, Engine, EngineConfig, EngineStats, EvalPoint, SearchConfig,
-    SearchMode, SearchRecord, SearchResult,
+    CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
+    EngineStats, EvalPoint, ParetoPoint, SearchConfig, SearchMode, SearchRecord,
+    SearchResult, ShardedEngine, ShardedSearchResult, ShardedStats,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -138,6 +139,20 @@ pub fn search(
     cfg: &SearchConfig,
 ) -> SearchResult {
     Engine::new(evaluator, target, rm, dev).search(cfg)
+}
+
+/// Run the HASS search sharded over several device budgets at once: one
+/// evaluator, one seed, N devices advancing in lockstep generations and
+/// sharing one design cache.  Each device's journal is bit-identical to a
+/// standalone [`search`] on that device; see [`crate::engine::shard`].
+pub fn search_sharded(
+    evaluator: &dyn Evaluate,
+    target: &Network,
+    rm: &ResourceModel,
+    devices: &[DeviceBudget],
+    cfg: &SearchConfig,
+) -> ShardedSearchResult {
+    ShardedEngine::new(evaluator, target, rm, devices).search(cfg)
 }
 
 #[cfg(test)]

@@ -1,11 +1,23 @@
-//! Memoization of DSE pricings.
+//! Memoization of DSE pricings, shared across devices and search shards.
 //!
 //! `dse::explore` dominates the cost of a search iteration on the
 //! surrogate path (and is the entire hardware-pricing cost on the measured
 //! path).  It is a pure function of (network, sparsity points, resource
-//! model, device), and within one search the network / resource model /
-//! device are fixed — so a [`DesignCache`] keyed by the sparsity points
-//! plus a device fingerprint makes repeated pricings O(1).
+//! model, DSE config, device) — so a [`DesignCache`] keyed by
+//! `(pricing-context fingerprint, sparsity points)` makes repeated
+//! pricings O(1), where the context fingerprint covers *all* of those
+//! inputs except the points themselves (see [`pricing_fingerprint`]).
+//!
+//! Since the multi-device sharding work the cache is a **multi-fingerprint
+//! store**: one `DesignCache` serves any number of [`DeviceBudget`]s (and
+//! pricing configurations) at once.  Each device is
+//! [`register`](DesignCache::register)ed under its context, yielding a
+//! [`DeviceCacheHandle`] that carries the FNV-1a fingerprint and its
+//! private hit/miss counters; entries of different devices — or the same
+//! device under different configs — can never collide because the
+//! fingerprint is part of every key.  The map is **lock-striped** (keys
+//! are spread over [`STRIPES`] independent mutexes by key hash) so shards
+//! pricing different operating points rarely contend on the same lock.
 //!
 //! Exact f64 keys alone would almost never collide between TPE proposals;
 //! the engine therefore *snaps* operating points to a dyadic grid with
@@ -14,14 +26,31 @@
 //! results — a cache hit returns bit-for-bit what recomputation would.
 //! `quant_bits = 0` disables snapping (exact keys), which is the engine
 //! default so the serial path reproduces the pre-engine seed behavior.
+//!
+//! # Single-compute contract
+//!
+//! [`get_or_compute`](DesignCache::get_or_compute) runs `compute` **at
+//! most once per key**, even under contention.  A miss installs an empty
+//! [`OnceLock`] cell under the stripe lock and fills it *outside* the
+//! lock; racing threads find the in-flight cell, count a hit, and block on
+//! the cell instead of re-pricing.  (The pre-shard implementation let both
+//! racers compute — benign for determinism, but it doubled the most
+//! expensive call in the hot path exactly when the optimizer converges and
+//! shards pile onto the same keys.)
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::dse::NetworkDesign;
+use crate::arch::Network;
+use crate::dse::{DseConfig, NetworkDesign};
 use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
 use crate::sparsity::SparsityPoint;
+
+/// Number of independent map shards (locks) inside one [`DesignCache`].
+pub const STRIPES: usize = 16;
 
 /// Snap each operating point to multiples of `2^-bits` (0 = identity).
 ///
@@ -54,8 +83,8 @@ fn point_bits(points: &[SparsityPoint]) -> Vec<(u64, u64)> {
     points.iter().map(|p| (p.s_w.to_bits(), p.s_a.to_bits())).collect()
 }
 
-/// FNV-1a fingerprint of the device budget (name + resource counts).
-fn device_fingerprint(dev: &DeviceBudget) -> u64 {
+/// FNV-1a fingerprint of a device budget (name + resource counts).
+pub(crate) fn device_fingerprint(dev: &DeviceBudget) -> u64 {
     fn mix(mut h: u64, v: u64) -> u64 {
         for b in v.to_le_bytes() {
             h ^= b as u64;
@@ -76,68 +105,202 @@ fn device_fingerprint(dev: &DeviceBudget) -> u64 {
     h
 }
 
-/// Thread-safe memo table for [`crate::dse::explore`] results.
-///
-/// Shared by reference across a generation's evaluation threads; lookups
-/// and inserts take a short-lived lock, the pricing itself runs unlocked
-/// (two threads racing on the same key both compute the same deterministic
-/// design, so the duplicate work is benign and rare).
-pub struct DesignCache {
-    device: u64,
-    map: Mutex<HashMap<Key, NetworkDesign>>,
+/// FNV-1a fingerprint of the **full pricing context**: the device budget
+/// plus the Debug forms of (network, resource model, DSE config) —
+/// everything besides the operating points that `dse::explore` output
+/// depends on.  Folding the whole context into the key is what makes
+/// cross-search cache reuse safe: a warm cache queried under a different
+/// network / resource model / DSE config *misses* (and re-prices) instead
+/// of silently serving designs explored under the old configuration.
+pub(crate) fn pricing_fingerprint(
+    dev: &DeviceBudget,
+    net: &Network,
+    rm: &ResourceModel,
+    dse: &DseConfig,
+) -> u64 {
+    let mut h = device_fingerprint(dev);
+    // Debug formatting recursively covers every field (f64s print with
+    // shortest-roundtrip precision, so distinct values stay distinct)
+    for s in [format!("{net:?}"), format!("{rm:?}"), format!("{dse:?}")] {
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Per-device cache traffic counters (shared with the owning cache).
+#[derive(Debug, Default)]
+struct DevStats {
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
+/// A device's view into a shared [`DesignCache`]: its pricing-context
+/// fingerprint plus its private hit/miss counters.  Obtained from
+/// [`DesignCache::register`]; cloning yields a handle to the *same*
+/// counters, and re-registering the same device under the same context
+/// returns the same counters too, so stats survive across searches that
+/// share one cache.
+#[derive(Clone, Debug)]
+pub struct DeviceCacheHandle {
+    fingerprint: u64,
+    stats: Arc<DevStats>,
+}
+
+impl DeviceCacheHandle {
+    /// [`pricing_fingerprint`] baked into every key of this device.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Lookups served from the cache (including waits on in-flight
+    /// computations) since this device was first registered.
+    pub fn hits(&self) -> u64 {
+        self.stats.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to price from scratch.
+    pub fn misses(&self) -> u64 {
+        self.stats.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Thread-safe, lock-striped, multi-device memo table for
+/// [`crate::dse::explore`] results.
+///
+/// Shared by reference across every shard's evaluation threads; lookups
+/// take one short-lived stripe lock, the pricing itself runs unlocked
+/// behind a per-key [`OnceLock`] so each key is computed exactly once (see
+/// the module docs).
+pub struct DesignCache {
+    stripes: Vec<Mutex<HashMap<Key, Arc<OnceLock<NetworkDesign>>>>>,
+    devices: Mutex<HashMap<u64, Arc<DevStats>>>,
+}
+
+impl Default for DesignCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl DesignCache {
-    pub fn new(dev: &DeviceBudget) -> Self {
+    /// An empty store, ready to serve any number of devices.
+    pub fn new() -> Self {
         DesignCache {
-            device: device_fingerprint(dev),
-            map: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            devices: Mutex::new(HashMap::new()),
         }
     }
 
-    fn key(&self, points: &[SparsityPoint]) -> Key {
-        Key { device: self.device, points: point_bits(points) }
+    /// Register a device under a pricing context (network, resource
+    /// model, DSE config), returning its handle.  Idempotent: the same
+    /// budget under the same context returns a handle to the same
+    /// counters; *any* context change re-keys the device so stale designs
+    /// can never cross configurations.
+    pub fn register(
+        &self,
+        dev: &DeviceBudget,
+        net: &Network,
+        rm: &ResourceModel,
+        dse: &DseConfig,
+    ) -> DeviceCacheHandle {
+        let fp = pricing_fingerprint(dev, net, rm, dse);
+        let stats = self
+            .devices
+            .lock()
+            .unwrap()
+            .entry(fp)
+            .or_insert_with(|| Arc::new(DevStats::default()))
+            .clone();
+        DeviceCacheHandle { fingerprint: fp, stats }
     }
 
-    /// Return the cached design for `points`, or price via `compute` and
-    /// remember the result.  `points` should already be snapped (see
-    /// [`quantize_points`]); the key is their exact bit pattern.
-    pub fn get_or_compute<F>(&self, points: &[SparsityPoint], compute: F) -> NetworkDesign
+    /// Number of distinct (device, pricing context) registrations so far.
+    pub fn device_count(&self) -> usize {
+        self.devices.lock().unwrap().len()
+    }
+
+    fn key(handle: &DeviceCacheHandle, points: &[SparsityPoint]) -> Key {
+        Key { device: handle.fingerprint, points: point_bits(points) }
+    }
+
+    fn stripe_of(&self, key: &Key) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    /// Return the cached design of `points` on the handle's device, or
+    /// price via `compute` and remember the result.  `points` should
+    /// already be snapped (see [`quantize_points`]); the key is their
+    /// exact bit pattern.  `compute` runs at most once per key across all
+    /// threads; late arrivals block on the in-flight cell.
+    pub fn get_or_compute<F>(
+        &self,
+        handle: &DeviceCacheHandle,
+        points: &[SparsityPoint],
+        compute: F,
+    ) -> NetworkDesign
     where
         F: FnOnce() -> NetworkDesign,
     {
-        let key = self.key(points);
-        if let Some(d) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return d.clone();
+        let key = Self::key(handle, points);
+        let stripe = &self.stripes[self.stripe_of(&key)];
+        let (cell, fresh) = {
+            let mut map = stripe.lock().unwrap();
+            match map.get(&key) {
+                Some(c) => (c.clone(), false),
+                None => {
+                    let c: Arc<OnceLock<NetworkDesign>> = Arc::new(OnceLock::new());
+                    map.insert(key, c.clone());
+                    (c, true)
+                }
+            }
+        };
+        if fresh {
+            handle.stats.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            handle.stats.hits.fetch_add(1, Ordering::Relaxed);
         }
-        let d = compute();
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map.lock().unwrap().insert(key, d.clone());
-        d
+        // OnceLock guarantees a single execution even if the placeholder
+        // inserter loses the race to reach get_or_init first.
+        cell.get_or_init(compute).clone()
+    }
+
+    /// Counter-free lookup, the read half of [`insert`](Self::insert):
+    /// used for reference designs (e.g. the dense pricing a warm cache
+    /// already holds) that must not skew hit/miss accounting.  An entry
+    /// still being computed by another thread reads as absent — callers
+    /// recompute, which is benign because pricing is deterministic.
+    pub fn get(
+        &self,
+        handle: &DeviceCacheHandle,
+        points: &[SparsityPoint],
+    ) -> Option<NetworkDesign> {
+        let key = Self::key(handle, points);
+        let cell = self.stripes[self.stripe_of(&key)].lock().unwrap().get(&key).cloned();
+        cell.and_then(|c| c.get().cloned())
     }
 
     /// Pre-seed an entry (e.g. the dense reference design) without
     /// touching the hit/miss counters.
-    pub fn insert(&self, points: &[SparsityPoint], design: NetworkDesign) {
-        let key = self.key(points);
-        self.map.lock().unwrap().insert(key, design);
+    pub fn insert(
+        &self,
+        handle: &DeviceCacheHandle,
+        points: &[SparsityPoint],
+        design: NetworkDesign,
+    ) {
+        let key = Self::key(handle, points);
+        let stripe = &self.stripes[self.stripe_of(&key)];
+        stripe.lock().unwrap().insert(key, Arc::new(OnceLock::from(design)));
     }
 
-    pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
-    }
-
-    pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
-    }
-
+    /// Total entries across all stripes and devices (including in-flight
+    /// cells).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -149,6 +312,10 @@ impl DesignCache {
 mod tests {
     use super::*;
     use crate::hardware::resources::Resources;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
 
     fn design(dsp: u64) -> NetworkDesign {
         NetworkDesign {
@@ -162,34 +329,50 @@ mod tests {
         vals.iter().map(|&(s_w, s_a)| SparsityPoint { s_w, s_a }).collect()
     }
 
+    /// Register under a fixed test pricing context (calibnet + defaults).
+    fn reg(cache: &DesignCache, dev: &DeviceBudget) -> DeviceCacheHandle {
+        cache.register(
+            dev,
+            &crate::arch::networks::calibnet(),
+            &ResourceModel::default(),
+            &DseConfig::default(),
+        )
+    }
+
+    fn u250_cache() -> (DesignCache, DeviceCacheHandle) {
+        let cache = DesignCache::new();
+        let h = reg(&cache, &DeviceBudget::u250());
+        (cache, h)
+    }
+
     #[test]
     fn miss_then_hit_counts_and_returns_cached_value() {
-        let cache = DesignCache::new(&DeviceBudget::u250());
+        let (cache, h) = u250_cache();
         let p = pts(&[(0.5, 0.25), (0.125, 0.0)]);
         let mut computes = 0;
-        let a = cache.get_or_compute(&p, || {
+        let a = cache.get_or_compute(&h, &p, || {
             computes += 1;
             design(42)
         });
-        let b = cache.get_or_compute(&p, || {
+        let b = cache.get_or_compute(&h, &p, || {
             computes += 1;
             design(999) // must not be called
         });
         assert_eq!(computes, 1);
         assert_eq!(a.resources.dsp, 42);
         assert_eq!(b.resources.dsp, 42);
-        assert_eq!(cache.hits(), 1);
-        assert_eq!(cache.misses(), 1);
+        assert_eq!(h.hits(), 1);
+        assert_eq!(h.misses(), 1);
         assert_eq!(cache.len(), 1);
     }
 
     #[test]
     fn distinct_points_are_distinct_entries() {
-        let cache = DesignCache::new(&DeviceBudget::u250());
-        cache.get_or_compute(&pts(&[(0.5, 0.5)]), || design(1));
-        cache.get_or_compute(&pts(&[(0.5, 0.5000001)]), || design(2));
-        assert_eq!(cache.misses(), 2);
-        assert_eq!(cache.hits(), 0);
+        let (cache, h) = u250_cache();
+        cache.get_or_compute(&h, &pts(&[(0.5, 0.5)]), || design(1));
+        cache.get_or_compute(&h, &pts(&[(0.5, 0.5000001)]), || design(2));
+        assert_eq!(h.misses(), 2);
+        assert_eq!(h.hits(), 0);
         assert_eq!(cache.len(), 2);
     }
 
@@ -225,48 +408,231 @@ mod tests {
         }
     }
 
+    // ---- property tests (util::prop) --------------------------------
+
     #[test]
-    fn preseeded_entry_hits_without_miss() {
-        let cache = DesignCache::new(&DeviceBudget::u250());
-        let p = pts(&[(0.0, 0.0)]);
-        cache.insert(&p, design(7));
-        let d = cache.get_or_compute(&p, || design(1000));
-        assert_eq!(d.resources.dsp, 7);
-        assert_eq!(cache.hits(), 1);
-        assert_eq!(cache.misses(), 0);
+    fn prop_quantize_is_idempotent() {
+        // snapped points are exact grid multiples, so snapping again is a
+        // bitwise no-op (round(int) == int; the grid is a power of two)
+        forall(200, 0xA1, |rng| {
+            let bits = [4u32, 8, 12, 16, 24][rng.below(5)];
+            let p: Vec<SparsityPoint> = (0..rng.below(6) + 1)
+                .map(|_| SparsityPoint { s_w: rng.f64(), s_a: rng.f64() })
+                .collect();
+            let q1 = quantize_points(&p, bits);
+            let q2 = quantize_points(&q1, bits);
+            for (a, b) in q1.iter().zip(&q2) {
+                assert_eq!(a.s_w.to_bits(), b.s_w.to_bits(), "s_w not idempotent");
+                assert_eq!(a.s_a.to_bits(), b.s_a.to_bits(), "s_a not idempotent");
+            }
+        });
     }
 
     #[test]
-    fn different_devices_never_share_entries() {
-        let u250 = DesignCache::new(&DeviceBudget::u250());
-        let small = DeviceBudget {
-            name: "small".into(),
-            dsp: 64,
-            lut: 200_000,
-            bram18k: 600,
-            uram: 64,
-            freq_mhz: 250.0,
-        };
-        assert_ne!(u250.device, DesignCache::new(&small).device);
+    fn prop_quantize_is_monotone() {
+        forall(200, 0xA2, |rng| {
+            let bits = [4u32, 8, 12, 16][rng.below(4)];
+            let (a, b) = (rng.f64(), rng.f64());
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let q = quantize_points(
+                &pts(&[(lo, lo), (hi, hi)]),
+                bits,
+            );
+            assert!(q[0].s_w <= q[1].s_w, "rounding must preserve order");
+            assert!(q[0].s_a <= q[1].s_a, "rounding must preserve order");
+        });
+    }
+
+    #[test]
+    fn prop_quantize_error_within_half_grid_step_and_unit_range() {
+        forall(200, 0xA3, |rng| {
+            let bits = 1 + rng.below(32) as u32;
+            let step = 1.0 / (1u64 << bits.min(52)) as f64;
+            let p = SparsityPoint { s_w: rng.f64(), s_a: rng.f64() };
+            let q = &quantize_points(&[p], bits)[0];
+            assert!((q.s_w - p.s_w).abs() <= step / 2.0 + 1e-12);
+            assert!((q.s_a - p.s_a).abs() <= step / 2.0 + 1e-12);
+            assert!((0.0..=1.0).contains(&q.s_w));
+            assert!((0.0..=1.0).contains(&q.s_a));
+        });
+    }
+
+    /// Random perturbations of a device budget must change the fingerprint
+    /// — fingerprints are what keep per-device cache keys disjoint.
+    #[test]
+    fn prop_distinct_device_budgets_never_share_a_fingerprint() {
+        forall(200, 0xA4, |rng| {
+            let base = DeviceBudget {
+                name: "dev".into(),
+                dsp: 1 + rng.below(20_000) as u64,
+                lut: 1 + rng.below(2_000_000) as u64,
+                bram18k: 1 + rng.below(10_000) as u64,
+                uram: rng.below(2_000) as u64,
+                freq_mhz: 50.0 + rng.f64() * 500.0,
+            };
+            let mut other = base.clone();
+            match rng.below(6) {
+                0 => other.name.push('x'),
+                1 => other.dsp += 1,
+                2 => other.lut += 1,
+                3 => other.bram18k += 1,
+                4 => other.uram += 1,
+                _ => other.freq_mhz += 0.125,
+            }
+            assert_ne!(base, other, "perturbation must change the budget");
+            assert_ne!(
+                device_fingerprint(&base),
+                device_fingerprint(&other),
+                "distinct budgets collided: {base:?} vs {other:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn registered_devices_get_disjoint_key_spaces() {
+        let cache = DesignCache::new();
+        let h_u250 = reg(&cache, &DeviceBudget::u250());
+        let h_v7 = reg(&cache, &DeviceBudget::v7_690t());
+        assert_ne!(h_u250.fingerprint(), h_v7.fingerprint());
+        // identical points on two devices: two entries, zero cross-hits
+        let p = pts(&[(0.5, 0.5)]);
+        cache.get_or_compute(&h_u250, &p, || design(1));
+        cache.get_or_compute(&h_v7, &p, || design(2));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(h_u250.misses(), 1);
+        assert_eq!(h_v7.misses(), 1);
+        assert_eq!(h_u250.hits() + h_v7.hits(), 0);
+        // and each device still sees its own design
+        assert_eq!(cache.get_or_compute(&h_u250, &p, || design(9)).resources.dsp, 1);
+        assert_eq!(cache.get_or_compute(&h_v7, &p, || design(9)).resources.dsp, 2);
+        assert_eq!(cache.device_count(), 2);
+    }
+
+    #[test]
+    fn reregistering_a_device_shares_its_counters() {
+        let cache = DesignCache::new();
+        let h1 = reg(&cache, &DeviceBudget::u250());
+        cache.get_or_compute(&h1, &pts(&[(0.1, 0.2)]), || design(3));
+        let h2 = reg(&cache, &DeviceBudget::u250());
+        assert_eq!(h2.misses(), 1, "stats must survive re-registration");
+        cache.get_or_compute(&h2, &pts(&[(0.1, 0.2)]), || design(4));
+        assert_eq!(h1.hits(), 1);
+        assert_eq!(cache.device_count(), 1);
+    }
+
+    /// A warm cache queried under a different pricing context (here: a
+    /// different DSE config / network) must miss, never serve the old
+    /// configuration's designs.
+    #[test]
+    fn different_pricing_contexts_never_share_entries() {
+        let cache = DesignCache::new();
+        let dev = DeviceBudget::u250();
+        let net = crate::arch::networks::calibnet();
+        let rm = ResourceModel::default();
+        let h1 = cache.register(&dev, &net, &rm, &DseConfig::default());
+        let p = pts(&[(0.5, 0.5)]);
+        cache.get_or_compute(&h1, &p, || design(1));
+        // same device, different DSE config: new key space
+        let dse2 = DseConfig { max_iters: 1_500, ..DseConfig::default() };
+        let h2 = cache.register(&dev, &net, &rm, &dse2);
+        assert_ne!(h1.fingerprint(), h2.fingerprint());
+        assert!(cache.get(&h2, &p).is_none(), "stale design crossed configs");
+        // same device, different network: new key space too
+        let net2 = crate::arch::networks::resnet18();
+        let h3 = cache.register(&dev, &net2, &rm, &DseConfig::default());
+        assert_ne!(h1.fingerprint(), h3.fingerprint());
+        assert!(cache.get(&h3, &p).is_none());
+        assert_eq!(cache.device_count(), 3);
+    }
+
+    #[test]
+    fn get_is_counter_free_and_sees_only_completed_entries() {
+        let (cache, h) = u250_cache();
+        let p = pts(&[(0.5, 0.5)]);
+        assert!(cache.get(&h, &p).is_none());
+        cache.insert(&h, &p, design(11));
+        assert_eq!(cache.get(&h, &p).unwrap().resources.dsp, 11);
+        // neither the miss-shaped nor the hit-shaped lookup counted
+        assert_eq!(h.hits() + h.misses(), 0);
+        // and a computed entry is visible to `get` too
+        let q = pts(&[(0.25, 0.125)]);
+        cache.get_or_compute(&h, &q, || design(12));
+        assert_eq!(cache.get(&h, &q).unwrap().resources.dsp, 12);
+    }
+
+    #[test]
+    fn preseeded_entry_hits_without_miss() {
+        let (cache, h) = u250_cache();
+        let p = pts(&[(0.0, 0.0)]);
+        cache.insert(&h, &p, design(7));
+        let d = cache.get_or_compute(&h, &p, || design(1000));
+        assert_eq!(d.resources.dsp, 7);
+        assert_eq!(h.hits(), 1);
+        assert_eq!(h.misses(), 0);
+    }
+
+    /// Regression for the double-compute race: many threads missing the
+    /// same key simultaneously must still run `compute` exactly once.
+    #[test]
+    fn contended_miss_computes_exactly_once() {
+        const THREADS: usize = 8;
+        let (cache, h) = u250_cache();
+        let p = pts(&[(0.25, 0.75)]);
+        let computes = AtomicUsize::new(0);
+        let gate = Barrier::new(THREADS);
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    gate.wait(); // maximize overlap on the first lookup
+                    let d = cache.get_or_compute(&h, &p, || {
+                        computes.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window: late arrivals must block
+                        // on the in-flight cell, not recompute
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        design(5)
+                    });
+                    assert_eq!(d.resources.dsp, 5);
+                });
+            }
+        });
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "duplicate compute");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(h.misses(), 1, "exactly one thread may count the miss");
+        assert_eq!(h.hits(), (THREADS - 1) as u64);
     }
 
     #[test]
     fn concurrent_lookups_are_consistent() {
-        let cache = DesignCache::new(&DeviceBudget::u250());
+        let (cache, h) = u250_cache();
         let p = pts(&[(0.25, 0.75)]);
         std::thread::scope(|s| {
             for _ in 0..4 {
                 s.spawn(|| {
                     for _ in 0..50 {
-                        let d = cache.get_or_compute(&p, || design(5));
+                        let d = cache.get_or_compute(&h, &p, || design(5));
                         assert_eq!(d.resources.dsp, 5);
                     }
                 });
             }
         });
         assert_eq!(cache.len(), 1);
-        // every lookup either hit or missed; at least the first missed
-        assert_eq!(cache.hits() + cache.misses(), 200);
-        assert!(cache.misses() >= 1);
+        // every lookup either hit or missed; exactly the first missed
+        assert_eq!(h.hits() + h.misses(), 200);
+        assert_eq!(h.misses(), 1);
+    }
+
+    #[test]
+    fn stripes_spread_entries() {
+        let (cache, h) = u250_cache();
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let p = pts(&[(rng.f64(), rng.f64()), (rng.f64(), rng.f64())]);
+            cache.get_or_compute(&h, &p, || design(1));
+        }
+        assert_eq!(cache.len(), 200);
+        // with 200 random keys over 16 stripes, no stripe should hold more
+        // than half of everything (a loose check that striping is active)
+        let max_stripe = cache.stripes.iter().map(|s| s.lock().unwrap().len()).max().unwrap();
+        assert!(max_stripe < 100, "stripe imbalance: {max_stripe}/200");
     }
 }

@@ -19,9 +19,26 @@
 //!   in candidate order, so results are **bit-for-bit independent of the
 //!   thread count**.
 //! * **Memoized pricing** — [`DesignCache`] (see [`cache`]) memoizes
-//!   `dse::explore` keyed by (device, quantized operating points).
-//!   Quantization is applied whether or not the cache is on, so the cache
-//!   can **never** change results either.
+//!   `dse::explore` keyed by (device fingerprint, quantized operating
+//!   points).  Quantization is applied whether or not the cache is on, so
+//!   the cache can **never** change results either.
+//!
+//! # Multi-device sharding (`shard`)
+//!
+//! HASS's central claim is that each device geometry prices the same
+//! sparsity point differently — Table II / Fig. 6 comparisons sweep one
+//! sparsity frontier across several devices.  [`ShardedEngine`] (see
+//! [`shard`]) runs that sweep as **one search over N device shards**:
+//! every generation, each shard proposes its own TPE batch (seeded
+//! identically to a standalone run), the union of `(device, candidate)`
+//! work items is evaluated by one scoped thread pool into index-addressed
+//! slots, and each shard reduces its slice in candidate order.  All shards
+//! share one multi-fingerprint [`DesignCache`], so pricings persist across
+//! shards and across repeated searches on the same cache, with per-device
+//! hit/miss accounting.  [`Engine::search`] is now the single-shard
+//! special case of this machinery — which is exactly what makes the
+//! sharded/standalone determinism contract structural rather than
+//! incidental.
 //!
 //! # Determinism contract
 //!
@@ -33,7 +50,11 @@
 //! generation of k proposals is not the same sequence as k serial
 //! ask/tell rounds — the standard batched-BO trade-off), except during
 //! TPE's random-startup phase, where proposals are model-free and the
-//! candidate stream is identical for every batch size.
+//! candidate stream is identical for every batch size.  Sharding extends
+//! the contract across devices: for a fixed seed, each device's journal
+//! from a [`ShardedEngine`] run is bit-identical to a standalone
+//! [`Engine::search`] on that device alone, whatever the shard count,
+//! thread count, or cache sharing.
 //!
 //! `EngineConfig::default()` (batch 1, exact keys) reproduces the
 //! pre-engine serial loop exactly; [`crate::coordinator::search`] is now a
@@ -44,18 +65,21 @@
 
 pub mod cache;
 pub mod evaluator;
+pub mod shard;
 
-pub use cache::{quantize_points, DesignCache};
+pub use cache::{quantize_points, DesignCache, DeviceCacheHandle};
 pub use evaluator::{CandidateEvaluator, EvalPoint};
+pub use shard::{
+    DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,
+};
 
 use crate::arch::Network;
 use crate::dse::{explore, DseConfig};
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::metrics::Table;
-use crate::optim::tpe::{TpeConfig, TpeOptimizer};
+use crate::optim::tpe::TpeConfig;
 use crate::pruning::{self, PruningPlan};
-use crate::sparsity::SparsityPoint;
 
 /// Which metrics the objective sees (Fig. 5's two curves).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,7 +97,9 @@ pub struct EngineConfig {
     /// candidates proposed and evaluated per TPE generation (1 = the
     /// seed-serial ask/tell loop)
     pub batch: usize,
-    /// evaluation worker threads; 0 = min(batch, available parallelism)
+    /// evaluation worker threads; 0 = min(work items per generation,
+    /// available parallelism), where a sharded search has
+    /// `shards x batch` work items per generation
     pub threads: usize,
     /// memoize `dse::explore` results across candidates
     pub cache: bool,
@@ -95,10 +121,11 @@ impl EngineConfig {
         EngineConfig { batch: k.max(1), threads: 0, cache: true, quant_bits: 12 }
     }
 
-    fn resolved_threads(&self) -> usize {
+    /// Worker threads for a generation of `work` items (0 = auto).
+    pub(super) fn resolved_threads_for(&self, work: usize) -> usize {
         let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let t = if self.threads == 0 { hw } else { self.threads };
-        t.clamp(1, self.batch.max(1))
+        t.clamp(1, work.max(1))
     }
 }
 
@@ -160,15 +187,19 @@ pub struct EngineStats {
     pub evaluations: usize,
     /// TPE generations (== ceil(iterations / batch))
     pub generations: usize,
-    /// worker threads used per generation
+    /// worker threads of the evaluation pool (shared across shards in a
+    /// sharded search)
     pub threads: usize,
     pub batch: usize,
+    /// this device's design-cache hits during this run
     pub cache_hits: u64,
+    /// this device's design-cache misses during this run
     pub cache_misses: u64,
 }
 
 impl EngineStats {
-    /// Fraction of pricings served from the design cache.
+    /// Fraction of pricings served from the design cache (0.0 when the
+    /// cache saw no traffic at all, e.g. when it was disabled).
     pub fn cache_hit_rate(&self) -> f64 {
         let t = (self.cache_hits + self.cache_misses) as f64;
         if t == 0.0 {
@@ -235,15 +266,15 @@ impl SearchResult {
     }
 }
 
-/// Per-generation evaluation context shared (immutably) by the workers.
-struct EvalCtx<'a> {
-    cache: Option<&'a DesignCache>,
-    quant_bits: u32,
-    dense_ips: f64,
-    base_acc: f64,
-    mode: SearchMode,
-    lambda: [f64; 3],
-    dse: &'a DseConfig,
+/// Per-shard evaluation context shared (immutably) by the workers.
+pub(super) struct EvalCtx<'a> {
+    pub(super) cache: Option<(&'a DesignCache, &'a DeviceCacheHandle)>,
+    pub(super) quant_bits: u32,
+    pub(super) dense_ips: f64,
+    pub(super) base_acc: f64,
+    pub(super) mode: SearchMode,
+    pub(super) lambda: [f64; 3],
+    pub(super) dse: &'a DseConfig,
 }
 
 /// The batched search engine: an evaluator plus the fixed hardware-side
@@ -256,7 +287,7 @@ pub struct Engine<'a> {
 }
 
 /// Warm-start anchor plans: dense, mild, moderate uniform sparsity.
-const ANCHORS: [f64; 3] = [0.0, 0.15, 0.35];
+pub(super) const ANCHORS: [f64; 3] = [0.0, 0.15, 0.35];
 
 impl<'a> Engine<'a> {
     pub fn new(
@@ -269,122 +300,40 @@ impl<'a> Engine<'a> {
     }
 
     /// Run the HASS search (Eq. 6 objective, or software-only).
+    ///
+    /// This is the single-shard special case of [`ShardedEngine::search`]
+    /// — one device, a private design cache.
     pub fn search(&self, cfg: &SearchConfig) -> SearchResult {
-        let n = self.evaluator.sparsity_model().layers.len();
-        assert_eq!(
-            n,
-            self.target.compute_layers().len(),
-            "evaluator and target geometry disagree on layer count"
-        );
-        // dense reference design for throughput normalization (f_thr scale)
-        let dense_points =
-            quantize_points(&vec![SparsityPoint::DENSE; n], cfg.engine.quant_bits);
-        let dense = explore(self.target, &dense_points, self.rm, self.dev, &cfg.dse);
-        let dense_ips = dense.images_per_sec(self.dev).max(1e-9);
-        let base_acc = self.evaluator.base_accuracy().max(1e-9);
-
-        let cache = DesignCache::new(self.dev);
-        if cfg.engine.cache {
-            cache.insert(&dense_points, dense);
-        }
-        let batch = cfg.engine.batch.max(1);
-        let threads = cfg.engine.resolved_threads();
-        let ctx = EvalCtx {
-            cache: if cfg.engine.cache { Some(&cache) } else { None },
-            quant_bits: cfg.engine.quant_bits,
-            dense_ips,
-            base_acc,
-            mode: cfg.mode,
-            lambda: cfg.lambda,
-            dse: &cfg.dse,
-        };
-
-        let mut tpe = TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone());
-        let mut records: Vec<SearchRecord> = Vec::with_capacity(cfg.iterations);
-        let mut generations = 0usize;
-        while records.len() < cfg.iterations {
-            let start = records.len();
-            let g = batch.min(cfg.iterations - start);
-            // --- propose: anchors first, then a frozen-model TPE batch ---
-            let n_anchor =
-                if cfg.warm_start { 3usize.saturating_sub(start).min(g) } else { 0 };
-            let mut xs: Vec<Vec<f64>> = Vec::with_capacity(g);
-            for j in 0..n_anchor {
-                xs.push(vec![ANCHORS[start + j]; 2 * n]);
-            }
-            xs.extend(tpe.suggest_batch(g - n_anchor));
-            // --- evaluate the generation (possibly in parallel) ----------
-            let recs = self.run_generation(start, &xs, &ctx, threads);
-            // --- reduce in candidate order: journal + optimizer ----------
-            let mut observed = Vec::with_capacity(g);
-            for (x, rec) in xs.into_iter().zip(&recs) {
-                observed.push((x, rec.objective));
-            }
-            records.extend(recs);
-            tpe.observe_batch(observed);
-            generations += 1;
-        }
-        let best = records
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.objective.total_cmp(&b.1.objective))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        let stats = EngineStats {
-            evaluations: records.len(),
-            generations,
-            threads,
-            batch,
-            cache_hits: cache.hits(),
-            cache_misses: cache.misses(),
-        };
-        SearchResult { records, best, dense_images_per_sec: dense_ips, stats }
+        self.search_with_cache(cfg, &DesignCache::new())
     }
 
-    /// Evaluate one generation.  Workers write into index-addressed slots
-    /// (contiguous chunks per thread), so the returned order — and thus
-    /// every downstream reduction — is independent of scheduling.
-    fn run_generation(
-        &self,
-        base_iter: usize,
-        xs: &[Vec<f64>],
-        ctx: &EvalCtx<'_>,
-        threads: usize,
-    ) -> Vec<SearchRecord> {
-        let g = xs.len();
-        let threads = threads.clamp(1, g.max(1));
-        let mut out: Vec<Option<SearchRecord>> = Vec::new();
-        out.resize_with(g, || None);
-        if threads <= 1 {
-            for (j, (slot, x)) in out.iter_mut().zip(xs).enumerate() {
-                *slot = Some(self.evaluate_candidate(base_iter + j, x, ctx));
-            }
-        } else {
-            let chunk = g.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (ci, (xc, oc)) in
-                    xs.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
-                {
-                    let off = base_iter + ci * chunk;
-                    s.spawn(move || {
-                        for (j, (slot, x)) in oc.iter_mut().zip(xc).enumerate() {
-                            *slot = Some(self.evaluate_candidate(off + j, x, ctx));
-                        }
-                    });
-                }
-            });
-        }
-        out.into_iter().map(|o| o.expect("generation slot filled")).collect()
+    /// [`search`](Self::search) against a caller-owned (possibly shared,
+    /// possibly warm) design cache.  The cache never changes results; a
+    /// warm cache only changes the hit/miss split in the returned stats.
+    pub fn search_with_cache(&self, cfg: &SearchConfig, cache: &DesignCache) -> SearchResult {
+        let sharded = ShardedEngine::new(
+            self.evaluator,
+            self.target,
+            self.rm,
+            std::slice::from_ref(self.dev),
+        );
+        let mut r = sharded.search_with_cache(cfg, cache);
+        r.per_device.remove(0).result
     }
 
     /// Full evaluation of one candidate: decode → measure → price → score.
-    fn evaluate_candidate(&self, iter: usize, x: &[f64], ctx: &EvalCtx<'_>) -> SearchRecord {
+    pub(super) fn evaluate_candidate(
+        &self,
+        iter: usize,
+        x: &[f64],
+        ctx: &EvalCtx<'_>,
+    ) -> SearchRecord {
         let plan = PruningPlan::from_unit_point(x, self.evaluator.sparsity_model());
         let ev = self.evaluator.eval(&plan);
         let m = pruning::metrics(self.target, &ev.points);
         let pts = quantize_points(&ev.points, ctx.quant_bits);
         let design = match ctx.cache {
-            Some(c) => c.get_or_compute(&pts, || {
+            Some((c, h)) => c.get_or_compute(h, &pts, || {
                 explore(self.target, &pts, self.rm, self.dev, ctx.dse)
             }),
             None => explore(self.target, &pts, self.rm, self.dev, ctx.dse),
@@ -599,5 +548,40 @@ mod tests {
         assert_eq!(r.records.len(), 3);
         assert_eq!(r.stats.generations, 1);
         assert!(r.best < 3);
+    }
+
+    #[test]
+    fn cache_hit_rate_handles_zero_traffic() {
+        let s = EngineStats::default();
+        assert_eq!(s.cache_hit_rate(), 0.0, "0/0 must not be NaN");
+        let s = EngineStats { cache_hits: 3, cache_misses: 1, ..Default::default() };
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let s = EngineStats { cache_hits: 0, cache_misses: 5, ..Default::default() };
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    /// A warm shared cache changes the hit/miss split but not the journal.
+    #[test]
+    fn warm_cache_rerun_is_all_hits_and_bit_identical() {
+        let ev = surrogate(17);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        let c = cfg(
+            8,
+            21,
+            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 12 },
+        );
+        let cache = DesignCache::new();
+        let eng = Engine::new(&ev, &net, &rm, &dev);
+        let cold = eng.search_with_cache(&c, &cache);
+        let warm = eng.search_with_cache(&c, &cache);
+        assert_eq!(objective_bits(&cold), objective_bits(&warm));
+        assert!(cold.stats.cache_misses > 0);
+        assert_eq!(
+            warm.stats.cache_misses, 0,
+            "every pricing of a repeated run must be served from the cache"
+        );
+        assert_eq!(warm.stats.cache_hits, 8);
     }
 }

@@ -1,0 +1,696 @@
+//! Multi-device sharded search: one engine, N [`DeviceBudget`] shards.
+//!
+//! HASS's co-search argument (paper §V, Table II / Fig. 6) is that each
+//! device geometry prices the same sparsity point differently — the U250
+//! rewards wide parallelism the V7-690T cannot afford, the Stratix 10
+//! trades BRAM for clock.  Cross-device comparisons therefore sweep one
+//! sparsity frontier over several devices; running those sweeps serially
+//! re-pays the whole evaluation cost per device.
+//!
+//! [`ShardedEngine`] runs the sweep as **one search**: every shard wraps
+//! one device and owns a private TPE optimizer seeded exactly like a
+//! standalone [`Engine::search`] on that device.  Generations advance in
+//! lockstep; the union of `(shard, candidate)` work items is evaluated by
+//! a single `std::thread::scope` pool writing into index-addressed slots
+//! (flat index `shard * g + candidate`), then every shard reduces its
+//! slice in candidate order (journal append + `observe_batch`).  Because
+//! a shard's propose → evaluate → observe sequence is byte-identical to
+//! the standalone loop and candidate evaluation is pure, **each device's
+//! journal is bit-for-bit the journal of a standalone run** — the
+//! determinism contract of [`crate::engine`] extended across devices.
+//!
+//! All shards share one multi-fingerprint [`DesignCache`]: keys carry the
+//! device fingerprint, so shards can never read each other's pricings,
+//! but the store, its lock striping and its single-compute guarantee are
+//! common — and a cache handed in via
+//! [`search_with_cache`](ShardedEngine::search_with_cache) keeps its
+//! entries across searches, so a sparsity point priced for a device once
+//! is never re-explored for that device in any later run on that cache.
+//!
+//! The cross-device [`ParetoPoint`] frontier (accuracy vs. computation
+//! efficiency, the Fig. 1 axes) is aggregated over every record of every
+//! shard, labelled with the device that produced it.
+
+use crate::arch::Network;
+use crate::dse::explore;
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
+use crate::metrics::{pareto_front, Point2, Table};
+use crate::optim::tpe::TpeOptimizer;
+use crate::sparsity::SparsityPoint;
+
+use super::cache::{quantize_points, DesignCache, DeviceCacheHandle};
+use super::{
+    CandidateEvaluator, Engine, EngineStats, EvalCtx, SearchConfig, SearchRecord,
+    SearchResult, ANCHORS,
+};
+
+/// One device's slice of a sharded search result.
+#[derive(Clone, Debug)]
+pub struct DeviceSearchResult {
+    /// device name (from [`DeviceBudget::name`])
+    pub device: String,
+    /// journal + stats, bit-identical to a standalone run on this device
+    pub result: SearchResult,
+}
+
+/// A point of the cross-device Pareto frontier (maximize accuracy and
+/// computation efficiency), tagged with the device that reached it.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub device: String,
+    pub iter: usize,
+    pub accuracy: f64,
+    pub avg_sparsity: f64,
+    pub images_per_sec: f64,
+    pub dsp: u64,
+    pub efficiency: f64,
+    pub objective: f64,
+}
+
+/// Aggregate execution counters of one sharded run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardedStats {
+    /// device shards driven by the run
+    pub devices: usize,
+    /// worker threads of the shared evaluation pool
+    pub threads: usize,
+    /// lockstep generations (same for every shard)
+    pub generations: usize,
+    /// candidate evaluations summed over shards
+    pub evaluations: usize,
+    /// entries in the shared design cache after the run
+    pub cache_entries: usize,
+    /// design-cache hits summed over shards
+    pub cache_hits: u64,
+    /// design-cache misses summed over shards
+    pub cache_misses: u64,
+}
+
+/// Output of [`ShardedEngine::search`]: per-device results (standalone
+/// bit-identical journals) plus the cross-device Pareto frontier.
+#[derive(Clone, Debug)]
+pub struct ShardedSearchResult {
+    pub per_device: Vec<DeviceSearchResult>,
+    /// non-dominated (accuracy, efficiency) records across all devices,
+    /// accuracy-descending
+    pub pareto: Vec<ParetoPoint>,
+    pub stats: ShardedStats,
+}
+
+impl ShardedSearchResult {
+    /// The result of one device, by name.
+    pub fn by_device(&self, name: &str) -> Option<&SearchResult> {
+        self.per_device.iter().find(|d| d.device == name).map(|d| &d.result)
+    }
+
+    /// One row per device: its best record + cache traffic.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "device", "best_iter", "accuracy", "avg_sparsity", "images_per_sec", "dsp",
+            "images_per_cycle_per_dsp", "objective", "cache_hit_rate",
+        ]);
+        for d in &self.per_device {
+            let b = d.result.best_record();
+            t.row(vec![
+                d.device.clone(),
+                b.iter.to_string(),
+                format!("{:.3}", b.accuracy),
+                format!("{:.4}", b.avg_sparsity),
+                format!("{:.1}", b.images_per_sec),
+                b.dsp.to_string(),
+                format!("{:.4e}", b.efficiency),
+                format!("{:.4}", b.objective),
+                format!("{:.3}", d.result.stats.cache_hit_rate()),
+            ]);
+        }
+        t
+    }
+
+    /// Write one journal CSV per device, deriving each path from `base`
+    /// by inserting the device name before the extension
+    /// (`results/j.csv` → `results/j.u250.csv`; plain `.device` suffix
+    /// when `base` has no extension).  Parent directories are created.
+    /// Returns the written paths, in device order.
+    pub fn write_journals(&self, base: &str) -> std::io::Result<Vec<String>> {
+        if let Some(dir) = std::path::Path::new(base).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut paths = Vec::with_capacity(self.per_device.len());
+        for d in &self.per_device {
+            let path = match base.rsplit_once('.') {
+                Some((stem, ext)) if !stem.is_empty() && !ext.contains('/') => {
+                    format!("{stem}.{}.{ext}", d.device)
+                }
+                _ => format!("{base}.{}", d.device),
+            };
+            std::fs::write(&path, d.result.to_table().to_csv())?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// The cross-device frontier as a table (one row per Pareto point).
+    pub fn pareto_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "device", "iter", "accuracy", "avg_sparsity", "images_per_sec", "dsp",
+            "images_per_cycle_per_dsp", "objective",
+        ]);
+        for p in &self.pareto {
+            t.row(vec![
+                p.device.clone(),
+                p.iter.to_string(),
+                format!("{:.3}", p.accuracy),
+                format!("{:.4}", p.avg_sparsity),
+                format!("{:.1}", p.images_per_sec),
+                p.dsp.to_string(),
+                format!("{:.4e}", p.efficiency),
+                format!("{:.4}", p.objective),
+            ]);
+        }
+        t
+    }
+}
+
+/// Per-shard search state: the single-device engine view, its cache
+/// handle, and its private optimizer + journal.
+struct Shard<'e> {
+    engine: Engine<'e>,
+    handle: DeviceCacheHandle,
+    dense_ips: f64,
+    /// hit/miss snapshots at shard start, so per-run stats stay correct
+    /// on a warm shared cache
+    hits0: u64,
+    misses0: u64,
+    tpe: TpeOptimizer,
+    records: Vec<SearchRecord>,
+}
+
+/// The sharded search engine: one evaluator + target geometry, fanned out
+/// over several device budgets (or partitions of one device).
+///
+/// Duplicate devices in `devices` are legal and deterministic (their
+/// journals coincide), but they share one fingerprint and therefore one
+/// hit/miss counter pair in the shared cache — each duplicate shard's
+/// per-run `EngineStats` then reports their *combined* cache traffic,
+/// and the `ShardedStats` totals count it once per duplicate.  The CLI
+/// rejects duplicate `--devices` entries for exactly this reason; pass
+/// distinct budgets (distinct names at least) when stats matter.
+pub struct ShardedEngine<'a> {
+    pub evaluator: &'a dyn CandidateEvaluator,
+    pub target: &'a Network,
+    pub rm: &'a ResourceModel,
+    pub devices: &'a [DeviceBudget],
+}
+
+impl<'a> ShardedEngine<'a> {
+    pub fn new(
+        evaluator: &'a dyn CandidateEvaluator,
+        target: &'a Network,
+        rm: &'a ResourceModel,
+        devices: &'a [DeviceBudget],
+    ) -> Self {
+        ShardedEngine { evaluator, target, rm, devices }
+    }
+
+    /// Run the sharded HASS search with a private design cache.
+    pub fn search(&self, cfg: &SearchConfig) -> ShardedSearchResult {
+        self.search_with_cache(cfg, &DesignCache::new())
+    }
+
+    /// Run the sharded HASS search against a caller-owned (possibly warm)
+    /// shared design cache.  The cache never changes results — it only
+    /// shifts the per-device hit/miss split in the returned stats.
+    pub fn search_with_cache(
+        &self,
+        cfg: &SearchConfig,
+        cache: &DesignCache,
+    ) -> ShardedSearchResult {
+        assert!(!self.devices.is_empty(), "sharded search needs at least one device");
+        let n = self.evaluator.sparsity_model().layers.len();
+        assert_eq!(
+            n,
+            self.target.compute_layers().len(),
+            "evaluator and target geometry disagree on layer count"
+        );
+        let batch = cfg.engine.batch.max(1);
+        let n_dev = self.devices.len();
+        let threads = cfg.engine.resolved_threads_for(n_dev * batch);
+        let base_acc = self.evaluator.base_accuracy().max(1e-9);
+        // dense reference design per device, for throughput normalization
+        let dense_points =
+            quantize_points(&vec![SparsityPoint::DENSE; n], cfg.engine.quant_bits);
+
+        let handles: Vec<DeviceCacheHandle> = self
+            .devices
+            .iter()
+            .map(|dev| cache.register(dev, self.target, self.rm, &cfg.dse))
+            .collect();
+
+        // Price each device's dense reference — served counter-free from
+        // a warm cache, computed (and remembered) otherwise.  The
+        // pricings are independent and each as expensive as a candidate
+        // evaluation, so a cold start fans them out over the same kind of
+        // scoped pool the generations use.
+        let mut denses: Vec<Option<crate::dse::NetworkDesign>> = Vec::new();
+        denses.resize_with(n_dev, || None);
+        {
+            let dense_for = |i: usize| {
+                let dev = &self.devices[i];
+                let cached = if cfg.engine.cache {
+                    cache.get(&handles[i], &dense_points)
+                } else {
+                    None
+                };
+                cached.unwrap_or_else(|| {
+                    let d = explore(self.target, &dense_points, self.rm, dev, &cfg.dse);
+                    if cfg.engine.cache {
+                        cache.insert(&handles[i], &dense_points, d.clone());
+                    }
+                    d
+                })
+            };
+            if threads.min(n_dev) <= 1 {
+                for (i, slot) in denses.iter_mut().enumerate() {
+                    *slot = Some(dense_for(i));
+                }
+            } else {
+                // one thread per device — n_dev is small
+                std::thread::scope(|sc| {
+                    for (i, slot) in denses.iter_mut().enumerate() {
+                        let dense_for = &dense_for;
+                        sc.spawn(move || *slot = Some(dense_for(i)));
+                    }
+                });
+            }
+        }
+
+        let mut shards: Vec<Shard<'a>> = self
+            .devices
+            .iter()
+            .zip(handles)
+            .zip(denses)
+            .map(|((dev, handle), dense)| {
+                let dense = dense.expect("dense slot filled");
+                let dense_ips = dense.images_per_sec(dev).max(1e-9);
+                Shard {
+                    engine: Engine::new(self.evaluator, self.target, self.rm, dev),
+                    dense_ips,
+                    hits0: handle.hits(),
+                    misses0: handle.misses(),
+                    handle,
+                    // every shard is seeded exactly like a standalone run,
+                    // which is what makes its journal standalone-identical
+                    tpe: TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone()),
+                    records: Vec::with_capacity(cfg.iterations),
+                }
+            })
+            .collect();
+
+        let mut generations = 0usize;
+        let mut done = 0usize;
+        while done < cfg.iterations {
+            let g = batch.min(cfg.iterations - done);
+            // --- propose per shard: anchors first, then a frozen-model
+            //     TPE batch (identical schedule to Engine's serial loop) --
+            let n_anchor =
+                if cfg.warm_start { 3usize.saturating_sub(done).min(g) } else { 0 };
+            let xs_all: Vec<Vec<Vec<f64>>> = shards
+                .iter_mut()
+                .map(|s| {
+                    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(g);
+                    for j in 0..n_anchor {
+                        xs.push(vec![ANCHORS[done + j]; 2 * n]);
+                    }
+                    xs.extend(s.tpe.suggest_batch(g - n_anchor));
+                    xs
+                })
+                .collect();
+            // --- evaluate the union of (shard, candidate) work items ----
+            let flat: Vec<SearchRecord> = {
+                let ctxs: Vec<EvalCtx<'_>> = shards
+                    .iter()
+                    .map(|s| EvalCtx {
+                        cache: if cfg.engine.cache {
+                            Some((cache, &s.handle))
+                        } else {
+                            None
+                        },
+                        quant_bits: cfg.engine.quant_bits,
+                        dense_ips: s.dense_ips,
+                        base_acc,
+                        mode: cfg.mode,
+                        lambda: cfg.lambda,
+                        dse: &cfg.dse,
+                    })
+                    .collect();
+                run_generation(&shards, &ctxs, &xs_all, done, g, threads)
+            };
+            // --- reduce per shard, in candidate order -------------------
+            let mut flat = flat.into_iter();
+            for (s, xs) in shards.iter_mut().zip(xs_all) {
+                let recs: Vec<SearchRecord> = flat.by_ref().take(g).collect();
+                let mut observed = Vec::with_capacity(g);
+                for (x, rec) in xs.into_iter().zip(&recs) {
+                    observed.push((x, rec.objective));
+                }
+                s.records.extend(recs);
+                s.tpe.observe_batch(observed);
+            }
+            generations += 1;
+            done += g;
+        }
+
+        // --- finalize: per-device results + cross-device frontier -------
+        let cache_entries = cache.len();
+        let mut per_device: Vec<DeviceSearchResult> = Vec::with_capacity(n_dev);
+        let (mut total_hits, mut total_misses) = (0u64, 0u64);
+        for s in shards {
+            let best = s
+                .records
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.objective.total_cmp(&b.1.objective))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let hits = s.handle.hits() - s.hits0;
+            let misses = s.handle.misses() - s.misses0;
+            total_hits += hits;
+            total_misses += misses;
+            per_device.push(DeviceSearchResult {
+                device: s.engine.dev.name.clone(),
+                result: SearchResult {
+                    best,
+                    dense_images_per_sec: s.dense_ips,
+                    stats: EngineStats {
+                        evaluations: s.records.len(),
+                        generations,
+                        threads,
+                        batch,
+                        cache_hits: hits,
+                        cache_misses: misses,
+                    },
+                    records: s.records,
+                },
+            });
+        }
+        let pareto = cross_device_pareto(&per_device);
+        ShardedSearchResult {
+            stats: ShardedStats {
+                devices: n_dev,
+                threads,
+                generations,
+                evaluations: per_device.iter().map(|d| d.result.records.len()).sum(),
+                cache_entries,
+                cache_hits: total_hits,
+                cache_misses: total_misses,
+            },
+            pareto,
+            per_device,
+        }
+    }
+}
+
+/// Evaluate one lockstep generation: `shards.len() * g` work items, flat
+/// index `shard * g + candidate`, each worker writing into its own
+/// index-addressed slot — so the returned order (and every downstream
+/// reduction) is independent of scheduling.
+fn run_generation(
+    shards: &[Shard<'_>],
+    ctxs: &[EvalCtx<'_>],
+    xs_all: &[Vec<Vec<f64>>],
+    base_iter: usize,
+    g: usize,
+    threads: usize,
+) -> Vec<SearchRecord> {
+    let total = shards.len() * g;
+    let mut out: Vec<Option<SearchRecord>> = Vec::new();
+    out.resize_with(total, || None);
+    let eval_into = |slot: &mut Option<SearchRecord>, k: usize| {
+        let (si, j) = (k / g, k % g);
+        *slot = Some(shards[si].engine.evaluate_candidate(
+            base_iter + j,
+            &xs_all[si][j],
+            &ctxs[si],
+        ));
+    };
+    let threads = threads.clamp(1, total.max(1));
+    if threads <= 1 {
+        for (k, slot) in out.iter_mut().enumerate() {
+            eval_into(slot, k);
+        }
+    } else {
+        let chunk = total.div_ceil(threads);
+        std::thread::scope(|sc| {
+            for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+                let eval_into = &eval_into;
+                sc.spawn(move || {
+                    for (off, slot) in oc.iter_mut().enumerate() {
+                        eval_into(slot, ci * chunk + off);
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("generation slot filled")).collect()
+}
+
+/// Non-dominated (accuracy ↑, efficiency ↑) records across every shard.
+fn cross_device_pareto(per_device: &[DeviceSearchResult]) -> Vec<ParetoPoint> {
+    let mut pts: Vec<Point2> = Vec::new();
+    let mut src: Vec<(&str, &SearchRecord)> = Vec::new();
+    for d in per_device {
+        for r in &d.result.records {
+            // pareto_front only reads x/y; provenance lives in `src`
+            pts.push(Point2 { label: String::new(), x: r.accuracy, y: r.efficiency });
+            src.push((d.device.as_str(), r));
+        }
+    }
+    pareto_front(&pts)
+        .into_iter()
+        .map(|i| {
+            let (device, r) = src[i];
+            ParetoPoint {
+                device: device.to_string(),
+                iter: r.iter,
+                accuracy: r.accuracy,
+                avg_sparsity: r.avg_sparsity,
+                images_per_sec: r.images_per_sec,
+                dsp: r.dsp,
+                efficiency: r.efficiency,
+                objective: r.objective,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::coordinator::SurrogateEvaluator;
+    use crate::dse::DseConfig;
+    use crate::engine::EngineConfig;
+    use crate::sparsity::synthesize;
+
+    fn surrogate(seed: u64) -> SurrogateEvaluator {
+        let net = networks::calibnet();
+        let sparsity = synthesize(&net, seed);
+        SurrogateEvaluator { net, sparsity, base_acc: 85.0 }
+    }
+
+    fn cfg(iters: usize, seed: u64, engine: EngineConfig) -> SearchConfig {
+        SearchConfig {
+            iterations: iters,
+            seed,
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            engine,
+            ..Default::default()
+        }
+    }
+
+    fn objective_bits(r: &SearchResult) -> Vec<u64> {
+        r.records.iter().map(|x| x.objective.to_bits()).collect()
+    }
+
+    /// The tentpole contract: every device's journal from a sharded run is
+    /// bit-identical to a standalone single-device run with the same seed.
+    #[test]
+    fn sharded_journals_match_standalone_per_device() {
+        let ev = surrogate(31);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let c = cfg(
+            12,
+            7,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let sharded = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        assert_eq!(sharded.per_device.len(), 2);
+        for dev in &devices {
+            let standalone = Engine::new(&ev, &net, &rm, dev).search(&c);
+            let shard = sharded.by_device(&dev.name).expect("device present");
+            assert_eq!(
+                objective_bits(&standalone),
+                objective_bits(shard),
+                "{} diverged from its standalone run",
+                dev.name
+            );
+            assert_eq!(standalone.best, shard.best);
+            assert_eq!(standalone.best_record().plan, shard.best_record().plan);
+        }
+    }
+
+    #[test]
+    fn single_device_shard_is_engine_search() {
+        let ev = surrogate(32);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250()];
+        let c = cfg(
+            8,
+            3,
+            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 0 },
+        );
+        let sharded = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        let single = Engine::new(&ev, &net, &rm, &devices[0]).search(&c);
+        assert_eq!(
+            objective_bits(&single),
+            objective_bits(&sharded.per_device[0].result)
+        );
+        assert_eq!(sharded.stats.devices, 1);
+        assert_eq!(sharded.stats.evaluations, 8);
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_sourced_from_journals() {
+        let ev = surrogate(33);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let c = cfg(
+            10,
+            5,
+            EngineConfig { batch: 5, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        assert!(!r.pareto.is_empty());
+        for p in &r.pareto {
+            // every frontier point must exist in its device's journal...
+            let journal = r.by_device(&p.device).expect("device of pareto point");
+            let rec = &journal.records[p.iter];
+            assert_eq!(rec.accuracy.to_bits(), p.accuracy.to_bits());
+            assert_eq!(rec.efficiency.to_bits(), p.efficiency.to_bits());
+            // ...and no record anywhere may strictly dominate it
+            for d in &r.per_device {
+                for other in &d.result.records {
+                    assert!(
+                        !(other.accuracy > p.accuracy && other.efficiency > p.efficiency),
+                        "{}#{} dominated by {}#{}",
+                        p.device,
+                        p.iter,
+                        d.device,
+                        other.iter
+                    );
+                }
+            }
+        }
+    }
+
+    /// A warm shared cache serves every repeated pricing: re-running the
+    /// same sharded search against the same cache must miss zero times.
+    #[test]
+    fn shared_cache_persists_across_sharded_runs() {
+        let ev = surrogate(34);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let c = cfg(
+            6,
+            11,
+            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let cache = DesignCache::new();
+        let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
+        let cold = eng.search_with_cache(&c, &cache);
+        assert!(cold.stats.cache_misses > 0);
+        let warm = eng.search_with_cache(&c, &cache);
+        assert_eq!(
+            warm.stats.cache_misses, 0,
+            "warm cache must serve every pricing of a repeated run"
+        );
+        assert_eq!(warm.stats.cache_hits, 2 * 6);
+        for (a, b) in cold.per_device.iter().zip(&warm.per_device) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(objective_bits(&a.result), objective_bits(&b.result));
+        }
+    }
+
+    #[test]
+    fn per_device_stats_cover_every_evaluation() {
+        let ev = surrogate(35);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices =
+            [DeviceBudget::u250(), DeviceBudget::v7_690t(), DeviceBudget::stratix10()];
+        let c = cfg(
+            7,
+            13,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        assert_eq!(r.stats.devices, 3);
+        assert_eq!(r.stats.evaluations, 21);
+        assert_eq!(r.stats.generations, 3); // 3 + 3 + 1
+        assert!(r.stats.cache_entries > 0);
+        for d in &r.per_device {
+            let s = &d.result.stats;
+            assert_eq!(
+                s.cache_hits + s.cache_misses,
+                7,
+                "{}: every pricing must be accounted",
+                d.device
+            );
+            assert_eq!(s.evaluations, 7);
+            assert_eq!(s.generations, 3);
+        }
+        assert_eq!(r.stats.cache_hits + r.stats.cache_misses, 21);
+    }
+
+    #[test]
+    fn summary_and_pareto_tables_have_one_row_per_entry() {
+        let ev = surrogate(36);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let c = cfg(5, 1, EngineConfig { batch: 5, threads: 0, cache: true, quant_bits: 12 });
+        let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        assert_eq!(r.summary_table().rows.len(), 2);
+        assert_eq!(r.pareto_table().rows.len(), r.pareto.len());
+        assert!(r.by_device("u250").is_some());
+        assert!(r.by_device("no-such-device").is_none());
+    }
+
+    #[test]
+    fn write_journals_one_csv_per_device() {
+        let ev = surrogate(37);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let c = cfg(4, 2, EngineConfig { batch: 4, threads: 0, cache: true, quant_bits: 12 });
+        let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        let base = std::env::temp_dir().join("hass_shard_journal_test.csv");
+        let paths = r.write_journals(base.to_str().unwrap()).unwrap();
+        assert_eq!(paths.len(), 2);
+        for (path, d) in paths.iter().zip(&r.per_device) {
+            assert!(path.contains(&d.device), "path {path} misses device name");
+            assert!(path.ends_with(".csv"), "extension must be preserved: {path}");
+            let csv = std::fs::read_to_string(path).unwrap();
+            assert_eq!(csv.lines().count(), 1 + d.result.records.len());
+            std::fs::remove_file(path).ok();
+        }
+    }
+}

@@ -50,13 +50,45 @@ impl DeviceBudget {
         }
     }
 
+    /// Look up a built-in budget by name.  Case-insensitive, tolerant of
+    /// the aliases that show up in the paper and in CLI habit
+    /// (`V7`, `v7_690t`, `7v690t`, `s10`, …); `None` for anything else.
     pub fn by_name(name: &str) -> Option<Self> {
-        match name {
-            "u250" => Some(Self::u250()),
-            "7v690t" | "v7" => Some(Self::v7_690t()),
-            "stratix10" => Some(Self::stratix10()),
+        match name.trim().to_ascii_lowercase().as_str() {
+            "u250" | "alveo-u250" | "alveo_u250" => Some(Self::u250()),
+            "7v690t" | "v7" | "v7_690t" | "v7-690t" | "v7690t" => Some(Self::v7_690t()),
+            "stratix10" | "s10" | "gx2800" => Some(Self::stratix10()),
             _ => None,
         }
+    }
+
+    /// Parse a comma-separated device list (`"u250,v7_690t"`) for the
+    /// sharded search CLI.  Empty segments are ignored; an unknown name
+    /// or a duplicate (a sharded search over the same budget twice only
+    /// repeats work and muddles per-device cache stats) fails the whole
+    /// list with a message naming the bad segment.
+    pub fn parse_list(s: &str) -> Result<Vec<Self>, String> {
+        let mut out: Vec<Self> = Vec::new();
+        for seg in s.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            match Self::by_name(seg) {
+                Some(d) => {
+                    if out.iter().any(|o| o.name == d.name) {
+                        return Err(format!("duplicate device '{seg}' in list"));
+                    }
+                    out.push(d);
+                }
+                None => {
+                    return Err(format!(
+                        "unknown device '{seg}' (u250 | 7v690t | stratix10)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Does a design fit this device?
@@ -121,5 +153,47 @@ mod tests {
     fn by_name_lookup() {
         assert_eq!(DeviceBudget::by_name("u250").unwrap().name, "u250");
         assert!(DeviceBudget::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn by_name_rejects_unknown_and_near_miss_names() {
+        for bad in ["", " ", "u-250", "u2500", "virtex", "stratix", "u250x"] {
+            assert!(DeviceBudget::by_name(bad).is_none(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive_and_trims() {
+        for (alias, canonical) in [
+            ("U250", "u250"),
+            (" u250 ", "u250"),
+            ("V7", "7v690t"),
+            ("v7_690t", "7v690t"),
+            ("V7-690T", "7v690t"),
+            ("7V690T", "7v690t"),
+            ("Stratix10", "stratix10"),
+            ("S10", "stratix10"),
+        ] {
+            assert_eq!(
+                DeviceBudget::by_name(alias).map(|d| d.name),
+                Some(canonical.to_string()),
+                "alias '{alias}'"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_list_handles_spacing_empties_and_errors() {
+        let devs = DeviceBudget::parse_list("u250, V7_690T,,stratix10,").unwrap();
+        assert_eq!(
+            devs.iter().map(|d| d.name.as_str()).collect::<Vec<_>>(),
+            vec!["u250", "7v690t", "stratix10"]
+        );
+        assert!(DeviceBudget::parse_list("").unwrap().is_empty());
+        let err = DeviceBudget::parse_list("u250,warp9").unwrap_err();
+        assert!(err.contains("warp9"), "error must name the bad segment: {err}");
+        // duplicates (even via aliases) are rejected
+        let err = DeviceBudget::parse_list("u250,7v690t,U250").unwrap_err();
+        assert!(err.contains("duplicate"), "got: {err}");
     }
 }

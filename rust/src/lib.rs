@@ -28,13 +28,19 @@
 //! All search entry points run on the batched candidate-evaluation
 //! pipeline in [`engine`]: the [`engine::CandidateEvaluator`] trait makes
 //! measurement backends pluggable, [`engine::DesignCache`] memoizes DSE
-//! pricings keyed by (device, quantized operating points), TPE proposes
-//! whole generations at once (`suggest_batch`/`observe_batch`), and each
-//! generation is evaluated concurrently with scoped threads.  Thread count
-//! and cache state never change results — parallel runs reproduce serial
-//! journals bit for bit (see the module docs for the exact determinism
-//! contract).  [`coordinator`] keeps the production evaluators and the
-//! stable `search()` entry point on top of the engine.
+//! pricings in a lock-striped, multi-device store keyed by (device
+//! fingerprint, quantized operating points), TPE proposes whole
+//! generations at once (`suggest_batch`/`observe_batch`), and each
+//! generation is evaluated concurrently with scoped threads.
+//! [`engine::ShardedEngine`] fans one search out over several
+//! [`hardware::device::DeviceBudget`]s — per-device shards advance in
+//! lockstep generations over a shared thread pool and design cache, which
+//! is how Table II / Fig. 6 cross-device sweeps run in one pass.  Thread
+//! count, cache state and shard count never change results — each
+//! device's journal is bit-for-bit the journal of a standalone serial run
+//! (see the module docs for the exact determinism contract).
+//! [`coordinator`] keeps the production evaluators and the stable
+//! `search()` / `search_sharded()` entry points on top of the engine.
 
 pub mod arch;
 pub mod baselines;

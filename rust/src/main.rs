@@ -14,7 +14,8 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search, EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+    search, search_sharded, CandidateEvaluator, EngineConfig, MeasuredEvaluator,
+    SearchConfig, SearchMode, SurrogateEvaluator,
 };
 use hass::dse::{self, explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
@@ -80,6 +81,12 @@ fn cmd_search(args: &[String]) -> i32 {
     let cli = Cli::new("hardware-aware sparsity search (TPE, Eq. 6)")
         .opt("network", "calibnet", "target geometry (see `hass networks`)")
         .opt("device", "u250", "device budget")
+        .opt(
+            "devices",
+            "",
+            "comma-separated budgets for a sharded multi-device search \
+             (e.g. u250,7v690t; overrides --device)",
+        )
         .opt("iters", "96", "TPE iterations")
         .opt("seed", "0", "search seed")
         .opt("mode", "hw", "objective: hw (Eq. 6) | sw (accuracy+sparsity)")
@@ -92,7 +99,13 @@ fn cmd_search(args: &[String]) -> i32 {
         .opt("journal", "", "CSV path for the per-iteration journal");
     let p = parse_or_die(cli, args);
     let net = network_or_die(p.get("network"));
-    let dev = device_or_die(p.get("device"));
+    let devices = match DeviceBudget::parse_list(p.get("devices")) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let rm = ResourceModel::default();
     let mode = match p.get("mode") {
         "sw" => SearchMode::SoftwareOnly,
@@ -116,7 +129,7 @@ fn cmd_search(args: &[String]) -> i32 {
         "surrogate" => false,
         _ => net.name == "calibnet" && hass::runtime::available(&hass::runtime::default_dir()),
     };
-    let result = if want_measured {
+    let ev: Box<dyn CandidateEvaluator> = if want_measured {
         if net.name != "calibnet" {
             eprintln!("measured evaluator only supports the calibnet geometry");
             return 2;
@@ -133,17 +146,60 @@ fn cmd_search(args: &[String]) -> i32 {
             rt.meta.model,
             rt.meta.dense_val_accuracy * 100.0
         );
-        let ev = MeasuredEvaluator::new(rt, p.get_usize("batches"));
-        search(&ev, &net, &rm, &dev, &cfg)
+        Box::new(MeasuredEvaluator::new(rt, p.get_usize("batches")))
     } else {
-        let ev = SurrogateEvaluator {
+        println!("[search] surrogate evaluator on {}", net.name);
+        Box::new(SurrogateEvaluator {
             sparsity: synthesize(&net, cfg.seed),
             net: net.clone(),
             base_acc: 76.0,
-        };
-        println!("[search] surrogate evaluator on {}", net.name);
-        search(&ev, &net, &rm, &dev, &cfg)
+        })
     };
+    let journal = p.get("journal");
+
+    // --- sharded multi-device search (--devices a,b,...) --------------
+    if devices.len() >= 2 {
+        let result = search_sharded(ev.as_ref(), &net, &rm, &devices, &cfg);
+        let s = &result.stats;
+        println!(
+            "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
+             shared cache: {} entries, {} hit / {} miss",
+            s.devices,
+            s.generations,
+            cfg.engine.batch.max(1),
+            s.threads,
+            s.cache_entries,
+            s.cache_hits,
+            s.cache_misses
+        );
+        print!("{}", result.summary_table().to_markdown());
+        println!(
+            "[search] cross-device pareto front ({} points):",
+            result.pareto.len()
+        );
+        print!("{}", result.pareto_table().to_markdown());
+        if !journal.is_empty() {
+            match result.write_journals(journal) {
+                Ok(paths) => {
+                    for path in paths {
+                        println!("[search] journal -> {path}");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("failed to write journals to '{journal}': {e}");
+                    return 1;
+                }
+            }
+        }
+        return 0;
+    }
+
+    // --- single-device search (--device, or a 1-entry --devices) ------
+    let dev = devices
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| device_or_die(p.get("device")));
+    let result = search(ev.as_ref(), &net, &rm, &dev, &cfg);
     let b = result.best_record();
     println!(
         "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
@@ -159,8 +215,12 @@ fn cmd_search(args: &[String]) -> i32 {
         s.cache_misses,
         s.cache_hit_rate() * 100.0
     );
-    let journal = p.get("journal");
     if !journal.is_empty() {
+        if let Some(dir) = std::path::Path::new(journal).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).ok();
+            }
+        }
         std::fs::write(journal, result.to_table().to_csv()).expect("write journal");
         println!("[search] journal -> {journal}");
     }

@@ -1,5 +1,8 @@
 //! Cross-module integration tests: the full pipeline from the AOT
-//! artifact through search, DSE, simulation and reporting.
+//! artifact through search, DSE, simulation and reporting — plus the
+//! tier-1 sharded-search suite: a stub `CandidateEvaluator` drives a
+//! `ShardedEngine` across several devices and every device's journal is
+//! asserted bit-identical to a standalone single-device run.
 //!
 //! Tests that need the PJRT artifact skip (with a note) when
 //! `artifacts/` has not been built — `make artifacts` first.
@@ -7,15 +10,17 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search, Evaluate, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+    search, search_sharded, CandidateEvaluator, Engine, EngineConfig, EvalPoint,
+    MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
 };
 use hass::dse::{explore, network_throughput, DseConfig};
+use hass::engine::quantize_points;
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::pruning::PruningPlan;
 use hass::runtime::{available, default_dir, ModelRuntime};
 use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
-use hass::sparsity::synthesize;
+use hass::sparsity::{synthesize, NetworkSparsity};
 
 fn have_artifacts() -> bool {
     if available(&default_dir()) {
@@ -202,6 +207,163 @@ fn end_to_end_deterministic_reproducibility() {
         r.records.iter().map(|x| x.objective.to_bits()).collect::<Vec<_>>()
     };
     assert_eq!(run(), run());
+}
+
+// ===== tier-1 sharded-search suite =====================================
+
+/// Deterministic stub evaluator: decodes plans through a synthesized
+/// sparsity model, but scores them with a closed-form quadratic accuracy
+/// response — no surrogate machinery, no measurement, pure and cheap, so
+/// these tests pin the *engine's* behavior and nothing else.
+struct StubEvaluator {
+    sparsity: NetworkSparsity,
+}
+
+impl StubEvaluator {
+    fn calibnet(seed: u64) -> Self {
+        StubEvaluator { sparsity: synthesize(&networks::calibnet(), seed) }
+    }
+}
+
+impl CandidateEvaluator for StubEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        &self.sparsity
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        let points = plan.points(&self.sparsity);
+        let s = points.iter().map(|p| (p.s_w + p.s_a) * 0.5).sum::<f64>()
+            / points.len() as f64;
+        EvalPoint { accuracy: 92.0 - 30.0 * s * s, points }
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        92.0
+    }
+}
+
+fn sharded_cfg(iters: usize, seed: u64, threads: usize) -> SearchConfig {
+    SearchConfig {
+        iterations: iters,
+        seed,
+        dse: DseConfig { max_iters: 1_500, ..Default::default() },
+        engine: EngineConfig { batch: 4, threads, cache: true, quant_bits: 12 },
+        ..Default::default()
+    }
+}
+
+/// The tentpole acceptance test: a `ShardedEngine` over three devices
+/// produces, for every device, the bit-identical journal of a standalone
+/// `Engine::search` on that device with the same seed.
+#[test]
+fn sharded_journals_match_standalone_bit_for_bit() {
+    let ev = StubEvaluator::calibnet(40);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices =
+        [DeviceBudget::u250(), DeviceBudget::v7_690t(), DeviceBudget::stratix10()];
+    let cfg = sharded_cfg(14, 6, 0);
+    let sharded = search_sharded(&ev, &net, &rm, &devices, &cfg);
+    assert_eq!(sharded.stats.devices, 3);
+    assert_eq!(sharded.stats.evaluations, 3 * 14);
+    for dev in &devices {
+        let standalone = Engine::new(&ev, &net, &rm, dev).search(&cfg);
+        let shard = sharded.by_device(&dev.name).expect("device in sharded result");
+        assert_eq!(standalone.records.len(), shard.records.len());
+        for (a, b) in standalone.records.iter().zip(&shard.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(
+                a.objective.to_bits(),
+                b.objective.to_bits(),
+                "{} iter {}: sharded journal diverged from standalone",
+                dev.name,
+                a.iter
+            );
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.images_per_sec.to_bits(), b.images_per_sec.to_bits());
+            assert_eq!(a.plan, b.plan);
+        }
+        assert_eq!(standalone.best, shard.best);
+        assert_eq!(
+            standalone.efficiency_trajectory(),
+            shard.efficiency_trajectory()
+        );
+    }
+}
+
+/// Thread count is an execution knob, never an algorithmic one — a
+/// sharded run on one worker matches a sharded run on the full pool.
+#[test]
+fn sharded_search_is_thread_count_invariant() {
+    let ev = StubEvaluator::calibnet(41);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let serial = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(10, 9, 1));
+    let pooled = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(10, 9, 0));
+    for (a, b) in serial.per_device.iter().zip(&pooled.per_device) {
+        assert_eq!(a.device, b.device);
+        for (x, y) in a.result.records.iter().zip(&b.result.records) {
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits());
+        }
+    }
+}
+
+/// Every journal record of every device is weakly dominated by some point
+/// of the cross-device frontier (the frontier is a true upper staircase).
+#[test]
+fn cross_device_pareto_front_dominates_all_records() {
+    let ev = StubEvaluator::calibnet(42);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let r = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(12, 3, 0));
+    assert!(!r.pareto.is_empty());
+    for d in &r.per_device {
+        for rec in &d.result.records {
+            assert!(
+                r.pareto.iter().any(|p| {
+                    p.accuracy >= rec.accuracy && p.efficiency >= rec.efficiency
+                }),
+                "{}#{} not covered by the frontier",
+                d.device,
+                rec.iter
+            );
+        }
+    }
+    // frontier points carry their provenance
+    for p in &r.pareto {
+        assert!(devices.iter().any(|d| d.name == p.device));
+    }
+}
+
+/// End-to-end composition: the best sharded design on each device still
+/// fits its budget and survives the cycle-level simulator.
+#[test]
+fn sharded_best_designs_fit_and_simulate() {
+    let ev = StubEvaluator::calibnet(43);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let cfg = sharded_cfg(8, 5, 0);
+    let r = search_sharded(&ev, &net, &rm, &devices, &cfg);
+    for (dev, d) in devices.iter().zip(&r.per_device) {
+        let best = d.result.best_record();
+        // re-derive the journaled design exactly: same DSE config, same
+        // pricing quantization the search used
+        let point = ev.eval(&best.plan);
+        let pts = quantize_points(&point.points, cfg.engine.quant_bits);
+        let design = explore(&net, &pts, &rm, dev, &cfg.dse);
+        assert!(dev.fits(&design.resources), "{}: best design overflows", dev.name);
+        assert_eq!(
+            design.resources.dsp, best.dsp,
+            "{}: re-derived design disagrees with the journal",
+            dev.name
+        );
+        let cfgs = stages_from_design(&net, &design.designs, &pts, rm.fifo_depth);
+        let rep = simulate(&net, &cfgs, 2, SparsityDynamics::Deterministic);
+        assert!(!rep.deadlocked, "{}: deadlock", dev.name);
+    }
 }
 
 #[test]
