@@ -59,7 +59,10 @@ fn main() {
     );
 
     // Fig. 4: allocation across the 3x3 conv layers
-    println!("{:<22} {:>5} {:>9} {:>7} {:>7} {:>9}", "3x3 conv layer", "S̄", "MAC/SPE", "i_par", "o_par", "#SPE");
+    println!(
+        "{:<22} {:>5} {:>9} {:>7} {:>7} {:>9}",
+        "3x3 conv layer", "S̄", "MAC/SPE", "i_par", "o_par", "#SPE"
+    );
     for ((l, des), pt) in net.compute_layers().iter().zip(&d.designs).zip(&points) {
         if let Op::Conv { kernel: 3, groups: 1, .. } = l.op {
             println!(

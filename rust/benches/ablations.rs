@@ -128,10 +128,30 @@ fn ablate_balancing(t: &mut Table) {
         "[ablations] balancing: naive {thr_naive:.3e} -> SA {thr_bal:.3e} img/cyc (x{gain:.3}); \
          worst engine-load spread {spread_naive:.3} -> {spread_bal:.3}"
     );
-    t.row(vec!["balancing".into(), "contiguous".into(), "img_per_cycle".into(), format!("{thr_naive:.4e}")]);
-    t.row(vec!["balancing".into(), "sa_balanced".into(), "img_per_cycle".into(), format!("{thr_bal:.4e}")]);
-    t.row(vec!["balancing".into(), "contiguous".into(), "worst_spread".into(), format!("{spread_naive:.4}")]);
-    t.row(vec!["balancing".into(), "sa_balanced".into(), "worst_spread".into(), format!("{spread_bal:.4}")]);
+    t.row(vec![
+        "balancing".into(),
+        "contiguous".into(),
+        "img_per_cycle".into(),
+        format!("{thr_naive:.4e}"),
+    ]);
+    t.row(vec![
+        "balancing".into(),
+        "sa_balanced".into(),
+        "img_per_cycle".into(),
+        format!("{thr_bal:.4e}"),
+    ]);
+    t.row(vec![
+        "balancing".into(),
+        "contiguous".into(),
+        "worst_spread".into(),
+        format!("{spread_naive:.4}"),
+    ]);
+    t.row(vec![
+        "balancing".into(),
+        "sa_balanced".into(),
+        "worst_spread".into(),
+        format!("{spread_bal:.4}"),
+    ]);
     assert!(
         spread_bal <= spread_naive + 1e-9,
         "SA must not worsen the worst engine-load spread"
@@ -184,8 +204,18 @@ fn ablate_buffering(t: &mut Table) {
         rep_tuned.throughput / rep_tiny.throughput,
         &sizes[..4.min(sizes.len())]
     );
-    t.row(vec!["buffering".into(), "minimal_fifo".into(), "img_per_cycle".into(), format!("{:.4e}", rep_tiny.throughput)]);
-    t.row(vec!["buffering".into(), "heuristic_fifo".into(), "img_per_cycle".into(), format!("{:.4e}", rep_tuned.throughput)]);
+    t.row(vec![
+        "buffering".into(),
+        "minimal_fifo".into(),
+        "img_per_cycle".into(),
+        format!("{:.4e}", rep_tiny.throughput),
+    ]);
+    t.row(vec![
+        "buffering".into(),
+        "heuristic_fifo".into(),
+        "img_per_cycle".into(),
+        format!("{:.4e}", rep_tuned.throughput),
+    ]);
     assert!(
         rep_tuned.throughput >= rep_tiny.throughput * 0.98,
         "buffering heuristic must not lose throughput"
@@ -255,10 +285,30 @@ fn ablate_thresholds(t: &mut Table) {
          searched per-layer -> acc {best_acc:.2} (S_w {best_sw:.3})",
         uni_m.weight_sparsity
     );
-    t.row(vec!["thresholds".into(), "uniform_tau".into(), "accuracy".into(), format!("{uni_acc:.3}")]);
-    t.row(vec!["thresholds".into(), "per_layer_searched".into(), "accuracy".into(), format!("{best_acc:.3}")]);
-    t.row(vec!["thresholds".into(), "uniform_tau".into(), "weight_sparsity".into(), format!("{:.4}", uni_m.weight_sparsity)]);
-    t.row(vec!["thresholds".into(), "per_layer_searched".into(), "weight_sparsity".into(), format!("{best_sw:.4}")]);
+    t.row(vec![
+        "thresholds".into(),
+        "uniform_tau".into(),
+        "accuracy".into(),
+        format!("{uni_acc:.3}"),
+    ]);
+    t.row(vec![
+        "thresholds".into(),
+        "per_layer_searched".into(),
+        "accuracy".into(),
+        format!("{best_acc:.3}"),
+    ]);
+    t.row(vec![
+        "thresholds".into(),
+        "uniform_tau".into(),
+        "weight_sparsity".into(),
+        format!("{:.4}", uni_m.weight_sparsity),
+    ]);
+    t.row(vec![
+        "thresholds".into(),
+        "per_layer_searched".into(),
+        "weight_sparsity".into(),
+        format!("{best_sw:.4}"),
+    ]);
     assert!(
         best_acc >= uni_acc - 0.25,
         "searched per-layer thresholds should match/beat uniform: {best_acc} vs {uni_acc}"
@@ -314,7 +364,17 @@ fn ablate_tpe(t: &mut Table) {
         rnd_best += best / 3.0;
     }
     eprintln!("[ablations] search: TPE best {tpe_best:.4} vs random best {rnd_best:.4}");
-    t.row(vec!["search".into(), "tpe".into(), "best_objective".into(), format!("{tpe_best:.4}")]);
-    t.row(vec!["search".into(), "random".into(), "best_objective".into(), format!("{rnd_best:.4}")]);
+    t.row(vec![
+        "search".into(),
+        "tpe".into(),
+        "best_objective".into(),
+        format!("{tpe_best:.4}"),
+    ]);
+    t.row(vec![
+        "search".into(),
+        "random".into(),
+        "best_objective".into(),
+        format!("{rnd_best:.4}"),
+    ]);
     assert!(tpe_best >= rnd_best - 0.02, "TPE {tpe_best} well below random {rnd_best}");
 }

@@ -5,15 +5,18 @@
 //!
 //! Targets (DESIGN.md §8):
 //! * DSE of a ResNet-50-scale graph   < 100 ms
+//! * frontier `explore` vs seed scan  ≥ 5x median speedup (bit-identical)
 //! * simulator                        ≥ 10 M SPE-cycles/s
 //! * search-iteration overhead (everything but PJRT) < 10 % of iteration
 //!
-//! Output: `results/hotpath.csv`.
+//! Output: `results/hotpath.csv` + machine-readable
+//! `results/BENCH_hotpath.json` (explore scan/frontier split, simulator
+//! rate, TPE ask latency) so the perf trajectory is tracked across PRs.
 
 use std::time::Instant;
 
 use hass::arch::networks;
-use hass::dse::{explore, DseConfig};
+use hass::dse::{build_frontiers, explore, explore_scan, explore_with_frontiers, DseConfig};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
@@ -50,6 +53,7 @@ fn main() {
         uram: 2_560,
         freq_mhz: 250.0,
     };
+    let mut dse_ms: Vec<(String, f64)> = Vec::new();
     for name in ["resnet18", "resnet50", "mobilenet_v2"] {
         let net = networks::by_name(name).unwrap();
         let n = net.compute_layers().len();
@@ -70,9 +74,88 @@ fn main() {
             "<100".into(),
             pass.to_string(),
         ]);
+        dse_ms.push((name.to_string(), ms));
+    }
+
+    // ---- explore: frontier kernel vs seed scan (ResNet-50 scale) ------
+    let scan_ms: f64;
+    let frontier_ms: f64;
+    let build_ms: f64;
+    let lookup_ms: f64;
+    let explore_speedup: f64;
+    {
+        let net = networks::resnet50();
+        let n = net.compute_layers().len();
+        let points = vec![SparsityPoint { s_w: 0.6, s_a: 0.4 }; n];
+        let cfg = DseConfig::default();
+        // differential first: the two paths must agree bit for bit
+        let a = explore(&net, &points, &rm, &big, &cfg);
+        let b = explore_scan(&net, &points, &rm, &big, &cfg);
+        assert_eq!(a.designs, b.designs, "frontier explore diverged from scan");
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert_eq!(a.resources, b.resources);
+
+        scan_ms = median_ms(
+            || {
+                std::hint::black_box(explore_scan(&net, &points, &rm, &big, &cfg));
+            },
+            9,
+        );
+        frontier_ms = median_ms(
+            || {
+                std::hint::black_box(explore(&net, &points, &rm, &big, &cfg));
+            },
+            9,
+        );
+        // build vs lookup split: one-time enumeration cost vs the cost of
+        // a whole bisection run on prebuilt frontiers
+        build_ms = median_ms(
+            || {
+                std::hint::black_box(build_frontiers(&net, &points, &rm, &big));
+            },
+            9,
+        );
+        let frontiers = build_frontiers(&net, &points, &rm, &big);
+        lookup_ms = median_ms(
+            || {
+                std::hint::black_box(explore_with_frontiers(
+                    &net, &points, &rm, &big, &cfg, &frontiers,
+                ));
+            },
+            9,
+        );
+        explore_speedup = scan_ms / frontier_ms;
+        let pass = explore_speedup >= 5.0;
+        eprintln!(
+            "[hotpath] explore/resnet50: scan {scan_ms:.2} ms vs frontier {frontier_ms:.2} ms \
+             -> {explore_speedup:.1}x (build {build_ms:.2} ms + lookups {lookup_ms:.3} ms) {}",
+            ok(pass)
+        );
+        t.row(vec![
+            "explore/resnet50_scan".into(),
+            "median_ms".into(),
+            format!("{scan_ms:.3}"),
+            "-".into(),
+            "true".into(),
+        ]);
+        t.row(vec![
+            "explore/resnet50_frontier".into(),
+            "median_ms".into(),
+            format!("{frontier_ms:.3}"),
+            "-".into(),
+            "true".into(),
+        ]);
+        t.row(vec![
+            "explore/speedup_vs_scan".into(),
+            "ratio".into(),
+            format!("{explore_speedup:.3}"),
+            ">=5".into(),
+            pass.to_string(),
+        ]);
     }
 
     // ---- simulator throughput ------------------------------------------
+    let sim_eps: f64;
     {
         let net = networks::calibnet();
         let n = net.compute_layers().len();
@@ -98,6 +181,7 @@ fn main() {
             5,
         );
         let eps = engine_cycles / (wall / 1e3);
+        sim_eps = eps;
         let pass = eps > 10e6;
         eprintln!(
             "[hotpath] simulator: {:.1} M simulated SPE-cycles/s ({:.2e} SPE-cycles in {wall:.1} ms) {}",
@@ -115,6 +199,7 @@ fn main() {
     }
 
     // ---- TPE ask/tell ----------------------------------------------------
+    let tpe_ask_ms: f64;
     {
         let dim = 42; // 2 x 21 layers (ResNet-18)
         let mut tpe = TpeOptimizer::with_defaults(dim, 1);
@@ -130,6 +215,7 @@ fn main() {
             },
             20,
         );
+        tpe_ask_ms = ms;
         let pass = ms < 10.0;
         eprintln!("[hotpath] tpe/ask(dim=42,96obs): {ms:.3} ms {}", ok(pass));
         t.row(vec![
@@ -195,6 +281,31 @@ fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
     t.write_files(&dir, "hotpath").expect("write results");
     eprintln!("[hotpath] -> results/hotpath.csv");
+
+    // ---- machine-readable summary for cross-PR perf tracking ------------
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str("  \"dse_ms\": {");
+    for (i, (name, ms)) in dse_ms.iter().enumerate() {
+        json.push_str(&format!(
+            "\"{name}\": {ms:.3}{}",
+            if i + 1 == dse_ms.len() { "" } else { ", " }
+        ));
+    }
+    json.push_str("},\n");
+    json.push_str(&format!(
+        "  \"explore_resnet50\": {{\"scan_ms\": {scan_ms:.3}, \"frontier_ms\": {frontier_ms:.3}, \
+         \"speedup\": {explore_speedup:.3}, \"frontier_build_ms\": {build_ms:.3}, \
+         \"frontier_lookup_ms\": {lookup_ms:.3}, \"bit_identical\": true, \
+         \"pass_5x\": {}}},\n",
+        explore_speedup >= 5.0
+    ));
+    json.push_str(&format!("  \"simulator_spe_cycles_per_sec\": {sim_eps:.3e},\n"));
+    json.push_str(&format!("  \"tpe_ask_ms\": {tpe_ask_ms:.4}\n"));
+    json.push_str("}\n");
+    let path = dir.join("BENCH_hotpath.json");
+    std::fs::write(&path, json).expect("write BENCH_hotpath.json");
+    eprintln!("[hotpath] -> {}", path.display());
 }
 
 fn ok(b: bool) -> &'static str {

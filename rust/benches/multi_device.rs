@@ -77,6 +77,39 @@ fn main() {
         devices.len(),
         sharded.stats.threads
     );
+    eprintln!(
+        "[multi_device] shared stores: {} designs ({} hit / {} miss), {} frontiers \
+         ({} hit / {} miss), {} measurements deduped across shards",
+        sharded.stats.cache_entries,
+        sharded.stats.cache_hits,
+        sharded.stats.cache_misses,
+        sharded.stats.frontier_entries,
+        sharded.stats.frontier_hits,
+        sharded.stats.frontier_misses,
+        sharded.stats.dedup_evals
+    );
+
+    // ---- frontier reuse: every device that actually priced must have hit
+    // the shared frontier store (ResNet-18 repeats block shapes; URAM-less
+    // devices early-out of the DSE and legitimately show zero traffic)
+    for r in &sharded.per_device {
+        let s = &r.result.stats;
+        eprintln!(
+            "[multi_device] {}: frontier {} hit / {} miss, {} deduped measurements",
+            r.device, s.frontier_hits, s.frontier_misses, s.dedup_evals
+        );
+        if s.frontier_misses > 0 {
+            assert!(
+                s.frontier_hits > 0,
+                "{}: a pricing device must re-use frontiers across candidates",
+                r.device
+            );
+        }
+    }
+    assert!(
+        sharded.stats.frontier_hits > 0,
+        "warm-path frontier re-use must show up in per-device stats"
+    );
 
     // ---- determinism: per-device journals must be bit-identical --------
     for (dev, serial) in devices.iter().zip(&serial_results) {
@@ -103,7 +136,7 @@ fn main() {
     // human-readable table
     let mut t = Table::new(&[
         "device", "serial_ms", "best_objective", "sharded_cache_hits",
-        "sharded_cache_misses",
+        "sharded_cache_misses", "frontier_hits", "frontier_misses", "dedup_evals",
     ]);
     for ((dev, ms), r) in devices.iter().zip(&serial_ms).zip(&sharded.per_device) {
         t.row(vec![
@@ -112,6 +145,9 @@ fn main() {
             format!("{:.4}", r.result.best_record().objective),
             r.result.stats.cache_hits.to_string(),
             r.result.stats.cache_misses.to_string(),
+            r.result.stats.frontier_hits.to_string(),
+            r.result.stats.frontier_misses.to_string(),
+            r.result.stats.dedup_evals.to_string(),
         ]);
     }
     t.write_files(&dir, "multi_device").expect("write results");
@@ -130,6 +166,14 @@ fn main() {
         "  \"journals_bit_identical\": true,\n  \"pareto_points\": {},\n",
         sharded.pareto.len()
     ));
+    json.push_str(&format!(
+        "  \"frontier_entries\": {},\n  \"frontier_hits\": {},\n  \
+         \"frontier_misses\": {},\n  \"dedup_evals\": {},\n",
+        sharded.stats.frontier_entries,
+        sharded.stats.frontier_hits,
+        sharded.stats.frontier_misses,
+        sharded.stats.dedup_evals
+    ));
     json.push_str("  \"devices\": [\n");
     let n_dev = devices.len();
     for (i, ((dev, ms), r)) in
@@ -137,11 +181,15 @@ fn main() {
     {
         json.push_str(&format!(
             "    {{\"name\": \"{}\", \"serial_ms\": {ms:.3}, \"best_objective\": {:.6}, \
-             \"cache_hits\": {}, \"cache_misses\": {}}}{}\n",
+             \"cache_hits\": {}, \"cache_misses\": {}, \"frontier_hits\": {}, \
+             \"frontier_misses\": {}, \"dedup_evals\": {}}}{}\n",
             dev.name,
             r.result.best_record().objective,
             r.result.stats.cache_hits,
             r.result.stats.cache_misses,
+            r.result.stats.frontier_hits,
+            r.result.stats.frontier_misses,
+            r.result.stats.dedup_evals,
             if i + 1 == n_dev { "" } else { "," }
         ));
     }

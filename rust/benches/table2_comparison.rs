@@ -172,7 +172,12 @@ fn main() {
                 name: "hass".into(),
                 accuracy: b.accuracy,
                 images_per_sec: part.images_per_sec,
-                resources: hass::hardware::resources::Resources { dsp, lut, bram18k: bram, uram: 0 },
+                resources: hass::hardware::resources::Resources {
+                    dsp,
+                    lut,
+                    bram18k: bram,
+                    uram: 0,
+                },
                 op_density: b.op_density,
                 efficiency: part.images_per_sec / u250.freq_hz() / dsp.max(1) as f64,
             }

@@ -253,7 +253,8 @@ mod tests {
     #[test]
     fn non_dataflow_much_slower_than_dataflow() {
         let (net, sp, rm, dev, cfg) = setup();
-        let nd = non_dataflow_sparse(&net, &sp, 70.0, 0.5, 1024, &MemoryModel::default(), &rm, &dev);
+        let nd =
+            non_dataflow_sparse(&net, &sp, 70.0, 0.5, 1024, &MemoryModel::default(), &rm, &dev);
         let pass = pass_like(&net, &sp, 70.0, &rm, &dev, &cfg);
         // the paper's core claim: dataflow pipelining wins throughput
         assert!(

@@ -70,7 +70,12 @@ pub fn imbalance(
 }
 
 /// Contiguous round-robin starting point (what naive folding would do).
-pub fn contiguous_assignment(n_chan: usize, n_filt: usize, i_par: usize, o_par: usize) -> Assignment {
+pub fn contiguous_assignment(
+    n_chan: usize,
+    n_filt: usize,
+    i_par: usize,
+    o_par: usize,
+) -> Assignment {
     Assignment {
         chan_group: (0..n_chan).map(|c| c * i_par / n_chan).collect(),
         filt_group: (0..n_filt).map(|f| f * o_par / n_filt).collect(),
@@ -92,7 +97,11 @@ pub fn balance(
     let init = contiguous_assignment(chan_density.len(), filt_density.len(), i_par, o_par);
     let before = imbalance(chan_density, filt_density, &init, i_par, o_par);
     if i_par == 1 && o_par == 1 {
-        return BalanceResult { assignment: init, imbalance_before: before, imbalance_after: before };
+        return BalanceResult {
+            assignment: init,
+            imbalance_before: before,
+            imbalance_after: before,
+        };
     }
     let energy =
         |a: &Assignment| imbalance(chan_density, filt_density, a, i_par, o_par);
@@ -183,7 +192,8 @@ mod tests {
         let cd = skewed(20, 7);
         let fd = skewed(24, 8);
         let mut rng = Rng::new(9);
-        let r = balance(&cd, &fd, 4, 6, &AnnealSchedule { iters: 500, ..Default::default() }, &mut rng);
+        let schedule = AnnealSchedule { iters: 500, ..Default::default() };
+        let r = balance(&cd, &fd, 4, 6, &schedule, &mut rng);
         assert!(r.assignment.chan_group.iter().all(|&g| g < 4));
         assert!(r.assignment.filt_group.iter().all(|&g| g < 6));
         assert_eq!(r.assignment.chan_group.len(), 20);

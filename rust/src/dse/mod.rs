@@ -14,9 +14,34 @@
 //!    slowest layer one step, re-balance, and stop when the budget is
 //!    exhausted ([`explore`]).
 //! 4. **Partitioning & reconfiguration** (§V-A.4) — [`partition`].
+//!
+//! # The frontier pricing kernel ([`frontier`])
+//!
+//! Steps 2–3 used to rescan the whole divisor×n_mac design space of every
+//! layer on every query.  [`explore`], [`balance_rates`] and the
+//! partitioning annealer now price through per-layer
+//! [`LayerFrontier`]s instead: the design space is enumerated **once** per
+//! (layer shape, sparsity point, resource model, device budget) and
+//! reduced to a rate-sorted Pareto frontier, so every subsequent
+//! "cheapest design achieving rate λ" query is a binary search.  Results
+//! are bit-identical to the seed scan ([`cheapest_design_achieving`] /
+//! [`explore_scan`], both kept as the reference implementation for
+//! differential tests and benches).
+//!
+//! Frontiers are rebuilt only when one of their four inputs changes:
+//! [`explore`] builds them per call (deduplicated by layer shape via
+//! [`build_frontiers`]), [`partition`] builds them once per network and
+//! re-uses them across every annealing step and slice, and the engine's
+//! `DesignCache` keeps a lock-striped per-device store so candidates,
+//! generations, shards and whole searches share them.
 
 pub mod balance;
+pub mod frontier;
 pub mod partition;
+
+pub use frontier::{build_frontier, build_frontiers, FrontierEntry, LayerFrontier};
+
+use std::sync::Arc;
 
 use crate::arch::Network;
 use crate::hardware::device::DeviceBudget;
@@ -196,6 +221,14 @@ fn aux_total(net: &Network, rm: &ResourceModel) -> Resources {
 /// that still sustains the current pipeline throughput.  The bottleneck
 /// layer itself is also refitted (its own rate is the target), which can
 /// only shed resources, never lower the pipeline minimum.
+///
+/// Prices through freshly built per-layer frontiers, so a one-shot call
+/// pays an enumeration per distinct layer shape to answer one query per
+/// layer — slower than a single scan, but on the same pricing kernel as
+/// everything else (one implementation to trust).  Callers that balance
+/// the same layers repeatedly should build frontiers once with
+/// [`build_frontiers`] and call [`balance_rates_with`], where the build
+/// amortizes.
 pub fn balance_rates(
     net: &Network,
     designs: &[LayerDesign],
@@ -203,13 +236,24 @@ pub fn balance_rates(
     rm: &ResourceModel,
     dev: &DeviceBudget,
 ) -> Vec<LayerDesign> {
+    let frontiers = build_frontiers(net, points, rm, dev);
+    balance_rates_with(net, designs, points, &frontiers)
+}
+
+/// [`balance_rates`] against prebuilt frontiers (one per compute layer,
+/// in order) — bit-identical to the seed scan, O(layers · log |frontier|).
+pub fn balance_rates_with(
+    net: &Network,
+    designs: &[LayerDesign],
+    points: &[SparsityPoint],
+    frontiers: &[Arc<LayerFrontier>],
+) -> Vec<LayerDesign> {
+    assert_eq!(designs.len(), frontiers.len());
     let thr = network_throughput(net, designs, points);
     designs
         .iter()
-        .enumerate()
-        .map(|(i, d)| {
-            cheapest_design_achieving(net, i, points[i], rm, dev, thr).unwrap_or(*d)
-        })
+        .zip(frontiers)
+        .map(|(d, f)| f.cheapest_design_achieving(thr).unwrap_or(*d))
         .collect()
 }
 
@@ -235,6 +279,11 @@ impl Default for DseConfig {
 /// minimal cost is monotone in λ, so we find that fixed point directly by
 /// bisection over λ — same result, deterministic, and orders of magnitude
 /// fewer model evaluations than replaying every increment.
+///
+/// Prices through per-layer [`LayerFrontier`]s built once per call
+/// (deduplicated by layer shape): each bisection probe is
+/// O(layers · log |frontier|).  Bit-identical to [`explore_scan`], the
+/// seed implementation that rescans the design space on every probe.
 pub fn explore(
     net: &Network,
     points: &[SparsityPoint],
@@ -242,25 +291,132 @@ pub fn explore(
     dev: &DeviceBudget,
     cfg: &DseConfig,
 ) -> NetworkDesign {
+    // infeasibility early-out *before* paying for frontier builds
+    // (URAM-less devices skip all pricing work)
+    let (minimal, min_res) = match minimal_checked(net, points, rm, dev) {
+        Ok(min) => min,
+        Err(unfit) => return unfit,
+    };
+    let frontiers = build_frontiers(net, points, rm, dev);
+    explore_frontiers_checked(net, points, rm, dev, cfg, &frontiers, minimal, min_res)
+}
+
+/// [`explore`] against prebuilt per-layer frontiers (one per compute
+/// layer, in order) — the hot entry point for callers that price the same
+/// layers repeatedly (the engine's design cache, the partition annealer).
+pub fn explore_with_frontiers(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    frontiers: &[Arc<LayerFrontier>],
+) -> NetworkDesign {
+    let (minimal, min_res) = match minimal_checked(net, points, rm, dev) {
+        Ok(min) => min,
+        Err(unfit) => return unfit,
+    };
+    explore_frontiers_checked(net, points, rm, dev, cfg, frontiers, minimal, min_res)
+}
+
+/// The frontier-pricer bisection with the minimal design's fit already
+/// verified ([`minimal_checked`]) — lets `explore`, `explore_with_frontiers`
+/// and the engine cache's store-backed path all pay the O(layers) minimal
+/// pricing exactly once.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn explore_frontiers_checked(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    frontiers: &[Arc<LayerFrontier>],
+    minimal: Vec<LayerDesign>,
+    min_res: Resources,
+) -> NetworkDesign {
+    let compute = net.compute_layers();
+    assert_eq!(frontiers.len(), compute.len());
+    explore_impl(net, points, rm, dev, cfg, minimal, min_res, |i, lam| {
+        if lam <= 0.0 {
+            let d = LayerDesign::MINIMAL;
+            return Some((d, rm.layer(compute[i], &d)));
+        }
+        frontiers[i].cheapest_achieving(lam).map(|e| (e.design, e.resources))
+    })
+}
+
+/// The seed scan-per-probe implementation, kept verbatim as the reference
+/// for differential tests and the `hotpath` bench's before/after split.
+pub fn explore_scan(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+) -> NetworkDesign {
+    let (minimal, min_res) = match minimal_checked(net, points, rm, dev) {
+        Ok(min) => min,
+        Err(unfit) => return unfit,
+    };
+    let compute = net.compute_layers();
+    explore_impl(net, points, rm, dev, cfg, minimal, min_res, |i, lam| {
+        cheapest_design_achieving(net, i, points[i], rm, dev, lam)
+            .map(|d| (d, rm.layer(compute[i], &d)))
+    })
+}
+
+/// The minimal design and its whole-network resources, or the shared
+/// over-budget early return: a network whose resource-minimal design does
+/// not fit cannot map at all — `Err` carries that design, which every
+/// explore entry point (including the engine cache's frontier-store path)
+/// returns as-is (callers check `dev.fits`).
+pub(crate) fn minimal_checked(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+) -> Result<(Vec<LayerDesign>, Resources), NetworkDesign> {
+    let compute = net.compute_layers();
+    assert_eq!(compute.len(), points.len());
+    let minimal = vec![LayerDesign::MINIMAL; compute.len()];
+    let min_res = rm.network(net, &minimal);
+    if dev.fits(&min_res) {
+        Ok((minimal, min_res))
+    } else {
+        let throughput = network_throughput(net, &minimal, points);
+        Err(NetworkDesign { designs: minimal, throughput, resources: min_res })
+    }
+}
+
+/// The bisection core, generic over the per-layer pricer: `price_layer(i,
+/// λ)` returns the cheapest design of compute layer `i` achieving rate λ
+/// plus its resources, or `None` if unreachable.  Both pricers (frontier
+/// lookup and seed scan) produce bit-identical designs, so the whole
+/// bisection trajectory — and the returned `NetworkDesign` — is too.
+/// `minimal`/`min_res` come from [`minimal_checked`]; the caller has
+/// already returned early if they exceed the budget.
+#[allow(clippy::too_many_arguments)]
+fn explore_impl(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    minimal: Vec<LayerDesign>,
+    min_res: Resources,
+    price_layer: impl Fn(usize, f64) -> Option<(LayerDesign, Resources)>,
+) -> NetworkDesign {
     let compute = net.compute_layers();
     assert_eq!(compute.len(), points.len());
     let aux = aux_total(net, rm);
-    let minimal = vec![LayerDesign::MINIMAL; compute.len()];
-    let min_res = rm.network(net, &minimal);
-    // an over-budget minimal design means the network cannot map at all;
-    // return it anyway (caller checks `dev.fits`)
-    if !dev.fits(&min_res) {
-        let throughput = network_throughput(net, &minimal, points);
-        return NetworkDesign { designs: minimal, throughput, resources: min_res };
-    }
 
     // cheapest whole-network design at pipeline rate lam (None: infeasible)
     let design_at = |lam: f64| -> Option<(Vec<LayerDesign>, Resources)> {
         let mut designs = Vec::with_capacity(compute.len());
         let mut total = aux;
         for i in 0..compute.len() {
-            let d = cheapest_design_achieving(net, i, points[i], rm, dev, lam)?;
-            total = total + rm.layer(compute[i], &d);
+            let (d, r) = price_layer(i, lam)?;
+            total = total + r;
             designs.push(d);
         }
         if dev.fits(&total) {
@@ -284,8 +440,11 @@ pub fn explore(
         return NetworkDesign { designs: b.0, throughput, resources: b.1 };
     }
     let mut hi = hi_struct;
-    // log-space bisection: stop when the bracket is tight or iters are out
-    let iters = cfg.max_iters.min(64).max(16);
+    // log-space bisection: stop when the bracket is tight or iters are
+    // out.  `max_iters` is honored even below the 64-probe convergence
+    // default — a caller asking for a coarser (cheaper) exploration gets
+    // one (the seed silently clamped small values up to 16).
+    let iters = cfg.max_iters.min(64);
     for _ in 0..iters {
         if hi / lo < 1.0 + 1e-9 {
             break;
@@ -401,13 +560,15 @@ mod tests {
     #[test]
     fn cheapest_design_none_when_impossible() {
         let (net, points, rm) = setup("calibnet", 0.0);
-        assert!(cheapest_design_achieving(&net, 0, points[0], &rm, &DeviceBudget::u250(), 1.0).is_none());
+        let dev = DeviceBudget::u250();
+        assert!(cheapest_design_achieving(&net, 0, points[0], &rm, &dev, 1.0).is_none());
     }
 
     #[test]
     fn cheapest_design_is_minimal_for_zero_rate() {
         let (net, points, rm) = setup("calibnet", 0.0);
-        let d = cheapest_design_achieving(&net, 0, points[0], &rm, &DeviceBudget::u250(), 0.0).unwrap();
+        let dev = DeviceBudget::u250();
+        let d = cheapest_design_achieving(&net, 0, points[0], &rm, &dev, 0.0).unwrap();
         assert_eq!(d, LayerDesign::MINIMAL);
     }
 
@@ -570,5 +731,152 @@ mod tests {
             resources: Resources { dsp: 100, lut: 0, bram18k: 0, uram: 0 },
         };
         assert!((d.efficiency() - 1e-7).abs() < 1e-20);
+    }
+
+    // ---- frontier pricing kernel: differential + clamp regression ------
+
+    fn assert_same_design(a: &NetworkDesign, b: &NetworkDesign, what: &str) {
+        assert_eq!(a.designs, b.designs, "{what}: designs diverged");
+        assert_eq!(
+            a.throughput.to_bits(),
+            b.throughput.to_bits(),
+            "{what}: throughput diverged"
+        );
+        assert_eq!(a.resources, b.resources, "{what}: resources diverged");
+    }
+
+    /// The tentpole contract: frontier-based `explore` is bit-identical to
+    /// the seed scan across networks, devices (incl. URAM-less ones whose
+    /// costs are all +inf) and sparsity points.
+    #[test]
+    fn explore_matches_scan_bit_for_bit() {
+        let rm = ResourceModel::default();
+        let devs = [
+            DeviceBudget::u250(),
+            DeviceBudget::v7_690t(),
+            DeviceBudget {
+                name: "small".into(),
+                dsp: 64,
+                lut: 200_000,
+                bram18k: 600,
+                uram: 64,
+                freq_mhz: 250.0,
+            },
+        ];
+        // calibnet across every device and sparsity; resnet18 once (the
+        // scan reference is O(design space) per probe — slow in debug)
+        for (name, svals) in
+            [("calibnet", &[0.0, 0.3, 0.65][..]), ("resnet18", &[0.3][..])]
+        {
+            let net = networks::by_name(name).unwrap();
+            let n = net.compute_layers().len();
+            for &s in svals {
+                let points = vec![SparsityPoint { s_w: s, s_a: 0.7 * s }; n];
+                for dev in &devs {
+                    let fast = explore(&net, &points, &rm, dev, &DseConfig::default());
+                    let scan = explore_scan(&net, &points, &rm, dev, &DseConfig::default());
+                    assert_same_design(&fast, &scan, &format!("{name}@{}/s={s}", dev.name));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explore_matches_scan_on_random_points() {
+        let net = networks::calibnet();
+        let n = net.compute_layers().len();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        forall(12, 0xD1FF, |rng| {
+            let points: Vec<SparsityPoint> = (0..n)
+                .map(|_| SparsityPoint { s_w: rng.f64(), s_a: rng.f64() })
+                .collect();
+            let cfg = DseConfig { max_iters: 1_500, ..Default::default() };
+            let fast = explore(&net, &points, &rm, &dev, &cfg);
+            let scan = explore_scan(&net, &points, &rm, &dev, &cfg);
+            assert_same_design(&fast, &scan, "random points");
+        });
+    }
+
+    #[test]
+    fn explore_with_prebuilt_frontiers_matches_explore() {
+        let (net, points, rm) = setup("calibnet", 0.35);
+        let dev = DeviceBudget::u250();
+        let frontiers = build_frontiers(&net, &points, &rm, &dev);
+        let a = explore_with_frontiers(&net, &points, &rm, &dev, &DseConfig::default(), &frontiers);
+        let b = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        assert_same_design(&a, &b, "prebuilt frontiers");
+    }
+
+    #[test]
+    fn balance_rates_matches_scan_reference() {
+        let (net, points, rm) = setup("calibnet", 0.4);
+        let dev = DeviceBudget::u250();
+        forall(20, 0xBA1C, |rng| {
+            let designs: Vec<LayerDesign> = net
+                .compute_layers()
+                .iter()
+                .map(|l| {
+                    let is = divisors(l.i_extent());
+                    let os = divisors(l.o_extent());
+                    let d = LayerDesign {
+                        i_par: *rng.choice(&is),
+                        o_par: *rng.choice(&os),
+                        n_mac: 1,
+                    };
+                    let m = d.m_len(l);
+                    LayerDesign { n_mac: 1 + rng.below(m), ..d }
+                })
+                .collect();
+            let balanced = balance_rates(&net, &designs, &points, &rm, &dev);
+            // seed reference: one scan query per layer at the pipeline rate
+            let thr = network_throughput(&net, &designs, &points);
+            let reference: Vec<LayerDesign> = designs
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    cheapest_design_achieving(&net, i, points[i], &rm, &dev, thr)
+                        .unwrap_or(*d)
+                })
+                .collect();
+            assert_eq!(balanced, reference, "balance diverged from the scan");
+        });
+    }
+
+    /// Regression for the bisection clamp: `max_iters` below 16 used to be
+    /// silently raised; a caller asking for a coarse exploration must get
+    /// one (fewer probes → no better throughput than the converged run).
+    #[test]
+    fn explore_honors_small_max_iters() {
+        let (net, points, rm) = setup("calibnet", 0.3);
+        let dev = DeviceBudget::u250();
+        let at = |max_iters: usize| {
+            explore(&net, &points, &rm, &dev, &DseConfig { max_iters, ..Default::default() })
+        };
+        let coarse = at(0);
+        let few = at(4);
+        let full = at(usize::MAX);
+        // zero probes: the bracket's feasible lower bound is returned
+        assert!(
+            coarse.throughput < full.throughput,
+            "max_iters=0 must not reach the converged design: {} vs {}",
+            coarse.throughput,
+            full.throughput
+        );
+        // probes monotonically refine the feasible bound
+        assert!(few.throughput >= coarse.throughput);
+        assert!(full.throughput >= few.throughput);
+        // the default config still converges exactly as before (64 cap)
+        let default = at(DseConfig::default().max_iters);
+        assert_same_design(&default, &full, "default max_iters");
+        // both implementations honor the clamp identically
+        let coarse_scan = explore_scan(
+            &net,
+            &points,
+            &rm,
+            &dev,
+            &DseConfig { max_iters: 0, ..Default::default() },
+        );
+        assert_same_design(&coarse, &coarse_scan, "max_iters=0");
     }
 }

@@ -13,6 +13,8 @@
 //! split points, trading reconfiguration overhead against the parallelism
 //! each (smaller) partition can afford from the full device.
 
+use std::sync::Arc;
+
 use crate::arch::Network;
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
@@ -20,7 +22,8 @@ use crate::optim::anneal::{anneal, AnnealSchedule};
 use crate::sparsity::SparsityPoint;
 use crate::util::rng::Rng;
 
-use super::{explore, DseConfig, NetworkDesign};
+use super::frontier::{build_frontiers, LayerFrontier};
+use super::{explore_with_frontiers, DseConfig, NetworkDesign};
 
 /// U250 full-bitstream reconfiguration time (order of 100 ms via PCIe),
 /// the paper amortizes it with large batches [1].
@@ -71,6 +74,11 @@ fn slice_network(net: &Network, lo: usize, hi: usize) -> (Network, Vec<usize>) {
 
 /// Evaluate a set of split bounds: DSE each partition on the full device,
 /// then combine with the reconfiguration-amortization formula.
+///
+/// Builds per-layer frontiers for the whole network and delegates to
+/// [`evaluate_bounds_with`]; callers evaluating many bound sets over the
+/// same `(points, rm, dev)` — the annealer — build the frontiers once.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_bounds(
     net: &Network,
     points: &[SparsityPoint],
@@ -81,12 +89,33 @@ pub fn evaluate_bounds(
     batch: usize,
     reconfig_secs: f64,
 ) -> Option<Partitioning> {
+    let frontiers = build_frontiers(net, points, rm, dev);
+    evaluate_bounds_with(net, points, rm, dev, cfg, bounds, batch, reconfig_secs, &frontiers)
+}
+
+/// [`evaluate_bounds`] against prebuilt whole-network frontiers: a
+/// partition covering compute layers `[lo, hi)` prices through
+/// `frontiers[lo..hi]` — frontiers are slice-invariant because they
+/// depend only on (layer shape, point, resource model, device).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_bounds_with(
+    net: &Network,
+    points: &[SparsityPoint],
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &DseConfig,
+    bounds: &[usize],
+    batch: usize,
+    reconfig_secs: f64,
+    frontiers: &[Arc<LayerFrontier>],
+) -> Option<Partitioning> {
     let mut designs = Vec::with_capacity(bounds.len() - 1);
     let mut secs_per_batch = (bounds.len() - 1) as f64 * reconfig_secs;
     for w in bounds.windows(2) {
         let (sub, pt_idx) = slice_network(net, w[0], w[1]);
         let sub_points: Vec<SparsityPoint> = pt_idx.iter().map(|&i| points[i]).collect();
-        let d = explore(&sub, &sub_points, rm, dev, cfg);
+        let d =
+            explore_with_frontiers(&sub, &sub_points, rm, dev, cfg, &frontiers[w[0]..w[1]]);
         if !dev.fits(&d.resources) {
             return None; // partition still too large for the device
         }
@@ -116,15 +145,20 @@ pub fn partition(
 ) -> Option<Partitioning> {
     let n = net.compute_layers().len();
     assert_eq!(n, points.len());
+    // one frontier set serves every SA energy call and every slice: the
+    // annealer re-prices slices of the same layers dozens of times
+    let frontiers = build_frontiers(net, points, rm, dev);
     // single partition first: if the whole net maps, no need to fold
     if let Some(p) =
-        evaluate_bounds(net, points, rm, dev, cfg, &[0, n], batch, reconfig_secs)
+        evaluate_bounds_with(net, points, rm, dev, cfg, &[0, n], batch, reconfig_secs, &frontiers)
     {
         // still let SA try to beat it (a fold can win when the single-
         // device design is budget-starved), starting from the 1-partition
         // solution
         let best_single = p.images_per_sec;
-        let sa = anneal_partitions(net, points, rm, dev, cfg, batch, reconfig_secs, rng, 2);
+        let sa = anneal_partitions(
+            net, points, rm, dev, cfg, batch, reconfig_secs, rng, 2, &frontiers,
+        );
         return match sa {
             Some(q) if q.images_per_sec > best_single => Some(q),
             _ => Some(p),
@@ -132,9 +166,9 @@ pub fn partition(
     }
     // network does not fit whole: SA over increasing partition counts
     for max_parts in [2, 3, 4, 6, 8] {
-        if let Some(p) =
-            anneal_partitions(net, points, rm, dev, cfg, batch, reconfig_secs, rng, max_parts)
-        {
+        if let Some(p) = anneal_partitions(
+            net, points, rm, dev, cfg, batch, reconfig_secs, rng, max_parts, &frontiers,
+        ) {
             return Some(p);
         }
     }
@@ -152,6 +186,7 @@ fn anneal_partitions(
     reconfig_secs: f64,
     rng: &mut Rng,
     n_parts: usize,
+    frontiers: &[Arc<LayerFrontier>],
 ) -> Option<Partitioning> {
     let n = net.compute_layers().len();
     if n_parts > n {
@@ -178,7 +213,8 @@ fn anneal_partitions(
     }
 
     let energy = |b: &Vec<usize>| {
-        match evaluate_bounds(net, points, rm, dev, cfg, b, batch, reconfig_secs) {
+        match evaluate_bounds_with(net, points, rm, dev, cfg, b, batch, reconfig_secs, frontiers)
+        {
             Some(p) => -p.images_per_sec,
             None => f64::INFINITY, // infeasible split
         }
@@ -202,7 +238,7 @@ fn anneal_partitions(
     let schedule = AnnealSchedule { iters: 40, t0: 0.3, t1: 1e-3 };
     let (best, e) = anneal(bounds, energy, neighbor, &schedule, rng);
     if e.is_finite() {
-        evaluate_bounds(net, points, rm, dev, cfg, &best, batch, reconfig_secs)
+        evaluate_bounds_with(net, points, rm, dev, cfg, &best, batch, reconfig_secs, frontiers)
     } else {
         None
     }
@@ -306,6 +342,27 @@ mod tests {
         let mut rng = Rng::new(4);
         let free = partition(&net, &points, &rm, &dev, &cfg, 256, 0.0, &mut rng).unwrap();
         assert!(free.images_per_sec >= with_cost.images_per_sec);
+    }
+
+    /// Each partition's frontier-priced slice design must equal the seed
+    /// scan run on the slice as its own network — frontiers are
+    /// slice-invariant.
+    #[test]
+    fn evaluate_bounds_matches_scan_explore_per_partition() {
+        let (net, points, rm, cfg) = setup();
+        let dev = DeviceBudget::u250();
+        let n = net.compute_layers().len();
+        let bounds = [0usize, 3, n];
+        let p = evaluate_bounds(&net, &points, &rm, &dev, &cfg, &bounds, 256, 0.1)
+            .expect("split fits the U250");
+        for (w, d) in bounds.windows(2).zip(&p.designs) {
+            let (sub, idx) = slice_network(&net, w[0], w[1]);
+            let sub_points: Vec<SparsityPoint> = idx.iter().map(|&i| points[i]).collect();
+            let scan = crate::dse::explore_scan(&sub, &sub_points, &rm, &dev, &cfg);
+            assert_eq!(d.designs, scan.designs, "slice {w:?} diverged from scan");
+            assert_eq!(d.throughput.to_bits(), scan.throughput.to_bits());
+            assert_eq!(d.resources, scan.resources);
+        }
     }
 
     #[test]

@@ -27,6 +27,23 @@
 //! `quant_bits = 0` disables snapping (exact keys), which is the engine
 //! default so the serial path reproduces the pre-engine seed behavior.
 //!
+//! # Structural reuse: the frontier store
+//!
+//! Exact-point memoization only pays off on repeats; every *new* quantized
+//! point vector still used to pay a full `dse::explore`.  The cache now
+//! also owns a [`FrontierStore`]: a second lock-striped map holding the
+//! per-layer [`LayerFrontier`]s (`dse::frontier`) keyed by
+//! `(device + resource model, layer shape, layer point)` — deliberately
+//! *narrower* than the design keys, because a frontier does not depend on
+//! the network or the DSE config.  The engine's miss path
+//! ([`DesignCache::explore_via_frontiers`]) prices through it, so a brand
+//! new candidate re-enumerates a layer's design space only if that
+//! (shape, point) pair has never been priced before — across candidates,
+//! generations, shards, and searches over *different* networks or DSE
+//! configs that repeat layer shapes.  Frontier traffic is counted
+//! separately ([`DeviceCacheHandle::frontier_hits`] /
+//! [`frontier_misses`](DeviceCacheHandle::frontier_misses)).
+//!
 //! # Single-compute contract
 //!
 //! [`get_or_compute`](DesignCache::get_or_compute) runs `compute` **at
@@ -43,8 +60,9 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::arch::Network;
-use crate::dse::{DseConfig, NetworkDesign};
+use crate::arch::{LayerDesc, Network};
+use crate::dse::frontier::{build_frontier, LayerFrontier};
+use crate::dse::{explore_frontiers_checked, minimal_checked, DseConfig, NetworkDesign};
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::sparsity::SparsityPoint;
@@ -105,6 +123,15 @@ pub(crate) fn device_fingerprint(dev: &DeviceBudget) -> u64 {
     h
 }
 
+/// Fold a string into an FNV-1a hash state.
+fn fnv_extend(mut h: u64, s: &str) -> u64 {
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// FNV-1a fingerprint of the **full pricing context**: the device budget
 /// plus the Debug forms of (network, resource model, DSE config) —
 /// everything besides the operating points that `dse::explore` output
@@ -122,12 +149,20 @@ pub(crate) fn pricing_fingerprint(
     // Debug formatting recursively covers every field (f64s print with
     // shortest-roundtrip precision, so distinct values stay distinct)
     for s in [format!("{net:?}"), format!("{rm:?}"), format!("{dse:?}")] {
-        for b in s.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
+        h = fnv_extend(h, &s);
     }
     h
+}
+
+/// FNV-1a fingerprint of the **frontier context**: device budget +
+/// resource model only.  A [`LayerFrontier`] is a pure function of (layer
+/// shape, point, resource model, device) — it does not depend on the
+/// network (the shape key covers the layer) or on `DseConfig` — so keying
+/// the frontier store more narrowly than the design cache lets warm
+/// caches share frontiers across searches over different networks or DSE
+/// configs that repeat layer shapes.
+pub(crate) fn frontier_fingerprint(dev: &DeviceBudget, rm: &ResourceModel) -> u64 {
+    fnv_extend(device_fingerprint(dev), &format!("{rm:?}"))
 }
 
 /// Per-device cache traffic counters (shared with the owning cache).
@@ -135,6 +170,11 @@ pub(crate) fn pricing_fingerprint(
 struct DevStats {
     hits: AtomicU64,
     misses: AtomicU64,
+    /// layer-frontier store traffic (see [`FrontierStore`]) — counted
+    /// separately from whole-design hits/misses because a single design
+    /// miss issues one frontier lookup per compute layer
+    frontier_hits: AtomicU64,
+    frontier_misses: AtomicU64,
 }
 
 /// A device's view into a shared [`DesignCache`]: its pricing-context
@@ -146,6 +186,9 @@ struct DevStats {
 #[derive(Clone, Debug)]
 pub struct DeviceCacheHandle {
     fingerprint: u64,
+    /// narrower context for the frontier store (device + resource model
+    /// only — see [`frontier_fingerprint`])
+    frontier_fp: u64,
     stats: Arc<DevStats>,
 }
 
@@ -165,10 +208,112 @@ impl DeviceCacheHandle {
     pub fn misses(&self) -> u64 {
         self.stats.misses.load(Ordering::Relaxed)
     }
+
+    /// Layer-frontier lookups served from the shared [`FrontierStore`]
+    /// (structural reuse on whole-design cache misses).
+    pub fn frontier_hits(&self) -> u64 {
+        self.stats.frontier_hits.load(Ordering::Relaxed)
+    }
+
+    /// Layer-frontier lookups that had to enumerate the design space.
+    pub fn frontier_misses(&self) -> u64 {
+        self.stats.frontier_misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Key of one layer frontier: frontier-context fingerprint (device +
+/// resource model, see [`frontier_fingerprint`]) + layer *shape*
+/// fingerprint + the exact bit pattern of the (snapped) operating point.
+/// Keying by shape — not layer index or network — lets the repeated
+/// blocks of a ResNet share one frontier within a candidate, across
+/// candidates, and across searches over different networks.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct FrontierKey {
+    context: u64,
+    shape: u64,
+    point: (u64, u64),
+}
+
+/// Lock-striped, per-device store of [`LayerFrontier`]s — the structural
+/// half of the pricing cache.  [`DesignCache`] memoizes *whole-network*
+/// designs on exact (quantized) point vectors; every miss there still
+/// pays a full `explore`.  This store memoizes the expensive part of that
+/// miss — the per-layer design-space enumeration — keyed by
+/// `(device + resource model, layer shape, layer point)`, so a new
+/// candidate whose per-layer operating points (or layer shapes) were ever
+/// seen before rebuilds nothing and only re-runs the cheap bisection
+/// lookups.  Shared across candidates, generations, shards and searches
+/// (even over different networks / DSE configs — frontiers don't depend
+/// on either); the same [`OnceLock`] single-compute contract applies per
+/// frontier.
+pub struct FrontierStore {
+    stripes: Vec<Mutex<HashMap<FrontierKey, Arc<OnceLock<Arc<LayerFrontier>>>>>>,
+}
+
+impl FrontierStore {
+    fn new() -> Self {
+        FrontierStore {
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Total frontiers across all stripes (including in-flight cells).
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn stripe_of(&self, key: &FrontierKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    /// Fetch (or build exactly once) the frontier of `layer` at `point`
+    /// under the handle's pricing context.  `shape` is
+    /// `dse::frontier::shape_fingerprint(layer)`, precomputed by callers
+    /// that price many candidates over the same geometry.
+    pub(crate) fn get_or_build(
+        &self,
+        handle: &DeviceCacheHandle,
+        shape: u64,
+        layer: &LayerDesc,
+        point: SparsityPoint,
+        rm: &ResourceModel,
+        dev: &DeviceBudget,
+    ) -> Arc<LayerFrontier> {
+        let key = FrontierKey {
+            context: handle.frontier_fp,
+            shape,
+            point: (point.s_w.to_bits(), point.s_a.to_bits()),
+        };
+        let stripe = &self.stripes[self.stripe_of(&key)];
+        let (cell, fresh) = {
+            let mut map = stripe.lock().unwrap();
+            match map.get(&key) {
+                Some(c) => (c.clone(), false),
+                None => {
+                    let c: Arc<OnceLock<Arc<LayerFrontier>>> = Arc::new(OnceLock::new());
+                    map.insert(key, c.clone());
+                    (c, true)
+                }
+            }
+        };
+        if fresh {
+            handle.stats.frontier_misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            handle.stats.frontier_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        cell.get_or_init(|| Arc::new(build_frontier(layer, point, rm, dev))).clone()
+    }
 }
 
 /// Thread-safe, lock-striped, multi-device memo table for
-/// [`crate::dse::explore`] results.
+/// [`crate::dse::explore`] results, plus the [`FrontierStore`] that makes
+/// its misses cheap.
 ///
 /// Shared by reference across every shard's evaluation threads; lookups
 /// take one short-lived stripe lock, the pricing itself runs unlocked
@@ -177,6 +322,7 @@ impl DeviceCacheHandle {
 pub struct DesignCache {
     stripes: Vec<Mutex<HashMap<Key, Arc<OnceLock<NetworkDesign>>>>>,
     devices: Mutex<HashMap<u64, Arc<DevStats>>>,
+    frontiers: FrontierStore,
 }
 
 impl Default for DesignCache {
@@ -191,7 +337,50 @@ impl DesignCache {
         DesignCache {
             stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
             devices: Mutex::new(HashMap::new()),
+            frontiers: FrontierStore::new(),
         }
+    }
+
+    /// The per-layer frontier store shared by this cache's devices.
+    pub fn frontier_store(&self) -> &FrontierStore {
+        &self.frontiers
+    }
+
+    /// Price `points` through the frontier store: fetch or build each
+    /// layer's frontier (keyed by the handle's context + layer shape +
+    /// layer point), then run the bisection on lookups.  Bit-identical to
+    /// [`crate::dse::explore`]; `shapes[i]` must be
+    /// `dse::frontier::shape_fingerprint` of compute layer `i`.
+    ///
+    /// This is the design-cache *miss* path of the engine — the design
+    /// memo makes repeats O(1), this makes the non-repeats cheap.
+    #[allow(clippy::too_many_arguments)]
+    pub fn explore_via_frontiers(
+        &self,
+        handle: &DeviceCacheHandle,
+        net: &Network,
+        points: &[SparsityPoint],
+        shapes: &[u64],
+        rm: &ResourceModel,
+        dev: &DeviceBudget,
+        dse: &DseConfig,
+    ) -> NetworkDesign {
+        let compute = net.compute_layers();
+        assert_eq!(compute.len(), points.len());
+        assert_eq!(compute.len(), shapes.len());
+        // infeasibility early-out before any frontier work — the same
+        // check (same code) `dse::explore` starts with, so URAM-less
+        // devices never touch the store
+        let (minimal, min_res) = match minimal_checked(net, points, rm, dev) {
+            Ok(min) => min,
+            Err(unfit) => return unfit,
+        };
+        let frontiers: Vec<Arc<LayerFrontier>> = compute
+            .iter()
+            .zip(points.iter().zip(shapes))
+            .map(|(l, (p, &s))| self.frontiers.get_or_build(handle, s, l, *p, rm, dev))
+            .collect();
+        explore_frontiers_checked(net, points, rm, dev, dse, &frontiers, minimal, min_res)
     }
 
     /// Register a device under a pricing context (network, resource
@@ -214,7 +403,7 @@ impl DesignCache {
             .entry(fp)
             .or_insert_with(|| Arc::new(DevStats::default()))
             .clone();
-        DeviceCacheHandle { fingerprint: fp, stats }
+        DeviceCacheHandle { fingerprint: fp, frontier_fp: frontier_fingerprint(dev, rm), stats }
     }
 
     /// Number of distinct (device, pricing context) registrations so far.
@@ -619,6 +808,101 @@ mod tests {
         // every lookup either hit or missed; exactly the first missed
         assert_eq!(h.hits() + h.misses(), 200);
         assert_eq!(h.misses(), 1);
+    }
+
+    // ---- frontier store ----------------------------------------------
+
+    #[test]
+    fn frontier_store_counts_hits_and_misses_per_device() {
+        let cache = DesignCache::new();
+        let net = crate::arch::networks::calibnet();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        let h = cache.register(&dev, &net, &rm, &DseConfig::default());
+        let layer = net.compute_layers()[0];
+        let shape = crate::dse::frontier::shape_fingerprint(layer);
+        let p = SparsityPoint { s_w: 0.5, s_a: 0.25 };
+        let a = cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, &dev);
+        let b = cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, &dev);
+        assert!(Arc::ptr_eq(&a, &b), "repeat lookup must share the frontier");
+        assert_eq!(h.frontier_misses(), 1);
+        assert_eq!(h.frontier_hits(), 1);
+        assert_eq!(cache.frontier_store().len(), 1);
+        // a different point is a different frontier
+        let q = SparsityPoint { s_w: 0.5, s_a: 0.5 };
+        cache.frontier_store().get_or_build(&h, shape, layer, q, &rm, &dev);
+        assert_eq!(h.frontier_misses(), 2);
+        assert_eq!(cache.frontier_store().len(), 2);
+        // ...and so is the same point under another device's context
+        let h2 = cache.register(&DeviceBudget::v7_690t(), &net, &rm, &DseConfig::default());
+        cache.frontier_store().get_or_build(&h2, shape, layer, p, &rm, &DeviceBudget::v7_690t());
+        assert_eq!(h2.frontier_misses(), 1);
+        assert_eq!(h2.frontier_hits(), 0);
+        assert_eq!(cache.frontier_store().len(), 3);
+        // frontier traffic never touches the whole-design counters
+        assert_eq!(h.hits() + h.misses() + h2.hits() + h2.misses(), 0);
+    }
+
+    /// The frontier store is keyed by (device, resource model, shape,
+    /// point) — narrower than the design cache — so contexts differing
+    /// only in network or DSE config share frontiers.
+    #[test]
+    fn frontiers_shared_across_pricing_contexts_with_same_device_and_rm() {
+        let cache = DesignCache::new();
+        let dev = DeviceBudget::u250();
+        let rm = ResourceModel::default();
+        let calib = crate::arch::networks::calibnet();
+        let net18 = crate::arch::networks::resnet18();
+        let h1 = cache.register(&dev, &calib, &rm, &DseConfig::default());
+        let dse2 = DseConfig { max_iters: 32, ..DseConfig::default() };
+        let h2 = cache.register(&dev, &net18, &rm, &dse2);
+        assert_ne!(h1.fingerprint(), h2.fingerprint(), "design contexts must differ");
+        let layer = calib.compute_layers()[0];
+        let shape = crate::dse::frontier::shape_fingerprint(layer);
+        let p = SparsityPoint { s_w: 0.25, s_a: 0.25 };
+        let a = cache.frontier_store().get_or_build(&h1, shape, layer, p, &rm, &dev);
+        let b = cache.frontier_store().get_or_build(&h2, shape, layer, p, &rm, &dev);
+        assert!(Arc::ptr_eq(&a, &b), "same (device, rm, shape, point) must share");
+        assert_eq!(h1.frontier_misses(), 1);
+        assert_eq!(h2.frontier_hits(), 1);
+        assert_eq!(cache.frontier_store().len(), 1);
+        // a different resource model is a different frontier context
+        let rm2 = ResourceModel { lut_per_mac: 39.0, ..ResourceModel::default() };
+        let h3 = cache.register(&dev, &calib, &rm2, &DseConfig::default());
+        cache.frontier_store().get_or_build(&h3, shape, layer, p, &rm2, &dev);
+        assert_eq!(h3.frontier_misses(), 1);
+        assert_eq!(cache.frontier_store().len(), 2);
+    }
+
+    #[test]
+    fn explore_via_frontiers_is_bit_identical_to_explore() {
+        let cache = DesignCache::new();
+        let net = crate::arch::networks::calibnet();
+        let n = net.compute_layers().len();
+        let rm = ResourceModel::default();
+        let dse = DseConfig::default();
+        let shapes: Vec<u64> = net
+            .compute_layers()
+            .iter()
+            .map(|l| crate::dse::frontier::shape_fingerprint(l))
+            .collect();
+        for dev in [DeviceBudget::u250(), DeviceBudget::v7_690t()] {
+            let h = cache.register(&dev, &net, &rm, &dse);
+            for s in [0.0, 0.4] {
+                let points = vec![SparsityPoint { s_w: s, s_a: s }; n];
+                let via = cache.explore_via_frontiers(&h, &net, &points, &shapes, &rm, &dev, &dse);
+                let plain = crate::dse::explore(&net, &points, &rm, &dev, &dse);
+                assert_eq!(via.designs, plain.designs, "{}/s={s}", dev.name);
+                assert_eq!(via.throughput.to_bits(), plain.throughput.to_bits());
+                assert_eq!(via.resources, plain.resources);
+            }
+        }
+        // the URAM-less device early-outs before the store: only the U250
+        // populated frontiers
+        let h250 = cache.register(&DeviceBudget::u250(), &net, &rm, &dse);
+        assert!(h250.frontier_misses() > 0);
+        let h7 = cache.register(&DeviceBudget::v7_690t(), &net, &rm, &dse);
+        assert_eq!(h7.frontier_misses() + h7.frontier_hits(), 0);
     }
 
     #[test]

@@ -22,6 +22,21 @@
 //!   `dse::explore` keyed by (device fingerprint, quantized operating
 //!   points).  Quantization is applied whether or not the cache is on, so
 //!   the cache can **never** change results either.
+//! * **Cheap misses** — a design-cache miss no longer pays a full design
+//!   -space rescan: the cache's [`FrontierStore`] keeps per-layer
+//!   `dse::frontier::LayerFrontier`s keyed by (pricing context, layer
+//!   *shape*, layer point), so new candidates re-enumerate a layer's
+//!   design space only when that (shape, point) pair has never been
+//!   priced — across candidates, generations, shards and searches.
+//!   Frontier pricing is bit-identical to the scan (differential-tested),
+//!   so this can never change results either.
+//! * **Cross-shard measurement dedup** — each generation measures every
+//!   *distinct* proposal once and shares the result across shards.
+//!   During TPE random startup (and for warm-start anchors) the
+//!   seed-identical shard optimizers propose the same candidates, which a
+//!   naive sharded loop re-measured per shard; evaluations are pure by
+//!   the [`CandidateEvaluator`] contract, so sharing them is invisible in
+//!   the journals ([`EngineStats::dedup_evals`] counts the savings).
 //!
 //! # Multi-device sharding (`shard`)
 //!
@@ -67,7 +82,7 @@ pub mod cache;
 pub mod evaluator;
 pub mod shard;
 
-pub use cache::{quantize_points, DesignCache, DeviceCacheHandle};
+pub use cache::{quantize_points, DesignCache, DeviceCacheHandle, FrontierStore};
 pub use evaluator::{CandidateEvaluator, EvalPoint};
 pub use shard::{
     DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,
@@ -195,6 +210,17 @@ pub struct EngineStats {
     pub cache_hits: u64,
     /// this device's design-cache misses during this run
     pub cache_misses: u64,
+    /// layer-frontier store hits during this run (structural reuse on
+    /// design-cache misses; includes the dense-reference pricing)
+    pub frontier_hits: u64,
+    /// layer-frontier store misses (design-space enumerations actually
+    /// paid) during this run
+    pub frontier_misses: u64,
+    /// candidate *measurements* this shard skipped because an identical
+    /// proposal was measured once for the whole generation (cross-shard
+    /// dedup — TPE startup and warm-start anchors propose identical
+    /// candidates on every shard)
+    pub dedup_evals: u64,
 }
 
 impl EngineStats {
@@ -275,6 +301,18 @@ pub(super) struct EvalCtx<'a> {
     pub(super) mode: SearchMode,
     pub(super) lambda: [f64; 3],
     pub(super) dse: &'a DseConfig,
+    /// per-compute-layer `dse::frontier::shape_fingerprint`s of the
+    /// target, precomputed once per search for the frontier store
+    pub(super) shapes: &'a [u64],
+}
+
+/// The device-independent half of a candidate evaluation: decoded plan,
+/// measured accuracy/operating points, sparsity metrics.  Computed once
+/// per *distinct* proposal of a generation and shared across shards.
+pub(super) struct Measurement {
+    pub(super) plan: PruningPlan,
+    pub(super) ev: EvalPoint,
+    pub(super) metrics: pruning::SparsityMetrics,
 }
 
 /// The batched search engine: an evaluator plus the fixed hardware-side
@@ -321,27 +359,40 @@ impl<'a> Engine<'a> {
         r.per_device.remove(0).result
     }
 
-    /// Full evaluation of one candidate: decode → measure → price → score.
-    pub(super) fn evaluate_candidate(
-        &self,
-        iter: usize,
-        x: &[f64],
-        ctx: &EvalCtx<'_>,
-    ) -> SearchRecord {
+    /// Device-independent half of a candidate evaluation: decode the
+    /// proposal, run the (possibly expensive) measurement backend, derive
+    /// sparsity metrics.  Touches neither the device budget nor the
+    /// resource model — a sharded generation measures each distinct
+    /// proposal once and shares the result across shards.
+    pub(super) fn measure_candidate(&self, x: &[f64]) -> Measurement {
         let plan = PruningPlan::from_unit_point(x, self.evaluator.sparsity_model());
         let ev = self.evaluator.eval(&plan);
-        let m = pruning::metrics(self.target, &ev.points);
-        let pts = quantize_points(&ev.points, ctx.quant_bits);
+        let metrics = pruning::metrics(self.target, &ev.points);
+        Measurement { plan, ev, metrics }
+    }
+
+    /// Device-dependent half: price the measured operating points on this
+    /// engine's device (design cache + frontier store on the miss path)
+    /// and score the Eq. 6 objective.
+    pub(super) fn score_candidate(
+        &self,
+        iter: usize,
+        meas: &Measurement,
+        ctx: &EvalCtx<'_>,
+    ) -> SearchRecord {
+        let pts = quantize_points(&meas.ev.points, ctx.quant_bits);
         let design = match ctx.cache {
             Some((c, h)) => c.get_or_compute(h, &pts, || {
-                explore(self.target, &pts, self.rm, self.dev, ctx.dse)
+                c.explore_via_frontiers(
+                    h, self.target, &pts, ctx.shapes, self.rm, self.dev, ctx.dse,
+                )
             }),
             None => explore(self.target, &pts, self.rm, self.dev, ctx.dse),
         };
         let ips = design.images_per_sec(self.dev);
 
-        let f_acc = ev.accuracy / ctx.base_acc; // ∈ [0, 1]
-        let f_spa = m.avg_sparsity; // ∈ [0, 1)
+        let f_acc = meas.ev.accuracy / ctx.base_acc; // ∈ [0, 1]
+        let f_spa = meas.metrics.avg_sparsity; // ∈ [0, 1)
         // saturating throughput gain: ∈ (0, 2), =1 at the dense reference.
         // An unbounded ratio would swamp the accuracy term on networks
         // where sparsity buys 10-20x (the λ "normalization" of Eq. 6).
@@ -357,14 +408,14 @@ impl<'a> Engine<'a> {
         };
         SearchRecord {
             iter,
-            accuracy: ev.accuracy,
-            avg_sparsity: m.avg_sparsity,
-            op_density: m.op_density,
+            accuracy: meas.ev.accuracy,
+            avg_sparsity: meas.metrics.avg_sparsity,
+            op_density: meas.metrics.op_density,
             images_per_sec: ips,
             dsp: design.resources.dsp,
             efficiency: design.efficiency(),
             objective,
-            plan,
+            plan: meas.plan.clone(),
         }
     }
 }

@@ -31,8 +31,12 @@
 //! efficiency, the Fig. 1 axes) is aggregated over every record of every
 //! shard, labelled with the device that produced it.
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
 use crate::arch::Network;
 use crate::dse::explore;
+use crate::dse::frontier::shape_fingerprint;
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::metrics::{pareto_front, Point2, Table};
@@ -41,8 +45,8 @@ use crate::sparsity::SparsityPoint;
 
 use super::cache::{quantize_points, DesignCache, DeviceCacheHandle};
 use super::{
-    CandidateEvaluator, Engine, EngineStats, EvalCtx, SearchConfig, SearchRecord,
-    SearchResult, ANCHORS,
+    CandidateEvaluator, Engine, EngineStats, EvalCtx, Measurement, SearchConfig,
+    SearchRecord, SearchResult, ANCHORS,
 };
 
 /// One device's slice of a sharded search result.
@@ -85,6 +89,14 @@ pub struct ShardedStats {
     pub cache_hits: u64,
     /// design-cache misses summed over shards
     pub cache_misses: u64,
+    /// layer frontiers held by the shared store after the run
+    pub frontier_entries: usize,
+    /// frontier-store hits summed over shards
+    pub frontier_hits: u64,
+    /// frontier-store misses summed over shards
+    pub frontier_misses: u64,
+    /// measurements skipped via cross-shard candidate dedup
+    pub dedup_evals: u64,
 }
 
 /// Output of [`ShardedEngine::search`]: per-device results (standalone
@@ -184,6 +196,12 @@ struct Shard<'e> {
     /// on a warm shared cache
     hits0: u64,
     misses0: u64,
+    /// frontier-store snapshots, taken *before* the dense-reference
+    /// pricing so the run's stats cover it
+    fhits0: u64,
+    fmisses0: u64,
+    /// measurements this shard skipped via cross-shard dedup
+    dedup: u64,
     tpe: TpeOptimizer,
     records: Vec<SearchRecord>,
 }
@@ -239,6 +257,10 @@ impl<'a> ShardedEngine<'a> {
         let n_dev = self.devices.len();
         let threads = cfg.engine.resolved_threads_for(n_dev * batch);
         let base_acc = self.evaluator.base_accuracy().max(1e-9);
+        // per-layer shape fingerprints for the frontier store, shared by
+        // every shard (shapes are device-independent)
+        let shapes: Vec<u64> =
+            self.target.compute_layers().iter().map(|l| shape_fingerprint(l)).collect();
         // dense reference design per device, for throughput normalization
         let dense_points =
             quantize_points(&vec![SparsityPoint::DENSE; n], cfg.engine.quant_bits);
@@ -248,6 +270,10 @@ impl<'a> ShardedEngine<'a> {
             .iter()
             .map(|dev| cache.register(dev, self.target, self.rm, &cfg.dse))
             .collect();
+        // frontier snapshots *before* the dense pricing: the run's stats
+        // cover the frontiers it builds/reuses for the dense reference
+        let f0: Vec<(u64, u64)> =
+            handles.iter().map(|h| (h.frontier_hits(), h.frontier_misses())).collect();
 
         // Price each device's dense reference — served counter-free from
         // a warm cache, computed (and remembered) otherwise.  The
@@ -265,7 +291,19 @@ impl<'a> ShardedEngine<'a> {
                     None
                 };
                 cached.unwrap_or_else(|| {
-                    let d = explore(self.target, &dense_points, self.rm, dev, &cfg.dse);
+                    let d = if cfg.engine.cache {
+                        cache.explore_via_frontiers(
+                            &handles[i],
+                            self.target,
+                            &dense_points,
+                            &shapes,
+                            self.rm,
+                            dev,
+                            &cfg.dse,
+                        )
+                    } else {
+                        explore(self.target, &dense_points, self.rm, dev, &cfg.dse)
+                    };
                     if cfg.engine.cache {
                         cache.insert(&handles[i], &dense_points, d.clone());
                     }
@@ -291,8 +329,8 @@ impl<'a> ShardedEngine<'a> {
             .devices
             .iter()
             .zip(handles)
-            .zip(denses)
-            .map(|((dev, handle), dense)| {
+            .zip(denses.into_iter().zip(f0))
+            .map(|((dev, handle), (dense, (fhits0, fmisses0)))| {
                 let dense = dense.expect("dense slot filled");
                 let dense_ips = dense.images_per_sec(dev).max(1e-9);
                 Shard {
@@ -300,6 +338,9 @@ impl<'a> ShardedEngine<'a> {
                     dense_ips,
                     hits0: handle.hits(),
                     misses0: handle.misses(),
+                    fhits0,
+                    fmisses0,
+                    dedup: 0,
                     handle,
                     // every shard is seeded exactly like a standalone run,
                     // which is what makes its journal standalone-identical
@@ -329,7 +370,7 @@ impl<'a> ShardedEngine<'a> {
                 })
                 .collect();
             // --- evaluate the union of (shard, candidate) work items ----
-            let flat: Vec<SearchRecord> = {
+            let (flat, dedup) = {
                 let ctxs: Vec<EvalCtx<'_>> = shards
                     .iter()
                     .map(|s| EvalCtx {
@@ -344,13 +385,14 @@ impl<'a> ShardedEngine<'a> {
                         mode: cfg.mode,
                         lambda: cfg.lambda,
                         dse: &cfg.dse,
+                        shapes: &shapes,
                     })
                     .collect();
                 run_generation(&shards, &ctxs, &xs_all, done, g, threads)
             };
             // --- reduce per shard, in candidate order -------------------
             let mut flat = flat.into_iter();
-            for (s, xs) in shards.iter_mut().zip(xs_all) {
+            for ((s, xs), dd) in shards.iter_mut().zip(xs_all).zip(dedup) {
                 let recs: Vec<SearchRecord> = flat.by_ref().take(g).collect();
                 let mut observed = Vec::with_capacity(g);
                 for (x, rec) in xs.into_iter().zip(&recs) {
@@ -358,6 +400,7 @@ impl<'a> ShardedEngine<'a> {
                 }
                 s.records.extend(recs);
                 s.tpe.observe_batch(observed);
+                s.dedup += dd;
             }
             generations += 1;
             done += g;
@@ -365,8 +408,11 @@ impl<'a> ShardedEngine<'a> {
 
         // --- finalize: per-device results + cross-device frontier -------
         let cache_entries = cache.len();
+        let frontier_entries = cache.frontier_store().len();
         let mut per_device: Vec<DeviceSearchResult> = Vec::with_capacity(n_dev);
         let (mut total_hits, mut total_misses) = (0u64, 0u64);
+        let (mut total_fhits, mut total_fmisses) = (0u64, 0u64);
+        let mut total_dedup = 0u64;
         for s in shards {
             let best = s
                 .records
@@ -377,8 +423,13 @@ impl<'a> ShardedEngine<'a> {
                 .unwrap_or(0);
             let hits = s.handle.hits() - s.hits0;
             let misses = s.handle.misses() - s.misses0;
+            let fhits = s.handle.frontier_hits() - s.fhits0;
+            let fmisses = s.handle.frontier_misses() - s.fmisses0;
             total_hits += hits;
             total_misses += misses;
+            total_fhits += fhits;
+            total_fmisses += fmisses;
+            total_dedup += s.dedup;
             per_device.push(DeviceSearchResult {
                 device: s.engine.dev.name.clone(),
                 result: SearchResult {
@@ -391,6 +442,9 @@ impl<'a> ShardedEngine<'a> {
                         batch,
                         cache_hits: hits,
                         cache_misses: misses,
+                        frontier_hits: fhits,
+                        frontier_misses: fmisses,
+                        dedup_evals: s.dedup,
                     },
                     records: s.records,
                 },
@@ -406,6 +460,10 @@ impl<'a> ShardedEngine<'a> {
                 cache_entries,
                 cache_hits: total_hits,
                 cache_misses: total_misses,
+                frontier_entries,
+                frontier_hits: total_fhits,
+                frontier_misses: total_fmisses,
+                dedup_evals: total_dedup,
             },
             pareto,
             per_device,
@@ -413,10 +471,23 @@ impl<'a> ShardedEngine<'a> {
     }
 }
 
-/// Evaluate one lockstep generation: `shards.len() * g` work items, flat
-/// index `shard * g + candidate`, each worker writing into its own
-/// index-addressed slot — so the returned order (and every downstream
-/// reduction) is independent of scheduling.
+/// Evaluate one lockstep generation in two index-addressed parallel
+/// passes:
+///
+/// 1. **Measure** — identical proposals across shards (guaranteed during
+///    TPE random startup and for warm-start anchors, where every shard's
+///    seed-identical optimizer emits the same candidates) are coalesced:
+///    each *distinct* proposal is measured once, by its first `(shard,
+///    candidate)` occurrence in flat order.  Measurement is
+///    device-independent (plan decode + evaluator + sparsity metrics), so
+///    sharing it cannot change any journal — evaluations are pure by the
+///    [`CandidateEvaluator`] contract.
+/// 2. **Score** — every `(shard, candidate)` work item prices its shard's
+///    device (design cache + frontier store) and scores Eq. 6, flat index
+///    `shard * g + candidate`, each worker writing into its own slot.
+///
+/// Returns the records in flat order plus, per shard, how many
+/// measurements it skipped thanks to dedup.
 fn run_generation(
     shards: &[Shard<'_>],
     ctxs: &[EvalCtx<'_>],
@@ -424,37 +495,79 @@ fn run_generation(
     base_iter: usize,
     g: usize,
     threads: usize,
-) -> Vec<SearchRecord> {
+) -> (Vec<SearchRecord>, Vec<u64>) {
     let total = shards.len() * g;
+    // --- dedup: map each work item to its distinct-proposal slot --------
+    let mut meas_idx: Vec<usize> = Vec::with_capacity(total);
+    let mut owners: Vec<(usize, usize)> = Vec::new();
+    let mut seen: HashMap<Vec<u64>, usize> = HashMap::new();
+    let mut dedup = vec![0u64; shards.len()];
+    for k in 0..total {
+        let (si, j) = (k / g, k % g);
+        let key: Vec<u64> = xs_all[si][j].iter().map(|v| v.to_bits()).collect();
+        match seen.entry(key) {
+            Entry::Occupied(e) => {
+                meas_idx.push(*e.get());
+                dedup[si] += 1;
+            }
+            Entry::Vacant(e) => {
+                e.insert(owners.len());
+                meas_idx.push(owners.len());
+                owners.push((si, j));
+            }
+        }
+    }
+    // --- pass 1: measure each distinct proposal exactly once ------------
+    let mut meas: Vec<Option<Measurement>> = Vec::new();
+    meas.resize_with(owners.len(), || None);
+    run_slots(&mut meas, threads, |slot, mi| {
+        let (si, j) = owners[mi];
+        *slot = Some(shards[si].engine.measure_candidate(&xs_all[si][j]));
+    });
+    let meas: Vec<Measurement> =
+        meas.into_iter().map(|o| o.expect("measurement slot filled")).collect();
+    // --- pass 2: price + score every (shard, candidate) work item -------
     let mut out: Vec<Option<SearchRecord>> = Vec::new();
     out.resize_with(total, || None);
-    let eval_into = |slot: &mut Option<SearchRecord>, k: usize| {
+    run_slots(&mut out, threads, |slot, k| {
         let (si, j) = (k / g, k % g);
-        *slot = Some(shards[si].engine.evaluate_candidate(
-            base_iter + j,
-            &xs_all[si][j],
-            &ctxs[si],
-        ));
-    };
-    let threads = threads.clamp(1, total.max(1));
+        *slot =
+            Some(shards[si].engine.score_candidate(base_iter + j, &meas[meas_idx[k]], &ctxs[si]));
+    });
+    let records = out.into_iter().map(|o| o.expect("generation slot filled")).collect();
+    (records, dedup)
+}
+
+/// Fill every slot via `fill(slot, index)` on up to `threads` scoped
+/// workers, each owning a contiguous index-addressed chunk — scheduling
+/// can never affect where a result lands.
+fn run_slots<T: Send>(
+    slots: &mut [Option<T>],
+    threads: usize,
+    fill: impl Fn(&mut Option<T>, usize) + Sync,
+) {
+    let total = slots.len();
+    if total == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, total);
     if threads <= 1 {
-        for (k, slot) in out.iter_mut().enumerate() {
-            eval_into(slot, k);
+        for (k, slot) in slots.iter_mut().enumerate() {
+            fill(slot, k);
         }
     } else {
         let chunk = total.div_ceil(threads);
         std::thread::scope(|sc| {
-            for (ci, oc) in out.chunks_mut(chunk).enumerate() {
-                let eval_into = &eval_into;
+            for (ci, oc) in slots.chunks_mut(chunk).enumerate() {
+                let fill = &fill;
                 sc.spawn(move || {
                     for (off, slot) in oc.iter_mut().enumerate() {
-                        eval_into(slot, ci * chunk + off);
+                        fill(slot, ci * chunk + off);
                     }
                 });
             }
         });
     }
-    out.into_iter().map(|o| o.expect("generation slot filled")).collect()
 }
 
 /// Non-dominated (accuracy ↑, efficiency ↑) records across every shard.
@@ -658,6 +771,82 @@ mod tests {
             assert_eq!(s.generations, 3);
         }
         assert_eq!(r.stats.cache_hits + r.stats.cache_misses, 21);
+    }
+
+    /// Cross-shard dedup: with `iterations ≤ n_startup` every shard's
+    /// optimizer is in its model-free random phase and — being seeded
+    /// identically — proposes the *same* candidates (anchors included),
+    /// so every shard after the first measures nothing itself.
+    #[test]
+    fn startup_candidates_are_deduped_across_shards() {
+        let ev = surrogate(38);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices =
+            [DeviceBudget::u250(), DeviceBudget::v7_690t(), DeviceBudget::stratix10()];
+        let iters = 9; // < TpeConfig::default().n_startup
+        let c = cfg(
+            iters,
+            17,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
+        // first shard (flat order) owns every measurement; the other two
+        // dedup all of theirs
+        assert_eq!(r.per_device[0].result.stats.dedup_evals, 0);
+        for d in &r.per_device[1..] {
+            assert_eq!(
+                d.result.stats.dedup_evals, iters as u64,
+                "{}: startup proposals must be fully deduped",
+                d.device
+            );
+        }
+        assert_eq!(r.stats.dedup_evals, 2 * iters as u64);
+        // pricing is NOT deduped — every shard still prices its device
+        for d in &r.per_device {
+            let s = &d.result.stats;
+            assert_eq!(s.cache_hits + s.cache_misses, iters as u64, "{}", d.device);
+        }
+    }
+
+    /// The frontier store gives structural reuse on design-cache misses:
+    /// ResNet-18 repeats its block shapes, so even a cold search hits the
+    /// store — and a warm design cache skips it entirely.
+    #[test]
+    fn frontier_store_reuse_shows_in_stats() {
+        let net = networks::resnet18();
+        let ev = SurrogateEvaluator {
+            net: net.clone(),
+            sparsity: synthesize(&net, 2),
+            base_acc: 69.75,
+        };
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250()];
+        let c = cfg(
+            4,
+            3,
+            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let cache = DesignCache::new();
+        let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
+        let cold = eng.search_with_cache(&c, &cache);
+        let s = &cold.per_device[0].result.stats;
+        assert!(s.frontier_misses > 0, "cold run must build frontiers");
+        assert!(
+            s.frontier_hits > 0,
+            "repeated ResNet shapes must hit the frontier store"
+        );
+        assert!(cold.stats.frontier_entries > 0);
+        assert_eq!(cold.stats.frontier_hits, s.frontier_hits);
+        // warm rerun: every pricing is a design-cache hit, so the
+        // frontier store sees no traffic at all
+        let warm = eng.search_with_cache(&c, &cache);
+        assert_eq!(warm.stats.cache_misses, 0);
+        assert_eq!(warm.stats.frontier_hits + warm.stats.frontier_misses, 0);
+        // and the journals are unaffected by any of the reuse machinery
+        for (a, b) in cold.per_device.iter().zip(&warm.per_device) {
+            assert_eq!(objective_bits(&a.result), objective_bits(&b.result));
+        }
     }
 
     #[test]

@@ -91,7 +91,9 @@ impl Default for ResourceModel {
 const BRAM18K_BITS: u64 = 18 * 1024;
 const URAM_BITS: u64 = 288 * 1024;
 
-fn log2_ceil(x: u64) -> u64 {
+/// Shared with `dse::frontier`'s incremental coster, which must reproduce
+/// the LUT expression of [`ResourceModel::layer`] bit for bit.
+pub(crate) fn log2_ceil(x: u64) -> u64 {
     (64 - x.max(1).leading_zeros() as u64).max(1)
 }
 

@@ -41,6 +41,38 @@
 //! (see the module docs for the exact determinism contract).
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
+//!
+//! ## The frontier pricing kernel (`dse::frontier`)
+//!
+//! Every consumer of [`dse::explore`] — the engine, the sharded search,
+//! [`dse::partition`]'s annealer, the figure/table bench drivers — prices
+//! through per-layer [`dse::LayerFrontier`]s: the divisor×n_mac design
+//! space of a layer is enumerated **once** per (layer shape, sparsity
+//! point, resource model, device) and reduced to a rate-sorted Pareto
+//! frontier, so "cheapest design achieving rate λ" is a binary search
+//! instead of a rescan.  Results are bit-identical to the seed scan
+//! (kept as [`dse::explore_scan`] / [`dse::cheapest_design_achieving`]
+//! and differential-tested against it); the engine's design cache carries
+//! an [`engine::FrontierStore`] so frontiers are shared across
+//! candidates, generations, shards and searches.
+//!
+//! ## Module map
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`arch`]      | dataflow-graph IR + the paper's network geometries |
+//! | [`sparsity`]  | operating points, transfer curves, synthesis |
+//! | [`pruning`]   | plans, thresholds, software sparsity metrics |
+//! | [`hardware`]  | SPE cycle model (Eq. 1–2), resource model, devices |
+//! | [`dse`]       | Eq. 3–5 DSE: frontier kernel, bisection, balancing, partitioning |
+//! | [`optim`]     | TPE and simulated annealing |
+//! | [`engine`]    | batched/parallel/sharded search + pricing caches |
+//! | [`coordinator`] | production evaluators + stable search entry points |
+//! | [`simulator`] | cycle-level dataflow simulator (model validation) |
+//! | [`baselines`] | dense / PASS-like / HPIPE-like / non-dataflow designs |
+//! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
+//! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |
+//! | [`util`]      | offline stand-ins: rng, prop testing, json, cli |
 
 pub mod arch;
 pub mod baselines;

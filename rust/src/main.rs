@@ -163,14 +163,19 @@ fn cmd_search(args: &[String]) -> i32 {
         let s = &result.stats;
         println!(
             "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
-             shared cache: {} entries, {} hit / {} miss",
+             shared cache: {} entries, {} hit / {} miss | frontiers: {} entries, \
+             {} hit / {} miss | {} measurements deduped",
             s.devices,
             s.generations,
             cfg.engine.batch.max(1),
             s.threads,
             s.cache_entries,
             s.cache_hits,
-            s.cache_misses
+            s.cache_misses,
+            s.frontier_entries,
+            s.frontier_hits,
+            s.frontier_misses,
+            s.dedup_evals
         );
         print!("{}", result.summary_table().to_markdown());
         println!(
@@ -207,13 +212,16 @@ fn cmd_search(args: &[String]) -> i32 {
     );
     let s = &result.stats;
     println!(
-        "[search] engine: {} generations x batch {} on {} thread(s) | design cache {} hit / {} miss ({:.0}% hit rate)",
+        "[search] engine: {} generations x batch {} on {} thread(s) | design cache \
+         {} hit / {} miss ({:.0}% hit rate) | frontiers {} hit / {} miss",
         s.generations,
         s.batch,
         s.threads,
         s.cache_hits,
         s.cache_misses,
-        s.cache_hit_rate() * 100.0
+        s.cache_hit_rate() * 100.0,
+        s.frontier_hits,
+        s.frontier_misses
     );
     if !journal.is_empty() {
         if let Some(dir) = std::path::Path::new(journal).parent() {

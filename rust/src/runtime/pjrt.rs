@@ -147,7 +147,13 @@ impl ModelRuntime {
             s_a[i] /= k;
             dens[i] /= k;
         }
-        Ok(EvalResult { accuracy: hits / total as f64, s_w, s_a, pair_density: dens, images: total })
+        Ok(EvalResult {
+            accuracy: hits / total as f64,
+            s_w,
+            s_a,
+            pair_density: dens,
+            images: total,
+        })
     }
 }
 

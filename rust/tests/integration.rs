@@ -13,7 +13,7 @@ use hass::coordinator::{
     search, search_sharded, CandidateEvaluator, Engine, EngineConfig, EvalPoint,
     MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
 };
-use hass::dse::{explore, network_throughput, DseConfig};
+use hass::dse::{explore, explore_scan, network_throughput, DseConfig};
 use hass::engine::quantize_points;
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
@@ -363,6 +363,59 @@ fn sharded_best_designs_fit_and_simulate() {
         let cfgs = stages_from_design(&net, &design.designs, &pts, rm.fifo_depth);
         let rep = simulate(&net, &cfgs, 2, SparsityDynamics::Deterministic);
         assert!(!rep.deadlocked, "{}: deadlock", dev.name);
+    }
+}
+
+/// Cross-module differential for the frontier pricing kernel: on full
+/// paper geometries, frontier-based `explore` must reproduce the seed
+/// scan bit for bit (designs, throughput, resources).
+#[test]
+fn frontier_explore_matches_scan_on_paper_geometries() {
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    for (name, s) in [("resnet18", 0.55), ("mobilenet_v2", 0.2)] {
+        let net = networks::by_name(name).unwrap();
+        let n = net.compute_layers().len();
+        let points = vec![hass::sparsity::SparsityPoint { s_w: s, s_a: 0.8 * s }; n];
+        let fast = explore(&net, &points, &rm, &dev, &DseConfig::default());
+        let scan = explore_scan(&net, &points, &rm, &dev, &DseConfig::default());
+        assert_eq!(fast.designs, scan.designs, "{name}/s={s}: designs diverged");
+        assert_eq!(
+            fast.throughput.to_bits(),
+            scan.throughput.to_bits(),
+            "{name}/s={s}: throughput diverged"
+        );
+        assert_eq!(fast.resources, scan.resources, "{name}/s={s}");
+    }
+}
+
+/// Cross-shard dedup + frontier reuse through the public sharded API:
+/// within the TPE startup budget every shard proposes identical
+/// candidates, so all but one shard's measurements are deduped — while
+/// journals stay bit-identical to standalone runs (asserted above).
+#[test]
+fn sharded_search_dedups_startup_and_reuses_frontiers() {
+    let ev = StubEvaluator::calibnet(44);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let iters = 8; // < TPE n_startup (10): all proposals are model-free
+    let r = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(iters, 11, 0));
+    assert_eq!(
+        r.stats.dedup_evals,
+        iters as u64,
+        "second shard must dedup every startup measurement"
+    );
+    assert_eq!(r.per_device[0].result.stats.dedup_evals, 0);
+    assert_eq!(r.per_device[1].result.stats.dedup_evals, iters as u64);
+    // the pricing device populated (and shared) the frontier store
+    let u250 = &r.per_device[0].result.stats;
+    assert!(u250.frontier_misses > 0, "cold search must build frontiers");
+    assert!(r.stats.frontier_entries > 0);
+    // pricing itself is never deduped: each shard prices every candidate
+    for d in &r.per_device {
+        let s = &d.result.stats;
+        assert_eq!(s.cache_hits + s.cache_misses, iters as u64, "{}", d.device);
     }
 }
 
