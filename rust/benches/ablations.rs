@@ -13,9 +13,12 @@
 //! Output: `results/ablations.csv`.
 
 use hass::arch::networks;
-use hass::coordinator::{search, Evaluate, SearchConfig, SearchMode, SurrogateEvaluator};
+use hass::coordinator::{
+    search_with_cache, DesignCache, Evaluate, SearchConfig, SearchMode, SurrogateEvaluator,
+};
 use hass::dse::balance::{balance, contiguous_assignment, imbalance};
 use hass::dse::{explore, DseConfig};
+use hass::engine::{cache_file_from_args, save_cache_file};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
@@ -28,16 +31,20 @@ use hass::util::rng::Rng;
 
 fn main() {
     let mut t = Table::new(&["ablation", "variant", "metric", "value"]);
+    // `--cache-file <path>`: warm design cache for the TPE ablation's
+    // searches, saved back at exit so repeat sweeps run warm
+    let (cache, cache_path) = cache_file_from_args("[ablations]");
 
     ablate_balancing(&mut t);
     ablate_buffering(&mut t);
     ablate_thresholds(&mut t);
-    ablate_tpe(&mut t);
+    ablate_tpe(&mut t, &cache);
 
     print!("{}", t.to_markdown());
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
     t.write_files(&dir, "ablations").expect("write results");
     eprintln!("[ablations] -> results/ablations.csv");
+    save_cache_file(&cache, &cache_path, "[ablations]");
 }
 
 /// §IV Balancing strategy: simulated pipeline throughput of CalibNet with
@@ -316,7 +323,7 @@ fn ablate_thresholds(t: &mut Table) {
 }
 
 /// §V-B: TPE vs random search on the actual Eq. 6 objective.
-fn ablate_tpe(t: &mut Table) {
+fn ablate_tpe(t: &mut Table, cache: &DesignCache) {
     let net = networks::calibnet();
     let sp = synthesize(&net, 5);
     let ev = SurrogateEvaluator { net: net.clone(), sparsity: sp, base_acc: 90.0 };
@@ -334,7 +341,7 @@ fn ablate_tpe(t: &mut Table) {
             warm_start: false,
             ..Default::default()
         };
-        let r = search(&ev, &net, &rm, &dev, &cfg);
+        let r = search_with_cache(&ev, &net, &rm, &dev, &cfg, cache);
         tpe_best += r.best_record().objective / 3.0;
         // random: same budget, same objective pipeline
         let n = ev.sparsity_model().layers.len();

@@ -16,13 +16,15 @@
 use std::time::Instant;
 
 use hass::arch::networks;
+use hass::coordinator::{Engine, EngineConfig, SearchConfig, SurrogateEvaluator};
 use hass::dse::{build_frontiers, explore, explore_scan, explore_with_frontiers, DseConfig};
+use hass::engine::DesignCache;
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
 use hass::optim::tpe::TpeOptimizer;
 use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
-use hass::sparsity::SparsityPoint;
+use hass::sparsity::{synthesize, SparsityPoint};
 
 fn median_ms(mut f: impl FnMut(), reps: usize) -> f64 {
     f(); // warmup
@@ -227,6 +229,87 @@ fn main() {
         ]);
     }
 
+    // ---- cache persistence: cold search vs warm-from-disk ----------------
+    let cache_cold_ms: f64;
+    let cache_warm_ms: f64;
+    let cache_speedup: f64;
+    {
+        let net = networks::calibnet();
+        let ev = SurrogateEvaluator {
+            net: net.clone(),
+            sparsity: synthesize(&net, 3),
+            base_acc: 85.0,
+        };
+        let cfg = SearchConfig {
+            iterations: 24,
+            seed: 1,
+            engine: EngineConfig::batched(4),
+            ..Default::default()
+        };
+        let eng = Engine::new(&ev, &net, &rm, &dev);
+        // cold: a fresh cache per rep, every pricing paid from scratch
+        cache_cold_ms = median_ms(
+            || {
+                let cache = DesignCache::new();
+                std::hint::black_box(eng.search_with_cache(&cfg, &cache));
+            },
+            5,
+        );
+        // warm-from-disk: each rep loads the snapshot and repeats the
+        // search — the timed path a sweep's second run actually takes
+        let cache = DesignCache::new();
+        let cold = eng.search_with_cache(&cfg, &cache);
+        let snap = std::env::temp_dir().join("hass_hotpath_cache.json");
+        cache.save(&snap).expect("write cache snapshot");
+        let mut warm_misses = u64::MAX;
+        let mut warm_identical = false;
+        cache_warm_ms = median_ms(
+            || {
+                let (warm_cache, _) = DesignCache::load(&snap).expect("read cache snapshot");
+                let warm = eng.search_with_cache(&cfg, &warm_cache);
+                warm_misses = warm.stats.cache_misses;
+                warm_identical = warm
+                    .records
+                    .iter()
+                    .zip(&cold.records)
+                    .all(|(a, b)| a.objective.to_bits() == b.objective.to_bits());
+                std::hint::black_box(&warm);
+            },
+            5,
+        );
+        std::fs::remove_file(&snap).ok();
+        assert_eq!(warm_misses, 0, "warm-from-disk repeat must not miss");
+        assert!(warm_identical, "warm-from-disk journal diverged from cold");
+        cache_speedup = cache_cold_ms / cache_warm_ms;
+        let pass = cache_speedup >= 1.0;
+        eprintln!(
+            "[hotpath] cache/calibnet_search24: cold {cache_cold_ms:.2} ms vs warm-from-disk \
+             {cache_warm_ms:.2} ms (load + search) -> {cache_speedup:.1}x, 0 misses {}",
+            ok(pass)
+        );
+        t.row(vec![
+            "cache/cold_search".into(),
+            "median_ms".into(),
+            format!("{cache_cold_ms:.3}"),
+            "-".into(),
+            "true".into(),
+        ]);
+        t.row(vec![
+            "cache/warm_from_disk".into(),
+            "median_ms".into(),
+            format!("{cache_warm_ms:.3}"),
+            "-".into(),
+            "true".into(),
+        ]);
+        t.row(vec![
+            "cache/warm_speedup".into(),
+            "ratio".into(),
+            format!("{cache_speedup:.3}"),
+            ">=1".into(),
+            pass.to_string(),
+        ]);
+    }
+
     // ---- PJRT evaluation + search-iteration overhead ---------------------
     if hass::runtime::available(&hass::runtime::default_dir()) {
         let rt = hass::runtime::ModelRuntime::load_default().expect("artifact");
@@ -301,6 +384,11 @@ fn main() {
         explore_speedup >= 5.0
     ));
     json.push_str(&format!("  \"simulator_spe_cycles_per_sec\": {sim_eps:.3e},\n"));
+    json.push_str(&format!(
+        "  \"cache_persistence\": {{\"cold_search_ms\": {cache_cold_ms:.3}, \
+         \"warm_from_disk_ms\": {cache_warm_ms:.3}, \"speedup\": {cache_speedup:.3}, \
+         \"warm_misses\": 0, \"bit_identical\": true}},\n"
+    ));
     json.push_str(&format!("  \"tpe_ask_ms\": {tpe_ask_ms:.4}\n"));
     json.push_str("}\n");
     let path = dir.join("BENCH_hotpath.json");

@@ -15,8 +15,9 @@
 
 use hass::arch::networks;
 use hass::baselines::{self, MemoryModel};
-use hass::coordinator::{search, SearchConfig, SearchMode, SurrogateEvaluator};
+use hass::coordinator::{search_with_cache, SearchConfig, SearchMode, SurrogateEvaluator};
 use hass::dse::{explore, partition::partition, partition::DEFAULT_RECONFIG_SECS, DseConfig};
+use hass::engine::{cache_file_from_args, save_cache_file};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
@@ -48,6 +49,10 @@ fn main() {
     ]);
     let quick = std::env::args().any(|a| a == "--quick");
     let iters = if quick { 16 } else { 64 };
+    // `--cache-file <path>`: warm design cache shared by the HASS search
+    // of every network row (the multi-fingerprint cache keys per
+    // network), saved back at exit so repeat sweeps run warm
+    let (cache, cache_path) = cache_file_from_args("[table2]");
 
     for name in nets {
         let net = networks::by_name(name).unwrap();
@@ -146,7 +151,7 @@ fn main() {
             seed: 3,
             ..Default::default()
         };
-        let r = search(&ev, &net, &rm, &u250, &cfg);
+        let r = search_with_cache(&ev, &net, &rm, &u250, &cfg, &cache);
         let b = r.best_record();
         let pts = hass::coordinator::Evaluate::eval(&ev, &b.plan).points;
         let ours = if single_device_fits {
@@ -191,6 +196,9 @@ fn main() {
     eprintln!("[table2] -> results/table2.{{csv,md}}");
 
     // sanity of the reproduced shape (who wins)
+    // save before the shape checks: a failing run is exactly when the
+    // diagnostic rerun wants its pricings back warm
+    save_cache_file(&cache, &cache_path, "[table2]");
     check_shape(&t);
 }
 

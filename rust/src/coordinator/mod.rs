@@ -40,7 +40,7 @@ use crate::util::clampf;
 pub use crate::engine::{
     CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
     EngineStats, EvalPoint, ParetoPoint, SearchConfig, SearchMode, SearchRecord,
-    SearchResult, ShardedEngine, ShardedSearchResult, ShardedStats,
+    SearchResult, ShardedEngine, ShardedSearchResult, ShardedStats, SnapshotStats,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -153,6 +153,36 @@ pub fn search_sharded(
     cfg: &SearchConfig,
 ) -> ShardedSearchResult {
     ShardedEngine::new(evaluator, target, rm, devices).search(cfg)
+}
+
+/// [`search`] against a caller-owned design cache — possibly shared with
+/// other searches, possibly warm from a [`DesignCache::load`]ed snapshot.
+/// The cache never changes results; a warm cache only shifts the
+/// hit/miss split in the returned stats (an exact repeat misses zero
+/// times).  This is the entry point the `hass search --cache-file` flag
+/// and the bench sweep drivers run on.
+pub fn search_with_cache(
+    evaluator: &dyn Evaluate,
+    target: &Network,
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &SearchConfig,
+    cache: &DesignCache,
+) -> SearchResult {
+    Engine::new(evaluator, target, rm, dev).search_with_cache(cfg, cache)
+}
+
+/// [`search_sharded`] against a caller-owned (possibly warm) shared
+/// design cache; see [`search_with_cache`].
+pub fn search_sharded_with_cache(
+    evaluator: &dyn Evaluate,
+    target: &Network,
+    rm: &ResourceModel,
+    devices: &[DeviceBudget],
+    cfg: &SearchConfig,
+    cache: &DesignCache,
+) -> ShardedSearchResult {
+    ShardedEngine::new(evaluator, target, rm, devices).search_with_cache(cfg, cache)
 }
 
 #[cfg(test)]

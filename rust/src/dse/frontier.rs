@@ -87,6 +87,17 @@ impl LayerFrontier {
         &self.entries
     }
 
+    /// Rebuild a frontier from entries recorded by [`Self::entries`] —
+    /// the deserialization side of the engine's cache snapshots.
+    /// `entries` must already satisfy the frontier invariant (`rate`
+    /// strictly ascending, `cycles` strictly descending); callers
+    /// loading untrusted data validate with [`entries_are_ordered`]
+    /// first, and debug builds assert it.
+    pub fn from_entries(entries: Vec<FrontierEntry>) -> LayerFrontier {
+        debug_assert!(entries_are_ordered(&entries), "frontier entries out of order");
+        LayerFrontier { entries }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -129,6 +140,15 @@ impl LayerFrontier {
         }
         self.cheapest_achieving(min_thr).map(|e| e.design)
     }
+}
+
+/// Does `entries` satisfy the [`LayerFrontier`] ordering invariant
+/// (`rate` strictly ascending, `cycles` strictly descending, and each
+/// entry's `rate`/`cycles` pair consistent)?  The validation gate for
+/// [`LayerFrontier::from_entries`] on untrusted (on-disk) data.
+pub fn entries_are_ordered(entries: &[FrontierEntry]) -> bool {
+    entries.iter().all(|e| e.cycles >= 1 && e.rate.to_bits() == (1.0 / e.cycles as f64).to_bits())
+        && entries.windows(2).all(|w| w[0].rate < w[1].rate && w[0].cycles > w[1].cycles)
 }
 
 /// A candidate before frontier reduction.
@@ -609,6 +629,37 @@ mod tests {
                 {
                     assert_ne!(shape_fingerprint(x), shape_fingerprint(y));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn from_entries_roundtrips_and_order_check_validates() {
+        let net = networks::calibnet();
+        let rm = ResourceModel::default();
+        for dev in [DeviceBudget::u250(), DeviceBudget::v7_690t()] {
+            let built = build_frontier(
+                net.compute_layers()[0],
+                SparsityPoint { s_w: 0.3, s_a: 0.6 },
+                &rm,
+                &dev,
+            );
+            assert!(entries_are_ordered(built.entries()), "{}", dev.name);
+            let back = LayerFrontier::from_entries(built.entries().to_vec());
+            assert_eq!(back.len(), built.len());
+            for thr in [0.0, built.max_rate() * 0.5, built.max_rate()] {
+                assert_eq!(
+                    back.cheapest_design_achieving(thr),
+                    built.cheapest_design_achieving(thr),
+                    "{} thr={thr:e}",
+                    dev.name
+                );
+            }
+            // a reversed (or otherwise disordered) entry list fails the gate
+            if built.len() >= 2 {
+                let mut rev = built.entries().to_vec();
+                rev.reverse();
+                assert!(!entries_are_ordered(&rev));
             }
         }
     }

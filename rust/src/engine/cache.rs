@@ -1,4 +1,5 @@
-//! Memoization of DSE pricings, shared across devices and search shards.
+//! Memoization of DSE pricings, shared across devices, search shards —
+//! and, via on-disk snapshots, across whole processes.
 //!
 //! `dse::explore` dominates the cost of a search iteration on the
 //! surrogate path (and is the entire hardware-pricing cost on the measured
@@ -15,24 +16,14 @@
 //! [`DeviceCacheHandle`] that carries the FNV-1a fingerprint and its
 //! private hit/miss counters; entries of different devices — or the same
 //! device under different configs — can never collide because the
-//! fingerprint is part of every key.  The map is **lock-striped** (keys
-//! are spread over [`STRIPES`] independent mutexes by key hash) so shards
-//! pricing different operating points rarely contend on the same lock.
-//!
-//! Exact f64 keys alone would almost never collide between TPE proposals;
-//! the engine therefore *snaps* operating points to a dyadic grid with
-//! [`quantize_points`] before pricing.  Snapping is applied whether or not
-//! the cache is enabled, so turning the cache on or off never changes
-//! results — a cache hit returns bit-for-bit what recomputation would.
-//! `quant_bits = 0` disables snapping (exact keys), which is the engine
-//! default so the serial path reproduces the pre-engine seed behavior.
+//! fingerprint is part of every key.
 //!
 //! # Structural reuse: the frontier store
 //!
 //! Exact-point memoization only pays off on repeats; every *new* quantized
-//! point vector still used to pay a full `dse::explore`.  The cache now
-//! also owns a [`FrontierStore`]: a second lock-striped map holding the
-//! per-layer [`LayerFrontier`]s (`dse::frontier`) keyed by
+//! point vector still used to pay a full `dse::explore`.  The cache also
+//! owns a [`FrontierStore`]: a second memo holding the per-layer
+//! [`LayerFrontier`]s (`dse::frontier`) keyed by
 //! `(device + resource model, layer shape, layer point)` — deliberately
 //! *narrower* than the design keys, because a frontier does not depend on
 //! the network or the DSE config.  The engine's miss path
@@ -44,30 +35,80 @@
 //! separately ([`DeviceCacheHandle::frontier_hits`] /
 //! [`frontier_misses`](DeviceCacheHandle::frontier_misses)).
 //!
-//! # Single-compute contract
+//! # Concurrency core
 //!
-//! [`get_or_compute`](DesignCache::get_or_compute) runs `compute` **at
-//! most once per key**, even under contention.  A miss installs an empty
-//! [`OnceLock`] cell under the stripe lock and fills it *outside* the
-//! lock; racing threads find the in-flight cell, count a hit, and block on
-//! the cell instead of re-pricing.  (The pre-shard implementation let both
-//! racers compute — benign for determinism, but it doubled the most
-//! expensive call in the hot path exactly when the optimizer converges and
-//! shards pile onto the same keys.)
+//! Both stores are thin typed layers over one generic primitive,
+//! [`StripedMemo`] (`util::memo`): keys are spread over independent mutex
+//! stripes, a miss installs an empty `OnceLock` cell under the stripe
+//! lock and fills it *outside* the lock, and racing threads block on the
+//! in-flight cell instead of re-pricing — `compute` runs **at most once
+//! per key**, even under contention.  The memo reports which caller
+//! installed the cell, which is all this module adds on top: per-device
+//! hit/miss accounting.
+//!
+//! Exact f64 keys alone would almost never collide between TPE proposals;
+//! the engine therefore *snaps* operating points to a dyadic grid with
+//! [`quantize_points`] before pricing.  Snapping is applied whether or not
+//! the cache is enabled, so turning the cache on or off never changes
+//! results — a cache hit returns bit-for-bit what recomputation would.
+//! `quant_bits = 0` disables snapping (exact keys), which is the engine
+//! default so the serial path reproduces the pre-engine seed behavior.
+//!
+//! # On-disk snapshots
+//!
+//! [`DesignCache::save`] / [`DesignCache::load`] persist both stores as a
+//! versioned JSON document (`util::json`, no external deps), so Fig. 5 /
+//! Table II sweeps and ablations start warm:
+//!
+//! ```text
+//! { "format":  "hass-design-cache",
+//!   "version": 1,
+//!   "designs": [ { "fp":  <pricing-context fingerprint, hex>,
+//!                  "pts": [<s_w bits, hex>, <s_a bits, hex>, ...],
+//!                  "thr": <throughput bits, hex>,
+//!                  "res": [dsp, lut, bram18k, uram],
+//!                  "ds":  [[i_par, o_par, n_mac], ...],
+//!                  "check": <entry checksum, hex> }, ... ],
+//!   "frontiers": [ { "ctx": <frontier-context fingerprint, hex>,
+//!                    "shape": <layer-shape fingerprint, hex>,
+//!                    "pt":  [<s_w bits, hex>, <s_a bits, hex>],
+//!                    "es":  [[rate bits, cycles, cost bits, i_par, o_par,
+//!                             n_mac, dsp, lut, bram18k, uram], ...],
+//!                    "check": <entry checksum, hex> }, ... ] }
+//! ```
+//!
+//! Every u64 fingerprint and every f64 travels as its 16-hex-digit bit
+//! pattern ([`crate::util::json::u64_to_hex`]): JSON numbers are f64,
+//! which cannot carry 64-bit hashes exactly and cannot carry ±inf at all
+//! (frontier costs on URAM-less devices are `+inf`), while bit patterns
+//! make the roundtrip exact — a warm-from-disk cache returns
+//! **bit-identical** pricings, so a repeated search misses zero times and
+//! journals bit-for-bit what the cold run journaled.  Each entry carries
+//! a `check` fingerprint (FNV-1a folded over its fields' canonical
+//! serializations, sorted key order, `check` itself excluded);
+//! entries whose recorded fingerprint does not match the recomputed one —
+//! a truncated write, a hand-edited file — are *skipped* on load
+//! ([`SnapshotStats::skipped`]) rather than poisoning the cache.  Context
+//! mismatches need no load-time handling at all: the pricing-context
+//! fingerprint is part of every key, so entries saved under another
+//! network / resource model / DSE config simply never hit.
 
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use crate::arch::{LayerDesc, Network};
-use crate::dse::frontier::{build_frontier, LayerFrontier};
+use crate::dse::frontier::{build_frontier, entries_are_ordered, FrontierEntry, LayerFrontier};
 use crate::dse::{explore_frontiers_checked, minimal_checked, DseConfig, NetworkDesign};
 use crate::hardware::device::DeviceBudget;
-use crate::hardware::resources::ResourceModel;
+use crate::hardware::resources::{ResourceModel, Resources};
+use crate::hardware::LayerDesign;
 use crate::sparsity::SparsityPoint;
+use crate::util::json::{u64_from_hex, u64_to_hex, Json};
+use crate::util::memo::StripedMemo;
 
-/// Number of independent map shards (locks) inside one [`DesignCache`].
+/// Number of independent map shards (locks) inside each store of a
+/// [`DesignCache`].
 pub const STRIPES: usize = 16;
 
 /// Snap each operating point to multiples of `2^-bits` (0 = identity).
@@ -234,42 +275,33 @@ struct FrontierKey {
     point: (u64, u64),
 }
 
-/// Lock-striped, per-device store of [`LayerFrontier`]s — the structural
-/// half of the pricing cache.  [`DesignCache`] memoizes *whole-network*
-/// designs on exact (quantized) point vectors; every miss there still
-/// pays a full `explore`.  This store memoizes the expensive part of that
-/// miss — the per-layer design-space enumeration — keyed by
-/// `(device + resource model, layer shape, layer point)`, so a new
-/// candidate whose per-layer operating points (or layer shapes) were ever
-/// seen before rebuilds nothing and only re-runs the cheap bisection
+/// Per-device store of [`LayerFrontier`]s — the structural half of the
+/// pricing cache, a typed layer over [`StripedMemo`].  [`DesignCache`]
+/// memoizes *whole-network* designs on exact (quantized) point vectors;
+/// every miss there still pays a full `explore`.  This store memoizes the
+/// expensive part of that miss — the per-layer design-space enumeration —
+/// keyed by `(device + resource model, layer shape, layer point)`, so a
+/// new candidate whose per-layer operating points (or layer shapes) were
+/// ever seen before rebuilds nothing and only re-runs the cheap bisection
 /// lookups.  Shared across candidates, generations, shards and searches
 /// (even over different networks / DSE configs — frontiers don't depend
-/// on either); the same [`OnceLock`] single-compute contract applies per
-/// frontier.
+/// on either); the memo's single-compute contract applies per frontier.
 pub struct FrontierStore {
-    stripes: Vec<Mutex<HashMap<FrontierKey, Arc<OnceLock<Arc<LayerFrontier>>>>>>,
+    memo: StripedMemo<FrontierKey, Arc<LayerFrontier>>,
 }
 
 impl FrontierStore {
     fn new() -> Self {
-        FrontierStore {
-            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
-        }
+        FrontierStore { memo: StripedMemo::new(STRIPES) }
     }
 
     /// Total frontiers across all stripes (including in-flight cells).
     pub fn len(&self) -> usize {
-        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.memo.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    fn stripe_of(&self, key: &FrontierKey) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) % self.stripes.len()
+        self.memo.is_empty()
     }
 
     /// Fetch (or build exactly once) the frontier of `layer` at `point`
@@ -290,37 +322,26 @@ impl FrontierStore {
             shape,
             point: (point.s_w.to_bits(), point.s_a.to_bits()),
         };
-        let stripe = &self.stripes[self.stripe_of(&key)];
-        let (cell, fresh) = {
-            let mut map = stripe.lock().unwrap();
-            match map.get(&key) {
-                Some(c) => (c.clone(), false),
-                None => {
-                    let c: Arc<OnceLock<Arc<LayerFrontier>>> = Arc::new(OnceLock::new());
-                    map.insert(key, c.clone());
-                    (c, true)
-                }
-            }
-        };
+        let (frontier, fresh) =
+            self.memo.get_or_compute(key, || Arc::new(build_frontier(layer, point, rm, dev)));
         if fresh {
             handle.stats.frontier_misses.fetch_add(1, Ordering::Relaxed);
         } else {
             handle.stats.frontier_hits.fetch_add(1, Ordering::Relaxed);
         }
-        cell.get_or_init(|| Arc::new(build_frontier(layer, point, rm, dev))).clone()
+        frontier
     }
 }
 
-/// Thread-safe, lock-striped, multi-device memo table for
-/// [`crate::dse::explore`] results, plus the [`FrontierStore`] that makes
-/// its misses cheap.
+/// Thread-safe, multi-device memo table for [`crate::dse::explore`]
+/// results, plus the [`FrontierStore`] that makes its misses cheap.
 ///
-/// Shared by reference across every shard's evaluation threads; lookups
-/// take one short-lived stripe lock, the pricing itself runs unlocked
-/// behind a per-key [`OnceLock`] so each key is computed exactly once (see
-/// the module docs).
+/// Shared by reference across every shard's evaluation threads; both
+/// stores sit on [`StripedMemo`], so lookups take one short-lived stripe
+/// lock and the pricing itself runs unlocked behind a per-key cell,
+/// computed exactly once (see the module docs).
 pub struct DesignCache {
-    stripes: Vec<Mutex<HashMap<Key, Arc<OnceLock<NetworkDesign>>>>>,
+    designs: StripedMemo<Key, NetworkDesign>,
     devices: Mutex<HashMap<u64, Arc<DevStats>>>,
     frontiers: FrontierStore,
 }
@@ -335,7 +356,7 @@ impl DesignCache {
     /// An empty store, ready to serve any number of devices.
     pub fn new() -> Self {
         DesignCache {
-            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            designs: StripedMemo::new(STRIPES),
             devices: Mutex::new(HashMap::new()),
             frontiers: FrontierStore::new(),
         }
@@ -415,12 +436,6 @@ impl DesignCache {
         Key { device: handle.fingerprint, points: point_bits(points) }
     }
 
-    fn stripe_of(&self, key: &Key) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) % self.stripes.len()
-    }
-
     /// Return the cached design of `points` on the handle's device, or
     /// price via `compute` and remember the result.  `points` should
     /// already be snapped (see [`quantize_points`]); the key is their
@@ -435,27 +450,13 @@ impl DesignCache {
     where
         F: FnOnce() -> NetworkDesign,
     {
-        let key = Self::key(handle, points);
-        let stripe = &self.stripes[self.stripe_of(&key)];
-        let (cell, fresh) = {
-            let mut map = stripe.lock().unwrap();
-            match map.get(&key) {
-                Some(c) => (c.clone(), false),
-                None => {
-                    let c: Arc<OnceLock<NetworkDesign>> = Arc::new(OnceLock::new());
-                    map.insert(key, c.clone());
-                    (c, true)
-                }
-            }
-        };
+        let (design, fresh) = self.designs.get_or_compute(Self::key(handle, points), compute);
         if fresh {
             handle.stats.misses.fetch_add(1, Ordering::Relaxed);
         } else {
             handle.stats.hits.fetch_add(1, Ordering::Relaxed);
         }
-        // OnceLock guarantees a single execution even if the placeholder
-        // inserter loses the race to reach get_or_init first.
-        cell.get_or_init(compute).clone()
+        design
     }
 
     /// Counter-free lookup, the read half of [`insert`](Self::insert):
@@ -468,9 +469,7 @@ impl DesignCache {
         handle: &DeviceCacheHandle,
         points: &[SparsityPoint],
     ) -> Option<NetworkDesign> {
-        let key = Self::key(handle, points);
-        let cell = self.stripes[self.stripe_of(&key)].lock().unwrap().get(&key).cloned();
-        cell.and_then(|c| c.get().cloned())
+        self.designs.get(&Self::key(handle, points))
     }
 
     /// Pre-seed an entry (e.g. the dense reference design) without
@@ -481,20 +480,414 @@ impl DesignCache {
         points: &[SparsityPoint],
         design: NetworkDesign,
     ) {
-        let key = Self::key(handle, points);
-        let stripe = &self.stripes[self.stripe_of(&key)];
-        stripe.lock().unwrap().insert(key, Arc::new(OnceLock::from(design)));
+        self.designs.insert(Self::key(handle, points), design);
     }
 
     /// Total entries across all stripes and devices (including in-flight
     /// cells).
     pub fn len(&self) -> usize {
-        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.designs.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.designs.is_empty()
     }
+
+    // ---- on-disk snapshots (see the module docs for the format) -------
+
+    /// Serialize every **completed** entry of both stores (in-flight
+    /// cells are skipped) into the versioned snapshot document.  Entry
+    /// order is canonical (sorted by serialization), so the same cache
+    /// contents always produce the same file.
+    pub fn to_snapshot(&self) -> Json {
+        let mut designs: Vec<Json> = Vec::new();
+        self.designs.for_each_complete(|k, v| designs.push(design_to_json(k, v)));
+        designs.sort_by_cached_key(|j| j.to_string());
+        let mut frontiers: Vec<Json> = Vec::new();
+        self.frontiers.memo.for_each_complete(|k, f| frontiers.push(frontier_to_json(k, f)));
+        frontiers.sort_by_cached_key(|j| j.to_string());
+        Json::obj(vec![
+            ("format", Json::Str(SNAPSHOT_FORMAT.into())),
+            ("version", Json::Num(SNAPSHOT_VERSION)),
+            ("designs", Json::Arr(designs)),
+            ("frontiers", Json::Arr(frontiers)),
+        ])
+    }
+
+    /// Rebuild a cache from a snapshot document.  Unknown format or
+    /// version is an error (nothing is loaded); individual entries that
+    /// fail their integrity check or are malformed are *skipped* and
+    /// counted, never loaded half-way.  Loaded entries are bit-identical
+    /// to what [`Self::to_snapshot`] saw.
+    pub fn from_snapshot(snapshot: &Json) -> Result<(DesignCache, SnapshotStats), String> {
+        if snapshot.get("format").and_then(|f| f.as_str()) != Some(SNAPSHOT_FORMAT) {
+            return Err("not a design-cache snapshot (bad or missing 'format')".into());
+        }
+        let version = snapshot.get("version").and_then(|v| v.as_f64());
+        if version != Some(SNAPSHOT_VERSION) {
+            return Err(format!(
+                "unsupported design-cache snapshot version {version:?} \
+                 (this build reads version {SNAPSHOT_VERSION})"
+            ));
+        }
+        let cache = DesignCache::new();
+        let mut stats = SnapshotStats::default();
+        let designs = snapshot
+            .get("designs")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| "snapshot missing 'designs' array".to_string())?;
+        for entry in designs {
+            match design_from_json(entry) {
+                Some((key, design)) => {
+                    cache.designs.insert(key, design);
+                    stats.designs += 1;
+                }
+                None => stats.skipped += 1,
+            }
+        }
+        let frontiers = snapshot
+            .get("frontiers")
+            .and_then(|d| d.as_arr())
+            .ok_or_else(|| "snapshot missing 'frontiers' array".to_string())?;
+        for entry in frontiers {
+            match frontier_from_json(entry) {
+                Some((key, frontier)) => {
+                    cache.frontiers.memo.insert(key, frontier);
+                    stats.frontiers += 1;
+                }
+                None => stats.skipped += 1,
+            }
+        }
+        Ok((cache, stats))
+    }
+
+    /// Write the snapshot to `path` (parent directories are created),
+    /// returning how many entries were persisted.  The write goes to a
+    /// sibling temp file first and renames over `path`, so an
+    /// interrupted save (Ctrl-C, OOM mid-sweep) leaves the previous good
+    /// snapshot intact instead of a truncated file.
+    pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<SnapshotStats> {
+        let path = path.as_ref();
+        let snapshot = self.to_snapshot();
+        let stats = SnapshotStats {
+            designs: snapshot.req("designs").as_arr().map_or(0, |a| a.len()),
+            frontiers: snapshot.req("frontiers").as_arr().map_or(0, |a| a.len()),
+            skipped: 0,
+        };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // per-process tmp name: concurrent savers to one path each write
+        // their own sibling and the renames are last-writer-wins with a
+        // *valid* file either way
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, snapshot.to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(stats)
+    }
+
+    /// Read a snapshot file written by [`Self::save`].  IO and parse
+    /// problems are errors; per-entry integrity failures are counted in
+    /// the returned stats instead (see [`Self::from_snapshot`]).
+    pub fn load<P: AsRef<std::path::Path>>(
+        path: P,
+    ) -> Result<(DesignCache, SnapshotStats), String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json =
+            Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Self::from_snapshot(&json)
+    }
+}
+
+/// Entry counts of one [`DesignCache::save`] / [`DesignCache::load`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// whole-network design entries written / loaded
+    pub designs: usize,
+    /// layer-frontier entries written / loaded
+    pub frontiers: usize,
+    /// entries rejected on load (integrity-check or shape mismatch)
+    pub skipped: usize,
+}
+
+/// `--cache-file <path>` support shared by the bench sweep drivers
+/// (`ablations`, `fig5_search_traj`, `table2_comparison`): scan argv for
+/// the flag, load a warm cache (cold start on a missing file; cold start
+/// with a stderr note on a corrupt one — a sweep must never hard-fail on
+/// its own cache), and hand back the path for [`save_cache_file`].
+/// `tag` prefixes the notes (e.g. `"[fig5]"`).
+pub fn cache_file_from_args(tag: &str) -> (DesignCache, Option<String>) {
+    let mut args = std::env::args();
+    let mut path: Option<String> = None;
+    while let Some(a) = args.next() {
+        if a == "--cache-file" {
+            match args.next() {
+                // a following flag (e.g. `--cache-file --quick`) is not a
+                // path — don't swallow it and write a file named "--quick"
+                Some(p) if !p.starts_with("--") => path = Some(p),
+                _ => eprintln!("{tag} --cache-file needs a path; ignoring the flag"),
+            }
+        }
+    }
+    let cache = match &path {
+        Some(p) if std::path::Path::new(p).exists() => match DesignCache::load(p) {
+            Ok((cache, st)) => {
+                eprintln!(
+                    "{tag} cache <- {p}: {} designs, {} frontiers",
+                    st.designs, st.frontiers
+                );
+                cache
+            }
+            Err(e) => {
+                eprintln!("{tag} warning: starting cold: {e}");
+                DesignCache::new()
+            }
+        },
+        _ => DesignCache::new(),
+    };
+    (cache, path)
+}
+
+/// Save a sweep driver's cache back to its `--cache-file` path (no-op
+/// without one); failures are reported, not fatal.
+pub fn save_cache_file(cache: &DesignCache, path: &Option<String>, tag: &str) {
+    if let Some(p) = path {
+        match cache.save(p) {
+            Ok(st) => eprintln!(
+                "{tag} cache -> {p}: {} designs, {} frontiers",
+                st.designs, st.frontiers
+            ),
+            Err(e) => eprintln!("{tag} failed to save cache '{p}': {e}"),
+        }
+    }
+}
+
+const SNAPSHOT_FORMAT: &str = "hass-design-cache";
+const SNAPSHOT_VERSION: f64 = 1.0;
+
+/// FNV-1a over an entry's fields, the `check` field excluded: each key
+/// and its value's canonical serialization are folded in, in `BTreeMap`
+/// (sorted) key order.  Values serialize deterministically, so the
+/// checksum is representation-stable — and hashing field by field means
+/// verification needs neither a deep clone of the entry nor a
+/// re-serialization of the whole object.
+fn entry_checksum(fields: &BTreeMap<String, Json>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for (k, v) in fields {
+        if k == "check" {
+            continue;
+        }
+        h = fnv_extend(h, k);
+        h = fnv_extend(h, &v.to_string());
+    }
+    h
+}
+
+/// Stamp an entry object with its `check` fingerprint.
+fn with_check(entry: Json) -> Json {
+    match entry {
+        Json::Obj(mut m) => {
+            let check = entry_checksum(&m);
+            m.insert("check".into(), Json::Str(u64_to_hex(check)));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// Does the entry's recorded `check` match its payload?
+fn check_matches(entry: &Json) -> bool {
+    let Json::Obj(m) = entry else { return false };
+    let Some(stored) = m.get("check").and_then(|c| c.as_str()).and_then(u64_from_hex) else {
+        return false;
+    };
+    entry_checksum(m) == stored
+}
+
+fn hex_field(j: &Json) -> Option<u64> {
+    u64_from_hex(j.as_str()?)
+}
+
+/// Integer-valued JSON number → usize (rejects negatives, fractions and
+/// anything outside f64's exact-integer range).
+fn usize_field(j: &Json) -> Option<usize> {
+    let f = j.as_f64()?;
+    if !(0.0..=9.0e15).contains(&f) || f.fract() != 0.0 {
+        return None;
+    }
+    Some(f as usize)
+}
+
+fn u64_field(j: &Json) -> Option<u64> {
+    usize_field(j).map(|v| v as u64)
+}
+
+fn resources_to_json(r: &Resources) -> Json {
+    Json::Arr(vec![
+        Json::Num(r.dsp as f64),
+        Json::Num(r.lut as f64),
+        Json::Num(r.bram18k as f64),
+        Json::Num(r.uram as f64),
+    ])
+}
+
+fn resources_from_json(j: &Json) -> Option<Resources> {
+    let a = j.as_arr()?;
+    if a.len() != 4 {
+        return None;
+    }
+    Some(Resources {
+        dsp: u64_field(&a[0])?,
+        lut: u64_field(&a[1])?,
+        bram18k: u64_field(&a[2])?,
+        uram: u64_field(&a[3])?,
+    })
+}
+
+fn layer_design_from_json(j: &Json) -> Option<LayerDesign> {
+    let a = j.as_arr()?;
+    if a.len() != 3 {
+        return None;
+    }
+    let (i_par, o_par, n_mac) = (usize_field(&a[0])?, usize_field(&a[1])?, usize_field(&a[2])?);
+    if i_par == 0 || o_par == 0 || n_mac == 0 {
+        return None;
+    }
+    Some(LayerDesign { i_par, o_par, n_mac })
+}
+
+fn design_to_json(key: &Key, design: &NetworkDesign) -> Json {
+    let mut pts = Vec::with_capacity(key.points.len() * 2);
+    for &(w, a) in &key.points {
+        pts.push(Json::Str(u64_to_hex(w)));
+        pts.push(Json::Str(u64_to_hex(a)));
+    }
+    let ds: Vec<Json> = design
+        .designs
+        .iter()
+        .map(|d| {
+            Json::Arr(vec![
+                Json::Num(d.i_par as f64),
+                Json::Num(d.o_par as f64),
+                Json::Num(d.n_mac as f64),
+            ])
+        })
+        .collect();
+    with_check(Json::obj(vec![
+        ("fp", Json::Str(u64_to_hex(key.device))),
+        ("pts", Json::Arr(pts)),
+        ("thr", Json::Str(u64_to_hex(design.throughput.to_bits()))),
+        ("res", resources_to_json(&design.resources)),
+        ("ds", Json::Arr(ds)),
+    ]))
+}
+
+fn design_from_json(entry: &Json) -> Option<(Key, NetworkDesign)> {
+    if !check_matches(entry) {
+        return None;
+    }
+    let device = hex_field(entry.get("fp")?)?;
+    let pts = entry.get("pts")?.as_arr()?;
+    // zero-layer keys never arise from real pricings — reject them like
+    // any other malformed shape
+    if pts.is_empty() || pts.len() % 2 != 0 {
+        return None;
+    }
+    let mut points = Vec::with_capacity(pts.len() / 2);
+    for pair in pts.chunks(2) {
+        points.push((hex_field(&pair[0])?, hex_field(&pair[1])?));
+    }
+    let throughput = f64::from_bits(hex_field(entry.get("thr")?)?);
+    let resources = resources_from_json(entry.get("res")?)?;
+    let designs = entry
+        .get("ds")?
+        .as_arr()?
+        .iter()
+        .map(layer_design_from_json)
+        .collect::<Option<Vec<_>>>()?;
+    Some((Key { device, points }, NetworkDesign { designs, throughput, resources }))
+}
+
+fn frontier_to_json(key: &FrontierKey, frontier: &LayerFrontier) -> Json {
+    let es: Vec<Json> = frontier
+        .entries()
+        .iter()
+        .map(|e| {
+            Json::Arr(vec![
+                Json::Str(u64_to_hex(e.rate.to_bits())),
+                Json::Str(u64_to_hex(e.cycles)),
+                Json::Str(u64_to_hex(e.cost.to_bits())),
+                Json::Num(e.design.i_par as f64),
+                Json::Num(e.design.o_par as f64),
+                Json::Num(e.design.n_mac as f64),
+                Json::Num(e.resources.dsp as f64),
+                Json::Num(e.resources.lut as f64),
+                Json::Num(e.resources.bram18k as f64),
+                Json::Num(e.resources.uram as f64),
+            ])
+        })
+        .collect();
+    let pt = vec![Json::Str(u64_to_hex(key.point.0)), Json::Str(u64_to_hex(key.point.1))];
+    with_check(Json::obj(vec![
+        ("ctx", Json::Str(u64_to_hex(key.context))),
+        ("shape", Json::Str(u64_to_hex(key.shape))),
+        ("pt", Json::Arr(pt)),
+        ("es", Json::Arr(es)),
+    ]))
+}
+
+fn frontier_from_json(entry: &Json) -> Option<(FrontierKey, Arc<LayerFrontier>)> {
+    if !check_matches(entry) {
+        return None;
+    }
+    let context = hex_field(entry.get("ctx")?)?;
+    let shape = hex_field(entry.get("shape")?)?;
+    let pt = entry.get("pt")?.as_arr()?;
+    if pt.len() != 2 {
+        return None;
+    }
+    let point = (hex_field(&pt[0])?, hex_field(&pt[1])?);
+    let mut entries = Vec::new();
+    for row in entry.get("es")?.as_arr()? {
+        let row = row.as_arr()?;
+        if row.len() != 10 {
+            return None;
+        }
+        let design = LayerDesign {
+            i_par: usize_field(&row[3])?,
+            o_par: usize_field(&row[4])?,
+            n_mac: usize_field(&row[5])?,
+        };
+        if design.i_par == 0 || design.o_par == 0 || design.n_mac == 0 {
+            return None;
+        }
+        entries.push(FrontierEntry {
+            rate: f64::from_bits(hex_field(&row[0])?),
+            cycles: hex_field(&row[1])?,
+            cost: f64::from_bits(hex_field(&row[2])?),
+            design,
+            resources: Resources {
+                dsp: u64_field(&row[6])?,
+                lut: u64_field(&row[7])?,
+                bram18k: u64_field(&row[8])?,
+                uram: u64_field(&row[9])?,
+            },
+        });
+    }
+    // `build_frontier` never yields an empty frontier; an empty entry
+    // would make the warm run price the layer as infeasible (queries
+    // return None), silently diverging from the cold run — reject it
+    if entries.is_empty() || !entries_are_ordered(&entries) {
+        return None;
+    }
+    let key = FrontierKey { context, shape, point };
+    Some((key, Arc::new(LayerFrontier::from_entries(entries))))
 }
 
 #[cfg(test)]
@@ -760,8 +1153,10 @@ mod tests {
         assert_eq!(h.misses(), 0);
     }
 
-    /// Regression for the double-compute race: many threads missing the
-    /// same key simultaneously must still run `compute` exactly once.
+    /// Stats-level companion of the double-compute regression test (the
+    /// single-compute core itself is tested in `util::memo`): many
+    /// threads missing the same key must account one miss and
+    /// THREADS − 1 hits on the device's counters.
     #[test]
     fn contended_miss_computes_exactly_once() {
         const THREADS: usize = 8;
@@ -916,7 +1311,257 @@ mod tests {
         assert_eq!(cache.len(), 200);
         // with 200 random keys over 16 stripes, no stripe should hold more
         // than half of everything (a loose check that striping is active)
-        let max_stripe = cache.stripes.iter().map(|s| s.lock().unwrap().len()).max().unwrap();
+        let max_stripe = cache.designs.stripe_lens().into_iter().max().unwrap();
         assert!(max_stripe < 100, "stripe imbalance: {max_stripe}/200");
+    }
+
+    // ---- on-disk snapshots -------------------------------------------
+
+    #[test]
+    fn snapshot_roundtrips_the_design_memo_bit_for_bit() {
+        let (cache, h) = u250_cache();
+        let p1 = pts(&[(0.5, 0.25), (0.125, 0.0)]);
+        let p2 = pts(&[(0.3, 0.7)]);
+        cache.get_or_compute(&h, &p1, || NetworkDesign {
+            designs: vec![LayerDesign { i_par: 2, o_par: 4, n_mac: 9 }],
+            throughput: 0.1 + 0.2, // not exactly representable: bit test
+            resources: Resources { dsp: 42, lut: 1_000_000, bram18k: 77, uram: 3 },
+        });
+        cache.insert(&h, &p2, design(7));
+        let snap = cache.to_snapshot();
+        let (loaded, st) = DesignCache::from_snapshot(&snap).unwrap();
+        assert_eq!(st, SnapshotStats { designs: 2, frontiers: 0, skipped: 0 });
+        let h2 = reg(&loaded, &DeviceBudget::u250());
+        let back = loaded.get(&h2, &p1).expect("loaded entry");
+        assert_eq!(back.throughput.to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(back.resources, Resources { dsp: 42, lut: 1_000_000, bram18k: 77, uram: 3 });
+        assert_eq!(back.designs, vec![LayerDesign { i_par: 2, o_par: 4, n_mac: 9 }]);
+        assert_eq!(loaded.get(&h2, &p2).unwrap().resources.dsp, 7);
+        // a loaded entry serves get_or_compute as a plain hit
+        let d = loaded.get_or_compute(&h2, &p1, || design(999));
+        assert_eq!(d.resources.dsp, 42);
+        assert_eq!(h2.hits(), 1);
+        assert_eq!(h2.misses(), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_frontiers_including_infinite_costs() {
+        let cache = DesignCache::new();
+        let net = crate::arch::networks::calibnet();
+        let rm = ResourceModel::default();
+        let p = SparsityPoint { s_w: 0.5, s_a: 0.25 };
+        let layer = net.compute_layers()[0];
+        let shape = crate::dse::frontier::shape_fingerprint(layer);
+        // v7_690t has no URAM: every frontier cost is +inf — the encoding
+        // torture test (JSON numbers cannot carry inf)
+        let devs = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        for dev in &devs {
+            let h = cache.register(dev, &net, &rm, &DseConfig::default());
+            cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, dev);
+        }
+        let (loaded, st) = DesignCache::from_snapshot(&cache.to_snapshot()).unwrap();
+        assert_eq!(st, SnapshotStats { designs: 0, frontiers: 2, skipped: 0 });
+        assert_eq!(loaded.frontier_store().len(), 2);
+        for dev in &devs {
+            let h = loaded.register(dev, &net, &rm, &DseConfig::default());
+            let f = loaded.frontier_store().get_or_build(&h, shape, layer, p, &rm, dev);
+            assert_eq!(h.frontier_misses(), 0, "{}: loaded frontier must hit", dev.name);
+            assert_eq!(h.frontier_hits(), 1);
+            let fresh = build_frontier(layer, p, &rm, dev);
+            assert_eq!(f.entries().len(), fresh.entries().len());
+            for (a, b) in f.entries().iter().zip(fresh.entries()) {
+                assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                assert_eq!(a.design, b.design);
+                assert_eq!(a.resources, b.resources);
+            }
+            if dev.uram == 0 {
+                assert!(f.entries().iter().all(|e| e.cost.is_infinite()));
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_format_and_version_are_enforced() {
+        let cache = DesignCache::new();
+        let snap = cache.to_snapshot();
+        assert!(DesignCache::from_snapshot(&snap).is_ok());
+        assert!(DesignCache::from_snapshot(&Json::parse("{}").unwrap()).is_err());
+        let Json::Obj(mut m) = snap else { unreachable!() };
+        m.insert("version".into(), Json::Num(2.0));
+        assert!(DesignCache::from_snapshot(&Json::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_via_file() {
+        let (cache, h) = u250_cache();
+        cache.get_or_compute(&h, &pts(&[(0.5, 0.5)]), || design(3));
+        let path = std::env::temp_dir().join("hass_cache_save_load_test.json");
+        let saved = cache.save(&path).unwrap();
+        assert_eq!(saved, SnapshotStats { designs: 1, frontiers: 0, skipped: 0 });
+        let (loaded, st) = DesignCache::load(&path).unwrap();
+        assert_eq!(st.designs, 1);
+        let h2 = reg(&loaded, &DeviceBudget::u250());
+        assert_eq!(loaded.get(&h2, &pts(&[(0.5, 0.5)])).unwrap().resources.dsp, 3);
+        std::fs::remove_file(&path).ok();
+        assert!(DesignCache::load(&path).is_err(), "missing file must error");
+    }
+
+    #[test]
+    fn snapshot_files_are_canonical() {
+        // same contents, two caches filled in different orders -> same file
+        let (a, ha) = u250_cache();
+        let (b, hb) = u250_cache();
+        let p1 = pts(&[(0.5, 0.5)]);
+        let p2 = pts(&[(0.25, 0.75)]);
+        a.insert(&ha, &p1, design(1));
+        a.insert(&ha, &p2, design(2));
+        b.insert(&hb, &p2, design(2));
+        b.insert(&hb, &p1, design(1));
+        assert_eq!(a.to_snapshot().to_string(), b.to_snapshot().to_string());
+    }
+
+    #[test]
+    fn prop_snapshot_roundtrips_arbitrary_quantized_points() {
+        forall(40, 0xA5, |rng| {
+            let cache = DesignCache::new();
+            let h = reg(&cache, &DeviceBudget::u250());
+            let bits = [4u32, 8, 12][rng.below(3)];
+            let mut keys: Vec<Vec<SparsityPoint>> = Vec::new();
+            for _ in 0..1 + rng.below(4) {
+                let p: Vec<SparsityPoint> = (0..1 + rng.below(5))
+                    .map(|_| SparsityPoint { s_w: rng.f64(), s_a: rng.f64() })
+                    .collect();
+                let q = quantize_points(&p, bits);
+                let d = NetworkDesign {
+                    designs: vec![
+                        LayerDesign {
+                            i_par: 1 + rng.below(8),
+                            o_par: 1 + rng.below(8),
+                            n_mac: 1 + rng.below(64),
+                        };
+                        q.len()
+                    ],
+                    throughput: rng.f64() * 1e-3,
+                    resources: Resources {
+                        dsp: rng.below(10_000) as u64,
+                        lut: rng.below(2_000_000) as u64,
+                        bram18k: rng.below(5_000) as u64,
+                        uram: rng.below(1_000) as u64,
+                    },
+                };
+                cache.insert(&h, &q, d);
+                keys.push(q);
+            }
+            let (loaded, st) = DesignCache::from_snapshot(&cache.to_snapshot()).unwrap();
+            assert_eq!(st.skipped, 0);
+            assert_eq!(st.designs, cache.len());
+            let h2 = reg(&loaded, &DeviceBudget::u250());
+            for q in &keys {
+                let orig = cache.get(&h, q).unwrap();
+                let back = loaded.get(&h2, q).expect("loaded entry");
+                assert_eq!(orig.throughput.to_bits(), back.throughput.to_bits());
+                assert_eq!(orig.resources, back.resources);
+                assert_eq!(orig.designs, back.designs);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_frontier_snapshot_roundtrips_infinite_and_finite_costs() {
+        let net = crate::arch::networks::calibnet();
+        let rm = ResourceModel::default();
+        forall(12, 0xA6, |rng| {
+            let dev = DeviceBudget {
+                name: "rand".into(),
+                dsp: 16 + rng.below(20_000) as u64,
+                lut: 10_000 + rng.below(2_000_000) as u64,
+                bram18k: 100 + rng.below(10_000) as u64,
+                // uram == 0 exercises the +inf cost encodings
+                uram: if rng.bool(0.5) { 0 } else { 16 + rng.below(2_000) as u64 },
+                freq_mhz: 250.0,
+            };
+            let cache = DesignCache::new();
+            let h = cache.register(&dev, &net, &rm, &DseConfig::default());
+            let layer = net.compute_layers()[rng.below(net.compute_layers().len())];
+            let shape = crate::dse::frontier::shape_fingerprint(layer);
+            let p = SparsityPoint { s_w: rng.f64(), s_a: rng.f64() };
+            let orig = cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, &dev);
+            let (loaded, st) = DesignCache::from_snapshot(&cache.to_snapshot()).unwrap();
+            assert_eq!((st.frontiers, st.skipped), (1, 0));
+            let h2 = loaded.register(&dev, &net, &rm, &DseConfig::default());
+            let back = loaded.frontier_store().get_or_build(&h2, shape, layer, p, &rm, &dev);
+            assert_eq!(h2.frontier_misses(), 0, "loaded frontier must serve as a hit");
+            assert_eq!(orig.entries().len(), back.entries().len());
+            for (a, b) in orig.entries().iter().zip(back.entries()) {
+                assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                assert_eq!(a.design, b.design);
+                assert_eq!(a.resources, b.resources);
+            }
+            if dev.uram == 0 {
+                assert!(back.entries().iter().all(|e| e.cost.is_infinite()));
+            }
+        });
+    }
+
+    /// Any single-field tamper — payload or the recorded check itself —
+    /// must reject the entry on load, never half-load it.
+    #[test]
+    fn prop_snapshot_rejects_fingerprint_mismatched_entries() {
+        forall(30, 0xA7, |rng| {
+            let (cache, h) = u250_cache();
+            let q = quantize_points(
+                &[SparsityPoint { s_w: rng.f64(), s_a: rng.f64() }],
+                12,
+            );
+            cache.insert(&h, &q, design((1 + rng.below(100)) as u64));
+            let Json::Obj(mut top) = cache.to_snapshot() else { unreachable!() };
+            let Some(Json::Arr(mut designs)) = top.remove("designs") else { unreachable!() };
+            let Json::Obj(entry) = &mut designs[0] else { unreachable!() };
+            match rng.below(3) {
+                0 => entry.insert("thr".into(), Json::Str(u64_to_hex(rng.next_u64()))),
+                1 => entry.insert("fp".into(), Json::Str(u64_to_hex(rng.next_u64()))),
+                _ => entry.insert("check".into(), Json::Str(u64_to_hex(rng.next_u64()))),
+            };
+            top.insert("designs".into(), Json::Arr(designs));
+            let (loaded, st) = DesignCache::from_snapshot(&Json::Obj(top)).unwrap();
+            assert_eq!(st.skipped, 1, "tampered entry must be skipped");
+            assert_eq!(st.designs, 0);
+            assert!(loaded.is_empty());
+        });
+    }
+
+    #[test]
+    fn disordered_frontier_entries_are_rejected_on_load() {
+        let cache = DesignCache::new();
+        let net = crate::arch::networks::calibnet();
+        let rm = ResourceModel::default();
+        let dev = DeviceBudget::u250();
+        let h = cache.register(&dev, &net, &rm, &DseConfig::default());
+        let layer = net.compute_layers()[0];
+        let shape = crate::dse::frontier::shape_fingerprint(layer);
+        let p = SparsityPoint { s_w: 0.4, s_a: 0.4 };
+        cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, &dev);
+        // reverse the entry rows and re-stamp a *valid* check: the order
+        // validation itself must reject the entry
+        let Json::Obj(mut top) = cache.to_snapshot() else { unreachable!() };
+        let Some(Json::Arr(mut frontiers)) = top.remove("frontiers") else { unreachable!() };
+        let fixed = {
+            let Json::Obj(fe) = &mut frontiers[0] else { unreachable!() };
+            let Some(Json::Arr(mut rows)) = fe.remove("es") else { unreachable!() };
+            rows.reverse();
+            fe.insert("es".into(), Json::Arr(rows));
+            fe.remove("check");
+            with_check(Json::Obj(fe.clone()))
+        };
+        frontiers[0] = fixed;
+        top.insert("frontiers".into(), Json::Arr(frontiers));
+        let (loaded, st) = DesignCache::from_snapshot(&Json::Obj(top)).unwrap();
+        assert_eq!(st.skipped, 1);
+        assert_eq!(st.frontiers, 0);
+        assert!(loaded.frontier_store().is_empty());
     }
 }

@@ -30,6 +30,12 @@
 //!   priced — across candidates, generations, shards and searches.
 //!   Frontier pricing is bit-identical to the scan (differential-tested),
 //!   so this can never change results either.
+//! * **Cross-process persistence** — both pricing stores serialize to a
+//!   versioned JSON snapshot ([`DesignCache::save`] / [`DesignCache::load`],
+//!   format documented in [`cache`]), so Fig. 5 / Table II sweeps and
+//!   ablations start warm: a repeated search against a warm-from-disk
+//!   cache misses zero times and journals bit-for-bit what the cold run
+//!   journaled (encodings are exact down to the f64 bit pattern).
 //! * **Cross-shard measurement dedup** — each generation measures every
 //!   *distinct* proposal once and shares the result across shards.
 //!   During TPE random startup (and for warm-start anchors) the
@@ -82,7 +88,10 @@ pub mod cache;
 pub mod evaluator;
 pub mod shard;
 
-pub use cache::{quantize_points, DesignCache, DeviceCacheHandle, FrontierStore};
+pub use cache::{
+    cache_file_from_args, quantize_points, save_cache_file, DesignCache, DeviceCacheHandle,
+    FrontierStore, SnapshotStats,
+};
 pub use evaluator::{CandidateEvaluator, EvalPoint};
 pub use shard::{
     DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,

@@ -32,7 +32,7 @@
 //! shard, labelled with the device that produced it.
 
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::arch::Network;
 use crate::dse::explore;
@@ -43,7 +43,7 @@ use crate::metrics::{pareto_front, Point2, Table};
 use crate::optim::tpe::TpeOptimizer;
 use crate::sparsity::SparsityPoint;
 
-use super::cache::{quantize_points, DesignCache, DeviceCacheHandle};
+use super::cache::{device_fingerprint, quantize_points, DesignCache, DeviceCacheHandle};
 use super::{
     CandidateEvaluator, Engine, EngineStats, EvalCtx, Measurement, SearchConfig,
     SearchRecord, SearchResult, ANCHORS,
@@ -209,13 +209,14 @@ struct Shard<'e> {
 /// The sharded search engine: one evaluator + target geometry, fanned out
 /// over several device budgets (or partitions of one device).
 ///
-/// Duplicate devices in `devices` are legal and deterministic (their
-/// journals coincide), but they share one fingerprint and therefore one
-/// hit/miss counter pair in the shared cache — each duplicate shard's
-/// per-run `EngineStats` then reports their *combined* cache traffic,
-/// and the `ShardedStats` totals count it once per duplicate.  The CLI
-/// rejects duplicate `--devices` entries for exactly this reason; pass
-/// distinct budgets (distinct names at least) when stats matter.
+/// Duplicate devices in `devices` — *identical budgets*, i.e. the same
+/// device fingerprint — are collapsed to **one shard per distinct
+/// device** at search time: duplicates share one cache fingerprint (and
+/// therefore one hit/miss counter pair), so extra shards could only
+/// repeat work and double-count its cache traffic (their journals
+/// coincide by determinism anyway).  Same-*name* devices with different
+/// resource budgets are different devices and all run.  `per_device`
+/// holds one entry per distinct device, first-seen order.
 pub struct ShardedEngine<'a> {
     pub evaluator: &'a dyn CandidateEvaluator,
     pub target: &'a Network,
@@ -246,7 +247,15 @@ impl<'a> ShardedEngine<'a> {
         cfg: &SearchConfig,
         cache: &DesignCache,
     ) -> ShardedSearchResult {
-        assert!(!self.devices.is_empty(), "sharded search needs at least one device");
+        // collapse identical budgets (same device fingerprint — the key
+        // prefix of every cache entry) to one shard each: duplicates
+        // would share one fingerprint, so extra shards could only repeat
+        // work and double-count its cache traffic.  Same-name devices
+        // with *different* budgets fingerprint apart and all run.
+        let mut seen: HashSet<u64> = HashSet::new();
+        let devices: Vec<&'a DeviceBudget> =
+            self.devices.iter().filter(|d| seen.insert(device_fingerprint(d))).collect();
+        assert!(!devices.is_empty(), "sharded search needs at least one device");
         let n = self.evaluator.sparsity_model().layers.len();
         assert_eq!(
             n,
@@ -254,7 +263,7 @@ impl<'a> ShardedEngine<'a> {
             "evaluator and target geometry disagree on layer count"
         );
         let batch = cfg.engine.batch.max(1);
-        let n_dev = self.devices.len();
+        let n_dev = devices.len();
         let threads = cfg.engine.resolved_threads_for(n_dev * batch);
         let base_acc = self.evaluator.base_accuracy().max(1e-9);
         // per-layer shape fingerprints for the frontier store, shared by
@@ -265,10 +274,9 @@ impl<'a> ShardedEngine<'a> {
         let dense_points =
             quantize_points(&vec![SparsityPoint::DENSE; n], cfg.engine.quant_bits);
 
-        let handles: Vec<DeviceCacheHandle> = self
-            .devices
+        let handles: Vec<DeviceCacheHandle> = devices
             .iter()
-            .map(|dev| cache.register(dev, self.target, self.rm, &cfg.dse))
+            .map(|&dev| cache.register(dev, self.target, self.rm, &cfg.dse))
             .collect();
         // frontier snapshots *before* the dense pricing: the run's stats
         // cover the frontiers it builds/reuses for the dense reference
@@ -284,7 +292,7 @@ impl<'a> ShardedEngine<'a> {
         denses.resize_with(n_dev, || None);
         {
             let dense_for = |i: usize| {
-                let dev = &self.devices[i];
+                let dev = devices[i];
                 let cached = if cfg.engine.cache {
                     cache.get(&handles[i], &dense_points)
                 } else {
@@ -325,9 +333,8 @@ impl<'a> ShardedEngine<'a> {
             }
         }
 
-        let mut shards: Vec<Shard<'a>> = self
-            .devices
-            .iter()
+        let mut shards: Vec<Shard<'a>> = devices
+            .into_iter()
             .zip(handles)
             .zip(denses.into_iter().zip(f0))
             .map(|((dev, handle), (dense, (fhits0, fmisses0)))| {
@@ -676,6 +683,46 @@ mod tests {
         );
         assert_eq!(sharded.stats.devices, 1);
         assert_eq!(sharded.stats.evaluations, 8);
+    }
+
+    /// Duplicate budgets collapse to one shard per distinct device — a
+    /// duplicate shares its twin's cache fingerprint, so running it would
+    /// only repeat work and double-count the same counters.
+    #[test]
+    fn duplicate_devices_collapse_to_one_shard_each() {
+        let ev = surrogate(39);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let dup = [
+            DeviceBudget::u250(),
+            DeviceBudget::u250(),
+            DeviceBudget::v7_690t(),
+            DeviceBudget::u250(),
+        ];
+        let c = cfg(
+            6,
+            5,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+        );
+        let r = ShardedEngine::new(&ev, &net, &rm, &dup).search(&c);
+        assert_eq!(r.stats.devices, 2, "one shard per distinct device");
+        assert_eq!(r.per_device.len(), 2);
+        assert_eq!(r.per_device[0].device, "u250", "first-seen order");
+        assert_eq!(r.per_device[1].device, "7v690t");
+        assert_eq!(r.stats.evaluations, 2 * 6);
+        // and the deduped run matches the already-distinct one exactly
+        let distinct = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let r2 = ShardedEngine::new(&ev, &net, &rm, &distinct).search(&c);
+        for (a, b) in r.per_device.iter().zip(&r2.per_device) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(objective_bits(&a.result), objective_bits(&b.result));
+        }
+        // a same-NAME device with a different budget is a different
+        // device (distinct fingerprint): both shards must run
+        let mixed = [DeviceBudget { dsp: 2_048, ..DeviceBudget::u250() }, DeviceBudget::u250()];
+        let r3 = ShardedEngine::new(&ev, &net, &rm, &mixed).search(&c);
+        assert_eq!(r3.stats.devices, 2, "same-name different-budget devices must both run");
+        assert_eq!(r3.stats.evaluations, 2 * 6);
     }
 
     #[test]

@@ -63,10 +63,12 @@ impl DeviceBudget {
     }
 
     /// Parse a comma-separated device list (`"u250,v7_690t"`) for the
-    /// sharded search CLI.  Empty segments are ignored; an unknown name
-    /// or a duplicate (a sharded search over the same budget twice only
-    /// repeats work and muddles per-device cache stats) fails the whole
-    /// list with a message naming the bad segment.
+    /// sharded search CLI.  Empty segments are ignored; duplicates (even
+    /// via aliases — `u250,U250` or `v7,7v690t`) are collapsed to the
+    /// first occurrence, so `--devices u250,u250` runs one shard per
+    /// *distinct* device instead of two shards fighting over one cache
+    /// fingerprint.  An unknown name fails the whole list with a message
+    /// naming the bad segment.
     pub fn parse_list(s: &str) -> Result<Vec<Self>, String> {
         let mut out: Vec<Self> = Vec::new();
         for seg in s.split(',') {
@@ -76,10 +78,9 @@ impl DeviceBudget {
             }
             match Self::by_name(seg) {
                 Some(d) => {
-                    if out.iter().any(|o| o.name == d.name) {
-                        return Err(format!("duplicate device '{seg}' in list"));
+                    if !out.iter().any(|o| o.name == d.name) {
+                        out.push(d);
                     }
-                    out.push(d);
                 }
                 None => {
                     return Err(format!(
@@ -192,8 +193,18 @@ mod tests {
         assert!(DeviceBudget::parse_list("").unwrap().is_empty());
         let err = DeviceBudget::parse_list("u250,warp9").unwrap_err();
         assert!(err.contains("warp9"), "error must name the bad segment: {err}");
-        // duplicates (even via aliases) are rejected
-        let err = DeviceBudget::parse_list("u250,7v690t,U250").unwrap_err();
-        assert!(err.contains("duplicate"), "got: {err}");
+    }
+
+    #[test]
+    fn parse_list_collapses_duplicates_to_first_occurrence() {
+        // duplicates (even via aliases) dedup instead of erroring, in
+        // first-seen order
+        let devs = DeviceBudget::parse_list("u250,7v690t,U250,v7,u250").unwrap();
+        assert_eq!(
+            devs.iter().map(|d| d.name.as_str()).collect::<Vec<_>>(),
+            vec!["u250", "7v690t"]
+        );
+        let devs = DeviceBudget::parse_list("u250,u250").unwrap();
+        assert_eq!(devs.len(), 1, "one shard per distinct device");
     }
 }

@@ -35,10 +35,16 @@
 //! [`engine::ShardedEngine`] fans one search out over several
 //! [`hardware::device::DeviceBudget`]s — per-device shards advance in
 //! lockstep generations over a shared thread pool and design cache, which
-//! is how Table II / Fig. 6 cross-device sweeps run in one pass.  Thread
-//! count, cache state and shard count never change results — each
-//! device's journal is bit-for-bit the journal of a standalone serial run
-//! (see the module docs for the exact determinism contract).
+//! is how Table II / Fig. 6 cross-device sweeps run in one pass.  Both
+//! pricing stores are thin typed layers over one generic lock-striped
+//! single-compute memo ([`util::memo::StripedMemo`]), and both persist:
+//! [`engine::DesignCache::save`] / [`engine::DesignCache::load`] snapshot
+//! them to versioned JSON (`hass search --cache-file`, the bench sweep
+//! drivers), so repeat sweeps start warm and miss zero times.  Thread
+//! count, cache state — in-memory or warm from disk — and shard count
+//! never change results — each device's journal is bit-for-bit the
+//! journal of a standalone serial run (see the module docs for the exact
+//! determinism contract).
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
 //!
@@ -72,7 +78,7 @@
 //! | [`baselines`] | dense / PASS-like / HPIPE-like / non-dataflow designs |
 //! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
 //! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |
-//! | [`util`]      | offline stand-ins: rng, prop testing, json, cli |
+//! | [`util`]      | offline stand-ins: rng, prop testing, json, cli; [`util::memo`] striped memo |
 
 pub mod arch;
 pub mod baselines;

@@ -14,8 +14,8 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search, search_sharded, CandidateEvaluator, EngineConfig, MeasuredEvaluator,
-    SearchConfig, SearchMode, SurrogateEvaluator,
+    search_sharded_with_cache, search_with_cache, CandidateEvaluator, DesignCache,
+    EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
 };
 use hass::dse::{self, explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
@@ -96,6 +96,12 @@ fn cmd_search(args: &[String]) -> i32 {
         .opt("threads", "0", "evaluation worker threads (0 = auto)")
         .opt("quant", "0", "pricing quantization bits (0 = exact; 12 is a good cache grid)")
         .flag("no-cache", "disable the DSE design cache")
+        .opt(
+            "cache-file",
+            "",
+            "JSON snapshot path: load a warm design cache before the search \
+             and save it back after (created if missing)",
+        )
         .opt("journal", "", "CSV path for the per-iteration journal");
     let p = parse_or_die(cli, args);
     let net = network_or_die(p.get("network"));
@@ -156,10 +162,20 @@ fn cmd_search(args: &[String]) -> i32 {
         })
     };
     let journal = p.get("journal");
+    // --no-cache turns pricing memoization off entirely, so a cache file
+    // would be loaded-but-never-consulted and saved back empty — ignore
+    // it (and keep any existing snapshot untouched) instead
+    let cache_file = if !engine.cache && !p.get("cache-file").is_empty() {
+        eprintln!("warning: --no-cache disables the design cache; ignoring --cache-file");
+        ""
+    } else {
+        p.get("cache-file")
+    };
+    let cache = load_cache(cache_file);
 
     // --- sharded multi-device search (--devices a,b,...) --------------
     if devices.len() >= 2 {
-        let result = search_sharded(ev.as_ref(), &net, &rm, &devices, &cfg);
+        let result = search_sharded_with_cache(ev.as_ref(), &net, &rm, &devices, &cfg, &cache);
         let s = &result.stats;
         println!(
             "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
@@ -196,7 +212,7 @@ fn cmd_search(args: &[String]) -> i32 {
                 }
             }
         }
-        return 0;
+        return save_cache(&cache, cache_file);
     }
 
     // --- single-device search (--device, or a 1-entry --devices) ------
@@ -204,7 +220,7 @@ fn cmd_search(args: &[String]) -> i32 {
         .into_iter()
         .next()
         .unwrap_or_else(|| device_or_die(p.get("device")));
-    let result = search(ev.as_ref(), &net, &rm, &dev, &cfg);
+    let result = search_with_cache(ev.as_ref(), &net, &rm, &dev, &cfg, &cache);
     let b = result.best_record();
     println!(
         "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
@@ -232,7 +248,55 @@ fn cmd_search(args: &[String]) -> i32 {
         std::fs::write(journal, result.to_table().to_csv()).expect("write journal");
         println!("[search] journal -> {journal}");
     }
-    0
+    save_cache(&cache, cache_file)
+}
+
+/// Load a warm design cache from `path` (`--cache-file`): empty path or
+/// missing file start cold, a corrupt file warns and starts cold too —
+/// a sweep must never hard-fail on its own cache.
+fn load_cache(path: &str) -> DesignCache {
+    if path.is_empty() || !std::path::Path::new(path).exists() {
+        return DesignCache::new();
+    }
+    match DesignCache::load(path) {
+        Ok((cache, st)) => {
+            println!(
+                "[search] cache <- {path}: {} designs, {} frontiers{}",
+                st.designs,
+                st.frontiers,
+                if st.skipped > 0 {
+                    format!(" ({} corrupt entries skipped)", st.skipped)
+                } else {
+                    String::new()
+                }
+            );
+            cache
+        }
+        Err(e) => {
+            eprintln!("warning: starting with a cold cache: {e}");
+            DesignCache::new()
+        }
+    }
+}
+
+/// Persist the design cache back to `path` (no-op for an empty path).
+fn save_cache(cache: &DesignCache, path: &str) -> i32 {
+    if path.is_empty() {
+        return 0;
+    }
+    match cache.save(path) {
+        Ok(st) => {
+            println!(
+                "[search] cache -> {path}: {} designs, {} frontiers",
+                st.designs, st.frontiers
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to write cache file '{path}': {e}");
+            1
+        }
+    }
 }
 
 fn cmd_dse(args: &[String]) -> i32 {

@@ -170,6 +170,22 @@ impl Json {
     }
 }
 
+/// Lossless `u64 -> JSON` encoding: 16 lower-case hex digits.  JSON
+/// numbers are f64, which silently rounds integers above 2^53 — 64-bit
+/// fingerprints and f64 bit patterns therefore travel as hex strings
+/// (see the cache-snapshot format in `engine::cache`).
+pub fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`u64_to_hex`]; `None` unless `s` is exactly 16 hex digits.
+pub fn u64_from_hex(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
 fn nl(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');
@@ -439,6 +455,18 @@ mod tests {
     fn integer_formatting_stays_integral() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.5).to_string(), "5.5");
+    }
+
+    #[test]
+    fn u64_hex_roundtrips_and_rejects_garbage() {
+        for v in [0u64, 1, 0x8000_0000_0000_0000, u64::MAX, 0xcbf29ce484222325] {
+            let s = u64_to_hex(v);
+            assert_eq!(s.len(), 16);
+            assert_eq!(u64_from_hex(&s), Some(v), "roundtrip of {v:#x}");
+        }
+        for bad in ["", "abc", "00000000000000000", "000000000000000g", "0x00000000000000"] {
+            assert_eq!(u64_from_hex(bad), None, "accepted '{bad}'");
+        }
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Generic lock-striped, single-compute memo table.
+//!
+//! The engine's pricing caches (`engine::cache`) grew two copies of the
+//! same concurrency core: a map of placeholder cells spread over
+//! independent mutex stripes, where a miss installs an empty
+//! [`OnceLock`] under the stripe lock and fills it *outside* the lock,
+//! so racing threads block on the in-flight cell instead of recomputing.
+//! [`StripedMemo`] is that core, once, generic over key and value —
+//! `DesignCache`'s per-device design memo and its `FrontierStore` are
+//! thin typed layers over it.
+//!
+//! # Single-compute contract
+//!
+//! [`get_or_compute`](StripedMemo::get_or_compute) runs `compute` **at
+//! most once per key**, even under contention: exactly one caller ever
+//! observes `fresh == true` for a key (the one that installed the
+//! placeholder cell), and every other concurrent caller blocks on the
+//! cell's `OnceLock` until the value is ready.  The stripe lock is held
+//! only for the map lookup/insert, never across `compute`, so long
+//! computations of different keys proceed in parallel — also within one
+//! stripe.
+//!
+//! The memo never changes results: a hit returns a clone of exactly what
+//! the first compute produced, so callers whose `compute` is a pure
+//! function get bit-identical values whether or not the memo is warm.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Lock-striped map of `K -> OnceLock<V>` cells: keys are spread over
+/// independent mutexes by key hash, values are computed at most once per
+/// key (see the module docs).
+pub struct StripedMemo<K, V> {
+    stripes: Vec<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
+}
+
+impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
+    /// An empty memo with `stripes` independent locks (must be ≥ 1).
+    pub fn new(stripes: usize) -> Self {
+        assert!(stripes >= 1, "a memo needs at least one stripe");
+        StripedMemo { stripes: (0..stripes).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn stripe_of(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    /// Return the memoized value of `key`, or run `compute` and remember
+    /// the result.  The second return is `true` iff this call installed
+    /// the key's cell (a miss); callers use it for hit/miss accounting.
+    /// `compute` runs at most once per key across all threads; late
+    /// arrivals block on the in-flight cell.
+    pub fn get_or_compute<F>(&self, key: K, compute: F) -> (V, bool)
+    where
+        F: FnOnce() -> V,
+    {
+        let (cell, fresh) = {
+            let stripe = &self.stripes[self.stripe_of(&key)];
+            let mut map = stripe.lock().unwrap();
+            match map.get(&key) {
+                Some(c) => (c.clone(), false),
+                None => {
+                    let c: Arc<OnceLock<V>> = Arc::new(OnceLock::new());
+                    map.insert(key, c.clone());
+                    (c, true)
+                }
+            }
+        };
+        // OnceLock guarantees a single execution even if the placeholder
+        // inserter loses the race to reach get_or_init first.
+        (cell.get_or_init(compute).clone(), fresh)
+    }
+
+    /// Completed-entries-only lookup: an entry still being computed by
+    /// another thread reads as absent.  Never counts as a hit or miss —
+    /// callers recompute, which is benign when `compute` is pure.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let cell = self.stripes[self.stripe_of(key)].lock().unwrap().get(key).cloned();
+        cell.and_then(|c| c.get().cloned())
+    }
+
+    /// Pre-seed (or overwrite) an entry with an already-computed value.
+    pub fn insert(&self, key: K, value: V) {
+        let stripe = &self.stripes[self.stripe_of(&key)];
+        stripe.lock().unwrap().insert(key, Arc::new(OnceLock::from(value)));
+    }
+
+    /// Total entries across all stripes (including in-flight cells).
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entry count per stripe (for balance diagnostics and tests).
+    pub fn stripe_lens(&self) -> Vec<usize> {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+
+    /// Visit every **completed** entry (in-flight cells are skipped) —
+    /// the read side of snapshotting.  Iteration order is unspecified;
+    /// one stripe is locked at a time, so `f` must not call back into
+    /// this memo.
+    pub fn for_each_complete(&self, mut f: impl FnMut(&K, &V)) {
+        for stripe in &self.stripes {
+            for (k, cell) in stripe.lock().unwrap().iter() {
+                if let Some(v) = cell.get() {
+                    f(k, v);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn miss_then_hit_returns_memoized_value() {
+        let memo: StripedMemo<u64, u64> = StripedMemo::new(4);
+        let (a, fresh_a) = memo.get_or_compute(7, || 42);
+        let (b, fresh_b) = memo.get_or_compute(7, || 999); // must not run
+        assert_eq!((a, fresh_a), (42, true));
+        assert_eq!((b, fresh_b), (42, false));
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_entries() {
+        let memo: StripedMemo<(u64, u64), u64> = StripedMemo::new(4);
+        assert!(memo.is_empty());
+        memo.get_or_compute((1, 2), || 1);
+        memo.get_or_compute((2, 1), || 2);
+        assert_eq!(memo.len(), 2);
+        assert_eq!(memo.get(&(1, 2)), Some(1));
+        assert_eq!(memo.get(&(2, 1)), Some(2));
+        assert_eq!(memo.get(&(9, 9)), None);
+    }
+
+    #[test]
+    fn insert_preseeds_and_overwrites() {
+        let memo: StripedMemo<u8, &'static str> = StripedMemo::new(2);
+        memo.insert(1, "seeded");
+        let (v, fresh) = memo.get_or_compute(1, || "computed");
+        assert_eq!(v, "seeded");
+        assert!(!fresh, "a pre-seeded entry must read as a hit");
+        memo.insert(1, "overwritten");
+        assert_eq!(memo.get(&1), Some("overwritten"));
+        assert_eq!(memo.len(), 1);
+    }
+
+    /// Regression for the double-compute race (formerly in
+    /// `engine::cache`, re-pointed at the generic core): many threads
+    /// missing the same key simultaneously must still run `compute`
+    /// exactly once, and exactly one of them may observe `fresh`.
+    #[test]
+    fn contended_miss_computes_exactly_once() {
+        const THREADS: usize = 8;
+        let memo: StripedMemo<u64, u64> = StripedMemo::new(4);
+        let computes = AtomicUsize::new(0);
+        let fresh_count = AtomicUsize::new(0);
+        let gate = Barrier::new(THREADS);
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    gate.wait(); // maximize overlap on the first lookup
+                    let (v, fresh) = memo.get_or_compute(3, || {
+                        computes.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window: late arrivals must block
+                        // on the in-flight cell, not recompute
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        5
+                    });
+                    if fresh {
+                        fresh_count.fetch_add(1, Ordering::SeqCst);
+                    }
+                    assert_eq!(v, 5);
+                });
+            }
+        });
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "duplicate compute");
+        assert_eq!(fresh_count.load(Ordering::SeqCst), 1, "one miss only");
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_lookups_are_consistent() {
+        let memo: StripedMemo<u64, u64> = StripedMemo::new(4);
+        let fresh_total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let (v, fresh) = memo.get_or_compute(11, || 7);
+                        assert_eq!(v, 7);
+                        if fresh {
+                            fresh_total.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(memo.len(), 1);
+        assert_eq!(fresh_total.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn for_each_complete_sees_all_finished_entries() {
+        let memo: StripedMemo<u64, u64> = StripedMemo::new(4);
+        for k in 0..20u64 {
+            memo.get_or_compute(k, || k * k);
+        }
+        memo.insert(100, 1_000_000);
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        memo.for_each_complete(|&k, &v| seen.push((k, v)));
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 21);
+        for (k, v) in &seen[..20] {
+            assert_eq!(*v, k * k);
+        }
+        assert_eq!(seen[20], (100, 1_000_000));
+    }
+
+    #[test]
+    fn stripes_spread_entries() {
+        let memo: StripedMemo<(u64, u64), u64> = StripedMemo::new(16);
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            memo.get_or_compute((rng.next_u64(), rng.next_u64()), || 1);
+        }
+        assert_eq!(memo.len(), 200);
+        // with 200 random keys over 16 stripes, no stripe should hold more
+        // than half of everything (a loose check that striping is active)
+        let max_stripe = memo.stripe_lens().into_iter().max().unwrap();
+        assert!(max_stripe < 100, "stripe imbalance: {max_stripe}/200");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one stripe")]
+    fn zero_stripes_is_rejected() {
+        let _ = StripedMemo::<u64, u64>::new(0);
+    }
+}

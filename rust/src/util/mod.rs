@@ -7,15 +7,18 @@
 //! module:
 //!
 //! * [`json`] — a minimal, strict JSON parser/serializer (for `meta.json`,
-//!   config files, journals and result artifacts),
+//!   config files, journals, cache snapshots and result artifacts),
 //! * [`rng`] — deterministic `SplitMix64`/`Xoshiro256**` RNG with the
 //!   distributions the search stack needs,
 //! * [`cli`] — flag parsing for the launcher and examples,
 //! * [`prop`] — a tiny property-based-testing harness (seed-reporting
-//!   random-case runner) standing in for proptest.
+//!   random-case runner) standing in for proptest,
+//! * [`memo`] — the generic lock-striped single-compute memo table the
+//!   engine's pricing caches are built on.
 
 pub mod cli;
 pub mod json;
+pub mod memo;
 pub mod prop;
 pub mod rng;
 

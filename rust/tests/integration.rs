@@ -10,8 +10,9 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search, search_sharded, CandidateEvaluator, Engine, EngineConfig, EvalPoint,
-    MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+    search, search_sharded, search_sharded_with_cache, CandidateEvaluator, DesignCache,
+    Engine, EngineConfig, EvalPoint, MeasuredEvaluator, SearchConfig, SearchMode,
+    SurrogateEvaluator,
 };
 use hass::dse::{explore, explore_scan, network_throughput, DseConfig};
 use hass::engine::quantize_points;
@@ -416,6 +417,56 @@ fn sharded_search_dedups_startup_and_reuses_frontiers() {
     for d in &r.per_device {
         let s = &d.result.stats;
         assert_eq!(s.cache_hits + s.cache_misses, iters as u64, "{}", d.device);
+    }
+}
+
+/// The persistence tentpole invariant: a warm-**from-disk** repeat of a
+/// sharded search journals bit-identically to the cold run, misses the
+/// design cache zero times, and never touches the frontier store (the
+/// dense reference and every candidate pricing come straight off disk).
+#[test]
+fn warm_from_disk_search_is_bit_identical_with_zero_misses() {
+    let ev = StubEvaluator::calibnet(50);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let cfg = sharded_cfg(10, 13, 0);
+    let cache = DesignCache::new();
+    let cold = search_sharded_with_cache(&ev, &net, &rm, &devices, &cfg, &cache);
+    assert!(cold.stats.cache_misses > 0, "cold run must miss");
+    let path = std::env::temp_dir().join("hass_warm_from_disk_test.json");
+    let saved = cache.save(&path).unwrap();
+    assert!(saved.designs > 0, "snapshot must carry the design memo");
+    assert!(saved.frontiers > 0, "snapshot must carry the frontier store");
+    let (warm_cache, loaded) = DesignCache::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.designs, saved.designs);
+    assert_eq!(loaded.frontiers, saved.frontiers);
+    assert_eq!(loaded.skipped, 0);
+    let warm = search_sharded_with_cache(&ev, &net, &rm, &devices, &cfg, &warm_cache);
+    assert_eq!(
+        warm.stats.cache_misses, 0,
+        "a warm-from-disk repeat must serve every pricing from the snapshot"
+    );
+    assert_eq!(warm.stats.cache_hits, 2 * 10);
+    assert_eq!(warm.stats.frontier_hits + warm.stats.frontier_misses, 0);
+    for (a, b) in cold.per_device.iter().zip(&warm.per_device) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.result.records.len(), b.result.records.len());
+        for (x, y) in a.result.records.iter().zip(&b.result.records) {
+            assert_eq!(
+                x.objective.to_bits(),
+                y.objective.to_bits(),
+                "{} iter {}: warm-from-disk journal diverged",
+                a.device,
+                x.iter
+            );
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.images_per_sec.to_bits(), y.images_per_sec.to_bits());
+            assert_eq!(x.dsp, y.dsp);
+            assert_eq!(x.plan, y.plan);
+        }
+        assert_eq!(a.result.best, b.result.best);
     }
 }
 
