@@ -1,23 +1,38 @@
 //! §Perf harness for the batched search engine: wall-clock of the full
 //! search loop at generation sizes 1/2/4/8 with the design cache on and
-//! off, against the serial seed path (batch 1, no cache, exact pricing).
+//! off, against the serial seed path (batch 1, no cache, exact pricing) —
+//! plus a **slow-evaluator section** quantifying what the async
+//! completion-queue pipeline buys when measurement latency dominates.
 //!
-//! The engine's determinism contract says thread count and cache state
+//! The engine's determinism contract says thread count, cache state and
+//! the generation pipeline (sync barrier vs. async completion queue)
 //! never change results; this bench exercises that end to end (cache
-//! on/off at the same batch must agree bit-for-bit on the best objective)
-//! while measuring what batching + memoization buy in wall time.
+//! on/off and sync/async at the same batch must agree bit-for-bit on the
+//! best objective) while measuring what batching + memoization +
+//! measurement/pricing overlap buy in wall time.
+//!
+//! The slow evaluator models the measured (PJRT) backend: each `eval`
+//! serializes behind an internal mutex (like `MeasuredEvaluator`'s
+//! runtime lock) and takes a fixed wall-clock delay.  Under the two-phase
+//! barrier the pricing threads idle behind that lock for the whole
+//! measurement phase; the async pipeline prices completed candidates
+//! while the rest are still in flight, hiding (up to) the whole pricing
+//! phase inside the measurement latency.
 //!
 //! Output: `results/engine_scaling.json` (+ a human-readable table on
 //! stderr).  Run: `cargo bench --bench engine_scaling [-- --quick]`.
 
-use std::time::Instant;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use hass::arch::networks;
 use hass::coordinator::{search, EngineConfig, SearchConfig, SurrogateEvaluator};
+use hass::engine::{CandidateEvaluator, EvalPoint};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
-use hass::sparsity::synthesize;
+use hass::pruning::PruningPlan;
+use hass::sparsity::{synthesize, NetworkSparsity};
 
 struct Run {
     batch: usize,
@@ -28,6 +43,31 @@ struct Run {
     cache_hits: u64,
     cache_misses: u64,
     best_objective: f64,
+}
+
+/// Surrogate wrapped in a measured-backend cost model: every `eval`
+/// grabs a mutex (evaluations serialize, like PJRT's shared executable
+/// handle) and sleeps `delay` of wall clock.
+struct SlowEvaluator {
+    inner: SurrogateEvaluator,
+    delay: Duration,
+    lock: Mutex<()>,
+}
+
+impl CandidateEvaluator for SlowEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        self.inner.sparsity_model()
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        let _serialized = self.lock.lock().unwrap();
+        std::thread::sleep(self.delay);
+        self.inner.eval(plan)
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.inner.base_accuracy()
+    }
 }
 
 fn main() {
@@ -53,7 +93,13 @@ fn main() {
     };
 
     // serial seed path: one candidate at a time, every pricing from scratch
-    let serial_cfg = EngineConfig { batch: 1, threads: 1, cache: false, quant_bits: 0 };
+    let serial_cfg = EngineConfig {
+        batch: 1,
+        threads: 1,
+        cache: false,
+        quant_bits: 0,
+        async_eval: false,
+    };
     run_once(serial_cfg); // warmup
     let (baseline_ms, baseline) = run_once(serial_cfg);
     eprintln!(
@@ -70,6 +116,7 @@ fn main() {
                 threads: 0, // auto: min(batch, cores)
                 cache,
                 quant_bits: 12,
+                async_eval: false,
             };
             let (wall_ms, r) = run_once(engine);
             eprintln!(
@@ -103,6 +150,58 @@ fn main() {
             pair[0].batch
         );
     }
+
+    // ---- slow-evaluator section: sync barrier vs. async pipeline -------
+    // Measurement dominates (the measured-PJRT regime): under the barrier
+    // every generation pays measure-all *then* price-all; the async
+    // pipeline hides pricing inside the in-flight measurements.
+    let slow_iters = if quick { 8 } else { 16 };
+    let slow_batch = 8usize;
+    let delay = Duration::from_millis(if quick { 10 } else { 25 });
+    let slow_ev = SlowEvaluator {
+        inner: SurrogateEvaluator {
+            net: net.clone(),
+            sparsity: synthesize(&net, 1),
+            base_acc: 69.75,
+        },
+        delay,
+        lock: Mutex::new(()),
+    };
+    let run_slow = |async_eval: bool| {
+        let cfg = SearchConfig {
+            iterations: slow_iters,
+            seed,
+            engine: EngineConfig {
+                batch: slow_batch,
+                threads: 0,
+                cache: true,
+                quant_bits: 0, // exact pricing: every candidate is a miss
+                async_eval,
+            },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let r = search(&slow_ev, &net, &rm, &dev, &cfg);
+        (t0.elapsed().as_secs_f64() * 1e3, r)
+    };
+    let (sync_ms, sync_r) = run_slow(false);
+    let (async_ms, async_r) = run_slow(true);
+    assert_eq!(
+        sync_r.best_record().objective.to_bits(),
+        async_r.best_record().objective.to_bits(),
+        "async pipeline changed results under the slow evaluator"
+    );
+    let overlap = async_r.stats.overlap_pricings;
+    eprintln!(
+        "[engine_scaling] slow evaluator ({} ms/eval, batch {slow_batch}, \
+         {slow_iters} iters): sync barrier {sync_ms:.0} ms vs async pipeline \
+         {async_ms:.0} ms ({:.2}x) | {overlap}/{} pricings overlapped \
+         in-flight measurements, {} completions out of order",
+        delay.as_millis(),
+        sync_ms / async_ms,
+        async_r.stats.evaluations,
+        async_r.stats.ooo_completions,
+    );
 
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
     std::fs::create_dir_all(&dir).expect("results dir");
@@ -145,7 +244,27 @@ fn main() {
             if i + 1 == runs.len() { "" } else { "," }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str("  \"slow_evaluator\": {\n");
+    json.push_str(&format!("    \"delay_ms\": {},\n", delay.as_millis()));
+    json.push_str(&format!("    \"iterations\": {slow_iters},\n"));
+    json.push_str(&format!("    \"batch\": {slow_batch},\n"));
+    json.push_str(&format!("    \"sync_wall_ms\": {sync_ms:.3},\n"));
+    json.push_str(&format!("    \"async_wall_ms\": {async_ms:.3},\n"));
+    json.push_str(&format!(
+        "    \"async_speedup\": {:.3},\n",
+        sync_ms / async_ms
+    ));
+    json.push_str(&format!("    \"overlap_pricings\": {overlap},\n"));
+    json.push_str(&format!(
+        "    \"ooo_completions\": {},\n",
+        async_r.stats.ooo_completions
+    ));
+    json.push_str(&format!(
+        "    \"best_objective_bits_match\": {}\n",
+        sync_r.best_record().objective.to_bits() == async_r.best_record().objective.to_bits()
+    ));
+    json.push_str("  }\n}\n");
     let path = dir.join("engine_scaling.json");
     std::fs::write(&path, json).expect("write json");
 

@@ -42,7 +42,13 @@ fn main() {
     let cfg = SearchConfig {
         iterations: iters,
         seed,
-        engine: EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12 },
+        engine: EngineConfig {
+            batch: 2,
+            threads: 0,
+            cache: true,
+            quant_bits: 12,
+            async_eval: false,
+        },
         ..Default::default()
     };
 

@@ -39,8 +39,9 @@ use crate::util::clampf;
 
 pub use crate::engine::{
     CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
-    EngineStats, EvalPoint, ParetoPoint, SearchConfig, SearchMode, SearchRecord,
-    SearchResult, ShardedEngine, ShardedSearchResult, ShardedStats, SnapshotStats,
+    EngineStats, EvalCompletion, EvalPoint, EvalRequest, ParetoPoint, SearchConfig,
+    SearchMode, SearchRecord, SearchResult, ShardedEngine, ShardedSearchResult,
+    ShardedStats, SnapshotStats,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -76,6 +77,21 @@ impl CandidateEvaluator for SurrogateEvaluator {
 /// enforces that PJRT executions are serialized when the engine evaluates
 /// a generation on several threads (the executable handle is a shared
 /// C++ resource; see the `Send` rationale on the runtime itself).
+///
+/// # Serialization under the async pipeline
+///
+/// This internal mutex is exactly why `EngineConfig::async_eval` matters
+/// for the measured path: under the sync two-phase generation loop the
+/// engine's pricing threads idle while measurements drain one at a time
+/// behind the lock.  `MeasuredEvaluator` keeps the *default*
+/// [`CandidateEvaluator::eval_async`] — a serial loop that completes each
+/// request the moment it finishes — which is already optimal here: the
+/// mutex admits no measurement concurrency anyway, and streaming
+/// completions lets the engine price candidate `i` on the DSE threads
+/// while the runtime is still measuring candidate `i+1`.  A future
+/// multi-client runtime pool would override `eval_async` to measure
+/// concurrently and complete out of order; the engine's determinism
+/// contract already covers that (completions are slot-addressed).
 pub struct MeasuredEvaluator {
     rt: Mutex<ModelRuntime>,
     sparsity: NetworkSparsity,

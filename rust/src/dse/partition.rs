@@ -56,20 +56,36 @@ fn slice_network(net: &Network, lo: usize, hi: usize) -> (Network, Vec<usize>) {
     let idx = net.compute_indices();
     let start_node = idx[lo];
     let end_node = if hi < idx.len() { idx[hi] } else { net.layers.len() };
-    let layers: Vec<_> = net.layers[start_node..end_node].to_vec();
-    let input_hw = layers[0].in_hw;
-    let input_channels = match &layers[0].op {
-        crate::arch::Op::Conv { cin, .. } => *cin,
-        crate::arch::Op::Linear { cin, .. } => *cin,
-        _ => net.input_channels,
-    };
-    let sub = Network {
-        name: format!("{}[{lo}..{hi}]", net.name),
-        input_hw,
-        input_channels,
-        layers,
-    };
+    let sub = slice_node_range(net, start_node, end_node, &format!("{}[{lo}..{hi}]", net.name));
     (sub, (lo..hi).collect())
+}
+
+/// Sub-network over the node range `[start_node, end_node)`.  The slice's
+/// input geometry comes from its own first main-pipeline node — *not*
+/// from the whole network's input: a mid-network slice starting on a
+/// streaming node (pool / act / add) carries the preceding compute
+/// layer's output channel count, which every streaming op records as its
+/// `channels` field.  Falling back to `net.input_channels` there priced
+/// mid-network slices as if they read the network input (wrong whenever
+/// the widths differ); the whole-network values are now used only for the
+/// degenerate all-branch slice, whose main pipeline is empty.
+fn slice_node_range(net: &Network, start_node: usize, end_node: usize, name: &str) -> Network {
+    use crate::arch::Op;
+    let layers: Vec<_> = net.layers[start_node..end_node].to_vec();
+    let (input_hw, input_channels) = match layers.iter().find(|l| !l.branch) {
+        Some(first) => {
+            let ch = match &first.op {
+                Op::Conv { cin, .. } | Op::Linear { cin, .. } => *cin,
+                Op::Pool { channels, .. }
+                | Op::GlobalPool { channels }
+                | Op::Add { channels }
+                | Op::Act { channels } => *channels,
+            };
+            (first.in_hw, ch)
+        }
+        None => (net.input_hw, net.input_channels),
+    };
+    Network { name: name.to_string(), input_hw, input_channels, layers }
 }
 
 /// Evaluate a set of split bounds: DSE each partition on the full device,
@@ -148,31 +164,26 @@ pub fn partition(
     // one frontier set serves every SA energy call and every slice: the
     // annealer re-prices slices of the same layers dozens of times
     let frontiers = build_frontiers(net, points, rm, dev);
-    // single partition first: if the whole net maps, no need to fold
-    if let Some(p) =
-        evaluate_bounds_with(net, points, rm, dev, cfg, &[0, n], batch, reconfig_secs, &frontiers)
-    {
-        // still let SA try to beat it (a fold can win when the single-
-        // device design is budget-starved), starting from the 1-partition
-        // solution
-        let best_single = p.images_per_sec;
-        let sa = anneal_partitions(
-            net, points, rm, dev, cfg, batch, reconfig_secs, rng, 2, &frontiers,
-        );
-        return match sa {
-            Some(q) if q.images_per_sec > best_single => Some(q),
-            _ => Some(p),
-        };
-    }
-    // network does not fit whole: SA over increasing partition counts
-    for max_parts in [2, 3, 4, 6, 8] {
+    // The single-partition mapping (when the whole net fits) and the SA
+    // sweep over every partition count compete on end-to-end rate; the
+    // best across all of them wins.  Neither the unfolded mapping nor the
+    // first feasible count is necessarily the best one — a fold can win
+    // when the single-device design is budget-starved, and with cheap
+    // reconfiguration and large batches a finer fold gives every
+    // partition more of the device and can beat the coarsest feasible
+    // split outright.
+    let mut best =
+        evaluate_bounds_with(net, points, rm, dev, cfg, &[0, n], batch, reconfig_secs, &frontiers);
+    for n_parts in [2, 3, 4, 6, 8] {
         if let Some(p) = anneal_partitions(
-            net, points, rm, dev, cfg, batch, reconfig_secs, rng, max_parts, &frontiers,
+            net, points, rm, dev, cfg, batch, reconfig_secs, rng, n_parts, &frontiers,
         ) {
-            return Some(p);
+            if best.as_ref().is_none_or(|b| p.images_per_sec > b.images_per_sec) {
+                best = Some(p);
+            }
         }
     }
-    None
+    best
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -192,25 +203,30 @@ fn anneal_partitions(
     if n_parts > n {
         return None;
     }
-    // initial bounds: equal op-count split
+    // Initial bounds: equal op-count split, kept *strictly increasing* so
+    // the requested partition count is honored exactly.  (The previous
+    // construction padded with `n` and `dedup()`ed, which silently
+    // collapsed duplicate bounds — SA then annealed fewer partitions than
+    // asked for, sometimes starting from a degenerate split.)  Each
+    // interior bound is the op-count quantile clamped into the band that
+    // leaves at least one layer for every partition on both sides; the
+    // band is never empty when `n_parts <= n`.
     let ops: Vec<f64> = net.compute_layers().iter().map(|l| l.macs_per_image() as f64).collect();
     let total: f64 = ops.iter().sum();
-    let mut bounds = vec![0usize];
+    let mut bounds = Vec::with_capacity(n_parts + 1);
+    bounds.push(0usize);
     let mut acc = 0.0;
-    for (i, &o) in ops.iter().enumerate() {
-        acc += o;
-        if bounds.len() < n_parts && acc >= total * bounds.len() as f64 / n_parts as f64 {
-            bounds.push(i + 1);
+    let mut i = 0usize;
+    for p in 1..n_parts {
+        while i < n && acc < total * p as f64 / n_parts as f64 {
+            acc += ops[i];
+            i += 1;
         }
+        let (lo, hi) = (bounds[p - 1] + 1, n - (n_parts - p));
+        bounds.push(i.clamp(lo, hi));
     }
-    while bounds.len() < n_parts + 1 {
-        bounds.push(n);
-    }
-    *bounds.last_mut().unwrap() = n;
-    bounds.dedup();
-    if bounds.len() < 2 {
-        return None;
-    }
+    bounds.push(n);
+    debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
 
     let energy = |b: &Vec<usize>| {
         match evaluate_bounds_with(net, points, rm, dev, cfg, b, batch, reconfig_secs, frontiers)
@@ -269,6 +285,154 @@ mod tests {
             ResourceModel::default(),
             DseConfig { max_iters: 2_000, ..Default::default() },
         )
+    }
+
+    /// Regression (initial-bounds construction): the annealer must hand
+    /// back exactly the requested number of partitions whenever
+    /// `n_parts <= n`.  The old quantile construction padded with `n` and
+    /// `dedup()`ed, silently collapsing duplicate bounds — SA then
+    /// annealed fewer partitions than asked for.
+    #[test]
+    fn anneal_honors_requested_partition_count() {
+        let (net, points, rm, cfg) = setup();
+        let n = net.compute_layers().len();
+        let dev = DeviceBudget::u250(); // every split fits: feasibility
+        let frontiers = build_frontiers(&net, &points, &rm, &dev);
+        for n_parts in [2usize, 3, 4, 6, 8, n] {
+            let mut rng = Rng::new(100 + n_parts as u64);
+            let p = anneal_partitions(
+                &net, &points, &rm, &dev, &cfg, 256, 0.0, &mut rng, n_parts, &frontiers,
+            )
+            .unwrap_or_else(|| panic!("{n_parts}-way fold must be feasible on the U250"));
+            assert_eq!(
+                p.n_partitions(),
+                n_parts,
+                "requested {n_parts} partitions, annealed {}",
+                p.n_partitions()
+            );
+            assert_eq!(*p.bounds.first().unwrap(), 0);
+            assert_eq!(*p.bounds.last().unwrap(), n);
+            assert!(p.bounds.windows(2).all(|w| w[0] < w[1]), "{:?}", p.bounds);
+        }
+        // more partitions than compute layers stays unmappable
+        let mut rng = Rng::new(99);
+        assert!(anneal_partitions(
+            &net,
+            &points,
+            &rm,
+            &dev,
+            &cfg,
+            256,
+            0.0,
+            &mut rng,
+            n + 1,
+            &frontiers
+        )
+        .is_none());
+    }
+
+    /// A LUT budget below the whole network's minimal footprint, with
+    /// every other resource generous: the net cannot map whole, a 2-way
+    /// fold barely fits (little headroom for parallelism), finer folds
+    /// leave each partition real headroom.  This is the regime where the
+    /// partition-count sweep must not stop at the first feasible count.
+    fn lut_capped_device(net: &Network, rm: &ResourceModel) -> DeviceBudget {
+        let minimal =
+            vec![crate::hardware::LayerDesign::MINIMAL; net.compute_layers().len()];
+        let min_res = rm.network(net, &minimal);
+        DeviceBudget {
+            name: "lutcap".into(),
+            dsp: 100_000,
+            lut: min_res.lut * 4 / 5, // 80% of the whole-net minimum
+            bram18k: 100_000,
+            uram: 100_000,
+            freq_mhz: 250.0,
+        }
+    }
+
+    /// Regression (first-feasible sweep): `partition()` must keep the
+    /// best end-to-end rate across the whole `[2, 3, 4, 6, 8]` sweep.
+    /// On the LUT-capped device the 2-way fold is feasible but starved
+    /// (its headroom over the static minimum is a sliver), so a finer
+    /// fold with free reconfiguration beats it — the old code returned
+    /// the starved first-feasible fold.
+    #[test]
+    fn sweep_keeps_best_fold_not_first_feasible() {
+        let (net, points, rm, cfg) = setup();
+        let dev = lut_capped_device(&net, &rm);
+        let n = net.compute_layers().len();
+        let frontiers = build_frontiers(&net, &points, &rm, &dev);
+        // premise: the whole network must not fit this device
+        assert!(
+            evaluate_bounds_with(
+                &net, &points, &rm, &dev, &cfg, &[0, n], 4096, 0.0, &frontiers
+            )
+            .is_none(),
+            "premise violated: whole net fits the LUT-capped device"
+        );
+        // replay the old first-feasible semantics on a fresh rng: the
+        // stream is consumed exactly as `partition()` consumes it, so
+        // this IS (bitwise) what the old code returned
+        let seed = 21u64;
+        let mut rng = Rng::new(seed);
+        let first = [2usize, 3, 4, 6, 8]
+            .iter()
+            .find_map(|&k| {
+                anneal_partitions(
+                    &net, &points, &rm, &dev, &cfg, 4096, 0.0, &mut rng, k, &frontiers,
+                )
+            })
+            .expect("some fold must be feasible");
+        assert_eq!(first.n_partitions(), 2, "2-way fold expected feasible first");
+        let mut rng = Rng::new(seed);
+        let best = partition(&net, &points, &rm, &dev, &cfg, 4096, 0.0, &mut rng)
+            .expect("sweep must find a fold");
+        assert!(
+            best.images_per_sec >= first.images_per_sec,
+            "sweep returned a worse fold than its own first candidate: {} vs {}",
+            best.images_per_sec,
+            first.images_per_sec
+        );
+        assert!(
+            best.images_per_sec > first.images_per_sec,
+            "sweep should beat the starved 2-way fold on this device \
+             (best {} img/s across counts vs first {} img/s at {} partitions)",
+            best.images_per_sec,
+            first.images_per_sec,
+            first.n_partitions()
+        );
+        assert!(best.n_partitions() > 2, "the winning fold should be finer than 2-way");
+        for d in &best.designs {
+            assert!(dev.fits(&d.resources));
+        }
+    }
+
+    /// Regression (mid-network slice channels): a slice starting on a
+    /// streaming node must inherit the preceding compute layer's output
+    /// width, not the whole network's input channels.
+    #[test]
+    fn slice_starting_on_non_compute_layer_gets_pipeline_channels() {
+        let (net, _, _, _) = setup();
+        // "b1.relu1" follows b1.conv1 (cout 16) mid-network
+        let start = net
+            .layers
+            .iter()
+            .position(|l| l.name == "b1.relu1")
+            .expect("calibnet has b1.relu1");
+        let sub = slice_node_range(&net, start, net.layers.len(), "calibnet[b1.relu1..]");
+        assert_eq!(
+            sub.input_channels, 16,
+            "slice must carry the preceding conv's output channels"
+        );
+        assert_ne!(sub.input_channels, net.input_channels);
+        assert_eq!(sub.input_hw, 32);
+        assert_eq!(sub.layers.len(), net.layers.len() - start);
+        sub.validate().expect("mid-network slice must chain");
+        // compute-first slices are unchanged by the fix
+        let (sub2, idx) = slice_network(&net, 1, 3);
+        assert_eq!(idx, vec![1, 2]);
+        assert_eq!(sub2.input_channels, 16);
+        sub2.validate().expect("compute-first slice must chain");
     }
 
     #[test]

@@ -13,6 +13,34 @@
 //! reference.  Implementations whose backing executor is not thread-safe
 //! (e.g. a PJRT client) must serialize internally — correctness of the
 //! search does not depend on intra-generation evaluation order.
+//!
+//! # Asynchronous evaluation ([`CandidateEvaluator::eval_async`])
+//!
+//! Measured backends can be orders of magnitude slower than DSE pricing,
+//! and they serialize internally — under the two-phase
+//! measure-all-then-price-all generation loop the pricing threads sit
+//! idle behind the evaluator lock.  [`eval_async`] is the completion-queue
+//! seam that lets the engine overlap the two: the engine hands the backend
+//! a whole generation of [`EvalRequest`]s plus an `mpsc` [`Sender`]; the
+//! backend pushes one [`EvalCompletion`] per request **as soon as that
+//! request finishes**, in *any* order, on *any* thread.  The engine prices
+//! completed candidates while later ones are still in flight
+//! (`EngineConfig::async_eval`); because each completion carries its
+//! request's `slot` and evaluations are pure, completion order can never
+//! change results — see the determinism contract in [`crate::engine`].
+//!
+//! The default implementation evaluates serially through [`eval`] and
+//! sends each completion immediately, which already buys the overlap for
+//! every existing backend (including `MeasuredEvaluator`, whose internal
+//! mutex serializes measurements anyway).  Backends with real concurrency
+//! (a device pool, a remote service) override it and complete out of
+//! order; the engine does not care.
+//!
+//! [`eval`]: CandidateEvaluator::eval
+//! [`eval_async`]: CandidateEvaluator::eval_async
+//! [`Sender`]: std::sync::mpsc::Sender
+
+use std::sync::mpsc::Sender;
 
 use crate::pruning::PruningPlan;
 use crate::sparsity::{NetworkSparsity, SparsityPoint};
@@ -24,11 +52,32 @@ pub struct EvalPoint {
     pub points: Vec<SparsityPoint>,
 }
 
+/// One measurement request of an asynchronous generation: a decoded plan
+/// plus the index-addressed slot its completion must carry back.
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    /// index of this request within its generation's distinct-proposal
+    /// list; the matching [`EvalCompletion::slot`] routes the result
+    pub slot: usize,
+    pub plan: PruningPlan,
+}
+
+/// One finished measurement, tagged with its request's slot.
+#[derive(Clone, Debug)]
+pub struct EvalCompletion {
+    /// [`EvalRequest::slot`] of the request this result answers
+    pub slot: usize,
+    pub result: EvalPoint,
+}
+
 /// Measurement backend of the search loop.
 ///
 /// Evaluations must be *pure* with respect to the plan: the engine may
 /// evaluate candidates of one generation in any order, on any thread, and
-/// relies on `eval(plan)` returning the same value either way.
+/// relies on `eval(plan)` returning the same value either way.  The same
+/// contract extends to [`eval_async`](Self::eval_async): however a backend
+/// schedules or reorders a batch, each completion must be exactly what a
+/// lone `eval` of that plan would have returned.
 pub trait CandidateEvaluator: Sync {
     /// Sparsity model used to decode optimizer coordinates into thresholds.
     fn sparsity_model(&self) -> &NetworkSparsity;
@@ -36,4 +85,99 @@ pub trait CandidateEvaluator: Sync {
     fn eval(&self, plan: &PruningPlan) -> EvalPoint;
     /// Reference (unpruned) accuracy, for reporting drops.
     fn base_accuracy(&self) -> f64;
+
+    /// Evaluate a generation's worth of requests, pushing one completion
+    /// per request onto `completions` **as soon as it finishes** — in any
+    /// order, from any thread.  The engine's async pipeline
+    /// (`EngineConfig::async_eval`) prices completed candidates while the
+    /// rest are still in flight.
+    ///
+    /// The default implementation evaluates serially via
+    /// [`eval`](Self::eval) and completes in submission order.  A closed
+    /// receiver (the engine bailing out) is not an error: stop evaluating
+    /// and return.
+    fn eval_async(&self, requests: Vec<EvalRequest>, completions: Sender<EvalCompletion>) {
+        for req in requests {
+            let result = self.eval(&req.plan);
+            if completions.send(EvalCompletion { slot: req.slot, result }).is_err() {
+                return; // receiver gone: nobody is waiting for the rest
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::sparsity::synthesize;
+    use std::sync::mpsc;
+
+    /// Minimal evaluator relying entirely on the default `eval_async`.
+    struct Plain {
+        sparsity: NetworkSparsity,
+    }
+
+    impl CandidateEvaluator for Plain {
+        fn sparsity_model(&self) -> &NetworkSparsity {
+            &self.sparsity
+        }
+
+        fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+            let points = plan.points(&self.sparsity);
+            let s: f64 = points.iter().map(|p| p.s_w).sum();
+            EvalPoint { accuracy: 90.0 - s, points }
+        }
+
+        fn base_accuracy(&self) -> f64 {
+            90.0
+        }
+    }
+
+    #[test]
+    fn default_eval_async_completes_every_request_with_eval_results() {
+        let net = networks::calibnet();
+        let ev = Plain { sparsity: synthesize(&net, 7) };
+        let n = ev.sparsity_model().layers.len();
+        let plans: Vec<PruningPlan> = [0.0, 0.25, 0.6]
+            .iter()
+            .map(|&s| PruningPlan::from_unit_point(&vec![s; 2 * n], &ev.sparsity))
+            .collect();
+        let requests: Vec<EvalRequest> = plans
+            .iter()
+            .enumerate()
+            .map(|(slot, plan)| EvalRequest { slot, plan: plan.clone() })
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        ev.eval_async(requests, tx);
+        let mut got: Vec<EvalCompletion> = rx.iter().collect();
+        assert_eq!(got.len(), plans.len());
+        got.sort_by_key(|c| c.slot);
+        for (c, plan) in got.iter().zip(&plans) {
+            let direct = ev.eval(plan);
+            assert_eq!(c.result.accuracy.to_bits(), direct.accuracy.to_bits());
+            assert_eq!(c.result.points.len(), direct.points.len());
+            for (a, b) in c.result.points.iter().zip(&direct.points) {
+                assert_eq!(a.s_w.to_bits(), b.s_w.to_bits());
+                assert_eq!(a.s_a.to_bits(), b.s_a.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn default_eval_async_stops_on_closed_receiver() {
+        let net = networks::calibnet();
+        let ev = Plain { sparsity: synthesize(&net, 8) };
+        let n = ev.sparsity_model().layers.len();
+        let requests: Vec<EvalRequest> = (0..4)
+            .map(|slot| EvalRequest {
+                slot,
+                plan: PruningPlan::from_unit_point(&vec![0.3; 2 * n], &ev.sparsity),
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        // must return quietly instead of panicking on the send error
+        ev.eval_async(requests, tx);
+    }
 }

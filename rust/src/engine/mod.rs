@@ -36,6 +36,17 @@
 //!   ablations start warm: a repeated search against a warm-from-disk
 //!   cache misses zero times and journals bit-for-bit what the cold run
 //!   journaled (encodings are exact down to the f64 bit pattern).
+//! * **Async completion-queue pipeline** — with
+//!   [`EngineConfig::async_eval`] a generation's measurement requests are
+//!   handed to [`CandidateEvaluator::eval_async`] as a batch; completions
+//!   stream back over an `mpsc` queue **in any order**, and pricing
+//!   workers score every already-completed candidate while later
+//!   measurements are still in flight — replacing the two-phase
+//!   measure-all-then-price-all barrier.  Slots stay index-addressed and
+//!   the journal is still reduced in candidate order, so the pipeline is
+//!   an execution knob like `threads`: it can never change results
+//!   ([`EngineStats::overlap_pricings`] / [`EngineStats::ooo_completions`]
+//!   count the overlap it actually bought).
 //! * **Cross-shard measurement dedup** — each generation measures every
 //!   *distinct* proposal once and shares the result across shards.
 //!   During TPE random startup (and for warm-start anchors) the
@@ -65,9 +76,12 @@
 //!
 //! A search result is a pure function of `(evaluator, target, device,
 //! SearchConfig{seed, iterations, …}, EngineConfig{batch, quant_bits})`.
-//! `EngineConfig::threads` and `EngineConfig::cache` are execution knobs
-//! only: any thread count and either cache setting reproduce the same
-//! journal bit-for-bit.  `batch` *is* algorithmic (a frozen-model
+//! `EngineConfig::threads`, `EngineConfig::cache` and
+//! `EngineConfig::async_eval` are execution knobs only: any thread count,
+//! either cache setting and either generation pipeline (two-phase barrier
+//! or async completion queue — even with an evaluator that completes out
+//! of submission order) reproduce the same journal bit-for-bit.  `batch`
+//! *is* algorithmic (a frozen-model
 //! generation of k proposals is not the same sequence as k serial
 //! ask/tell rounds — the standard batched-BO trade-off), except during
 //! TPE's random-startup phase, where proposals are model-free and the
@@ -92,7 +106,7 @@ pub use cache::{
     cache_file_from_args, quantize_points, save_cache_file, DesignCache, DeviceCacheHandle,
     FrontierStore, SnapshotStats,
 };
-pub use evaluator::{CandidateEvaluator, EvalPoint};
+pub use evaluator::{CandidateEvaluator, EvalCompletion, EvalPoint, EvalRequest};
 pub use shard::{
     DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,
 };
@@ -130,19 +144,31 @@ pub struct EngineConfig {
     /// snap operating points to a 2^-bits grid before pricing (0 = exact;
     /// >0 makes nearby candidates share cache entries)
     pub quant_bits: u32,
+    /// run generations through the async completion-queue pipeline
+    /// ([`CandidateEvaluator::eval_async`]): pricing overlaps in-flight
+    /// measurements instead of waiting behind the measure-all barrier.
+    /// Execution knob only — results are bit-identical either way.
+    pub async_eval: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { batch: 1, threads: 0, cache: true, quant_bits: 0 }
+        EngineConfig { batch: 1, threads: 0, cache: true, quant_bits: 0, async_eval: false }
     }
 }
 
 impl EngineConfig {
     /// A sensible parallel configuration: k-candidate generations, auto
-    /// threads, cache with a 2^-12 (~2.4e-4 sparsity) pricing grid.
+    /// threads, cache with a 2^-12 (~2.4e-4 sparsity) pricing grid, and
+    /// the async completion-queue pipeline.
     pub fn batched(k: usize) -> Self {
-        EngineConfig { batch: k.max(1), threads: 0, cache: true, quant_bits: 12 }
+        EngineConfig {
+            batch: k.max(1),
+            threads: 0,
+            cache: true,
+            quant_bits: 12,
+            async_eval: true,
+        }
     }
 
     /// Worker threads for a generation of `work` items (0 = auto).
@@ -230,6 +256,20 @@ pub struct EngineStats {
     /// dedup — TPE startup and warm-start anchors propose identical
     /// candidates on every shard)
     pub dedup_evals: u64,
+    /// generations this shard ran through the async completion-queue
+    /// pipeline (`EngineConfig::async_eval`)
+    pub async_generations: usize,
+    /// candidate pricings of this shard that started while the evaluator
+    /// was still working through the generation's request batch — the
+    /// overlap the async pipeline bought over the two-phase barrier.
+    /// (Backlog drained after the evaluator finished is not counted.)
+    /// Timing-dependent (a stat, not a result); always 0 on the sync
+    /// path.
+    pub overlap_pricings: u64,
+    /// measurement completions owned by this shard that arrived after a
+    /// later-submitted request had already completed (the evaluator
+    /// finished work out of submission order).  Timing-dependent.
+    pub ooo_completions: u64,
 }
 
 impl EngineStats {
@@ -475,7 +515,13 @@ mod tests {
             &cfg(
                 20,
                 7,
-                EngineConfig { batch: 4, threads: 1, cache: false, quant_bits: 0 },
+                EngineConfig {
+                    batch: 4,
+                    threads: 1,
+                    cache: false,
+                    quant_bits: 0,
+                    async_eval: false,
+                },
             ),
         );
         let parallel = run(
@@ -483,7 +529,13 @@ mod tests {
             &cfg(
                 20,
                 7,
-                EngineConfig { batch: 4, threads: 4, cache: true, quant_bits: 0 },
+                EngineConfig {
+                    batch: 4,
+                    threads: 4,
+                    cache: true,
+                    quant_bits: 0,
+                    async_eval: false,
+                },
             ),
         );
         assert_eq!(objective_bits(&serial), objective_bits(&parallel));
@@ -504,7 +556,13 @@ mod tests {
             &cfg(
                 13, // not divisible by the batch: exercises the short tail
                 3,
-                EngineConfig { batch: 5, threads: 1, cache: true, quant_bits: 12 },
+                EngineConfig {
+                    batch: 5,
+                    threads: 1,
+                    cache: true,
+                    quant_bits: 12,
+                    async_eval: false,
+                },
             ),
         );
         let b = run(
@@ -512,7 +570,13 @@ mod tests {
             &cfg(
                 13,
                 3,
-                EngineConfig { batch: 5, threads: 3, cache: true, quant_bits: 12 },
+                EngineConfig {
+                    batch: 5,
+                    threads: 3,
+                    cache: true,
+                    quant_bits: 12,
+                    async_eval: false,
+                },
             ),
         );
         assert_eq!(objective_bits(&a), objective_bits(&b));
@@ -533,7 +597,13 @@ mod tests {
                 &cfg(
                     n_startup,
                     5,
-                    EngineConfig { batch: k, threads: 2, cache: true, quant_bits: 0 },
+                    EngineConfig {
+                        batch: k,
+                        threads: 2,
+                        cache: true,
+                        quant_bits: 0,
+                        async_eval: false,
+                    },
                 ),
             );
             assert_eq!(
@@ -554,7 +624,13 @@ mod tests {
             &cfg(
                 16,
                 9,
-                EngineConfig { batch: 4, threads: 2, cache: true, quant_bits: 12 },
+                EngineConfig {
+                    batch: 4,
+                    threads: 2,
+                    cache: true,
+                    quant_bits: 12,
+                    async_eval: false,
+                },
             ),
         );
         let off = run(
@@ -562,7 +638,13 @@ mod tests {
             &cfg(
                 16,
                 9,
-                EngineConfig { batch: 4, threads: 2, cache: false, quant_bits: 12 },
+                EngineConfig {
+                    batch: 4,
+                    threads: 2,
+                    cache: false,
+                    quant_bits: 12,
+                    async_eval: false,
+                },
             ),
         );
         assert_eq!(objective_bits(&on), objective_bits(&off));
@@ -581,7 +663,13 @@ mod tests {
             &cfg(
                 10,
                 2,
-                EngineConfig { batch: 4, threads: 2, cache: true, quant_bits: 0 },
+                EngineConfig {
+                    batch: 4,
+                    threads: 2,
+                    cache: true,
+                    quant_bits: 0,
+                    async_eval: false,
+                },
             ),
         );
         assert_eq!(r.stats.evaluations, 10);
@@ -602,12 +690,77 @@ mod tests {
             &cfg(
                 3,
                 1,
-                EngineConfig { batch: 8, threads: 0, cache: true, quant_bits: 0 },
+                EngineConfig {
+                    batch: 8,
+                    threads: 0,
+                    cache: true,
+                    quant_bits: 0,
+                    async_eval: false,
+                },
             ),
         );
         assert_eq!(r.records.len(), 3);
         assert_eq!(r.stats.generations, 1);
         assert!(r.best < 3);
+    }
+
+    /// The async completion-queue pipeline is an execution knob: with the
+    /// default (serial, in-order) `eval_async` it reproduces the sync
+    /// two-phase journal bit for bit, at any thread count.
+    #[test]
+    fn async_pipeline_matches_sync_bit_for_bit() {
+        let ev = surrogate(18);
+        let sync = run(
+            &ev,
+            &cfg(
+                14,
+                23,
+                EngineConfig {
+                    batch: 4,
+                    threads: 2,
+                    cache: true,
+                    quant_bits: 12,
+                    async_eval: false,
+                },
+            ),
+        );
+        for threads in [1usize, 3] {
+            let asynced = run(
+                &ev,
+                &cfg(
+                    14,
+                    23,
+                    EngineConfig {
+                        batch: 4,
+                        threads,
+                        cache: true,
+                        quant_bits: 12,
+                        async_eval: true,
+                    },
+                ),
+            );
+            assert_eq!(
+                objective_bits(&sync),
+                objective_bits(&asynced),
+                "async pipeline diverged at {threads} pricing threads"
+            );
+            assert_eq!(sync.best, asynced.best);
+            assert_eq!(sync.best_record().plan, asynced.best_record().plan);
+            // every generation went through the queue...
+            assert_eq!(asynced.stats.async_generations, asynced.stats.generations);
+        }
+        // ...and the sync run reports no async activity at all
+        assert_eq!(sync.stats.async_generations, 0);
+        assert_eq!(sync.stats.overlap_pricings, 0);
+        assert_eq!(sync.stats.ooo_completions, 0);
+    }
+
+    #[test]
+    fn batched_config_enables_async_pipeline() {
+        let c = EngineConfig::batched(4);
+        assert!(c.async_eval);
+        assert_eq!(c.batch, 4);
+        assert!(!EngineConfig::default().async_eval, "default stays the seed-serial loop");
     }
 
     #[test]
@@ -630,7 +783,7 @@ mod tests {
         let c = cfg(
             8,
             21,
-            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 12, async_eval: false },
         );
         let cache = DesignCache::new();
         let eng = Engine::new(&ev, &net, &rm, &dev);

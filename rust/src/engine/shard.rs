@@ -33,6 +33,8 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 
 use crate::arch::Network;
 use crate::dse::explore;
@@ -41,12 +43,13 @@ use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::metrics::{pareto_front, Point2, Table};
 use crate::optim::tpe::TpeOptimizer;
+use crate::pruning::PruningPlan;
 use crate::sparsity::SparsityPoint;
 
 use super::cache::{device_fingerprint, quantize_points, DesignCache, DeviceCacheHandle};
 use super::{
-    CandidateEvaluator, Engine, EngineStats, EvalCtx, Measurement, SearchConfig,
-    SearchRecord, SearchResult, ANCHORS,
+    CandidateEvaluator, Engine, EngineStats, EvalCtx, EvalCompletion, EvalRequest,
+    Measurement, SearchConfig, SearchRecord, SearchResult, ANCHORS,
 };
 
 /// One device's slice of a sharded search result.
@@ -97,6 +100,16 @@ pub struct ShardedStats {
     pub frontier_misses: u64,
     /// measurements skipped via cross-shard candidate dedup
     pub dedup_evals: u64,
+    /// lockstep generations run through the async completion-queue
+    /// pipeline (0 on the two-phase sync path)
+    pub async_generations: usize,
+    /// pricings started while the evaluator was still working through the
+    /// generation's requests, summed over shards (timing-dependent stat;
+    /// 0 on the sync path)
+    pub overlap_pricings: u64,
+    /// measurement completions that arrived out of submission order,
+    /// summed over owning shards (timing-dependent stat)
+    pub ooo_completions: u64,
 }
 
 /// Output of [`ShardedEngine::search`]: per-device results (standalone
@@ -202,6 +215,10 @@ struct Shard<'e> {
     fmisses0: u64,
     /// measurements this shard skipped via cross-shard dedup
     dedup: u64,
+    /// async-pipeline counters accumulated over this run's generations
+    async_gens: usize,
+    overlap: u64,
+    ooo: u64,
     tpe: TpeOptimizer,
     records: Vec<SearchRecord>,
 }
@@ -348,6 +365,9 @@ impl<'a> ShardedEngine<'a> {
                     fhits0,
                     fmisses0,
                     dedup: 0,
+                    async_gens: 0,
+                    overlap: 0,
+                    ooo: 0,
                     handle,
                     // every shard is seeded exactly like a standalone run,
                     // which is what makes its journal standalone-identical
@@ -377,7 +397,7 @@ impl<'a> ShardedEngine<'a> {
                 })
                 .collect();
             // --- evaluate the union of (shard, candidate) work items ----
-            let (flat, dedup) = {
+            let evaluated = {
                 let ctxs: Vec<EvalCtx<'_>> = shards
                     .iter()
                     .map(|s| EvalCtx {
@@ -395,11 +415,17 @@ impl<'a> ShardedEngine<'a> {
                         shapes: &shapes,
                     })
                     .collect();
-                run_generation(&shards, &ctxs, &xs_all, done, g, threads)
+                if cfg.engine.async_eval {
+                    run_generation_async(
+                        self.evaluator, &shards, &ctxs, &xs_all, done, g, threads,
+                    )
+                } else {
+                    run_generation(&shards, &ctxs, &xs_all, done, g, threads)
+                }
             };
             // --- reduce per shard, in candidate order -------------------
-            let mut flat = flat.into_iter();
-            for ((s, xs), dd) in shards.iter_mut().zip(xs_all).zip(dedup) {
+            let mut flat = evaluated.records.into_iter();
+            for (si, (s, xs)) in shards.iter_mut().zip(xs_all).enumerate() {
                 let recs: Vec<SearchRecord> = flat.by_ref().take(g).collect();
                 let mut observed = Vec::with_capacity(g);
                 for (x, rec) in xs.into_iter().zip(&recs) {
@@ -407,7 +433,12 @@ impl<'a> ShardedEngine<'a> {
                 }
                 s.records.extend(recs);
                 s.tpe.observe_batch(observed);
-                s.dedup += dd;
+                s.dedup += evaluated.dedup[si];
+                s.overlap += evaluated.overlap[si];
+                s.ooo += evaluated.ooo[si];
+                if cfg.engine.async_eval {
+                    s.async_gens += 1;
+                }
             }
             generations += 1;
             done += g;
@@ -420,6 +451,8 @@ impl<'a> ShardedEngine<'a> {
         let (mut total_hits, mut total_misses) = (0u64, 0u64);
         let (mut total_fhits, mut total_fmisses) = (0u64, 0u64);
         let mut total_dedup = 0u64;
+        let (mut total_overlap, mut total_ooo) = (0u64, 0u64);
+        let async_generations = if cfg.engine.async_eval { generations } else { 0 };
         for s in shards {
             let best = s
                 .records
@@ -437,6 +470,8 @@ impl<'a> ShardedEngine<'a> {
             total_fhits += fhits;
             total_fmisses += fmisses;
             total_dedup += s.dedup;
+            total_overlap += s.overlap;
+            total_ooo += s.ooo;
             per_device.push(DeviceSearchResult {
                 device: s.engine.dev.name.clone(),
                 result: SearchResult {
@@ -452,6 +487,9 @@ impl<'a> ShardedEngine<'a> {
                         frontier_hits: fhits,
                         frontier_misses: fmisses,
                         dedup_evals: s.dedup,
+                        async_generations: s.async_gens,
+                        overlap_pricings: s.overlap,
+                        ooo_completions: s.ooo,
                     },
                     records: s.records,
                 },
@@ -471,6 +509,9 @@ impl<'a> ShardedEngine<'a> {
                 frontier_hits: total_fhits,
                 frontier_misses: total_fmisses,
                 dedup_evals: total_dedup,
+                async_generations,
+                overlap_pricings: total_overlap,
+                ooo_completions: total_ooo,
             },
             pareto,
             per_device,
@@ -478,23 +519,74 @@ impl<'a> ShardedEngine<'a> {
     }
 }
 
+/// Everything one lockstep generation hands back to the reducer: records
+/// in flat `shard * g + candidate` order plus per-shard execution
+/// counters (all-zero overlap/ooo on the sync two-phase path).
+struct GenerationOutput {
+    records: Vec<SearchRecord>,
+    dedup: Vec<u64>,
+    overlap: Vec<u64>,
+    ooo: Vec<u64>,
+}
+
+/// Cross-shard dedup of one generation's proposals: every `(shard,
+/// candidate)` work item is mapped onto its *distinct* proposal (first
+/// occurrence in flat order owns it).  Identical proposals across shards
+/// are guaranteed during TPE random startup and for warm-start anchors,
+/// where every shard's seed-identical optimizer emits the same
+/// candidates; measurement is device-independent, so sharing it cannot
+/// change any journal — evaluations are pure by the
+/// [`CandidateEvaluator`] contract.
+struct ProposalDedup {
+    /// distinct-proposal slot of each flat work item
+    meas_idx: Vec<usize>,
+    /// first `(shard, candidate)` occurrence of each distinct proposal
+    owners: Vec<(usize, usize)>,
+    /// flat work items referencing each distinct proposal (disjoint sets)
+    users: Vec<Vec<usize>>,
+    /// per shard: measurements skipped because another shard owns them
+    dedup: Vec<u64>,
+}
+
+fn dedup_proposals(xs_all: &[Vec<Vec<f64>>], n_shards: usize, g: usize) -> ProposalDedup {
+    let total = n_shards * g;
+    let mut meas_idx: Vec<usize> = Vec::with_capacity(total);
+    let mut owners: Vec<(usize, usize)> = Vec::new();
+    let mut users: Vec<Vec<usize>> = Vec::new();
+    let mut seen: HashMap<Vec<u64>, usize> = HashMap::new();
+    let mut dedup = vec![0u64; n_shards];
+    for k in 0..total {
+        let (si, j) = (k / g, k % g);
+        let key: Vec<u64> = xs_all[si][j].iter().map(|v| v.to_bits()).collect();
+        match seen.entry(key) {
+            Entry::Occupied(e) => {
+                meas_idx.push(*e.get());
+                users[*e.get()].push(k);
+                dedup[si] += 1;
+            }
+            Entry::Vacant(e) => {
+                e.insert(owners.len());
+                meas_idx.push(owners.len());
+                users.push(vec![k]);
+                owners.push((si, j));
+            }
+        }
+    }
+    ProposalDedup { meas_idx, owners, users, dedup }
+}
+
 /// Evaluate one lockstep generation in two index-addressed parallel
-/// passes:
+/// passes (the sync path):
 ///
-/// 1. **Measure** — identical proposals across shards (guaranteed during
-///    TPE random startup and for warm-start anchors, where every shard's
-///    seed-identical optimizer emits the same candidates) are coalesced:
-///    each *distinct* proposal is measured once, by its first `(shard,
-///    candidate)` occurrence in flat order.  Measurement is
-///    device-independent (plan decode + evaluator + sparsity metrics), so
-///    sharing it cannot change any journal — evaluations are pure by the
-///    [`CandidateEvaluator`] contract.
+/// 1. **Measure** — each *distinct* proposal ([`dedup_proposals`]) is
+///    measured once, by its first `(shard, candidate)` occurrence in flat
+///    order.
 /// 2. **Score** — every `(shard, candidate)` work item prices its shard's
 ///    device (design cache + frontier store) and scores Eq. 6, flat index
 ///    `shard * g + candidate`, each worker writing into its own slot.
 ///
-/// Returns the records in flat order plus, per shard, how many
-/// measurements it skipped thanks to dedup.
+/// The barrier between the passes is what [`run_generation_async`]
+/// removes.
 fn run_generation(
     shards: &[Shard<'_>],
     ctxs: &[EvalCtx<'_>],
@@ -502,33 +594,14 @@ fn run_generation(
     base_iter: usize,
     g: usize,
     threads: usize,
-) -> (Vec<SearchRecord>, Vec<u64>) {
+) -> GenerationOutput {
     let total = shards.len() * g;
-    // --- dedup: map each work item to its distinct-proposal slot --------
-    let mut meas_idx: Vec<usize> = Vec::with_capacity(total);
-    let mut owners: Vec<(usize, usize)> = Vec::new();
-    let mut seen: HashMap<Vec<u64>, usize> = HashMap::new();
-    let mut dedup = vec![0u64; shards.len()];
-    for k in 0..total {
-        let (si, j) = (k / g, k % g);
-        let key: Vec<u64> = xs_all[si][j].iter().map(|v| v.to_bits()).collect();
-        match seen.entry(key) {
-            Entry::Occupied(e) => {
-                meas_idx.push(*e.get());
-                dedup[si] += 1;
-            }
-            Entry::Vacant(e) => {
-                e.insert(owners.len());
-                meas_idx.push(owners.len());
-                owners.push((si, j));
-            }
-        }
-    }
+    let dd = dedup_proposals(xs_all, shards.len(), g);
     // --- pass 1: measure each distinct proposal exactly once ------------
     let mut meas: Vec<Option<Measurement>> = Vec::new();
-    meas.resize_with(owners.len(), || None);
+    meas.resize_with(dd.owners.len(), || None);
     run_slots(&mut meas, threads, |slot, mi| {
-        let (si, j) = owners[mi];
+        let (si, j) = dd.owners[mi];
         *slot = Some(shards[si].engine.measure_candidate(&xs_all[si][j]));
     });
     let meas: Vec<Measurement> =
@@ -538,11 +611,171 @@ fn run_generation(
     out.resize_with(total, || None);
     run_slots(&mut out, threads, |slot, k| {
         let (si, j) = (k / g, k % g);
-        *slot =
-            Some(shards[si].engine.score_candidate(base_iter + j, &meas[meas_idx[k]], &ctxs[si]));
+        *slot = Some(shards[si].engine.score_candidate(
+            base_iter + j,
+            &meas[dd.meas_idx[k]],
+            &ctxs[si],
+        ));
     });
     let records = out.into_iter().map(|o| o.expect("generation slot filled")).collect();
-    (records, dedup)
+    GenerationOutput {
+        records,
+        dedup: dd.dedup,
+        overlap: vec![0; shards.len()],
+        ooo: vec![0; shards.len()],
+    }
+}
+
+/// Evaluate one lockstep generation through the **async completion
+/// queue** — the tentpole pipeline replacing the measure-all-then-
+/// price-all barrier of [`run_generation`]:
+///
+/// * one submitter thread hands the whole generation's distinct
+///   proposals ([`dedup_proposals`]) to
+///   [`CandidateEvaluator::eval_async`], which streams
+///   [`EvalCompletion`]s back over an `mpsc` channel in *any* order;
+/// * `threads` pricing workers pop completions as they arrive (pops are
+///   serialized, pricing is parallel) and immediately price + score every
+///   `(shard, candidate)` work item referencing that proposal — while
+///   later measurements are still in flight;
+/// * each scored record is routed back with its flat index and placed
+///   into its index-addressed slot by the collector, so scheduling,
+///   completion order and thread count can never move a result.
+///
+/// The journal reduction downstream is unchanged (candidate order per
+/// shard), which makes the whole pipeline an execution knob: bit-for-bit
+/// identical to the sync path for any evaluator honoring the purity
+/// contract, including ones that complete out of submission order.
+fn run_generation_async(
+    evaluator: &dyn CandidateEvaluator,
+    shards: &[Shard<'_>],
+    ctxs: &[EvalCtx<'_>],
+    xs_all: &[Vec<Vec<f64>>],
+    base_iter: usize,
+    g: usize,
+    threads: usize,
+) -> GenerationOutput {
+    let n_shards = shards.len();
+    let total = n_shards * g;
+    let dd = dedup_proposals(xs_all, n_shards, g);
+    let n_meas = dd.owners.len();
+    // decode once per distinct proposal: the plan travels with the
+    // request, and is also what the scored records carry
+    let plans: Vec<PruningPlan> = dd
+        .owners
+        .iter()
+        .map(|&(si, j)| {
+            PruningPlan::from_unit_point(&xs_all[si][j], evaluator.sparsity_model())
+        })
+        .collect();
+    let requests: Vec<EvalRequest> = plans
+        .iter()
+        .enumerate()
+        .map(|(slot, plan)| EvalRequest { slot, plan: plan.clone() })
+        .collect();
+
+    // completion-pop state shared by the pricing workers: pops are
+    // serialized (recv under the lock), which is also what makes the
+    // out-of-order accounting race-free
+    struct PopState {
+        rx: mpsc::Receiver<EvalCompletion>,
+        received: usize,
+        max_slot: Option<usize>,
+        done: Vec<bool>,
+    }
+    let (meas_tx, meas_rx) = mpsc::channel::<EvalCompletion>();
+    let pop = Mutex::new(PopState {
+        rx: meas_rx,
+        received: 0,
+        max_slot: None,
+        done: vec![false; n_meas],
+    });
+    let (rec_tx, rec_rx) = mpsc::channel::<(usize, SearchRecord)>();
+    let overlap: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
+    let ooo: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
+    // true while the evaluator is still working through the generation's
+    // request batch: pricings started in that window genuinely overlap
+    // measurement work (a queue backlog drained *after* the evaluator
+    // finished is throughput, not overlap, and is not counted)
+    let measuring = AtomicBool::new(true);
+
+    let mut out: Vec<Option<SearchRecord>> = Vec::new();
+    out.resize_with(total, || None);
+    std::thread::scope(|sc| {
+        // submitter: the evaluator owns its scheduling; when it returns,
+        // the moved sender drops and the workers' recv unblocks
+        {
+            let measuring = &measuring;
+            sc.spawn(move || {
+                evaluator.eval_async(requests, meas_tx);
+                measuring.store(false, Ordering::Release);
+            });
+        }
+        for _ in 0..threads.max(1) {
+            let rec_tx = rec_tx.clone();
+            let (pop, plans, dd) = (&pop, &plans, &dd);
+            let (overlap, ooo, measuring) = (&overlap, &ooo, &measuring);
+            sc.spawn(move || loop {
+                // pop one completion (serialized); price its users
+                // (parallel across workers) after releasing the lock
+                let (c, out_of_order) = {
+                    let mut st = pop.lock().unwrap();
+                    if st.received == n_meas {
+                        return;
+                    }
+                    let Ok(c) = st.rx.recv() else { return };
+                    assert!(
+                        c.slot < n_meas && !std::mem::replace(&mut st.done[c.slot], true),
+                        "evaluator violated the eval_async contract on slot {}",
+                        c.slot
+                    );
+                    st.received += 1;
+                    let out_of_order = st.max_slot.is_some_and(|m| c.slot < m);
+                    st.max_slot = Some(st.max_slot.map_or(c.slot, |m| m.max(c.slot)));
+                    (c, out_of_order)
+                };
+                if out_of_order {
+                    ooo[dd.owners[c.slot].0].fetch_add(1, Ordering::Relaxed);
+                }
+                let overlapping = measuring.load(Ordering::Acquire);
+                let meas = Measurement {
+                    plan: plans[c.slot].clone(),
+                    metrics: crate::pruning::metrics(
+                        shards[0].engine.target,
+                        &c.result.points,
+                    ),
+                    ev: c.result,
+                };
+                for &k in &dd.users[c.slot] {
+                    let (si, j) = (k / g, k % g);
+                    if overlapping {
+                        overlap[si].fetch_add(1, Ordering::Relaxed);
+                    }
+                    let rec =
+                        shards[si].engine.score_candidate(base_iter + j, &meas, &ctxs[si]);
+                    if rec_tx.send((k, rec)).is_err() {
+                        return; // collector bailed out
+                    }
+                }
+            });
+        }
+        drop(rec_tx);
+        // collector: place each scored record into its flat slot.  Runs on
+        // the generation's own thread, concurrently with the workers.
+        for _ in 0..total {
+            let (k, rec) = rec_rx
+                .recv()
+                .expect("evaluator completed fewer requests than were submitted");
+            out[k] = Some(rec);
+        }
+    });
+    let records = out.into_iter().map(|o| o.expect("generation slot filled")).collect();
+    GenerationOutput {
+        records,
+        dedup: dd.dedup,
+        overlap: overlap.into_iter().map(|a| a.into_inner()).collect(),
+        ooo: ooo.into_iter().map(|a| a.into_inner()).collect(),
+    }
 }
 
 /// Fill every slot via `fill(slot, index)` on up to `threads` scoped
@@ -646,7 +879,7 @@ mod tests {
         let c = cfg(
             12,
             7,
-            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let sharded = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         assert_eq!(sharded.per_device.len(), 2);
@@ -673,7 +906,7 @@ mod tests {
         let c = cfg(
             8,
             3,
-            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 0 },
+            EngineConfig { batch: 2, threads: 2, cache: true, quant_bits: 0, async_eval: false },
         );
         let sharded = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         let single = Engine::new(&ev, &net, &rm, &devices[0]).search(&c);
@@ -702,7 +935,7 @@ mod tests {
         let c = cfg(
             6,
             5,
-            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let r = ShardedEngine::new(&ev, &net, &rm, &dup).search(&c);
         assert_eq!(r.stats.devices, 2, "one shard per distinct device");
@@ -725,6 +958,45 @@ mod tests {
         assert_eq!(r3.stats.evaluations, 2 * 6);
     }
 
+    /// Async sharded generations reduce to the same per-device journals
+    /// as the sync barrier — and dedup accounting is pipeline-invariant.
+    #[test]
+    fn async_sharded_matches_sync_per_device() {
+        let ev = surrogate(40);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let sync_c = cfg(
+            9,
+            13,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
+        );
+        let async_c = cfg(
+            9,
+            13,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: true },
+        );
+        let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
+        let sync = eng.search(&sync_c);
+        let asynced = eng.search(&async_c);
+        for (a, b) in sync.per_device.iter().zip(&asynced.per_device) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(
+                objective_bits(&a.result),
+                objective_bits(&b.result),
+                "{}: async sharded journal diverged",
+                a.device
+            );
+            assert_eq!(
+                a.result.stats.dedup_evals, b.result.stats.dedup_evals,
+                "{}: dedup must be pipeline-invariant",
+                a.device
+            );
+        }
+        assert_eq!(asynced.stats.async_generations, asynced.stats.generations);
+        assert_eq!(sync.stats.async_generations, 0);
+    }
+
     #[test]
     fn pareto_front_is_nondominated_and_sourced_from_journals() {
         let ev = surrogate(33);
@@ -734,7 +1006,7 @@ mod tests {
         let c = cfg(
             10,
             5,
-            EngineConfig { batch: 5, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 5, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         assert!(!r.pareto.is_empty());
@@ -771,7 +1043,7 @@ mod tests {
         let c = cfg(
             6,
             11,
-            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let cache = DesignCache::new();
         let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
@@ -799,7 +1071,7 @@ mod tests {
         let c = cfg(
             7,
             13,
-            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         assert_eq!(r.stats.devices, 3);
@@ -835,7 +1107,7 @@ mod tests {
         let c = cfg(
             iters,
             17,
-            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         // first shard (flat order) owns every measurement; the other two
@@ -872,7 +1144,7 @@ mod tests {
         let c = cfg(
             4,
             3,
-            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12 },
+            EngineConfig { batch: 2, threads: 0, cache: true, quant_bits: 12, async_eval: false },
         );
         let cache = DesignCache::new();
         let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
@@ -902,7 +1174,13 @@ mod tests {
         let net = ev.net.clone();
         let rm = ResourceModel::default();
         let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
-        let c = cfg(5, 1, EngineConfig { batch: 5, threads: 0, cache: true, quant_bits: 12 });
+        let c = cfg(5, 1, EngineConfig {
+            batch: 5,
+            threads: 0,
+            cache: true,
+            quant_bits: 12,
+            async_eval: false,
+        });
         let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         assert_eq!(r.summary_table().rows.len(), 2);
         assert_eq!(r.pareto_table().rows.len(), r.pareto.len());
@@ -916,7 +1194,13 @@ mod tests {
         let net = ev.net.clone();
         let rm = ResourceModel::default();
         let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
-        let c = cfg(4, 2, EngineConfig { batch: 4, threads: 0, cache: true, quant_bits: 12 });
+        let c = cfg(4, 2, EngineConfig {
+            batch: 4,
+            threads: 0,
+            cache: true,
+            quant_bits: 12,
+            async_eval: false,
+        });
         let r = ShardedEngine::new(&ev, &net, &rm, &devices).search(&c);
         let base = std::env::temp_dir().join("hass_shard_journal_test.csv");
         let paths = r.write_journals(base.to_str().unwrap()).unwrap();

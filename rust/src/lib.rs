@@ -31,7 +31,14 @@
 //! pricings in a lock-striped, multi-device store keyed by (device
 //! fingerprint, quantized operating points), TPE proposes whole
 //! generations at once (`suggest_batch`/`observe_batch`), and each
-//! generation is evaluated concurrently with scoped threads.
+//! generation is evaluated concurrently with scoped threads.  With
+//! `EngineConfig::async_eval`, generations run through an **async
+//! completion queue** instead of the measure-all-then-price-all barrier:
+//! measurement requests go to [`engine::CandidateEvaluator::eval_async`]
+//! as a batch, completions stream back over an `mpsc` channel in any
+//! order, and DSE pricing overlaps the still-in-flight measurements —
+//! which is what hides the latency of the serialized measured (PJRT)
+//! backend.
 //! [`engine::ShardedEngine`] fans one search out over several
 //! [`hardware::device::DeviceBudget`]s — per-device shards advance in
 //! lockstep generations over a shared thread pool and design cache, which
@@ -41,10 +48,11 @@
 //! [`engine::DesignCache::save`] / [`engine::DesignCache::load`] snapshot
 //! them to versioned JSON (`hass search --cache-file`, the bench sweep
 //! drivers), so repeat sweeps start warm and miss zero times.  Thread
-//! count, cache state — in-memory or warm from disk — and shard count
-//! never change results — each device's journal is bit-for-bit the
-//! journal of a standalone serial run (see the module docs for the exact
-//! determinism contract).
+//! count, cache state — in-memory or warm from disk — shard count and
+//! the generation pipeline (sync barrier or async completion queue, even
+//! with out-of-order evaluators) never change results — each device's
+//! journal is bit-for-bit the journal of a standalone serial run (see
+//! the module docs for the exact determinism contract).
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
 //!

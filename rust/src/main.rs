@@ -95,6 +95,11 @@ fn cmd_search(args: &[String]) -> i32 {
         .opt("batch", "1", "candidates per TPE generation, evaluated in parallel")
         .opt("threads", "0", "evaluation worker threads (0 = auto)")
         .opt("quant", "0", "pricing quantization bits (0 = exact; 12 is a good cache grid)")
+        .flag(
+            "async",
+            "async completion-queue pipeline: DSE pricing overlaps in-flight \
+             measurements (results are bit-identical either way)",
+        )
         .flag("no-cache", "disable the DSE design cache")
         .opt(
             "cache-file",
@@ -122,6 +127,7 @@ fn cmd_search(args: &[String]) -> i32 {
         threads: p.get_usize("threads"),
         cache: !p.get_bool("no-cache"),
         quant_bits: p.get_usize("quant") as u32,
+        async_eval: p.get_bool("async"),
     };
     let cfg = SearchConfig {
         iterations: p.get_usize("iters"),
@@ -193,6 +199,13 @@ fn cmd_search(args: &[String]) -> i32 {
             s.frontier_misses,
             s.dedup_evals
         );
+        if s.async_generations > 0 {
+            println!(
+                "[search] async pipeline: {} generations | {} pricings overlapped \
+                 in-flight measurements | {} completions out of order",
+                s.async_generations, s.overlap_pricings, s.ooo_completions
+            );
+        }
         print!("{}", result.summary_table().to_markdown());
         println!(
             "[search] cross-device pareto front ({} points):",
@@ -239,6 +252,13 @@ fn cmd_search(args: &[String]) -> i32 {
         s.frontier_hits,
         s.frontier_misses
     );
+    if s.async_generations > 0 {
+        println!(
+            "[search] async pipeline: {} generations | {} pricings overlapped \
+             in-flight measurements | {} completions out of order",
+            s.async_generations, s.overlap_pricings, s.ooo_completions
+        );
+    }
     if !journal.is_empty() {
         if let Some(dir) = std::path::Path::new(journal).parent() {
             if !dir.as_os_str().is_empty() {

@@ -11,8 +11,8 @@ use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
     search, search_sharded, search_sharded_with_cache, CandidateEvaluator, DesignCache,
-    Engine, EngineConfig, EvalPoint, MeasuredEvaluator, SearchConfig, SearchMode,
-    SurrogateEvaluator,
+    Engine, EngineConfig, EvalCompletion, EvalPoint, EvalRequest, MeasuredEvaluator,
+    SearchConfig, SearchMode, SurrogateEvaluator,
 };
 use hass::dse::{explore, explore_scan, network_throughput, DseConfig};
 use hass::engine::quantize_points;
@@ -248,9 +248,146 @@ fn sharded_cfg(iters: usize, seed: u64, threads: usize) -> SearchConfig {
         iterations: iters,
         seed,
         dse: DseConfig { max_iters: 1_500, ..Default::default() },
-        engine: EngineConfig { batch: 4, threads, cache: true, quant_bits: 12 },
+        engine: EngineConfig { batch: 4, threads, cache: true, quant_bits: 12, async_eval: false },
         ..Default::default()
     }
+}
+
+/// Deliberately slow, out-of-order-completing evaluator for the async
+/// purity contract: `eval_async` measures the whole batch, then delivers
+/// the completions in **reverse** submission order with a wall-clock
+/// delay before each send.  A pipeline that depends on completion order
+/// in any way journals differently from the sync engine; the tests below
+/// assert it cannot.
+struct SlowOooEvaluator {
+    inner: StubEvaluator,
+    delay: std::time::Duration,
+}
+
+impl SlowOooEvaluator {
+    fn calibnet(seed: u64) -> Self {
+        SlowOooEvaluator {
+            inner: StubEvaluator::calibnet(seed),
+            delay: std::time::Duration::from_millis(2),
+        }
+    }
+}
+
+impl CandidateEvaluator for SlowOooEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        self.inner.sparsity_model()
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        self.inner.eval(plan)
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.inner.base_accuracy()
+    }
+
+    fn eval_async(
+        &self,
+        requests: Vec<EvalRequest>,
+        completions: std::sync::mpsc::Sender<EvalCompletion>,
+    ) {
+        let mut done: Vec<EvalCompletion> = requests
+            .into_iter()
+            .map(|r| EvalCompletion { slot: r.slot, result: self.eval(&r.plan) })
+            .collect();
+        done.reverse();
+        for c in done {
+            std::thread::sleep(self.delay);
+            if completions.send(c).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn objective_bits_of(r: &hass::coordinator::SearchResult) -> Vec<u64> {
+    r.records.iter().map(|x| x.objective.to_bits()).collect()
+}
+
+/// The async-pipeline purity contract: a slow evaluator that completes
+/// strictly out of submission order must journal — on every device —
+/// bit-identically to the sync two-phase engine driving the plain stub,
+/// across thread counts.
+#[test]
+fn async_out_of_order_evaluator_matches_sync_stub_bit_for_bit() {
+    let sync_ev = StubEvaluator::calibnet(60);
+    let ooo_ev = SlowOooEvaluator::calibnet(60);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let sync_cfg = sharded_cfg(12, 19, 0);
+    let sync = search_sharded(&sync_ev, &net, &rm, &devices, &sync_cfg);
+    for threads in [1usize, 0] {
+        let mut cfg = sharded_cfg(12, 19, threads);
+        cfg.engine.async_eval = true;
+        let async_r = search_sharded(&ooo_ev, &net, &rm, &devices, &cfg);
+        assert_eq!(async_r.stats.async_generations, async_r.stats.generations);
+        for (a, b) in sync.per_device.iter().zip(&async_r.per_device) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(
+                objective_bits_of(&a.result),
+                objective_bits_of(&b.result),
+                "{} (threads={threads}): async out-of-order journal diverged",
+                a.device
+            );
+            assert_eq!(a.result.best, b.result.best);
+            assert_eq!(
+                a.result.best_record().plan,
+                b.result.best_record().plan
+            );
+        }
+        // reverse delivery means every completion after the first arrives
+        // below the max slot seen — the engine must both notice it...
+        assert!(
+            async_r.stats.ooo_completions > 0,
+            "reverse-order evaluator must register out-of-order completions"
+        );
+        // ...and price earlier completions while the evaluator is still
+        // delivering the rest of the batch
+        assert!(
+            async_r.stats.overlap_pricings > 0,
+            "pricing must overlap the still-running measurement batch"
+        );
+    }
+}
+
+/// The async pipeline under the production surrogate evaluator (default
+/// serial `eval_async`): bit-identical to the sync engine, standalone
+/// and sharded.
+#[test]
+fn async_surrogate_matches_sync_bit_for_bit() {
+    let net = networks::calibnet();
+    let ev = SurrogateEvaluator {
+        net: net.clone(),
+        sparsity: synthesize(&net, 12),
+        base_acc: 85.0,
+    };
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let sync = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(10, 23, 0));
+    let mut acfg = sharded_cfg(10, 23, 0);
+    acfg.engine.async_eval = true;
+    let async_r = search_sharded(&ev, &net, &rm, &devices, &acfg);
+    for (a, b) in sync.per_device.iter().zip(&async_r.per_device) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(
+            objective_bits_of(&a.result),
+            objective_bits_of(&b.result),
+            "{}: async surrogate journal diverged from sync",
+            a.device
+        );
+    }
+    // the async pipeline still dedups cross-shard startup proposals
+    assert_eq!(sync.stats.dedup_evals, async_r.stats.dedup_evals);
+    // and the sync run reports no async activity
+    assert_eq!(sync.stats.async_generations, 0);
+    assert_eq!(sync.stats.overlap_pricings, 0);
+    assert_eq!(sync.stats.ooo_completions, 0);
 }
 
 /// The tentpole acceptance test: a `ShardedEngine` over three devices
