@@ -13,7 +13,7 @@ use hass::dse::{explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::Table;
-use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
+use hass::simulator::{simulate, simulate_scan, stages_from_design, SparsityDynamics};
 use hass::sparsity::SparsityPoint;
 use hass::util::rng::Rng;
 
@@ -54,6 +54,18 @@ fn main() {
         let det = simulate(&net, &cfgs, 4, SparsityDynamics::Deterministic);
         let sto = simulate(&net, &cfgs, 4, SparsityDynamics::Stochastic { seed: case as u64 });
         assert!(!det.deadlocked && !sto.deadlocked, "case {case} deadlocked");
+        // differential gate: the event-driven core must reproduce the scan
+        // reference bit for bit on every randomized case, both dynamics
+        assert_eq!(
+            det,
+            simulate_scan(&net, &cfgs, 4, SparsityDynamics::Deterministic),
+            "case {case}: event-driven sim diverged from the scan reference (det)"
+        );
+        assert_eq!(
+            sto,
+            simulate_scan(&net, &cfgs, 4, SparsityDynamics::Stochastic { seed: case as u64 }),
+            "case {case}: event-driven sim diverged from the scan reference (stochastic)"
+        );
         let det_err = (det.throughput / d.throughput - 1.0) * 100.0;
         let sto_gap = (sto.throughput / d.throughput - 1.0) * 100.0;
         max_det_err = max_det_err.max(det_err.abs());
@@ -78,8 +90,13 @@ fn main() {
     eprintln!(
         "[model_vs_sim] max |deterministic error| = {max_det_err:.2}% -> results/model_vs_sim.csv"
     );
+    // --quick is the CI drift gate: a few percent of pipeline-fill effect
+    // is expected, more means the analytic model and the simulator have
+    // drifted apart.  The full sweep keeps the looser historical bound
+    // (it visits harsher random geometries).
+    let det_gate = if quick { 5.0 } else { 10.0 };
     assert!(
-        max_det_err < 10.0,
-        "analytical model deviates from the simulator by {max_det_err}%"
+        max_det_err < det_gate,
+        "analytical model deviates from the simulator by {max_det_err}% (gate {det_gate}%)"
     );
 }

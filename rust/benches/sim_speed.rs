@@ -1,0 +1,246 @@
+//! Event-driven simulator speed: scan reference vs. event core vs. group
+//! coalescing, plus the wall-clock cost of a fidelity-laddered search.
+//!
+//! Every timed pair is first asserted **bit-identical** (`SimReport`
+//! equality) — the speedups below are never bought with drift.  The
+//! deterministic coalesced core must clear >=10x over the scan on at
+//! least one workload (the tentpole gate).
+//!
+//! Output: `results/sim_speed.csv` + machine-readable
+//! `results/BENCH_sim_speed.json`.
+
+use std::time::Instant;
+
+use hass::arch::{networks, Network};
+use hass::coordinator::{
+    search, EngineConfig, SearchConfig, SimulatedEvaluator, SurrogateEvaluator,
+};
+use hass::dse::{explore, DseConfig};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::metrics::Table;
+use hass::simulator::{simulate_events, simulate_scan, stages_from_design, SparsityDynamics};
+use hass::sparsity::{synthesize, SparsityPoint};
+
+fn median_ms(mut f: impl FnMut(), reps: usize) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    times[times.len() / 2]
+}
+
+struct Workload {
+    name: &'static str,
+    net: Network,
+    s_w: f64,
+    s_a: f64,
+    images: usize,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 3 } else { 5 };
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+
+    let workloads = vec![
+        Workload {
+            name: "calibnet_dense",
+            net: networks::calibnet(),
+            s_w: 0.0,
+            s_a: 0.0,
+            images: if quick { 4 } else { 8 },
+        },
+        Workload {
+            name: "calibnet_s05",
+            net: networks::calibnet(),
+            s_w: 0.5,
+            s_a: 0.4,
+            images: if quick { 8 } else { 16 },
+        },
+        Workload {
+            name: "resnet18_s05",
+            net: networks::resnet18(),
+            s_w: 0.5,
+            s_a: 0.4,
+            images: if quick { 2 } else { 4 },
+        },
+    ];
+
+    let mut t = Table::new(&["workload", "engine", "dynamics", "median_ms", "speedup_vs_scan"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut best_coalesced_speedup: f64 = 0.0;
+
+    for w in &workloads {
+        let n = w.net.compute_layers().len();
+        let points = vec![SparsityPoint { s_w: w.s_w, s_a: w.s_a }; n];
+        let d = explore(&w.net, &points, &rm, &dev, &DseConfig::default());
+        let cfgs = stages_from_design(&w.net, &d.designs, &points, rm.fifo_depth);
+
+        // --- deterministic: scan vs event vs coalesced ------------------
+        let det = SparsityDynamics::Deterministic;
+        let scan = simulate_scan(&w.net, &cfgs, w.images, det);
+        let event = simulate_events(&w.net, &cfgs, w.images, det, false);
+        let coal = simulate_events(&w.net, &cfgs, w.images, det, true);
+        assert_eq!(scan, event, "{}: event core diverged from scan", w.name);
+        assert_eq!(scan, coal, "{}: coalesced core diverged from scan", w.name);
+
+        let scan_ms = median_ms(
+            || {
+                std::hint::black_box(simulate_scan(&w.net, &cfgs, w.images, det));
+            },
+            reps,
+        );
+        let event_ms = median_ms(
+            || {
+                std::hint::black_box(simulate_events(&w.net, &cfgs, w.images, det, false));
+            },
+            reps,
+        );
+        let coal_ms = median_ms(
+            || {
+                std::hint::black_box(simulate_events(&w.net, &cfgs, w.images, det, true));
+            },
+            reps,
+        );
+        let sp_event = scan_ms / event_ms.max(1e-6);
+        let sp_coal = scan_ms / coal_ms.max(1e-6);
+        best_coalesced_speedup = best_coalesced_speedup.max(sp_coal);
+
+        // --- stochastic: scan vs event (coalescing is det-only) ---------
+        let sto = SparsityDynamics::Stochastic { seed: 7 };
+        let scan_sto = simulate_scan(&w.net, &cfgs, w.images, sto);
+        let event_sto = simulate_events(&w.net, &cfgs, w.images, sto, true);
+        assert_eq!(scan_sto, event_sto, "{}: stochastic event core diverged", w.name);
+        let scan_sto_ms = median_ms(
+            || {
+                std::hint::black_box(simulate_scan(&w.net, &cfgs, w.images, sto));
+            },
+            reps,
+        );
+        let event_sto_ms = median_ms(
+            || {
+                std::hint::black_box(simulate_events(&w.net, &cfgs, w.images, sto, true));
+            },
+            reps,
+        );
+        let sp_sto = scan_sto_ms / event_sto_ms.max(1e-6);
+
+        for (engine, dynamics, ms, sp) in [
+            ("scan", "det", scan_ms, 1.0),
+            ("event", "det", event_ms, sp_event),
+            ("coalesced", "det", coal_ms, sp_coal),
+            ("scan", "stochastic", scan_sto_ms, 1.0),
+            ("event", "stochastic", event_sto_ms, sp_sto),
+        ] {
+            t.row(vec![
+                w.name.into(),
+                engine.into(),
+                dynamics.into(),
+                format!("{ms:.3}"),
+                format!("{sp:.2}"),
+            ]);
+        }
+        eprintln!(
+            "[sim_speed] {} ({} images): scan {scan_ms:.2} ms | event {event_ms:.2} ms \
+             ({sp_event:.1}x) | coalesced {coal_ms:.2} ms ({sp_coal:.1}x) | \
+             stochastic event {sp_sto:.1}x",
+            w.name, w.images
+        );
+        json_rows.push(format!(
+            "    {{\"workload\": \"{}\", \"images\": {}, \"scan_ms\": {scan_ms:.3}, \
+             \"event_ms\": {event_ms:.3}, \"coalesced_ms\": {coal_ms:.3}, \
+             \"speedup_event\": {sp_event:.2}, \"speedup_coalesced\": {sp_coal:.2}, \
+             \"scan_stochastic_ms\": {scan_sto_ms:.3}, \
+             \"event_stochastic_ms\": {event_sto_ms:.3}, \
+             \"speedup_stochastic\": {sp_sto:.2}, \"bit_identical\": true}}",
+            w.name, w.images
+        ));
+    }
+
+    // --- fidelity-laddered search wall time -----------------------------
+    let net = networks::calibnet();
+    let iters = if quick { 8 } else { 16 };
+    let cfg = SearchConfig {
+        iterations: iters,
+        seed: 5,
+        dse: DseConfig { max_iters: 1_500, ..Default::default() },
+        engine: EngineConfig { batch: 4, threads: 0, cache: true, quant_bits: 12, async_eval: true },
+        ..Default::default()
+    };
+    let surrogate = || SurrogateEvaluator {
+        net: net.clone(),
+        sparsity: synthesize(&net, 3),
+        base_acc: 76.0,
+    };
+    let t0 = Instant::now();
+    let base = search(&surrogate(), &net, &rm, &dev, &cfg);
+    let base_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ladder = SimulatedEvaluator {
+        inner: Box::new(surrogate()),
+        target: net.clone(),
+        rm: rm.clone(),
+        devices: vec![dev.clone()],
+        dse: cfg.dse.clone(),
+        top_k: 2,
+        sim_images: 3,
+    };
+    let t0 = Instant::now();
+    let lad = search(&ladder, &net, &rm, &dev, &cfg);
+    let lad_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(lad.stats.sim_evals > 0, "laddered search must re-score some records");
+    assert_eq!(base.records.len(), lad.records.len());
+    let overhead = lad_ms / base_ms.max(1e-6);
+    t.row(vec![
+        "laddered_search".into(),
+        "analytic".into(),
+        "-".into(),
+        format!("{base_ms:.1}"),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "laddered_search".into(),
+        "sim_top2".into(),
+        "-".into(),
+        format!("{lad_ms:.1}"),
+        format!("{:.2}", 1.0 / overhead.max(1e-6)),
+    ]);
+    eprintln!(
+        "[sim_speed] laddered search ({iters} iters): analytic {base_ms:.0} ms, \
+         laddered {lad_ms:.0} ms ({overhead:.2}x) | {} sim-scored, {} promotions",
+        lad.stats.sim_evals, lad.stats.sim_promotions
+    );
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    t.write_files(&dir, "sim_speed").expect("write results");
+
+    let pass_10x = best_coalesced_speedup >= 10.0;
+    let mut json = String::from("{\n  \"bench\": \"sim_speed\",\n  \"workloads\": [\n");
+    json.push_str(&json_rows.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str(&format!(
+        "  \"laddered_search\": {{\"iters\": {iters}, \"analytic_ms\": {base_ms:.1}, \
+         \"laddered_ms\": {lad_ms:.1}, \"overhead_x\": {overhead:.2}, \
+         \"sim_evals\": {}, \"sim_promotions\": {}}},\n",
+        lad.stats.sim_evals, lad.stats.sim_promotions
+    ));
+    json.push_str(&format!(
+        "  \"best_coalesced_speedup\": {best_coalesced_speedup:.2},\n  \"pass_10x\": {pass_10x}\n}}\n"
+    ));
+    let path = dir.join("BENCH_sim_speed.json");
+    std::fs::write(&path, json).expect("write BENCH_sim_speed.json");
+    eprintln!(
+        "[sim_speed] best coalesced speedup {best_coalesced_speedup:.1}x -> {}",
+        path.display()
+    );
+    assert!(
+        pass_10x,
+        "coalesced event core must be >=10x over the scan on some workload \
+         (best {best_coalesced_speedup:.1}x)"
+    );
+}

@@ -23,6 +23,12 @@
 //!   geometries we cannot execute (ResNet-18/50, MobileNet): synthesized
 //!   transfer curves + a calibrated accuracy-response surrogate.
 //!
+//! Either backend can be wrapped in the re-exported
+//! [`SimulatedEvaluator`] (the fidelity ladder, `hass search --evaluator
+//! sim`): the swarm stays analytically priced, each generation's
+//! analytic top-k per device is re-scored by the event-driven cycle
+//! simulator.  See [`crate::engine::evaluator`].
+//!
 //! `mode: SearchMode::SoftwareOnly` reproduces the Fig. 5 baseline: the
 //! objective sees only accuracy + sparsity, hardware metrics are still
 //! *recorded* (to plot efficiency) but do not guide the search.
@@ -41,7 +47,7 @@ pub use crate::engine::{
     CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
     EngineStats, EvalCompletion, EvalPoint, EvalRequest, ParetoPoint, SearchConfig,
     SearchMode, SearchRecord, SearchResult, ShardedEngine, ShardedSearchResult,
-    ShardedStats, SnapshotStats,
+    ShardedStats, SimScore, SimulatedEvaluator, SnapshotStats,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -63,7 +69,7 @@ impl CandidateEvaluator for SurrogateEvaluator {
         let natural = self.sparsity.natural_points();
         let accuracy =
             pruning::surrogate_accuracy(self.base_acc, &self.net, &points, &natural);
-        EvalPoint { accuracy, points }
+        EvalPoint { accuracy, points, sim: Vec::new() }
     }
 
     fn base_accuracy(&self) -> f64 {
@@ -135,7 +141,7 @@ impl CandidateEvaluator for MeasuredEvaluator {
                 SparsityPoint { s_w, s_a: s_a_eff }
             })
             .collect();
-        EvalPoint { accuracy: out.accuracy * 100.0, points }
+        EvalPoint { accuracy: out.accuracy * 100.0, points, sim: Vec::new() }
     }
 
     fn base_accuracy(&self) -> f64 {

@@ -36,20 +36,62 @@
 //! (a device pool, a remote service) override it and complete out of
 //! order; the engine does not care.
 //!
+//! # The fidelity ladder ([`SimulatedEvaluator`])
+//!
+//! The analytic DSE model (Eq. 1–3) prices a candidate in microseconds
+//! but abstracts away dynamics — FIFO backpressure, pipeline fill — that
+//! the cycle-level simulator ([`crate::simulator`]) captures exactly.
+//! [`SimulatedEvaluator`] wraps any backend and climbs that ladder per
+//! generation: every candidate is measured and priced analytically, then
+//! the analytic top-k per device is re-scored with the event-driven
+//! simulator, attaching one [`SimScore`] per device to the promoted
+//! candidates' [`EvalPoint`]s.  The scoring side
+//! (`Engine::score_candidate`) applies a matching non-deadlocked score in
+//! place of the analytic throughput, so the search objective sees
+//! simulator fidelity exactly where it matters: on the frontier the
+//! optimizer is about to exploit.
+//!
 //! [`eval`]: CandidateEvaluator::eval
 //! [`eval_async`]: CandidateEvaluator::eval_async
 //! [`Sender`]: std::sync::mpsc::Sender
 
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{self, Sender};
 
+use crate::arch::Network;
+use crate::dse::{explore, DseConfig, NetworkDesign};
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
 use crate::pruning::PruningPlan;
+use crate::simulator::{simulate, stages_from_design, SparsityDynamics};
 use crate::sparsity::{NetworkSparsity, SparsityPoint};
+
+use super::cache::device_fingerprint;
+use super::shard::run_slots;
+
+/// Cycle-level re-score of one candidate on one device, attached by the
+/// fidelity ladder ([`SimulatedEvaluator`]) to a promoted candidate's
+/// [`EvalPoint`].
+#[derive(Clone, Copy, Debug)]
+pub struct SimScore {
+    /// design-cache fingerprint of the simulated device (see
+    /// `engine::cache`); the scoring side applies a score only on the
+    /// shard whose device matches
+    pub device_fp: u64,
+    /// simulated throughput on that device, images/second
+    pub images_per_sec: f64,
+    /// the simulated pipeline wedged — the score is meaningless and the
+    /// scoring side keeps the analytic number
+    pub deadlocked: bool,
+}
 
 /// Accuracy + reached operating points for one pruning plan.
 #[derive(Clone, Debug)]
 pub struct EvalPoint {
     pub accuracy: f64,
     pub points: Vec<SparsityPoint>,
+    /// cycle-level re-scores attached by a laddered evaluator (one per
+    /// simulated device); empty for plain backends
+    pub sim: Vec<SimScore>,
 }
 
 /// One measurement request of an asynchronous generation: a decoded plan
@@ -106,6 +148,186 @@ pub trait CandidateEvaluator: Sync {
     }
 }
 
+/// Fidelity-laddered evaluator: analytic pricing for the swarm, the
+/// cycle-level simulator for the frontier.
+///
+/// Wraps any [`CandidateEvaluator`] (`inner` measures accuracy and
+/// operating points as usual).  Per generation, [`eval_async`] climbs the
+/// ladder:
+///
+/// 1. **measure** every candidate through `inner`;
+/// 2. **rank** every `(candidate, device)` pair with the analytic DSE
+///    model (`dse::explore`, no cache — the evaluator stays pure and
+///    self-contained);
+/// 3. **promote** the union over devices of the analytic top-`top_k`
+///    candidates by images/second, and re-score each promoted
+///    `(candidate, device)` pair with the event-driven simulator
+///    ([`crate::simulator::simulate`], `Deterministic` dynamics,
+///    `sim_images` images), attaching one [`SimScore`] per device.
+///
+/// Unpromoted candidates are released the moment ranking finishes, so
+/// the engine prices them while the promoted simulations are still
+/// running.  Everything on the ladder is deterministic (pure pricing, a
+/// deterministic simulator, slot-tiebroken ranking), so results are
+/// bit-identical for any thread count — the engine's determinism
+/// contract holds.
+///
+/// The ladder ranks *within a generation*, which a lone
+/// [`eval`](CandidateEvaluator::eval) cannot see: `eval` is plain
+/// delegation to `inner`, and the engine must run this evaluator through
+/// the async pipeline (`EngineConfig::async_eval`; the `hass search
+/// --evaluator sim` CLI enforces it) for the ladder to engage.
+pub struct SimulatedEvaluator {
+    /// measurement backend producing accuracy + operating points
+    pub inner: Box<dyn CandidateEvaluator>,
+    /// target geometry the ladder prices and simulates
+    pub target: Network,
+    pub rm: ResourceModel,
+    /// devices to rank on; every promoted candidate gets one [`SimScore`]
+    /// per device
+    pub devices: Vec<DeviceBudget>,
+    /// DSE budget of the ladder's analytic ranking rung
+    pub dse: DseConfig,
+    /// candidates promoted to the simulator per generation, per device
+    pub top_k: usize,
+    /// images each promoted simulation runs (amortizes pipeline fill)
+    pub sim_images: usize,
+}
+
+/// Worker threads for the ladder's internal pools — the evaluator runs
+/// on the engine's submitter thread and owns its own scheduling.
+fn ladder_threads(work: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .clamp(1, work.max(1))
+}
+
+impl CandidateEvaluator for SimulatedEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        self.inner.sparsity_model()
+    }
+
+    /// Plain delegation: a lone evaluation has no generation to rank
+    /// within, so the sync path degrades to the inner backend.
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        self.inner.eval(plan)
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.inner.base_accuracy()
+    }
+
+    fn eval_async(&self, requests: Vec<EvalRequest>, completions: Sender<EvalCompletion>) {
+        let n = requests.len();
+        if n == 0 {
+            return;
+        }
+        // rung 0: measure the whole generation through the inner backend
+        let (tx, rx) = mpsc::channel();
+        self.inner.eval_async(requests, tx);
+        let mut results: Vec<Option<EvalPoint>> = Vec::new();
+        results.resize_with(n, || None);
+        for c in rx {
+            assert!(
+                c.slot < n && results[c.slot].is_none(),
+                "inner evaluator violated the eval_async contract on slot {}",
+                c.slot
+            );
+            results[c.slot] = Some(c.result);
+        }
+        assert!(
+            results.iter().all(|r| r.is_some()),
+            "inner evaluator completed fewer requests than were submitted"
+        );
+        let n_dev = self.devices.len();
+        if n_dev == 0 {
+            for (slot, r) in results.into_iter().enumerate() {
+                let result = r.expect("checked above");
+                if completions.send(EvalCompletion { slot, result }).is_err() {
+                    return;
+                }
+            }
+            return;
+        }
+
+        // rung 1: price every (candidate, device) pair analytically
+        let mut designs: Vec<Option<NetworkDesign>> = Vec::new();
+        designs.resize_with(n * n_dev, || None);
+        run_slots(&mut designs, ladder_threads(n * n_dev), |slot, k| {
+            let (s, d) = (k / n_dev, k % n_dev);
+            let points = &results[s].as_ref().expect("checked above").points;
+            *slot =
+                Some(explore(&self.target, points, &self.rm, &self.devices[d], &self.dse));
+        });
+        let designs: Vec<NetworkDesign> =
+            designs.into_iter().map(|o| o.expect("pricing slot filled")).collect();
+
+        // promote the union over devices of the analytic top-k
+        let k_top = self.top_k.max(1).min(n);
+        let mut promoted = vec![false; n];
+        for d in 0..n_dev {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                let ia = designs[a * n_dev + d].images_per_sec(&self.devices[d]);
+                let ib = designs[b * n_dev + d].images_per_sec(&self.devices[d]);
+                ib.total_cmp(&ia).then(a.cmp(&b)) // ties: earlier slot wins
+            });
+            for &s in order.iter().take(k_top) {
+                promoted[s] = true;
+            }
+        }
+
+        // release the analytic-only candidates now — the engine prices
+        // them while the promoted simulations run
+        for s in 0..n {
+            if !promoted[s] {
+                let result = results[s].take().expect("checked above");
+                if completions.send(EvalCompletion { slot: s, result }).is_err() {
+                    return;
+                }
+            }
+        }
+
+        // rung 2: cycle-level simulation of every promoted (candidate,
+        // device) pair, concurrently
+        let idx: Vec<usize> = (0..n).filter(|&s| promoted[s]).collect();
+        let mut scores: Vec<Option<SimScore>> = Vec::new();
+        scores.resize_with(idx.len() * n_dev, || None);
+        run_slots(&mut scores, ladder_threads(idx.len() * n_dev), |slot, k| {
+            let (s, d) = (idx[k / n_dev], k % n_dev);
+            let dev = &self.devices[d];
+            let points = &results[s].as_ref().expect("promoted result present").points;
+            let cfgs = stages_from_design(
+                &self.target,
+                &designs[s * n_dev + d].designs,
+                points,
+                self.rm.fifo_depth,
+            );
+            let rep = simulate(
+                &self.target,
+                &cfgs,
+                self.sim_images.max(1),
+                SparsityDynamics::Deterministic,
+            );
+            *slot = Some(SimScore {
+                device_fp: device_fingerprint(dev),
+                images_per_sec: rep.throughput * dev.freq_hz(),
+                deadlocked: rep.deadlocked,
+            });
+        });
+        for (pi, &s) in idx.iter().enumerate() {
+            let mut result = results[s].take().expect("promoted result present");
+            result.sim = (0..n_dev)
+                .map(|d| scores[pi * n_dev + d].expect("sim slot filled"))
+                .collect();
+            if completions.send(EvalCompletion { slot: s, result }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,7 +348,7 @@ mod tests {
         fn eval(&self, plan: &PruningPlan) -> EvalPoint {
             let points = plan.points(&self.sparsity);
             let s: f64 = points.iter().map(|p| p.s_w).sum();
-            EvalPoint { accuracy: 90.0 - s, points }
+            EvalPoint { accuracy: 90.0 - s, points, sim: Vec::new() }
         }
 
         fn base_accuracy(&self) -> f64 {
@@ -179,5 +401,100 @@ mod tests {
         drop(rx);
         // must return quietly instead of panicking on the send error
         ev.eval_async(requests, tx);
+    }
+
+    fn laddered(seed: u64, top_k: usize) -> SimulatedEvaluator {
+        let net = networks::calibnet();
+        SimulatedEvaluator {
+            inner: Box::new(Plain { sparsity: synthesize(&net, seed) }),
+            target: net,
+            rm: ResourceModel::default(),
+            devices: vec![DeviceBudget::u250()],
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            top_k,
+            sim_images: 2,
+        }
+    }
+
+    fn ladder_requests(ev: &SimulatedEvaluator, sparsities: &[f64]) -> Vec<EvalRequest> {
+        let n = ev.sparsity_model().layers.len();
+        sparsities
+            .iter()
+            .enumerate()
+            .map(|(slot, &s)| EvalRequest {
+                slot,
+                plan: PruningPlan::from_unit_point(&vec![s; 2 * n], ev.sparsity_model()),
+            })
+            .collect()
+    }
+
+    fn run_ladder(ev: &SimulatedEvaluator, sparsities: &[f64]) -> Vec<EvalPoint> {
+        let reqs = ladder_requests(ev, sparsities);
+        let n = reqs.len();
+        let (tx, rx) = mpsc::channel();
+        ev.eval_async(reqs, tx);
+        let mut out: Vec<Option<EvalPoint>> = Vec::new();
+        out.resize_with(n, || None);
+        for c in rx {
+            out[c.slot] = Some(c.result);
+        }
+        out.into_iter().map(|o| o.expect("every slot completed")).collect()
+    }
+
+    #[test]
+    fn ladder_promotes_exactly_top_k_and_keeps_inner_results() {
+        let ev = laddered(21, 2);
+        let sparsities = [0.0, 0.2, 0.45, 0.7];
+        let results = run_ladder(&ev, &sparsities);
+        let fp = device_fingerprint(&ev.devices[0]);
+        let promoted = results.iter().filter(|r| !r.sim.is_empty()).count();
+        assert_eq!(promoted, 2, "top-2 of one device must be simulated");
+        for r in &results {
+            for s in &r.sim {
+                assert_eq!(s.device_fp, fp);
+                assert!(s.deadlocked || s.images_per_sec > 0.0);
+            }
+        }
+        // the measurement itself is untouched: bit-identical to the inner
+        // backend's lone eval
+        let reqs = ladder_requests(&ev, &sparsities);
+        for (r, req) in results.iter().zip(&reqs) {
+            let direct = ev.inner.eval(&req.plan);
+            assert_eq!(r.accuracy.to_bits(), direct.accuracy.to_bits());
+            assert_eq!(r.points.len(), direct.points.len());
+        }
+    }
+
+    #[test]
+    fn ladder_is_deterministic() {
+        let ev = laddered(22, 2);
+        let sparsities = [0.1, 0.3, 0.55];
+        let a = run_ladder(&ev, &sparsities);
+        let b = run_ladder(&ev, &sparsities);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sim.len(), y.sim.len());
+            for (sx, sy) in x.sim.iter().zip(&y.sim) {
+                assert_eq!(sx.device_fp, sy.device_fp);
+                assert_eq!(sx.images_per_sec.to_bits(), sy.images_per_sec.to_bits());
+                assert_eq!(sx.deadlocked, sy.deadlocked);
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_promotes_the_analytically_fastest_candidates() {
+        // sparser candidates price faster on the analytic model, so with
+        // top_k = 1 the single promoted candidate must be the sparsest
+        let ev = laddered(23, 1);
+        let results = run_ladder(&ev, &[0.0, 0.35, 0.65]);
+        assert_eq!(
+            results.iter().filter(|r| !r.sim.is_empty()).count(),
+            1,
+            "exactly one candidate promoted at top_k = 1"
+        );
+        assert!(
+            !results[2].sim.is_empty(),
+            "the sparsest (analytically fastest) candidate must be the promoted one"
+        );
     }
 }

@@ -47,6 +47,16 @@
 //!   an execution knob like `threads`: it can never change results
 //!   ([`EngineStats::overlap_pricings`] / [`EngineStats::ooo_completions`]
 //!   count the overlap it actually bought).
+//! * **Fidelity ladder** — [`SimulatedEvaluator`] (see [`evaluator`])
+//!   wraps any backend: the swarm is priced analytically, and each
+//!   generation's analytic top-k per device is re-scored with the
+//!   event-driven cycle-level simulator ([`crate::simulator`]).  A
+//!   matching non-deadlocked [`SimScore`] replaces the analytic
+//!   throughput/efficiency in [`Engine::score_candidate`], so Eq. 6 sees
+//!   simulator fidelity exactly on the frontier the optimizer exploits
+//!   ([`EngineStats::sim_evals`] / [`EngineStats::sim_promotions`] /
+//!   [`EngineStats::sim_disagreement`] account for it).  Requires the
+//!   async pipeline — the ladder ranks within a generation.
 //! * **Cross-shard measurement dedup** — each generation measures every
 //!   *distinct* proposal once and shares the result across shards.
 //!   During TPE random startup (and for warm-start anchors) the
@@ -106,7 +116,10 @@ pub use cache::{
     cache_file_from_args, quantize_points, save_cache_file, DesignCache, DeviceCacheHandle,
     FrontierStore, SnapshotStats,
 };
-pub use evaluator::{CandidateEvaluator, EvalCompletion, EvalPoint, EvalRequest};
+pub use evaluator::{
+    CandidateEvaluator, EvalCompletion, EvalPoint, EvalRequest, SimScore,
+    SimulatedEvaluator,
+};
 pub use shard::{
     DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,
 };
@@ -222,11 +235,19 @@ pub struct SearchRecord {
     pub accuracy: f64,
     pub avg_sparsity: f64,
     pub op_density: f64,
+    /// throughput the objective saw — analytic, or the cycle-level
+    /// simulator's when the fidelity ladder re-scored this record
     pub images_per_sec: f64,
+    /// the analytic (DSE-model) throughput; equals `images_per_sec`
+    /// unless `simulated`
+    pub analytic_images_per_sec: f64,
     pub dsp: u64,
     /// images / cycle / DSP (the paper's efficiency metric)
     pub efficiency: f64,
     pub objective: f64,
+    /// this record's throughput/efficiency come from the cycle-level
+    /// simulator (fidelity ladder), not the analytic model
+    pub simulated: bool,
     pub plan: PruningPlan,
 }
 
@@ -270,6 +291,16 @@ pub struct EngineStats {
     /// later-submitted request had already completed (the evaluator
     /// finished work out of submission order).  Timing-dependent.
     pub ooo_completions: u64,
+    /// records of this shard re-scored by the cycle-level simulator
+    /// (fidelity ladder; 0 for plain evaluators)
+    pub sim_evals: usize,
+    /// simulator-scored records that set a new running-best objective
+    /// when they landed — promotions the ladder's fidelity actually won
+    pub sim_promotions: usize,
+    /// mean relative |simulated − analytic| images/second deviation over
+    /// this shard's simulator-scored records (0.0 when none) — the
+    /// analytic-model drift signal the ladder measures as it runs
+    pub sim_disagreement: f64,
 }
 
 impl EngineStats {
@@ -346,6 +377,10 @@ pub(super) struct EvalCtx<'a> {
     pub(super) cache: Option<(&'a DesignCache, &'a DeviceCacheHandle)>,
     pub(super) quant_bits: u32,
     pub(super) dense_ips: f64,
+    /// `engine::cache` fingerprint of this shard's device, matched
+    /// against [`SimScore::device_fp`] when a laddered evaluator attached
+    /// cycle-level re-scores
+    pub(super) dev_fp: u64,
     pub(super) base_acc: f64,
     pub(super) mode: SearchMode,
     pub(super) lambda: [f64; 3],
@@ -438,7 +473,24 @@ impl<'a> Engine<'a> {
             }),
             None => explore(self.target, &pts, self.rm, self.dev, ctx.dse),
         };
-        let ips = design.images_per_sec(self.dev);
+        let analytic_ips = design.images_per_sec(self.dev);
+        // fidelity ladder: a laddered evaluator may have attached a
+        // cycle-level re-score for this shard's device; a deadlocked
+        // simulation keeps the analytic number
+        let sim = meas
+            .ev
+            .sim
+            .iter()
+            .find(|s| s.device_fp == ctx.dev_fp && !s.deadlocked);
+        let (ips, efficiency, simulated) = match sim {
+            Some(s) => {
+                let dsp = design.resources.dsp.max(1) as f64;
+                // the simulated images/cycle/DSP counterpart of
+                // `design.efficiency()`
+                (s.images_per_sec, s.images_per_sec / (self.dev.freq_hz() * dsp), true)
+            }
+            None => (analytic_ips, design.efficiency(), false),
+        };
 
         let f_acc = meas.ev.accuracy / ctx.base_acc; // ∈ [0, 1]
         let f_spa = meas.metrics.avg_sparsity; // ∈ [0, 1)
@@ -461,9 +513,11 @@ impl<'a> Engine<'a> {
             avg_sparsity: meas.metrics.avg_sparsity,
             op_density: meas.metrics.op_density,
             images_per_sec: ips,
+            analytic_images_per_sec: analytic_ips,
             dsp: design.resources.dsp,
-            efficiency: design.efficiency(),
+            efficiency,
             objective,
+            simulated,
             plan: meas.plan.clone(),
         }
     }

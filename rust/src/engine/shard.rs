@@ -110,6 +110,12 @@ pub struct ShardedStats {
     /// measurement completions that arrived out of submission order,
     /// summed over owning shards (timing-dependent stat)
     pub ooo_completions: u64,
+    /// records re-scored by the cycle-level simulator (fidelity ladder),
+    /// summed over shards
+    pub sim_evals: usize,
+    /// simulator-scored records that set a new running-best objective,
+    /// summed over shards
+    pub sim_promotions: usize,
 }
 
 /// Output of [`ShardedEngine::search`]: per-device results (standalone
@@ -408,6 +414,7 @@ impl<'a> ShardedEngine<'a> {
                         },
                         quant_bits: cfg.engine.quant_bits,
                         dense_ips: s.dense_ips,
+                        dev_fp: device_fingerprint(s.engine.dev),
                         base_acc,
                         mode: cfg.mode,
                         lambda: cfg.lambda,
@@ -452,6 +459,7 @@ impl<'a> ShardedEngine<'a> {
         let (mut total_fhits, mut total_fmisses) = (0u64, 0u64);
         let mut total_dedup = 0u64;
         let (mut total_overlap, mut total_ooo) = (0u64, 0u64);
+        let (mut total_sim_evals, mut total_sim_promotions) = (0usize, 0usize);
         let async_generations = if cfg.engine.async_eval { generations } else { 0 };
         for s in shards {
             let best = s
@@ -472,6 +480,29 @@ impl<'a> ShardedEngine<'a> {
             total_dedup += s.dedup;
             total_overlap += s.overlap;
             total_ooo += s.ooo;
+            // fidelity-ladder accounting, derived from the journal itself
+            // in candidate order — thread-count invariant by construction
+            let mut sim_evals = 0usize;
+            let mut sim_promotions = 0usize;
+            let mut dis_sum = 0.0f64;
+            let mut run_best = f64::NEG_INFINITY;
+            for r in &s.records {
+                if r.simulated {
+                    sim_evals += 1;
+                    if r.objective > run_best {
+                        sim_promotions += 1;
+                    }
+                    if r.analytic_images_per_sec > 0.0 {
+                        dis_sum += (r.images_per_sec - r.analytic_images_per_sec).abs()
+                            / r.analytic_images_per_sec;
+                    }
+                }
+                run_best = run_best.max(r.objective);
+            }
+            let sim_disagreement =
+                if sim_evals > 0 { dis_sum / sim_evals as f64 } else { 0.0 };
+            total_sim_evals += sim_evals;
+            total_sim_promotions += sim_promotions;
             per_device.push(DeviceSearchResult {
                 device: s.engine.dev.name.clone(),
                 result: SearchResult {
@@ -490,6 +521,9 @@ impl<'a> ShardedEngine<'a> {
                         async_generations: s.async_gens,
                         overlap_pricings: s.overlap,
                         ooo_completions: s.ooo,
+                        sim_evals,
+                        sim_promotions,
+                        sim_disagreement,
                     },
                     records: s.records,
                 },
@@ -512,6 +546,8 @@ impl<'a> ShardedEngine<'a> {
                 async_generations,
                 overlap_pricings: total_overlap,
                 ooo_completions: total_ooo,
+                sim_evals: total_sim_evals,
+                sim_promotions: total_sim_promotions,
             },
             pareto,
             per_device,
@@ -780,8 +816,9 @@ fn run_generation_async(
 
 /// Fill every slot via `fill(slot, index)` on up to `threads` scoped
 /// workers, each owning a contiguous index-addressed chunk — scheduling
-/// can never affect where a result lands.
-fn run_slots<T: Send>(
+/// can never affect where a result lands.  (Also the worker pool of the
+/// fidelity ladder's pricing/simulation rungs, see `evaluator`.)
+pub(super) fn run_slots<T: Send>(
     slots: &mut [Option<T>],
     threads: usize,
     fill: impl Fn(&mut Option<T>, usize) + Sync,

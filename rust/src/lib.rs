@@ -56,6 +56,20 @@
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
 //!
+//! ## The event-driven simulator and the fidelity ladder (`simulator`)
+//!
+//! The cycle-level dataflow simulator runs on a discrete-event core — a
+//! completion-event heap plus a ready set, with closed-form **group
+//! coalescing** under deterministic dynamics — that is differential-tested
+//! bit-identical to the exhaustive scan reference (kept as
+//! [`simulator::simulate_scan`]) and an order of magnitude faster on
+//! paper geometries (`benches/sim_speed.rs`).  That speed is what makes
+//! [`engine::SimulatedEvaluator`] affordable: a fidelity **ladder** that
+//! prices every candidate analytically, then re-scores only each
+//! generation's analytic top-k per device with the simulator, overriding
+//! their throughput in the journal ([`engine::SearchRecord::simulated`],
+//! `analytic_images_per_sec`) — `hass search --evaluator sim`.
+//!
 //! ## The frontier pricing kernel (`dse::frontier`)
 //!
 //! Every consumer of [`dse::explore`] — the engine, the sharded search,
@@ -82,7 +96,7 @@
 //! | [`optim`]     | TPE and simulated annealing |
 //! | [`engine`]    | batched/parallel/sharded search + pricing caches |
 //! | [`coordinator`] | production evaluators + stable search entry points |
-//! | [`simulator`] | cycle-level dataflow simulator (model validation) |
+//! | [`simulator`] | event-driven cycle-level dataflow simulator (model validation, fidelity ladder) |
 //! | [`baselines`] | dense / PASS-like / HPIPE-like / non-dataflow designs |
 //! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
 //! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |

@@ -15,7 +15,8 @@ use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
     search_sharded_with_cache, search_with_cache, CandidateEvaluator, DesignCache,
-    EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SurrogateEvaluator,
+    EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SimulatedEvaluator,
+    SurrogateEvaluator,
 };
 use hass::dse::{self, explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
@@ -90,7 +91,14 @@ fn cmd_search(args: &[String]) -> i32 {
         .opt("iters", "96", "TPE iterations")
         .opt("seed", "0", "search seed")
         .opt("mode", "hw", "objective: hw (Eq. 6) | sw (accuracy+sparsity)")
-        .opt("evaluator", "auto", "auto | measured (PJRT) | surrogate")
+        .opt(
+            "evaluator",
+            "auto",
+            "auto | measured (PJRT) | surrogate | sim (fidelity ladder: analytic \
+             pricing + cycle-level re-score of the per-generation top-k)",
+        )
+        .opt("sim-top-k", "4", "candidates per generation per device the sim re-scores")
+        .opt("sim-images", "3", "images per promoted cycle-level simulation")
         .opt("batches", "4", "calibration batches per measured evaluation")
         .opt("batch", "1", "candidates per TPE generation, evaluated in parallel")
         .opt("threads", "0", "evaluation worker threads (0 = auto)")
@@ -117,18 +125,33 @@ fn cmd_search(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // resolve the full device list up front: the sharded branch needs it
+    // anyway, and the fidelity ladder (--evaluator sim) simulates on the
+    // same devices the search prices
+    let all_devices: Vec<DeviceBudget> = if devices.is_empty() {
+        vec![device_or_die(p.get("device"))]
+    } else {
+        devices
+    };
     let rm = ResourceModel::default();
     let mode = match p.get("mode") {
         "sw" => SearchMode::SoftwareOnly,
         _ => SearchMode::HardwareAware,
     };
-    let engine = EngineConfig {
+    let want_sim = p.get("evaluator") == "sim";
+    let mut engine = EngineConfig {
         batch: p.get_usize("batch").max(1),
         threads: p.get_usize("threads"),
         cache: !p.get_bool("no-cache"),
         quant_bits: p.get_usize("quant") as u32,
         async_eval: p.get_bool("async"),
     };
+    if want_sim && !engine.async_eval {
+        // the ladder ranks within a generation, which only the async
+        // completion-queue pipeline routes through eval_async
+        println!("[search] --evaluator sim ranks per generation; enabling the async pipeline");
+        engine.async_eval = true;
+    }
     let cfg = SearchConfig {
         iterations: p.get_usize("iters"),
         seed: p.get_u64("seed"),
@@ -139,6 +162,7 @@ fn cmd_search(args: &[String]) -> i32 {
     let want_measured = match p.get("evaluator") {
         "measured" => true,
         "surrogate" => false,
+        // "sim" wraps whichever backend "auto" would pick
         _ => net.name == "calibnet" && hass::runtime::available(&hass::runtime::default_dir()),
     };
     let ev: Box<dyn CandidateEvaluator> = if want_measured {
@@ -167,6 +191,28 @@ fn cmd_search(args: &[String]) -> i32 {
             base_acc: 76.0,
         })
     };
+    let ev: Box<dyn CandidateEvaluator> = if want_sim {
+        let top_k = p.get_usize("sim-top-k").max(1);
+        let sim_images = p.get_usize("sim-images").max(1);
+        println!(
+            "[search] fidelity ladder: analytic top-{} per generation re-scored \
+             cycle-level on {} device(s), {} image(s) per sim",
+            top_k,
+            all_devices.len(),
+            sim_images
+        );
+        Box::new(SimulatedEvaluator {
+            inner: ev,
+            target: net.clone(),
+            rm: rm.clone(),
+            devices: all_devices.clone(),
+            dse: cfg.dse.clone(),
+            top_k,
+            sim_images,
+        })
+    } else {
+        ev
+    };
     let journal = p.get("journal");
     // --no-cache turns pricing memoization off entirely, so a cache file
     // would be loaded-but-never-consulted and saved back empty — ignore
@@ -180,8 +226,9 @@ fn cmd_search(args: &[String]) -> i32 {
     let cache = load_cache(cache_file);
 
     // --- sharded multi-device search (--devices a,b,...) --------------
-    if devices.len() >= 2 {
-        let result = search_sharded_with_cache(ev.as_ref(), &net, &rm, &devices, &cfg, &cache);
+    if all_devices.len() >= 2 {
+        let result =
+            search_sharded_with_cache(ev.as_ref(), &net, &rm, &all_devices, &cfg, &cache);
         let s = &result.stats;
         println!(
             "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
@@ -204,6 +251,13 @@ fn cmd_search(args: &[String]) -> i32 {
                 "[search] async pipeline: {} generations | {} pricings overlapped \
                  in-flight measurements | {} completions out of order",
                 s.async_generations, s.overlap_pricings, s.ooo_completions
+            );
+        }
+        if s.sim_evals > 0 {
+            println!(
+                "[search] fidelity ladder: {} records simulator-scored | {} set a new \
+                 running best",
+                s.sim_evals, s.sim_promotions
             );
         }
         print!("{}", result.summary_table().to_markdown());
@@ -229,10 +283,7 @@ fn cmd_search(args: &[String]) -> i32 {
     }
 
     // --- single-device search (--device, or a 1-entry --devices) ------
-    let dev = devices
-        .into_iter()
-        .next()
-        .unwrap_or_else(|| device_or_die(p.get("device")));
+    let dev = all_devices.into_iter().next().expect("resolved above");
     let result = search_with_cache(ev.as_ref(), &net, &rm, &dev, &cfg, &cache);
     let b = result.best_record();
     println!(
@@ -257,6 +308,15 @@ fn cmd_search(args: &[String]) -> i32 {
             "[search] async pipeline: {} generations | {} pricings overlapped \
              in-flight measurements | {} completions out of order",
             s.async_generations, s.overlap_pricings, s.ooo_completions
+        );
+    }
+    if s.sim_evals > 0 {
+        println!(
+            "[search] fidelity ladder: {} records simulator-scored | {} set a new \
+             running best | {:.1}% mean analytic drift",
+            s.sim_evals,
+            s.sim_promotions,
+            s.sim_disagreement * 100.0
         );
     }
     if !journal.is_empty() {

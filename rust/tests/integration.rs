@@ -12,7 +12,7 @@ use hass::baselines;
 use hass::coordinator::{
     search, search_sharded, search_sharded_with_cache, CandidateEvaluator, DesignCache,
     Engine, EngineConfig, EvalCompletion, EvalPoint, EvalRequest, MeasuredEvaluator,
-    SearchConfig, SearchMode, SurrogateEvaluator,
+    SearchConfig, SearchMode, SimulatedEvaluator, SurrogateEvaluator,
 };
 use hass::dse::{explore, explore_scan, network_throughput, DseConfig};
 use hass::engine::quantize_points;
@@ -235,7 +235,7 @@ impl CandidateEvaluator for StubEvaluator {
         let points = plan.points(&self.sparsity);
         let s = points.iter().map(|p| (p.s_w + p.s_a) * 0.5).sum::<f64>()
             / points.len() as f64;
-        EvalPoint { accuracy: 92.0 - 30.0 * s * s, points }
+        EvalPoint { accuracy: 92.0 - 30.0 * s * s, points, sim: Vec::new() }
     }
 
     fn base_accuracy(&self) -> f64 {
@@ -629,5 +629,125 @@ fn dse_design_survives_simulator_stress() {
             "seed {seed}: stochastic collapse {} vs {model}",
             rep.throughput
         );
+    }
+}
+
+// ===== fidelity-laddered search =========================================
+
+/// Tentpole acceptance: a fidelity-laddered search (`SimulatedEvaluator`
+/// wrapping the stub backend) journals bit-identically across worker
+/// thread counts, actually simulator-scores some records, and leaves the
+/// unpromoted majority on their analytic score.
+#[test]
+fn sim_evaluator_laddered_search_is_thread_invariant() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let run = |threads: usize| {
+        let ev = SimulatedEvaluator {
+            inner: Box::new(StubEvaluator::calibnet(61)),
+            target: net.clone(),
+            rm: rm.clone(),
+            devices: vec![dev.clone()],
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            top_k: 2,
+            sim_images: 2,
+        };
+        let mut cfg = sharded_cfg(12, 31, threads);
+        cfg.engine.async_eval = true; // the ladder ranks per generation
+        search(&ev, &net, &rm, &dev, &cfg)
+    };
+    let a = run(1);
+    let b = run(0);
+    assert!(a.stats.sim_evals > 0, "ladder never reached the simulator");
+    assert!(
+        a.stats.sim_evals < a.records.len(),
+        "ladder must be selective: {} of {} records simulated",
+        a.stats.sim_evals,
+        a.records.len()
+    );
+    assert_eq!(a.stats.sim_evals, b.stats.sim_evals);
+    assert_eq!(a.stats.sim_promotions, b.stats.sim_promotions);
+    assert_eq!(
+        a.stats.sim_disagreement.to_bits(),
+        b.stats.sim_disagreement.to_bits()
+    );
+    assert_eq!(
+        objective_bits_of(&a),
+        objective_bits_of(&b),
+        "laddered journal diverged across thread counts"
+    );
+    assert_eq!(a.best, b.best);
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.simulated, y.simulated, "iter {}", x.iter);
+        assert_eq!(x.images_per_sec.to_bits(), y.images_per_sec.to_bits());
+        assert_eq!(
+            x.analytic_images_per_sec.to_bits(),
+            y.analytic_images_per_sec.to_bits()
+        );
+        if !x.simulated {
+            assert_eq!(
+                x.images_per_sec.to_bits(),
+                x.analytic_images_per_sec.to_bits(),
+                "iter {}: unpromoted record drifted off its analytic score",
+                x.iter
+            );
+        }
+    }
+}
+
+/// The sharded laddered search: one `SimulatedEvaluator` spanning two
+/// device shards.  Promotion is the union of each device's analytic
+/// top-k and every promoted candidate is simulated on *every* device, so
+/// each shard scores sim-overrides off its own device's report.  The
+/// invariant here is thread-count invariance (standalone equivalence does
+/// not hold for the ladder — a lone device would promote a different set).
+#[test]
+fn sharded_laddered_search_is_thread_invariant_and_device_scoped() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let run = |threads: usize| {
+        let ev = SimulatedEvaluator {
+            inner: Box::new(StubEvaluator::calibnet(62)),
+            target: net.clone(),
+            rm: rm.clone(),
+            devices: devices.to_vec(),
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            top_k: 1,
+            sim_images: 2,
+        };
+        let mut cfg = sharded_cfg(8, 33, threads);
+        cfg.engine.async_eval = true;
+        search_sharded(&ev, &net, &rm, &devices, &cfg)
+    };
+    let a = run(1);
+    let b = run(0);
+    assert!(a.stats.sim_evals > 0, "sharded ladder never reached the simulator");
+    assert_eq!(a.stats.sim_evals, b.stats.sim_evals);
+    assert_eq!(a.stats.sim_promotions, b.stats.sim_promotions);
+    for (x, y) in a.per_device.iter().zip(&b.per_device) {
+        assert_eq!(x.device, y.device);
+        assert!(
+            x.result.stats.sim_evals > 0,
+            "{}: shard never simulator-scored a record",
+            x.device
+        );
+        assert_eq!(x.result.best, y.result.best);
+        for (p, q) in x.result.records.iter().zip(&y.result.records) {
+            assert_eq!(p.simulated, q.simulated, "{} iter {}", x.device, p.iter);
+            assert_eq!(
+                p.objective.to_bits(),
+                q.objective.to_bits(),
+                "{} iter {}: sharded laddered journal diverged",
+                x.device,
+                p.iter
+            );
+            assert_eq!(p.images_per_sec.to_bits(), q.images_per_sec.to_bits());
+            assert_eq!(
+                p.analytic_images_per_sec.to_bits(),
+                q.analytic_images_per_sec.to_bits()
+            );
+        }
     }
 }
