@@ -45,9 +45,10 @@ use crate::util::clampf;
 
 pub use crate::engine::{
     CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
-    EngineStats, EvalCompletion, EvalPoint, EvalRequest, ParetoPoint, SearchConfig,
-    SearchMode, SearchRecord, SearchResult, ShardedEngine, ShardedSearchResult,
-    ShardedStats, SimScore, SimulatedEvaluator, SnapshotStats,
+    EngineStats, EvalCompletion, EvalError, EvalPoint, EvalRequest, ParetoPoint,
+    SearchConfig, SearchControl, SearchMode, SearchProgress, SearchRecord, SearchResult,
+    ShardedEngine, ShardedSearchResult, ShardedStats, SimScore, SimulatedEvaluator,
+    SnapshotStats, INFEASIBLE_OBJECTIVE,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -115,7 +116,7 @@ impl MeasuredEvaluator {
 
     /// Hand the runtime back (e.g. to reuse it outside the search).
     pub fn into_runtime(self) -> ModelRuntime {
-        self.rt.into_inner().unwrap()
+        self.rt.into_inner().unwrap_or_else(|p| p.into_inner())
     }
 }
 
@@ -124,11 +125,31 @@ impl CandidateEvaluator for MeasuredEvaluator {
         &self.sparsity
     }
 
+    /// Degraded sync path: a failed measurement folds to a zero-accuracy
+    /// dense point.  The engine itself measures through
+    /// [`try_eval`](CandidateEvaluator::try_eval), which carries the real
+    /// error and scores the candidate [`INFEASIBLE_OBJECTIVE`] — this
+    /// fallback only covers direct callers of `eval`.
     fn eval(&self, plan: &PruningPlan) -> EvalPoint {
-        let rt = self.rt.lock().unwrap();
+        self.try_eval(plan).unwrap_or_else(|_| EvalPoint {
+            accuracy: 0.0,
+            points: vec![SparsityPoint::DENSE; plan.n_layers()],
+            sim: Vec::new(),
+        })
+    }
+
+    /// One PJRT failure must not abort a search (and, in a resident
+    /// daemon, must not panic a worker holding shared striped locks): the
+    /// error travels back through the completion queue and the engine
+    /// scores the candidate infeasible while everything keeps running.
+    /// The poison-tolerant lock recovers the runtime mutex even if some
+    /// earlier holder panicked — the runtime holds no half-written state
+    /// across `evaluate` calls.
+    fn try_eval(&self, plan: &PruningPlan) -> Result<EvalPoint, EvalError> {
+        let rt = self.rt.lock().unwrap_or_else(|p| p.into_inner());
         let out = rt
             .evaluate(&plan.tau_w, &plan.tau_a, self.n_batches)
-            .expect("PJRT evaluation failed");
+            .map_err(|e| format!("PJRT evaluation failed: {e}"))?;
         // fold the *measured* pair density into the operating point: keep
         // the measured S_w and derive the effective S_a that reproduces
         // the exact counter value under the independence formula the
@@ -141,7 +162,7 @@ impl CandidateEvaluator for MeasuredEvaluator {
                 SparsityPoint { s_w, s_a: s_a_eff }
             })
             .collect();
-        EvalPoint { accuracy: out.accuracy * 100.0, points, sim: Vec::new() }
+        Ok(EvalPoint { accuracy: out.accuracy * 100.0, points, sim: Vec::new() })
     }
 
     fn base_accuracy(&self) -> f64 {
@@ -257,8 +278,8 @@ mod tests {
         let dev = DeviceBudget { dsp: 1024, ..DeviceBudget::u250() };
         let hw = search(&ev, &net, &rm, &dev, &quick_cfg(40, SearchMode::HardwareAware, 3));
         let sw = search(&ev, &net, &rm, &dev, &quick_cfg(40, SearchMode::SoftwareOnly, 3));
-        let hw_eff = hw.efficiency_trajectory().last().copied().unwrap();
-        let sw_eff = sw.efficiency_trajectory().last().copied().unwrap();
+        let hw_eff = hw.efficiency_trajectory().last().copied().unwrap_or(0.0);
+        let sw_eff = sw.efficiency_trajectory().last().copied().unwrap_or(0.0);
         assert!(
             hw_eff >= sw_eff,
             "hardware-aware {hw_eff} < software-only {sw_eff}"

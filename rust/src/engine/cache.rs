@@ -417,10 +417,13 @@ impl DesignCache {
         dse: &DseConfig,
     ) -> DeviceCacheHandle {
         let fp = pricing_fingerprint(dev, net, rm, dse);
+        // poison-tolerant like the striped stores: the map holds no
+        // invariant a panicking holder could corrupt, and a resident
+        // server must keep registering devices after a worker panic
         let stats = self
             .devices
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .entry(fp)
             .or_insert_with(|| Arc::new(DevStats::default()))
             .clone();
@@ -429,7 +432,7 @@ impl DesignCache {
 
     /// Number of distinct (device, pricing context) registrations so far.
     pub fn device_count(&self) -> usize {
-        self.devices.lock().unwrap().len()
+        self.devices.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     fn key(handle: &DeviceCacheHandle, points: &[SparsityPoint]) -> Key {

@@ -104,12 +104,23 @@ pub struct EvalRequest {
     pub plan: PruningPlan,
 }
 
-/// One finished measurement, tagged with its request's slot.
+/// Why a measurement backend could not evaluate a plan (a PJRT execution
+/// error, a lost device, a failed remote call).  Carried through
+/// [`EvalCompletion::result`] so the engine scores the candidate
+/// infeasible and keeps running instead of panicking — a worker panic
+/// would poison the shared striped caches and, in a resident
+/// `hass serve` process, kill every subsequent request.
+pub type EvalError = String;
+
+/// One finished measurement, tagged with its request's slot.  `Err`
+/// means the backend could not evaluate the plan; the engine records the
+/// candidate as infeasible (see `Engine::score_candidate`) — a failure is
+/// data, not a panic.
 #[derive(Clone, Debug)]
 pub struct EvalCompletion {
     /// [`EvalRequest::slot`] of the request this result answers
     pub slot: usize,
-    pub result: EvalPoint,
+    pub result: Result<EvalPoint, EvalError>,
 }
 
 /// Measurement backend of the search loop.
@@ -117,9 +128,12 @@ pub struct EvalCompletion {
 /// Evaluations must be *pure* with respect to the plan: the engine may
 /// evaluate candidates of one generation in any order, on any thread, and
 /// relies on `eval(plan)` returning the same value either way.  The same
-/// contract extends to [`eval_async`](Self::eval_async): however a backend
-/// schedules or reorders a batch, each completion must be exactly what a
-/// lone `eval` of that plan would have returned.
+/// contract extends to [`try_eval`](Self::try_eval) and
+/// [`eval_async`](Self::eval_async): however a backend schedules or
+/// reorders a batch, each completion must be exactly what a lone
+/// evaluation of that plan would have returned — including which plans
+/// *fail* (an error must be a deterministic function of the plan for the
+/// journals to stay reproducible).
 pub trait CandidateEvaluator: Sync {
     /// Sparsity model used to decode optimizer coordinates into thresholds.
     fn sparsity_model(&self) -> &NetworkSparsity;
@@ -128,19 +142,30 @@ pub trait CandidateEvaluator: Sync {
     /// Reference (unpruned) accuracy, for reporting drops.
     fn base_accuracy(&self) -> f64;
 
+    /// Fallible evaluation — what the engine actually calls.  Backends
+    /// whose measurements can fail (PJRT, remote services) override this
+    /// and return `Err` instead of panicking; the engine scores the
+    /// candidate infeasible and keeps running.  The default wraps the
+    /// infallible [`eval`](Self::eval).
+    fn try_eval(&self, plan: &PruningPlan) -> Result<EvalPoint, EvalError> {
+        Ok(self.eval(plan))
+    }
+
     /// Evaluate a generation's worth of requests, pushing one completion
     /// per request onto `completions` **as soon as it finishes** — in any
     /// order, from any thread.  The engine's async pipeline
     /// (`EngineConfig::async_eval`) prices completed candidates while the
-    /// rest are still in flight.
+    /// rest are still in flight.  A failed measurement completes with
+    /// `Err` — every submitted slot must complete exactly once, failed or
+    /// not.
     ///
     /// The default implementation evaluates serially via
-    /// [`eval`](Self::eval) and completes in submission order.  A closed
-    /// receiver (the engine bailing out) is not an error: stop evaluating
-    /// and return.
+    /// [`try_eval`](Self::try_eval) and completes in submission order.  A
+    /// closed receiver (the engine bailing out) is not an error: stop
+    /// evaluating and return.
     fn eval_async(&self, requests: Vec<EvalRequest>, completions: Sender<EvalCompletion>) {
         for req in requests {
-            let result = self.eval(&req.plan);
+            let result = self.try_eval(&req.plan);
             if completions.send(EvalCompletion { slot: req.slot, result }).is_err() {
                 return; // receiver gone: nobody is waiting for the rest
             }
@@ -226,37 +251,57 @@ impl CandidateEvaluator for SimulatedEvaluator {
         // rung 0: measure the whole generation through the inner backend
         let (tx, rx) = mpsc::channel();
         self.inner.eval_async(requests, tx);
-        let mut results: Vec<Option<EvalPoint>> = Vec::new();
-        results.resize_with(n, || None);
+        let mut measured: Vec<Option<Result<EvalPoint, EvalError>>> = Vec::new();
+        measured.resize_with(n, || None);
         for c in rx {
             assert!(
-                c.slot < n && results[c.slot].is_none(),
+                c.slot < n && measured[c.slot].is_none(),
                 "inner evaluator violated the eval_async contract on slot {}",
                 c.slot
             );
-            results[c.slot] = Some(c.result);
+            measured[c.slot] = Some(c.result);
         }
         assert!(
-            results.iter().all(|r| r.is_some()),
+            measured.iter().all(|r| r.is_some()),
             "inner evaluator completed fewer requests than were submitted"
         );
+        // a failed measurement has no operating points to price or
+        // simulate: pass the error straight through (the engine scores it
+        // infeasible) and climb the ladder with the healthy slots only.
+        // `slots[i]` maps ladder index i back to the original slot.
+        let mut slots: Vec<usize> = Vec::with_capacity(n);
+        let mut results: Vec<Option<EvalPoint>> = Vec::with_capacity(n);
+        for (slot, r) in measured.into_iter().enumerate() {
+            match r.expect("checked above") {
+                Ok(point) => {
+                    slots.push(slot);
+                    results.push(Some(point));
+                }
+                Err(e) => {
+                    if completions.send(EvalCompletion { slot, result: Err(e) }).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+        let m = slots.len();
         let n_dev = self.devices.len();
-        if n_dev == 0 {
-            for (slot, r) in results.into_iter().enumerate() {
-                let result = r.expect("checked above");
-                if completions.send(EvalCompletion { slot, result }).is_err() {
+        if n_dev == 0 || m == 0 {
+            for (i, r) in results.into_iter().enumerate() {
+                let result = Ok(r.expect("healthy slot present"));
+                if completions.send(EvalCompletion { slot: slots[i], result }).is_err() {
                     return;
                 }
             }
             return;
         }
 
-        // rung 1: price every (candidate, device) pair analytically
+        // rung 1: price every healthy (candidate, device) pair analytically
         let mut designs: Vec<Option<NetworkDesign>> = Vec::new();
-        designs.resize_with(n * n_dev, || None);
-        run_slots(&mut designs, ladder_threads(n * n_dev), |slot, k| {
-            let (s, d) = (k / n_dev, k % n_dev);
-            let points = &results[s].as_ref().expect("checked above").points;
+        designs.resize_with(m * n_dev, || None);
+        run_slots(&mut designs, ladder_threads(m * n_dev), |slot, k| {
+            let (i, d) = (k / n_dev, k % n_dev);
+            let points = &results[i].as_ref().expect("healthy slot present").points;
             *slot =
                 Some(explore(&self.target, points, &self.rm, &self.devices[d], &self.dse));
         });
@@ -264,26 +309,26 @@ impl CandidateEvaluator for SimulatedEvaluator {
             designs.into_iter().map(|o| o.expect("pricing slot filled")).collect();
 
         // promote the union over devices of the analytic top-k
-        let k_top = self.top_k.max(1).min(n);
-        let mut promoted = vec![false; n];
+        let k_top = self.top_k.max(1).min(m);
+        let mut promoted = vec![false; m];
         for d in 0..n_dev {
-            let mut order: Vec<usize> = (0..n).collect();
+            let mut order: Vec<usize> = (0..m).collect();
             order.sort_by(|&a, &b| {
                 let ia = designs[a * n_dev + d].images_per_sec(&self.devices[d]);
                 let ib = designs[b * n_dev + d].images_per_sec(&self.devices[d]);
                 ib.total_cmp(&ia).then(a.cmp(&b)) // ties: earlier slot wins
             });
-            for &s in order.iter().take(k_top) {
-                promoted[s] = true;
+            for &i in order.iter().take(k_top) {
+                promoted[i] = true;
             }
         }
 
         // release the analytic-only candidates now — the engine prices
         // them while the promoted simulations run
-        for s in 0..n {
-            if !promoted[s] {
-                let result = results[s].take().expect("checked above");
-                if completions.send(EvalCompletion { slot: s, result }).is_err() {
+        for i in 0..m {
+            if !promoted[i] {
+                let result = Ok(results[i].take().expect("healthy slot present"));
+                if completions.send(EvalCompletion { slot: slots[i], result }).is_err() {
                     return;
                 }
             }
@@ -291,16 +336,16 @@ impl CandidateEvaluator for SimulatedEvaluator {
 
         // rung 2: cycle-level simulation of every promoted (candidate,
         // device) pair, concurrently
-        let idx: Vec<usize> = (0..n).filter(|&s| promoted[s]).collect();
+        let idx: Vec<usize> = (0..m).filter(|&i| promoted[i]).collect();
         let mut scores: Vec<Option<SimScore>> = Vec::new();
         scores.resize_with(idx.len() * n_dev, || None);
         run_slots(&mut scores, ladder_threads(idx.len() * n_dev), |slot, k| {
-            let (s, d) = (idx[k / n_dev], k % n_dev);
+            let (i, d) = (idx[k / n_dev], k % n_dev);
             let dev = &self.devices[d];
-            let points = &results[s].as_ref().expect("promoted result present").points;
+            let points = &results[i].as_ref().expect("promoted result present").points;
             let cfgs = stages_from_design(
                 &self.target,
-                &designs[s * n_dev + d].designs,
+                &designs[i * n_dev + d].designs,
                 points,
                 self.rm.fifo_depth,
             );
@@ -316,12 +361,13 @@ impl CandidateEvaluator for SimulatedEvaluator {
                 deadlocked: rep.deadlocked,
             });
         });
-        for (pi, &s) in idx.iter().enumerate() {
-            let mut result = results[s].take().expect("promoted result present");
+        for (pi, &i) in idx.iter().enumerate() {
+            let mut result = results[i].take().expect("promoted result present");
             result.sim = (0..n_dev)
                 .map(|d| scores[pi * n_dev + d].expect("sim slot filled"))
                 .collect();
-            if completions.send(EvalCompletion { slot: s, result }).is_err() {
+            if completions.send(EvalCompletion { slot: slots[i], result: Ok(result) }).is_err()
+            {
                 return;
             }
         }
@@ -377,9 +423,10 @@ mod tests {
         got.sort_by_key(|c| c.slot);
         for (c, plan) in got.iter().zip(&plans) {
             let direct = ev.eval(plan);
-            assert_eq!(c.result.accuracy.to_bits(), direct.accuracy.to_bits());
-            assert_eq!(c.result.points.len(), direct.points.len());
-            for (a, b) in c.result.points.iter().zip(&direct.points) {
+            let got = c.result.as_ref().expect("healthy evaluator never errors");
+            assert_eq!(got.accuracy.to_bits(), direct.accuracy.to_bits());
+            assert_eq!(got.points.len(), direct.points.len());
+            for (a, b) in got.points.iter().zip(&direct.points) {
                 assert_eq!(a.s_w.to_bits(), b.s_w.to_bits());
                 assert_eq!(a.s_a.to_bits(), b.s_a.to_bits());
             }
@@ -436,7 +483,7 @@ mod tests {
         let mut out: Vec<Option<EvalPoint>> = Vec::new();
         out.resize_with(n, || None);
         for c in rx {
-            out[c.slot] = Some(c.result);
+            out[c.slot] = Some(c.result.expect("healthy evaluator never errors"));
         }
         out.into_iter().map(|o| o.expect("every slot completed")).collect()
     }
@@ -478,6 +525,80 @@ mod tests {
                 assert_eq!(sx.images_per_sec.to_bits(), sy.images_per_sec.to_bits());
                 assert_eq!(sx.deadlocked, sy.deadlocked);
             }
+        }
+    }
+
+    /// Inner evaluator that fails as a *pure function of the plan* (any
+    /// impure failure predicate would make journals nondeterministic).
+    struct Failing {
+        sparsity: NetworkSparsity,
+        fail_above: f64,
+    }
+
+    impl CandidateEvaluator for Failing {
+        fn sparsity_model(&self) -> &NetworkSparsity {
+            &self.sparsity
+        }
+
+        fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+            self.try_eval(plan).expect("caller must use try_eval for failing plans")
+        }
+
+        fn try_eval(&self, plan: &PruningPlan) -> Result<EvalPoint, EvalError> {
+            let points = plan.points(&self.sparsity);
+            let s: f64 = points.iter().map(|p| p.s_w).sum();
+            if s > self.fail_above {
+                return Err(format!("measurement backend rejected plan (s = {s:.3})"));
+            }
+            Ok(EvalPoint { accuracy: 90.0 - s, points, sim: Vec::new() })
+        }
+
+        fn base_accuracy(&self) -> f64 {
+            90.0
+        }
+    }
+
+    #[test]
+    fn ladder_passes_inner_errors_through_and_prices_the_rest() {
+        let net = networks::calibnet();
+        let sparsity = synthesize(&net, 31);
+        let n = sparsity.layers.len();
+        // fail_above = 0 fails every plan with any weight sparsity; the
+        // dense plan (s = 0) survives
+        let ev = SimulatedEvaluator {
+            inner: Box::new(Failing { sparsity: sparsity.clone(), fail_above: 0.0 }),
+            target: net,
+            rm: ResourceModel::default(),
+            devices: vec![DeviceBudget::u250()],
+            dse: DseConfig { max_iters: 1_500, ..Default::default() },
+            top_k: 2,
+            sim_images: 2,
+        };
+        let reqs: Vec<EvalRequest> = [0.0, 0.4, 0.7]
+            .iter()
+            .enumerate()
+            .map(|(slot, &s)| EvalRequest {
+                slot,
+                plan: PruningPlan::from_unit_point(&vec![s; 2 * n], &sparsity),
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        ev.eval_async(reqs, tx);
+        let mut out: Vec<Option<Result<EvalPoint, EvalError>>> = vec![None, None, None];
+        for c in rx {
+            assert!(out[c.slot].is_none(), "duplicate completion for slot {}", c.slot);
+            out[c.slot] = Some(c.result);
+        }
+        let out: Vec<Result<EvalPoint, EvalError>> =
+            out.into_iter().map(|o| o.expect("every slot completed")).collect();
+        // the dense slot survives the ladder and, as the only healthy
+        // candidate, is promoted to simulation
+        let healthy = out[0].as_ref().expect("dense plan must succeed");
+        assert!(!healthy.sim.is_empty(), "sole healthy candidate must be simulated");
+        // failed slots pass through untouched, carrying the inner error
+        for slot in [1, 2] {
+            let err = out[slot].as_ref().expect_err("sparse plans must fail");
+            assert!(err.contains("rejected plan"), "error lost in the ladder: {err}");
         }
     }
 

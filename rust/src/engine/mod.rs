@@ -117,11 +117,12 @@ pub use cache::{
     FrontierStore, SnapshotStats,
 };
 pub use evaluator::{
-    CandidateEvaluator, EvalCompletion, EvalPoint, EvalRequest, SimScore,
+    CandidateEvaluator, EvalCompletion, EvalError, EvalPoint, EvalRequest, SimScore,
     SimulatedEvaluator,
 };
 pub use shard::{
-    DeviceSearchResult, ParetoPoint, ShardedEngine, ShardedSearchResult, ShardedStats,
+    DeviceSearchResult, ParetoPoint, SearchControl, SearchProgress, ShardedEngine,
+    ShardedSearchResult, ShardedStats,
 };
 
 use crate::arch::Network;
@@ -327,8 +328,26 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
+    /// # Panics
+    /// On a zero-iteration search (no records).  Callers that accept
+    /// `--iters 0` must use [`try_best_record`](Self::try_best_record).
     pub fn best_record(&self) -> &SearchRecord {
         &self.records[self.best]
+    }
+
+    /// Best record, or `None` for a zero-iteration search.
+    pub fn try_best_record(&self) -> Option<&SearchRecord> {
+        self.records.get(self.best)
+    }
+
+    /// Write the journal CSV to `path`, creating parent directories.
+    pub fn write_journal(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_table().to_csv())
     }
 
     /// Fig. 5's y-axis: the computation efficiency of the *incumbent* —
@@ -393,10 +412,45 @@ pub(super) struct EvalCtx<'a> {
 /// The device-independent half of a candidate evaluation: decoded plan,
 /// measured accuracy/operating points, sparsity metrics.  Computed once
 /// per *distinct* proposal of a generation and shared across shards.
+///
+/// A failed measurement (`error` set) carries placeholder dense points so
+/// downstream shapes stay valid, and [`Engine::score_candidate`] scores it
+/// [`INFEASIBLE_OBJECTIVE`] without touching the pricing caches.
 pub(super) struct Measurement {
     pub(super) plan: PruningPlan,
     pub(super) ev: EvalPoint,
     pub(super) metrics: pruning::SparsityMetrics,
+    pub(super) error: Option<EvalError>,
+}
+
+impl Measurement {
+    /// Fold an evaluator outcome into a `Measurement`.  An `Err` becomes a
+    /// zero-accuracy dense placeholder — the search keeps running and TPE
+    /// simply learns this region is bad, instead of the whole process
+    /// aborting (fatal for a resident daemon, where a worker panic would
+    /// also poison the shared caches).
+    pub(super) fn from_result(
+        target: &Network,
+        plan: PruningPlan,
+        result: Result<EvalPoint, EvalError>,
+        n_points: usize,
+    ) -> Measurement {
+        match result {
+            Ok(ev) => {
+                let metrics = pruning::metrics(target, &ev.points);
+                Measurement { plan, ev, metrics, error: None }
+            }
+            Err(e) => {
+                let ev = EvalPoint {
+                    accuracy: 0.0,
+                    points: vec![crate::sparsity::SparsityPoint::DENSE; n_points],
+                    sim: Vec::new(),
+                };
+                let metrics = pruning::metrics(target, &ev.points);
+                Measurement { plan, ev, metrics, error: Some(e) }
+            }
+        }
+    }
 }
 
 /// The batched search engine: an evaluator plus the fixed hardware-side
@@ -410,6 +464,12 @@ pub struct Engine<'a> {
 
 /// Warm-start anchor plans: dense, mild, moderate uniform sparsity.
 pub(super) const ANCHORS: [f64; 3] = [0.0, 0.15, 0.35];
+
+/// Objective assigned to a candidate whose measurement failed.  `f64::MIN`
+/// (not `NEG_INFINITY`: TPE asserts finite observations) ranks below every
+/// real Eq. 6 score, so a failed candidate never becomes the incumbent and
+/// the optimizer learns to avoid the region.
+pub const INFEASIBLE_OBJECTIVE: f64 = f64::MIN;
 
 impl<'a> Engine<'a> {
     pub fn new(
@@ -449,10 +509,11 @@ impl<'a> Engine<'a> {
     /// resource model — a sharded generation measures each distinct
     /// proposal once and shares the result across shards.
     pub(super) fn measure_candidate(&self, x: &[f64]) -> Measurement {
-        let plan = PruningPlan::from_unit_point(x, self.evaluator.sparsity_model());
-        let ev = self.evaluator.eval(&plan);
-        let metrics = pruning::metrics(self.target, &ev.points);
-        Measurement { plan, ev, metrics }
+        let model = self.evaluator.sparsity_model();
+        let n_points = model.layers.len();
+        let plan = PruningPlan::from_unit_point(x, model);
+        let result = self.evaluator.try_eval(&plan);
+        Measurement::from_result(self.target, plan, result, n_points)
     }
 
     /// Device-dependent half: price the measured operating points on this
@@ -464,6 +525,24 @@ impl<'a> Engine<'a> {
         meas: &Measurement,
         ctx: &EvalCtx<'_>,
     ) -> SearchRecord {
+        if meas.error.is_some() {
+            // failed measurement: nothing to price (the caches never see
+            // it) — record a minimal-objective placeholder so TPE steers
+            // away from the region while the search keeps running
+            return SearchRecord {
+                iter,
+                accuracy: 0.0,
+                avg_sparsity: 0.0,
+                op_density: 1.0,
+                images_per_sec: 0.0,
+                analytic_images_per_sec: 0.0,
+                dsp: 0,
+                efficiency: 0.0,
+                objective: INFEASIBLE_OBJECTIVE,
+                simulated: false,
+                plan: meas.plan.clone(),
+            };
+        }
         let pts = quantize_points(&meas.ev.points, ctx.quant_bits);
         let design = match ctx.cache {
             Some((c, h)) => c.get_or_compute(h, &pts, || {

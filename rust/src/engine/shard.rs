@@ -142,7 +142,8 @@ impl ShardedSearchResult {
             "images_per_cycle_per_dsp", "objective", "cache_hit_rate",
         ]);
         for d in &self.per_device {
-            let b = d.result.best_record();
+            // a zero-iteration search has no best record — skip the row
+            let Some(b) = d.result.try_best_record() else { continue };
             t.row(vec![
                 d.device.clone(),
                 b.iter.to_string(),
@@ -203,6 +204,33 @@ impl ShardedSearchResult {
         }
         t
     }
+}
+
+/// Progress of one in-flight sharded search, reported to a
+/// [`SearchControl`] observer after every lockstep generation.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchProgress {
+    /// lockstep generations completed so far (1-based at first call)
+    pub generation: usize,
+    /// per-shard iterations completed so far
+    pub done: usize,
+    /// per-shard iterations requested (`SearchConfig::iterations`)
+    pub total: usize,
+}
+
+/// Observer + cancellation hook for a long-running search (the `hass
+/// serve` daemon streams per-generation progress to its client through
+/// this, and cancels the search when the client disconnects).
+///
+/// The observer is called between lockstep generations — a generation in
+/// flight always completes, so cancellation never tears mid-evaluation
+/// state and the shared caches stay coherent.  Returning `false` cancels:
+/// [`ShardedEngine::search_with_cache_ctrl`] returns `None` and no
+/// partial result escapes.
+#[derive(Default)]
+pub struct SearchControl<'c> {
+    /// return `false` to cancel the search after the current generation
+    pub observer: Option<&'c (dyn Fn(SearchProgress) -> bool + Sync)>,
 }
 
 /// Per-shard search state: the single-device engine view, its cache
@@ -270,6 +298,22 @@ impl<'a> ShardedEngine<'a> {
         cfg: &SearchConfig,
         cache: &DesignCache,
     ) -> ShardedSearchResult {
+        self.search_with_cache_ctrl(cfg, cache, &SearchControl::default())
+            .expect("a search without an observer cannot be cancelled")
+    }
+
+    /// [`search_with_cache`](Self::search_with_cache) with a
+    /// [`SearchControl`]: the observer sees progress after every lockstep
+    /// generation and may cancel by returning `false`, in which case the
+    /// search stops before the next generation and `None` is returned
+    /// (the shared cache keeps everything priced so far — cancellation
+    /// never poisons or truncates it).
+    pub fn search_with_cache_ctrl(
+        &self,
+        cfg: &SearchConfig,
+        cache: &DesignCache,
+        ctrl: &SearchControl<'_>,
+    ) -> Option<ShardedSearchResult> {
         // collapse identical budgets (same device fingerprint — the key
         // prefix of every cache entry) to one shard each: duplicates
         // would share one fingerprint, so extra shards could only repeat
@@ -449,6 +493,16 @@ impl<'a> ShardedEngine<'a> {
             }
             generations += 1;
             done += g;
+            if let Some(obs) = ctrl.observer {
+                let go = obs(SearchProgress {
+                    generation: generations,
+                    done,
+                    total: cfg.iterations,
+                });
+                if !go && done < cfg.iterations {
+                    return None;
+                }
+            }
         }
 
         // --- finalize: per-device results + cross-device frontier -------
@@ -530,7 +584,7 @@ impl<'a> ShardedEngine<'a> {
             });
         }
         let pareto = cross_device_pareto(&per_device);
-        ShardedSearchResult {
+        Some(ShardedSearchResult {
             stats: ShardedStats {
                 devices: n_dev,
                 threads,
@@ -551,7 +605,7 @@ impl<'a> ShardedEngine<'a> {
             },
             pareto,
             per_device,
-        }
+        })
     }
 }
 
@@ -695,6 +749,7 @@ fn run_generation_async(
     let total = n_shards * g;
     let dd = dedup_proposals(xs_all, n_shards, g);
     let n_meas = dd.owners.len();
+    let n_points = evaluator.sparsity_model().layers.len();
     // decode once per distinct proposal: the plan travels with the
     // request, and is also what the scored records carry
     let plans: Vec<PruningPlan> = dd
@@ -774,14 +829,12 @@ fn run_generation_async(
                     ooo[dd.owners[c.slot].0].fetch_add(1, Ordering::Relaxed);
                 }
                 let overlapping = measuring.load(Ordering::Acquire);
-                let meas = Measurement {
-                    plan: plans[c.slot].clone(),
-                    metrics: crate::pruning::metrics(
-                        shards[0].engine.target,
-                        &c.result.points,
-                    ),
-                    ev: c.result,
-                };
+                let meas = Measurement::from_result(
+                    shards[0].engine.target,
+                    plans[c.slot].clone(),
+                    c.result,
+                    n_points,
+                );
                 for &k in &dd.users[c.slot] {
                     let (si, j) = (k / g, k % g);
                     if overlapping {

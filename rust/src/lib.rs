@@ -56,6 +56,21 @@
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
 //!
+//! ## The search daemon (`server`)
+//!
+//! `hass serve` keeps all of the above resident: a long-lived process
+//! holding the warm [`engine::DesignCache`] (designs + frontier store)
+//! in memory and serving `search` / `price` / `stats` / `save-cache`
+//! requests over a newline-delimited JSON-RPC TCP protocol
+//! ([`server::protocol`]), with FIFO-fair admission bounding concurrent
+//! searches and per-generation progress streamed to each client.
+//! Daemon searches run the same [`engine::ShardedEngine`] path as the
+//! CLI, so streamed journals are bit-identical to `hass search` runs;
+//! `hass client` is the matching thin client.  Every failure on the
+//! request path — malformed lines, unknown networks, evaluator errors,
+//! client disconnects mid-search — is answered or absorbed without
+//! taking the process (or its caches) down.
+//!
 //! ## The event-driven simulator and the fidelity ladder (`simulator`)
 //!
 //! The cycle-level dataflow simulator runs on a discrete-event core — a
@@ -99,6 +114,7 @@
 //! | [`simulator`] | event-driven cycle-level dataflow simulator (model validation, fidelity ladder) |
 //! | [`baselines`] | dense / PASS-like / HPIPE-like / non-dataflow designs |
 //! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
+//! | [`server`]    | resident `hass serve` search daemon + JSON-RPC protocol |
 //! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |
 //! | [`util`]      | offline stand-ins: rng, prop testing, json, cli; [`util::memo`] striped memo |
 
@@ -112,6 +128,7 @@ pub mod metrics;
 pub mod optim;
 pub mod pruning;
 pub mod runtime;
+pub mod server;
 pub mod simulator;
 pub mod sparsity;
 pub mod util;

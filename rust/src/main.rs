@@ -8,6 +8,8 @@
 //! * `partition` — multi-partition mapping with full reconfiguration
 //! * `evaluate`  — run the AOT CalibNet artifact at given thresholds (PJRT)
 //! * `networks`  — list the built-in network geometries
+//! * `serve`     — resident search daemon over warm caches (JSON-RPC/TCP)
+//! * `client`    — thin client for a running `hass serve` daemon
 //!
 //! Run `hass <subcommand> --help` for per-command flags.
 
@@ -23,9 +25,11 @@ use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::metrics::{fmt, Table};
 use hass::runtime::ModelRuntime;
+use hass::server::{ServeConfig, Server};
 use hass::simulator::{simulate, stages_from_design, SparsityDynamics};
 use hass::sparsity::{synthesize, SparsityPoint};
 use hass::util::cli::Cli;
+use hass::util::json::Json;
 use hass::util::rng::Rng;
 
 fn main() {
@@ -38,9 +42,12 @@ fn main() {
         "partition" => cmd_partition(&args[2..]),
         "evaluate" => cmd_evaluate(&args[2..]),
         "networks" => cmd_networks(),
+        "serve" => cmd_serve(&args[2..]),
+        "client" => cmd_client(&args[2..]),
         _ => {
             eprintln!(
-                "usage: hass <search|dse|simulate|partition|evaluate|networks> [flags]\n\
+                "usage: hass <search|dse|simulate|partition|evaluate|networks|serve|client> \
+                 [flags]\n\
                  HASS: Hardware-Aware Sparsity Search for dataflow DNN accelerators."
             );
             if sub == "help" || sub == "--help" {
@@ -53,10 +60,47 @@ fn main() {
     std::process::exit(code);
 }
 
-fn parse_or_die(cli: Cli, args: &[String]) -> hass::util::cli::Parsed {
+/// Parsed args plus the usage text, so the typed getters below can die
+/// with a helpful message instead of panicking: `hass search --iters=abc`
+/// prints the error + usage and exits 2 — never a backtrace.
+struct Args {
+    p: hass::util::cli::Parsed,
+    usage: String,
+}
+
+impl Args {
+    fn get(&self, key: &str) -> &str {
+        self.p.get(key)
+    }
+
+    fn get_bool(&self, key: &str) -> bool {
+        self.p.get_bool(key)
+    }
+
+    fn get_usize(&self, key: &str) -> usize {
+        self.ok(self.p.get_usize(key))
+    }
+
+    fn get_u64(&self, key: &str) -> u64 {
+        self.ok(self.p.get_u64(key))
+    }
+
+    fn get_f64(&self, key: &str) -> f64 {
+        self.ok(self.p.get_f64(key))
+    }
+
+    fn ok<T>(&self, r: Result<T, String>) -> T {
+        r.unwrap_or_else(|e| {
+            eprintln!("{e}\n\n{}", self.usage);
+            std::process::exit(2);
+        })
+    }
+}
+
+fn parse_or_die(cli: Cli, args: &[String]) -> Args {
     let usage = cli.usage();
     match cli.parse_from(args) {
-        Ok(p) => p,
+        Ok(p) => Args { p, usage },
         Err(e) => {
             eprintln!("{e}\n{usage}");
             std::process::exit(2);
@@ -285,11 +329,15 @@ fn cmd_search(args: &[String]) -> i32 {
     // --- single-device search (--device, or a 1-entry --devices) ------
     let dev = all_devices.into_iter().next().expect("resolved above");
     let result = search_with_cache(ev.as_ref(), &net, &rm, &dev, &cfg, &cache);
-    let b = result.best_record();
-    println!(
-        "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
-        b.iter, b.accuracy, b.avg_sparsity, b.images_per_sec, b.dsp, b.efficiency
-    );
+    // --iters 0 is a legal smoke run (e.g. warming a cache file): there
+    // is no best record then, not a panic
+    match result.try_best_record() {
+        Some(b) => println!(
+            "[search] best @ iter {}: acc {:.2}% | sparsity {:.3} | {:.0} img/s | {} DSP | {:.3e} img/cyc/DSP",
+            b.iter, b.accuracy, b.avg_sparsity, b.images_per_sec, b.dsp, b.efficiency
+        ),
+        None => println!("[search] no iterations run (--iters 0); journal is header-only"),
+    }
     let s = &result.stats;
     println!(
         "[search] engine: {} generations x batch {} on {} thread(s) | design cache \
@@ -320,12 +368,12 @@ fn cmd_search(args: &[String]) -> i32 {
         );
     }
     if !journal.is_empty() {
-        if let Some(dir) = std::path::Path::new(journal).parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir).ok();
-            }
+        // same graceful path as the sharded branch: report and fail the
+        // run, don't panic (the search itself already succeeded)
+        if let Err(e) = result.write_journal(journal) {
+            eprintln!("failed to write journal to '{journal}': {e}");
+            return 1;
         }
-        std::fs::write(journal, result.to_table().to_csv()).expect("write journal");
         println!("[search] journal -> {journal}");
     }
     save_cache(&cache, cache_file)
@@ -529,7 +577,13 @@ fn cmd_evaluate(args: &[String]) -> i32 {
     let l = rt.n_layers();
     let tw = vec![p.get_f64("tau-w"); l];
     let ta = vec![p.get_f64("tau-a"); l];
-    let out = rt.evaluate(&tw, &ta, p.get_usize("batches")).expect("evaluation");
+    let out = match rt.evaluate(&tw, &ta, p.get_usize("batches")) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("evaluation failed: {e:#}");
+            return 1;
+        }
+    };
     println!(
         "[evaluate] {} imgs: accuracy {:.2}% (dense {:.2}%)",
         out.images,
@@ -546,6 +600,211 @@ fn cmd_evaluate(args: &[String]) -> i32 {
         ]);
     }
     print!("{}", t.to_markdown());
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cli = Cli::new("resident search daemon: warm caches served over newline-JSON-RPC/TCP")
+        .opt("addr", "127.0.0.1:4860", "listen address")
+        .opt(
+            "max-searches",
+            "2",
+            "searches in flight at once; further requests queue FIFO",
+        )
+        .opt(
+            "cache-file",
+            "",
+            "JSON snapshot: load a warm design cache before serving and \
+             save it back after shutdown (created if missing)",
+        );
+    let p = parse_or_die(cli, args);
+    let cache_file = p.get("cache-file").to_string();
+    let cache = load_cache(&cache_file);
+    let server = Server::new(
+        cache,
+        ServeConfig { max_inflight: p.get_usize("max-searches").max(1) },
+    );
+    let listener = match std::net::TcpListener::bind(p.get("addr")) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("failed to bind '{}': {e}", p.get("addr"));
+            return 1;
+        }
+    };
+    let shown = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| p.get("addr").to_string());
+    println!(
+        "[serve] listening on {shown} ({} concurrent searches; \
+         methods: search | price | stats | save-cache | shutdown)",
+        p.get_usize("max-searches").max(1)
+    );
+    if let Err(e) = server.run(listener) {
+        eprintln!("[serve] accept loop failed: {e}");
+        return 1;
+    }
+    println!("[serve] shut down");
+    save_cache(server.cache(), &cache_file)
+}
+
+/// Per-device journal path of the client, matching the daemon-less CLI:
+/// a single device writes `base` itself, several devices write
+/// `stem.<device>.ext` (the `ShardedSearchResult::write_journals`
+/// convention) — so CI can `cmp` client journals against `hass search`.
+fn client_journal_path(base: &str, device: &str, n_devices: usize) -> String {
+    if n_devices == 1 {
+        return base.to_string();
+    }
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() && !ext.contains('/') => {
+            format!("{stem}.{device}.{ext}")
+        }
+        _ => format!("{base}.{device}"),
+    }
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    use std::io::{BufRead, BufReader, Write};
+    let cli = Cli::new(
+        "thin client for a running `hass serve` daemon \
+         (positional method: search | price | stats | save-cache | shutdown)",
+    )
+    .opt("addr", "127.0.0.1:4860", "daemon address")
+    .opt("network", "calibnet", "search/price: target geometry")
+    .opt("device", "u250", "search/price: device budget")
+    .opt("devices", "", "search: comma-separated budgets (overrides --device)")
+    .opt("iters", "96", "search: TPE iterations")
+    .opt("seed", "0", "search: seed")
+    .opt("mode", "hw", "search: hw | sw")
+    .opt("batch", "1", "search: candidates per generation")
+    .opt("threads", "0", "search: evaluation threads (0 = auto)")
+    .opt("quant", "0", "search: pricing quantization bits")
+    .flag("async", "search: async completion-queue pipeline")
+    .opt("sw", "0.5", "price: uniform weight sparsity")
+    .opt("sa", "0.5", "price: uniform activation sparsity")
+    .opt("journal", "", "search: write the returned per-device journal CSVs here")
+    .opt("path", "", "save-cache: snapshot path (on the daemon's host)");
+    let p = parse_or_die(cli, args);
+    let method =
+        p.p.positionals.first().map(String::as_str).unwrap_or("stats").to_string();
+    let params = match method.as_str() {
+        "search" => Json::obj(vec![
+            ("network", Json::Str(p.get("network").to_string())),
+            ("device", Json::Str(p.get("device").to_string())),
+            ("devices", Json::Str(p.get("devices").to_string())),
+            ("iters", Json::Num(p.get_usize("iters") as f64)),
+            ("seed", Json::Num(p.get_u64("seed") as f64)),
+            ("mode", Json::Str(p.get("mode").to_string())),
+            ("batch", Json::Num(p.get_usize("batch") as f64)),
+            ("threads", Json::Num(p.get_usize("threads") as f64)),
+            ("quant", Json::Num(p.get_usize("quant") as f64)),
+            ("async", Json::Bool(p.get_bool("async"))),
+        ]),
+        "price" => Json::obj(vec![
+            ("network", Json::Str(p.get("network").to_string())),
+            ("device", Json::Str(p.get("device").to_string())),
+            ("sw", Json::Num(p.get_f64("sw"))),
+            ("sa", Json::Num(p.get_f64("sa"))),
+        ]),
+        "save-cache" => Json::obj(vec![("path", Json::Str(p.get("path").to_string()))]),
+        "stats" | "shutdown" => Json::obj(vec![]),
+        other => {
+            eprintln!(
+                "unknown method '{other}' (search | price | stats | save-cache | shutdown)"
+            );
+            return 2;
+        }
+    };
+    let addr = p.get("addr");
+    let stream = match std::net::TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to connect to '{addr}': {e} (is `hass serve` running?)");
+            return 1;
+        }
+    };
+    let request = Json::obj(vec![
+        ("id", Json::Num(1.0)),
+        ("method", Json::Str(method.clone())),
+        ("params", params),
+    ]);
+    let mut w = &stream;
+    if w.write_all(format!("{}\n", request.to_string()).as_bytes()).is_err() {
+        eprintln!("failed to send request to '{addr}'");
+        return 1;
+    }
+    // stream: zero or more event lines, then exactly one result or error
+    for line in BufReader::new(&stream).lines() {
+        let Ok(line) = line else { break };
+        let Ok(v) = Json::parse(&line) else {
+            eprintln!("unparseable response line: {line}");
+            return 1;
+        };
+        if let Some(ev) = v.get("event").and_then(|e| e.as_str()) {
+            match ev {
+                "queued" => println!("[client] queued (daemon at max concurrent searches)"),
+                "started" => println!("[client] search started"),
+                "generation" => {
+                    let done = v.get("done").and_then(|d| d.as_usize()).unwrap_or(0);
+                    let total = v.get("total").and_then(|t| t.as_usize()).unwrap_or(0);
+                    println!("[client] generation done {done}/{total}");
+                }
+                other => println!("[client] event: {other}"),
+            }
+            continue;
+        }
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            eprintln!("[client] daemon error: {err}");
+            return 1;
+        }
+        let Some(result) = v.get("result") else {
+            eprintln!("response line is neither event, error nor result: {line}");
+            return 1;
+        };
+        return client_report(&method, result, p.get("journal"));
+    }
+    eprintln!("connection closed before a result arrived");
+    1
+}
+
+/// Print a terminal daemon result (and write search journals).
+fn client_report(method: &str, result: &Json, journal: &str) -> i32 {
+    let Some(devices) = result.get("devices").and_then(|d| d.as_arr()) else {
+        // non-search methods: the result object is small — print it raw
+        println!("[client] {method}: {}", result.to_string());
+        return 0;
+    };
+    for d in devices {
+        let name = d.get("device").and_then(|n| n.as_str()).unwrap_or("?");
+        let hits = d.get("cache_hits").and_then(|h| h.as_usize()).unwrap_or(0);
+        let misses = d.get("cache_misses").and_then(|m| m.as_usize()).unwrap_or(0);
+        match d.get("best_iter").and_then(|b| b.as_usize()) {
+            Some(it) => println!(
+                "[client] {name}: best @ iter {it}: acc {:.2}% | {:.0} img/s | cache {hits} hit / {misses} miss",
+                d.get("best_accuracy").and_then(|a| a.as_f64()).unwrap_or(0.0),
+                d.get("best_images_per_sec").and_then(|i| i.as_f64()).unwrap_or(0.0),
+            ),
+            None => println!(
+                "[client] {name}: no iterations run | cache {hits} hit / {misses} miss"
+            ),
+        }
+        if journal.is_empty() {
+            continue;
+        }
+        let csv = d.get("journal_csv").and_then(|c| c.as_str()).unwrap_or("");
+        let path = client_journal_path(journal, name, devices.len());
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).ok();
+            }
+        }
+        if let Err(e) = std::fs::write(&path, csv) {
+            eprintln!("failed to write journal to '{path}': {e}");
+            return 1;
+        }
+        println!("[client] journal -> {path}");
+    }
     0
 }
 

@@ -1,0 +1,644 @@
+//! `hass serve` — a resident search daemon over the warm pricing caches.
+//!
+//! The cache snapshots of `engine::cache` die with the process: every
+//! CLI run pays startup plus cache load before its first pricing.  This
+//! module keeps the expensive artifact — the shared [`DesignCache`] with
+//! its [`FrontierStore`](crate::engine::FrontierStore) of prebuilt
+//! per-layer Pareto frontiers — alive in one long-lived process, and
+//! multiplexes many clients' searches onto the existing engine thread
+//! pool.  One warm process, thousands of searches: the "millions of
+//! users" serving shape of the ROADMAP.
+//!
+//! # Protocol
+//!
+//! Newline-delimited JSON over TCP ([`protocol`]).  Each request line is
+//! `{"id": <any>, "method": "<name>", "params": {...}}`; the daemon
+//! answers with zero or more *event* lines (`{"id", "event", ...}`)
+//! followed by exactly one terminal line — `{"id", "result": {...}}` or
+//! `{"id", "error": "..."}`.  `id` is echoed verbatim.  A malformed line
+//! gets `{"id": null, "error": "..."}` and the connection stays open.
+//!
+//! | method       | params                                                           | result |
+//! |--------------|------------------------------------------------------------------|--------|
+//! | `search`     | `network`, `device` \| `devices` (csv), `iters`, `seed`, `mode` (`hw`\|`sw`), `batch`, `threads`, `quant`, `async`, `cache` | per-device `{device, journal_csv, cache_hits, cache_misses, best_*}` + run stats; streams `queued`/`started`/`generation` events |
+//! | `price`      | `network`, `device`, `sw`, `sa`, `quant`                         | `{images_per_sec, dsp, efficiency, cached}` via the shared cache |
+//! | `stats`      | —                                                                | cache sizes + admission/search counters |
+//! | `save-cache` | `path`                                                           | `{designs, frontiers}` snapshot written |
+//! | `shutdown`   | —                                                                | `{ok: true}`, then the daemon drains and exits |
+//!
+//! # Fair admission
+//!
+//! Concurrent `search` requests are bounded by
+//! [`ServeConfig::max_inflight`]; beyond that, requests queue FIFO (a
+//! ticket semaphore — no barging), with a `queued` event telling the
+//! client it is waiting.  `price`/`stats`/`save-cache` never queue.
+//!
+//! # Determinism
+//!
+//! A daemon search runs the exact same entry path as the CLI
+//! ([`ShardedEngine::search_with_cache_ctrl`] over the same evaluator
+//! construction), and the shared cache never changes results — so the
+//! `journal_csv` streamed back is **bit-identical** to the same `hass
+//! search` run, cold or warm, however many clients are connected
+//! (enforced in `tests/serve.rs` and the CI serve-smoke job).
+//!
+//! # Crash containment
+//!
+//! A resident process cannot tolerate the one-shot CLI's panic-on-error
+//! paths: evaluator failures travel through error-carrying
+//! [`EvalCompletion`](crate::engine::EvalCompletion)s and score
+//! infeasible, client disconnects cancel the search between generations
+//! ([`SearchControl`]) and free the admission slot, every residual panic
+//! is caught at the request boundary, and the striped cache locks
+//! recover from poisoning (`util::memo`) — one bad request never takes
+//! the daemon or its warm caches down.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::arch::networks;
+use crate::coordinator::SurrogateEvaluator;
+use crate::dse::frontier::shape_fingerprint;
+use crate::engine::{
+    quantize_points, DesignCache, EngineConfig, SearchConfig, SearchControl, SearchMode,
+    ShardedEngine,
+};
+use crate::hardware::device::DeviceBudget;
+use crate::hardware::resources::ResourceModel;
+use crate::sparsity::{synthesize, SparsityPoint};
+use crate::util::json::Json;
+
+use protocol::{error_line, event_line, parse_request, result_line, Request};
+
+/// Daemon configuration (the listener itself is passed to [`Server::run`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// searches allowed in flight at once; further requests queue FIFO
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_inflight: 2 }
+    }
+}
+
+/// Mutex recovery for daemon state: every lock below guards data with no
+/// cross-field invariant a panicking holder could corrupt, and the daemon
+/// must keep serving after any worker panic.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// FIFO ticket semaphore: at most `max` holders, strictly
+/// first-come-first-served beyond that (no barging — a late small
+/// request cannot overtake an early one).
+struct Admission {
+    max: usize,
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+struct AdmState {
+    /// slots currently held
+    active: usize,
+    /// next ticket to hand out
+    next: u64,
+    /// lowest ticket not yet admitted
+    serving: u64,
+    /// set on shutdown: all waiters are released with `false`
+    closed: bool,
+}
+
+impl Admission {
+    fn new(max: usize) -> Self {
+        Admission {
+            max: max.max(1),
+            state: Mutex::new(AdmState { active: 0, next: 0, serving: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Draw a ticket; the second return is `true` if the caller will have
+    /// to wait (so it can tell its client *before* blocking in [`wait`]).
+    fn ticket(&self) -> (u64, bool) {
+        let mut st = lock_clean(&self.state);
+        let t = st.next;
+        st.next += 1;
+        let waits = st.closed || !(st.serving == t && st.active < self.max);
+        (t, waits)
+    }
+
+    /// Block until ticket `t` is admitted (FIFO).  Returns `false` if the
+    /// daemon shut down instead — the caller must not run its search.
+    fn wait(&self, t: u64) -> bool {
+        let mut st = lock_clean(&self.state);
+        loop {
+            if st.closed {
+                // the ticket is consumed either way, or serving stalls
+                st.serving = st.serving.max(t + 1);
+                self.cv.notify_all();
+                return false;
+            }
+            if st.serving == t && st.active < self.max {
+                st.serving += 1;
+                st.active += 1;
+                return true;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Release a held slot.
+    fn release(&self) {
+        let mut st = lock_clean(&self.state);
+        st.active = st.active.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Release every waiter with `false`; taken slots drain naturally.
+    fn close(&self) {
+        lock_clean(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    fn active(&self) -> usize {
+        lock_clean(&self.state).active
+    }
+
+    /// Tickets drawn but not yet admitted.
+    fn queued(&self) -> u64 {
+        let st = lock_clean(&self.state);
+        st.next - st.serving
+    }
+}
+
+/// Releases an admission slot on every exit path of a search request.
+struct SlotGuard<'a>(&'a Admission);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+/// The resident search daemon: warm shared caches + fair admission.
+/// Construct once, then [`run`](Server::run) on a bound listener.
+pub struct Server {
+    cache: DesignCache,
+    admission: Admission,
+    shutdown: AtomicBool,
+    addr: OnceLock<SocketAddr>,
+    /// live connections by id, so shutdown can unblock idle readers
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_conn: AtomicU64,
+    completed_searches: AtomicU64,
+    rm: ResourceModel,
+}
+
+impl Server {
+    /// A daemon over `cache` (possibly warm from a snapshot).
+    pub fn new(cache: DesignCache, cfg: ServeConfig) -> Self {
+        Server {
+            cache,
+            admission: Admission::new(cfg.max_inflight),
+            shutdown: AtomicBool::new(false),
+            addr: OnceLock::new(),
+            conns: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            completed_searches: AtomicU64::new(0),
+            rm: ResourceModel::default(),
+        }
+    }
+
+    /// The warm shared cache (e.g. to snapshot it after [`run`] returns).
+    pub fn cache(&self) -> &DesignCache {
+        &self.cache
+    }
+
+    /// Accept connections until a `shutdown` request arrives.  Each
+    /// connection gets its own handler thread; all handlers are drained
+    /// before this returns (in-flight searches are cancelled between
+    /// generations by the connection teardown).
+    pub fn run(&self, listener: TcpListener) -> std::io::Result<()> {
+        let addr = listener.local_addr()?;
+        let _ = self.addr.set(addr);
+        std::thread::scope(|sc| {
+            for conn in listener.incoming() {
+                if self.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    lock_clean(&self.conns).push((id, clone));
+                }
+                sc.spawn(move || {
+                    self.handle_conn(stream);
+                    lock_clean(&self.conns).retain(|(cid, _)| *cid != id);
+                });
+            }
+            // teardown: kick every live connection so idle readers see
+            // EOF, in-flight observers fail their next write (cancelling
+            // their searches), and the scope can join all handlers
+            for (_, c) in lock_clean(&self.conns).drain(..) {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        });
+        Ok(())
+    }
+
+    /// One connection: a line loop over sequential requests.  Never
+    /// panics on client input; a malformed line is answered and the
+    /// connection survives it.
+    fn handle_conn(&self, stream: TcpStream) {
+        let Ok(read_half) = stream.try_clone() else { return };
+        let writer = Mutex::new(stream);
+        let reader = BufReader::new(read_half);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, is_shutdown) = match parse_request(&line) {
+                Err(e) => (error_line(&Json::Null, &e), false),
+                Ok(req) => {
+                    let id = req.id.clone();
+                    if req.method == "shutdown" {
+                        let ok = Json::obj(vec![("ok", Json::Bool(true))]);
+                        (result_line(&id, ok), true)
+                    } else {
+                        let resp = match self.dispatch(&req, &writer) {
+                            Ok(result) => result_line(&id, result),
+                            Err(e) => error_line(&id, &e),
+                        };
+                        (resp, false)
+                    }
+                }
+            };
+            if write_line(&writer, &resp).is_err() {
+                break;
+            }
+            if is_shutdown {
+                self.begin_shutdown();
+                break;
+            }
+        }
+    }
+
+    /// Route one request.  Every failure is an `Err` string — the
+    /// request path contains no unwrap/expect on client-controlled data.
+    fn dispatch(&self, req: &Request, writer: &Mutex<TcpStream>) -> Result<Json, String> {
+        match req.method.as_str() {
+            "search" => self.do_search(&req.id, &req.params, writer),
+            "price" => self.do_price(&req.params),
+            "stats" => Ok(self.do_stats()),
+            "save-cache" => self.do_save_cache(&req.params),
+            m => Err(format!(
+                "unknown method '{m}' (search | price | stats | save-cache | shutdown)"
+            )),
+        }
+    }
+
+    /// Flip the shutdown flag and wake the accept loop with a one-shot
+    /// self-connection (accept has no timeout; this is the portable way
+    /// to unblock it without polling).
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.admission.close();
+        if let Some(addr) = self.addr.get() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// `search`: admission-gated, progress-streamed, cancellable.
+    fn do_search(
+        &self,
+        id: &Json,
+        params: &Json,
+        writer: &Mutex<TcpStream>,
+    ) -> Result<Json, String> {
+        let network = str_param(params, "network", "calibnet")?;
+        let net = networks::by_name(&network)
+            .ok_or_else(|| format!("unknown network '{network}'"))?;
+        let devices_spec = str_param(params, "devices", "")?;
+        let devices: Vec<DeviceBudget> = if devices_spec.is_empty() {
+            let d = str_param(params, "device", "u250")?;
+            vec![DeviceBudget::by_name(&d).ok_or_else(|| format!("unknown device '{d}'"))?]
+        } else {
+            DeviceBudget::parse_list(&devices_spec)?
+        };
+        let evaluator = str_param(params, "evaluator", "surrogate")?;
+        if evaluator != "surrogate" && evaluator != "auto" {
+            return Err(format!(
+                "daemon searches run the surrogate evaluator (got '{evaluator}')"
+            ));
+        }
+        let mode = match str_param(params, "mode", "hw")?.as_str() {
+            "sw" => SearchMode::SoftwareOnly,
+            _ => SearchMode::HardwareAware,
+        };
+        let engine = EngineConfig {
+            batch: usize_param(params, "batch", 1)?.max(1),
+            threads: usize_param(params, "threads", 0)?,
+            cache: bool_param(params, "cache", true)?,
+            quant_bits: usize_param(params, "quant", 0)? as u32,
+            async_eval: bool_param(params, "async", false)?,
+        };
+        let cfg = SearchConfig {
+            iterations: usize_param(params, "iters", 96)?,
+            seed: u64_param(params, "seed", 0)?,
+            mode,
+            engine,
+            ..Default::default()
+        };
+        // the exact evaluator construction of the CLI surrogate path —
+        // this is what makes daemon journals bit-identical to `hass
+        // search` runs with the same flags
+        let ev = SurrogateEvaluator {
+            sparsity: synthesize(&net, cfg.seed),
+            net: net.clone(),
+            base_acc: 76.0,
+        };
+
+        // fair admission: bounded in-flight searches, FIFO beyond that
+        let (ticket, waits) = self.admission.ticket();
+        if waits
+            && write_line(
+                writer,
+                &event_line(id, "queued", vec![("queued", Json::Num(1.0))]),
+            )
+            .is_err()
+        {
+            // the client is already gone; give the ticket back via wait
+            // (it still has to be consumed to keep the FIFO moving)
+        }
+        if !self.admission.wait(ticket) {
+            return Err("server is shutting down".to_string());
+        }
+        let _slot = SlotGuard(&self.admission);
+        let _ = write_line(writer, &event_line(id, "started", vec![]));
+
+        // stream per-generation progress; a failed write means the client
+        // disconnected → return false → the search cancels between
+        // generations and the admission slot frees for the next client
+        let observer = |p: crate::engine::SearchProgress| -> bool {
+            write_line(
+                writer,
+                &event_line(
+                    id,
+                    "generation",
+                    vec![
+                        ("generation", Json::Num(p.generation as f64)),
+                        ("done", Json::Num(p.done as f64)),
+                        ("total", Json::Num(p.total as f64)),
+                    ],
+                ),
+            )
+            .is_ok()
+        };
+        let ctrl = SearchControl { observer: Some(&observer) };
+        let eng = ShardedEngine::new(&ev, &net, &self.rm, &devices);
+        // defense in depth: the satellite fixes make the search itself
+        // panic-free on evaluator failure, and the striped caches recover
+        // from poisoning — but a residual panic must still cost only this
+        // request, never the daemon
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            eng.search_with_cache_ctrl(&cfg, &self.cache, &ctrl)
+        }));
+        let result = match outcome {
+            Err(_) => return Err("search panicked; request aborted, caches intact".into()),
+            Ok(None) => return Err("search cancelled (client stopped reading)".into()),
+            Ok(Some(r)) => r,
+        };
+        self.completed_searches.fetch_add(1, Ordering::Relaxed);
+
+        let devices_json: Vec<Json> = result
+            .per_device
+            .iter()
+            .map(|d| {
+                let s = &d.result.stats;
+                let mut pairs = vec![
+                    ("device", Json::Str(d.device.clone())),
+                    ("journal_csv", Json::Str(d.result.to_table().to_csv())),
+                    ("cache_hits", Json::Num(s.cache_hits as f64)),
+                    ("cache_misses", Json::Num(s.cache_misses as f64)),
+                ];
+                if let Some(b) = d.result.try_best_record() {
+                    pairs.push(("best_iter", Json::Num(b.iter as f64)));
+                    pairs.push(("best_accuracy", Json::Num(b.accuracy)));
+                    pairs.push(("best_images_per_sec", Json::Num(b.images_per_sec)));
+                    pairs.push(("best_objective", Json::Num(b.objective)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("devices", Json::Arr(devices_json)),
+            ("generations", Json::Num(result.stats.generations as f64)),
+            ("evaluations", Json::Num(result.stats.evaluations as f64)),
+        ]))
+    }
+
+    /// `price`: one design pricing through the shared cache + frontier
+    /// store — the cheap resident-cache query path (no admission gate).
+    fn do_price(&self, params: &Json) -> Result<Json, String> {
+        let network = str_param(params, "network", "calibnet")?;
+        let net = networks::by_name(&network)
+            .ok_or_else(|| format!("unknown network '{network}'"))?;
+        let d = str_param(params, "device", "u250")?;
+        let dev =
+            DeviceBudget::by_name(&d).ok_or_else(|| format!("unknown device '{d}'"))?;
+        let s_w = f64_param(params, "sw", 0.5)?;
+        let s_a = f64_param(params, "sa", 0.5)?;
+        for (name, s) in [("sw", s_w), ("sa", s_a)] {
+            if !(0.0..1.0).contains(&s) {
+                return Err(format!("param '{name}' must be in [0, 1), got {s}"));
+            }
+        }
+        let quant = usize_param(params, "quant", 12)? as u32;
+        let dse = crate::dse::DseConfig::default();
+        let n = net.compute_layers().len();
+        let pts = quantize_points(&vec![SparsityPoint { s_w, s_a }; n], quant);
+        let shapes: Vec<u64> =
+            net.compute_layers().iter().map(|l| shape_fingerprint(l)).collect();
+        let handle = self.cache.register(&dev, &net, &self.rm, &dse);
+        let cached = self.cache.get(&handle, &pts).is_some();
+        let design = self.cache.get_or_compute(&handle, &pts, || {
+            self.cache
+                .explore_via_frontiers(&handle, &net, &pts, &shapes, &self.rm, &dev, &dse)
+        });
+        Ok(Json::obj(vec![
+            ("images_per_sec", Json::Num(design.images_per_sec(&dev))),
+            ("dsp", Json::Num(design.resources.dsp as f64)),
+            ("efficiency", Json::Num(design.efficiency())),
+            ("cached", Json::Bool(cached)),
+        ]))
+    }
+
+    fn do_stats(&self) -> Json {
+        Json::obj(vec![
+            ("designs", Json::Num(self.cache.len() as f64)),
+            ("frontiers", Json::Num(self.cache.frontier_store().len() as f64)),
+            ("active_searches", Json::Num(self.admission.active() as f64)),
+            ("queued_searches", Json::Num(self.admission.queued() as f64)),
+            (
+                "completed_searches",
+                Json::Num(self.completed_searches.load(Ordering::Relaxed) as f64),
+            ),
+            ("max_inflight", Json::Num(self.admission.max as f64)),
+        ])
+    }
+
+    /// `save-cache`: snapshot the warm stores without stopping the daemon.
+    fn do_save_cache(&self, params: &Json) -> Result<Json, String> {
+        let path = str_param(params, "path", "")?;
+        if path.is_empty() {
+            return Err("save-cache needs a non-empty 'path' param".to_string());
+        }
+        let st = self
+            .cache
+            .save(&path)
+            .map_err(|e| format!("failed to write cache snapshot '{path}': {e}"))?;
+        Ok(Json::obj(vec![
+            ("designs", Json::Num(st.designs as f64)),
+            ("frontiers", Json::Num(st.frontiers as f64)),
+        ]))
+    }
+}
+
+/// One response line (single `write_all`, `\n`-terminated).  Only the
+/// owning handler thread writes to a connection, but the observer closure
+/// needs `Sync` access — hence the mutex.
+fn write_line(writer: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
+    let mut buf = String::with_capacity(line.len() + 1);
+    buf.push_str(line);
+    buf.push('\n');
+    let mut w = lock_clean(writer);
+    w.write_all(buf.as_bytes())
+}
+
+// ------------------------------------------------------ param accessors
+//
+// All tolerate an absent key (default) and reject a wrong-typed or
+// malformed value with an error naming the key — mirroring the graceful
+// `util::cli` getters, and just as unwrap-free.
+
+fn str_param(params: &Json, key: &str, default: &str) -> Result<String, String> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("param '{key}' must be a string")),
+    }
+}
+
+fn f64_param(params: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|f| f.is_finite())
+            .ok_or_else(|| format!("param '{key}' must be a finite number")),
+    }
+}
+
+fn usize_param(params: &Json, key: &str, default: usize) -> Result<usize, String> {
+    let f = f64_param(params, key, default as f64)?;
+    if f < 0.0 || f.fract() != 0.0 || f > u32::MAX as f64 {
+        return Err(format!("param '{key}' must be a non-negative integer"));
+    }
+    Ok(f as usize)
+}
+
+fn u64_param(params: &Json, key: &str, default: u64) -> Result<u64, String> {
+    usize_param(params, key, default as usize).map(|v| v as u64)
+}
+
+fn bool_param(params: &Json, key: &str, default: bool) -> Result<bool, String> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| format!("param '{key}' must be a boolean")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_admits_up_to_max_immediately() {
+        let a = Admission::new(2);
+        let (t0, w0) = a.ticket();
+        assert!(!w0);
+        assert!(a.wait(t0));
+        let (t1, w1) = a.ticket();
+        assert!(!w1);
+        assert!(a.wait(t1));
+        let (_, w2) = a.ticket();
+        assert!(w2, "third concurrent search must queue");
+        assert_eq!(a.active(), 2);
+        assert_eq!(a.queued(), 1);
+    }
+
+    #[test]
+    fn admission_is_fifo_under_contention() {
+        let a = Admission::new(1);
+        let (t0, _) = a.ticket();
+        assert!(a.wait(t0));
+        let order = Mutex::new(Vec::new());
+        std::thread::scope(|sc| {
+            // draw tickets in a known order on the main thread...
+            let tickets: Vec<u64> = (0..4).map(|_| a.ticket().0).collect();
+            for t in tickets {
+                let (a, order) = (&a, &order);
+                sc.spawn(move || {
+                    assert!(a.wait(t));
+                    lock_clean(order).push(t);
+                    a.release();
+                });
+            }
+            a.release(); // free the held slot; the queue drains FIFO
+        });
+        assert_eq!(*lock_clean(&order), vec![1, 2, 3, 4], "admission must be FIFO");
+    }
+
+    #[test]
+    fn admission_close_releases_waiters() {
+        let a = Admission::new(1);
+        let (t0, _) = a.ticket();
+        assert!(a.wait(t0));
+        std::thread::scope(|sc| {
+            let (t1, w1) = a.ticket();
+            assert!(w1);
+            let a2 = &a;
+            let h = sc.spawn(move || a2.wait(t1));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            a.close();
+            assert!(!h.join().expect("waiter thread"), "closed waiter must get false");
+        });
+        // tickets drawn after close never wait forever either
+        let (t2, w2) = a.ticket();
+        assert!(w2);
+        assert!(!a.wait(t2));
+    }
+
+    #[test]
+    fn params_reject_wrong_types_gracefully() {
+        let p = Json::parse(r#"{"iters": "many", "seed": -1, "async": 3, "sw": "x"}"#)
+            .unwrap();
+        assert!(usize_param(&p, "iters", 4).unwrap_err().contains("iters"));
+        assert!(u64_param(&p, "seed", 0).unwrap_err().contains("seed"));
+        assert!(bool_param(&p, "async", false).unwrap_err().contains("async"));
+        assert!(f64_param(&p, "sw", 0.5).unwrap_err().contains("sw"));
+        // absent keys fall back to defaults
+        assert_eq!(usize_param(&p, "batch", 7), Ok(7));
+        assert_eq!(str_param(&p, "mode", "hw"), Ok("hw".to_string()));
+    }
+}

@@ -1,0 +1,122 @@
+//! Wire protocol of the `hass serve` daemon: newline-delimited JSON-RPC.
+//!
+//! Every request is one line of JSON; every response line carries the
+//! request's `id` back.  See the [`crate::server`] module docs for the
+//! full method reference.  Parsing is strictly panic-free: a malformed
+//! line becomes an `Err` the connection handler reports and survives —
+//! the daemon request path must never unwrap client input.
+
+use crate::util::json::Json;
+
+/// One parsed request line: `{"id": ..., "method": "...", "params": {...}}`.
+///
+/// `id` is echoed verbatim on every response line (clients use it to
+/// match streamed events to requests); `params` defaults to an empty
+/// object when absent.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: Json,
+    pub method: String,
+    pub params: Json,
+}
+
+/// Parse one request line.  All failures are `Err` strings suitable for
+/// an error response — never a panic, whatever the client sent.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line.trim()).map_err(|e| format!("bad request: {e}"))?;
+    let method = v
+        .get("method")
+        .and_then(|m| m.as_str())
+        .ok_or("bad request: missing string field 'method'")?
+        .to_string();
+    let id = v.get("id").cloned().unwrap_or(Json::Null);
+    let params = v.get("params").cloned().unwrap_or_else(|| Json::obj(vec![]));
+    Ok(Request { id, method, params })
+}
+
+/// `{"id":...,"error":"..."}` — terminal failure response for a request
+/// (or for an unparseable line, with `id` null).
+pub fn error_line(id: &Json, msg: &str) -> String {
+    Json::obj(vec![("id", id.clone()), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// `{"id":...,"result":{...}}` — terminal success response.
+pub fn result_line(id: &Json, result: Json) -> String {
+    Json::obj(vec![("id", id.clone()), ("result", result)]).to_string()
+}
+
+/// `{"id":...,"event":"...", ...fields}` — non-terminal progress event
+/// streamed while a request is in flight (e.g. per-generation search
+/// progress, admission queueing).
+pub fn event_line(id: &Json, event: &str, fields: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![("id", id.clone()), ("event", Json::Str(event.to_string()))];
+    pairs.extend(fields);
+    Json::obj(pairs).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_request() {
+        let r = parse_request(r#"{"id": 7, "method": "search", "params": {"iters": 4}}"#)
+            .unwrap();
+        assert_eq!(r.id, Json::Num(7.0));
+        assert_eq!(r.method, "search");
+        assert_eq!(r.params.get("iters").and_then(|v| v.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn id_and_params_are_optional() {
+        let r = parse_request(r#"{"method": "stats"}"#).unwrap();
+        assert_eq!(r.id, Json::Null);
+        assert_eq!(r.method, "stats");
+        assert!(matches!(r.params, Json::Obj(_)));
+    }
+
+    /// Every malformed shape is an `Err`, never a panic — the daemon
+    /// answers these with an error line and keeps the connection open.
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        for bad in [
+            "",
+            "not json at all",
+            "{",
+            "[1,2,3]",
+            "42",
+            r#"{"id": 1}"#,
+            r#"{"method": 42}"#,
+            r#"{"method": null}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "accepted malformed line: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn response_lines_are_single_line_json() {
+        let id = Json::Num(3.0);
+        for line in [
+            error_line(&id, "nope\nreally"),
+            result_line(&id, Json::obj(vec![("ok", Json::Bool(true))])),
+            event_line(&id, "generation", vec![("done", Json::Num(2.0))]),
+        ] {
+            assert!(!line.contains('\n'), "embedded newline breaks the line protocol");
+            let v = Json::parse(&line).unwrap();
+            assert_eq!(v.get("id"), Some(&id));
+        }
+    }
+
+    #[test]
+    fn event_line_carries_fields() {
+        let l = event_line(
+            &Json::Str("a".into()),
+            "generation",
+            vec![("done", Json::Num(3.0)), ("total", Json::Num(9.0))],
+        );
+        let v = Json::parse(&l).unwrap();
+        assert_eq!(v.get("event").and_then(|e| e.as_str()), Some("generation"));
+        assert_eq!(v.get("done").and_then(|d| d.as_usize()), Some(3));
+        assert_eq!(v.get("total").and_then(|t| t.as_usize()), Some(9));
+    }
+}

@@ -115,6 +115,14 @@ impl Cli {
     }
 }
 
+/// Parsed argument values.
+///
+/// The typed getters (`get_usize` / `get_u64` / `get_f64`) return `Err`
+/// with a user-facing message when the value does not parse — malformed
+/// *input* must never panic (the CLI prints the error + usage and exits
+/// 2, a daemon reports it to the client).  [`get`](Parsed::get) still
+/// panics on a key that was never registered: that is a programming
+/// error, not input.
 #[derive(Debug)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
@@ -128,22 +136,19 @@ impl Parsed {
             .unwrap_or_else(|| panic!("option --{key} not registered"))
     }
 
-    pub fn get_usize(&self, key: &str) -> usize {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects an integer"))
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        let v = self.get(key);
+        v.parse().map_err(|_| format!("--{key} expects an integer, got '{v}'"))
     }
 
-    pub fn get_u64(&self, key: &str) -> u64 {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects an integer"))
+    pub fn get_u64(&self, key: &str) -> Result<u64, String> {
+        let v = self.get(key);
+        v.parse().map_err(|_| format!("--{key} expects an integer, got '{v}'"))
     }
 
-    pub fn get_f64(&self, key: &str) -> f64 {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects a number"))
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        let v = self.get(key);
+        v.parse().map_err(|_| format!("--{key} expects a number, got '{v}'"))
     }
 
     pub fn get_bool(&self, key: &str) -> bool {
@@ -165,7 +170,7 @@ mod tests {
             .opt("iters", "96", "iterations")
             .parse_from(&args(&[]))
             .unwrap();
-        assert_eq!(p.get_usize("iters"), 96);
+        assert_eq!(p.get_usize("iters"), Ok(96));
     }
 
     #[test]
@@ -175,8 +180,8 @@ mod tests {
             .opt("b", "0", "")
             .parse_from(&args(&["--a", "3", "--b=7"]))
             .unwrap();
-        assert_eq!(p.get_usize("a"), 3);
-        assert_eq!(p.get_usize("b"), 7);
+        assert_eq!(p.get_usize("a"), Ok(3));
+        assert_eq!(p.get_usize("b"), Ok(7));
     }
 
     #[test]
@@ -222,6 +227,50 @@ mod tests {
             .opt("lam", "0.5", "")
             .parse_from(&args(&["--lam", "2.25"]))
             .unwrap();
-        assert_eq!(p.get_f64("lam"), 2.25);
+        assert_eq!(p.get_f64("lam"), Ok(2.25));
+    }
+
+    #[test]
+    fn get_u64_parses() {
+        let p = Cli::new("t")
+            .opt("seed", "0", "")
+            .parse_from(&args(&["--seed=42"]))
+            .unwrap();
+        assert_eq!(p.get_u64("seed"), Ok(42));
+    }
+
+    /// Malformed values are an `Err` naming the option and the value —
+    /// never a panic (`hass search --iters=abc` must exit gracefully).
+    #[test]
+    fn get_usize_rejects_malformed_input() {
+        let p = Cli::new("t")
+            .opt("iters", "96", "")
+            .parse_from(&args(&["--iters=abc"]))
+            .unwrap();
+        let e = p.get_usize("iters").unwrap_err();
+        assert!(e.contains("--iters") && e.contains("abc"), "unhelpful error: {e}");
+        // a negative value is also not a usize
+        let p = Cli::new("t").opt("iters", "96", "").parse_from(&args(&["--iters=-3"]));
+        assert!(p.unwrap().get_usize("iters").is_err());
+    }
+
+    #[test]
+    fn get_u64_rejects_malformed_input() {
+        let p = Cli::new("t")
+            .opt("seed", "0", "")
+            .parse_from(&args(&["--seed", "1.5"]))
+            .unwrap();
+        let e = p.get_u64("seed").unwrap_err();
+        assert!(e.contains("--seed") && e.contains("1.5"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn get_f64_rejects_malformed_input() {
+        let p = Cli::new("t")
+            .opt("sw", "0.5", "")
+            .parse_from(&args(&["--sw", "half"]))
+            .unwrap();
+        let e = p.get_f64("sw").unwrap_err();
+        assert!(e.contains("--sw") && e.contains("half"), "unhelpful error: {e}");
     }
 }

@@ -35,6 +35,16 @@ pub struct StripedMemo<K, V> {
     stripes: Vec<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
 }
 
+/// Stripe locks recover from poisoning: the maps hold no invariant a
+/// panicking holder could half-write (lookup/insert of independent
+/// entries), and a resident `hass serve` process must keep answering
+/// after a worker panic rather than fail every later request.
+fn lock_clean<'m, K, V>(
+    stripe: &'m Mutex<HashMap<K, Arc<OnceLock<V>>>>,
+) -> std::sync::MutexGuard<'m, HashMap<K, Arc<OnceLock<V>>>> {
+    stripe.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
     /// An empty memo with `stripes` independent locks (must be ≥ 1).
     pub fn new(stripes: usize) -> Self {
@@ -59,7 +69,7 @@ impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
     {
         let (cell, fresh) = {
             let stripe = &self.stripes[self.stripe_of(&key)];
-            let mut map = stripe.lock().unwrap();
+            let mut map = lock_clean(stripe);
             match map.get(&key) {
                 Some(c) => (c.clone(), false),
                 None => {
@@ -78,19 +88,19 @@ impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
     /// another thread reads as absent.  Never counts as a hit or miss —
     /// callers recompute, which is benign when `compute` is pure.
     pub fn get(&self, key: &K) -> Option<V> {
-        let cell = self.stripes[self.stripe_of(key)].lock().unwrap().get(key).cloned();
+        let cell = lock_clean(&self.stripes[self.stripe_of(key)]).get(key).cloned();
         cell.and_then(|c| c.get().cloned())
     }
 
     /// Pre-seed (or overwrite) an entry with an already-computed value.
     pub fn insert(&self, key: K, value: V) {
         let stripe = &self.stripes[self.stripe_of(&key)];
-        stripe.lock().unwrap().insert(key, Arc::new(OnceLock::from(value)));
+        lock_clean(stripe).insert(key, Arc::new(OnceLock::from(value)));
     }
 
     /// Total entries across all stripes (including in-flight cells).
     pub fn len(&self) -> usize {
-        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.stripes.iter().map(|s| lock_clean(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -99,7 +109,7 @@ impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
 
     /// Entry count per stripe (for balance diagnostics and tests).
     pub fn stripe_lens(&self) -> Vec<usize> {
-        self.stripes.iter().map(|s| s.lock().unwrap().len()).collect()
+        self.stripes.iter().map(|s| lock_clean(s).len()).collect()
     }
 
     /// Visit every **completed** entry (in-flight cells are skipped) —
@@ -108,7 +118,7 @@ impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {
     /// this memo.
     pub fn for_each_complete(&self, mut f: impl FnMut(&K, &V)) {
         for stripe in &self.stripes {
-            for (k, cell) in stripe.lock().unwrap().iter() {
+            for (k, cell) in lock_clean(stripe).iter() {
                 if let Some(v) = cell.get() {
                     f(k, v);
                 }

@@ -1,0 +1,103 @@
+//! Binary-level CLI tests: the built `hass` executable, driven as a
+//! user would drive it.  The satellite contract under test: malformed
+//! *input* never panics — bad flag values exit 2 with the error and
+//! usage on stderr, unwritable output paths exit 1 with a message, and
+//! degenerate-but-legal inputs (`--iters 0`) succeed.
+
+use std::process::{Command, Output};
+
+fn hass(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_hass"))
+        .args(args)
+        .output()
+        .expect("run hass binary")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn malformed_flag_value_exits_2_with_usage_not_a_panic() {
+    let out = hass(&["search", "--iters=abc"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_of(&out);
+    assert!(
+        err.contains("--iters") && err.contains("abc"),
+        "error must name the flag and the bad value: {err}"
+    );
+    assert!(err.contains("options:"), "usage must be printed: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn malformed_values_never_panic_across_subcommands() {
+    for args in [
+        &["search", "--seed", "1.5"][..],
+        &["search", "--batch=-2"][..],
+        &["dse", "--sw=half"][..],
+        &["simulate", "--images", "lots"][..],
+        &["partition", "--batch", "x"][..],
+    ] {
+        let out = hass(args);
+        assert_eq!(out.status.code(), Some(2), "{args:?}");
+        let err = stderr_of(&out);
+        assert!(!err.contains("panicked"), "{args:?} panicked: {err}");
+        assert!(err.contains("expects"), "{args:?}: unhelpful error: {err}");
+    }
+}
+
+#[test]
+fn unknown_option_and_unknown_device_exit_2() {
+    let out = hass(&["search", "--nonsense", "1"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown option"));
+    let out = hass(&["search", "--device", "tpu"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown device"));
+}
+
+#[test]
+fn zero_iteration_search_exits_cleanly() {
+    let out = hass(&["search", "--iters", "0", "--evaluator", "surrogate"]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "--iters 0 is a legal smoke run; stderr: {}",
+        stderr_of(&out)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("no iterations run"), "missing notice: {stdout}");
+}
+
+#[test]
+fn unwritable_journal_path_exits_1_gracefully() {
+    // the journal's parent "directory" is an existing file
+    let blocker = std::env::temp_dir().join("hass_cli_journal_blocker");
+    std::fs::write(&blocker, "occupied").expect("create blocker file");
+    let journal = blocker.join("j.csv");
+    let out = hass(&[
+        "search",
+        "--iters",
+        "1",
+        "--evaluator",
+        "surrogate",
+        "--journal",
+        journal.to_str().expect("utf-8 temp path"),
+    ]);
+    std::fs::remove_file(&blocker).ok();
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("failed to write journal"), "unhelpful error: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn client_without_a_daemon_fails_gracefully() {
+    // a port nobody listens on: connect fails, exit 1, helpful hint
+    let out = hass(&["client", "stats", "--addr", "127.0.0.1:1"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr_of(&out);
+    assert!(err.contains("failed to connect"), "unhelpful error: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}

@@ -11,8 +11,9 @@ use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
     search, search_sharded, search_sharded_with_cache, CandidateEvaluator, DesignCache,
-    Engine, EngineConfig, EvalCompletion, EvalPoint, EvalRequest, MeasuredEvaluator,
-    SearchConfig, SearchMode, SimulatedEvaluator, SurrogateEvaluator,
+    Engine, EngineConfig, EvalCompletion, EvalError, EvalPoint, EvalRequest,
+    MeasuredEvaluator, SearchConfig, SearchMode, SimulatedEvaluator, SurrogateEvaluator,
+    INFEASIBLE_OBJECTIVE,
 };
 use hass::dse::{explore, explore_scan, network_throughput, DseConfig};
 use hass::engine::quantize_points;
@@ -293,7 +294,7 @@ impl CandidateEvaluator for SlowOooEvaluator {
     ) {
         let mut done: Vec<EvalCompletion> = requests
             .into_iter()
-            .map(|r| EvalCompletion { slot: r.slot, result: self.eval(&r.plan) })
+            .map(|r| EvalCompletion { slot: r.slot, result: Ok(self.eval(&r.plan)) })
             .collect();
         done.reverse();
         for c in done {
@@ -605,6 +606,159 @@ fn warm_from_disk_search_is_bit_identical_with_zero_misses() {
         }
         assert_eq!(a.result.best, b.result.best);
     }
+}
+
+// ===== panic-free search paths ==========================================
+
+/// Evaluator that *fails* as a pure function of the plan: any plan whose
+/// summed weight sparsity exceeds `fail_above` returns `Err` from
+/// `try_eval`.  Purity is the load-bearing property — an impure failure
+/// predicate (a call counter, a clock) would make journals
+/// nondeterministic, which the bit-identity assertions below would catch.
+struct FlakyEvaluator {
+    sparsity: NetworkSparsity,
+    fail_above: f64,
+}
+
+impl FlakyEvaluator {
+    fn calibnet(seed: u64, fail_above: f64) -> Self {
+        FlakyEvaluator { sparsity: synthesize(&networks::calibnet(), seed), fail_above }
+    }
+}
+
+impl CandidateEvaluator for FlakyEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        &self.sparsity
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        self.try_eval(plan).expect("engine must call try_eval, not eval")
+    }
+
+    fn try_eval(&self, plan: &PruningPlan) -> Result<EvalPoint, EvalError> {
+        let points = plan.points(&self.sparsity);
+        let s: f64 = points.iter().map(|p| p.s_w).sum();
+        if s > self.fail_above {
+            return Err(format!("backend rejected plan (s = {s:.3})"));
+        }
+        Ok(EvalPoint { accuracy: 92.0 - 10.0 * s, points, sim: Vec::new() })
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        92.0
+    }
+}
+
+/// A backend that fails **every** measurement must not kill the search:
+/// all iterations complete, every record is scored with the finite
+/// infeasible objective (TPE asserts finiteness — `NEG_INFINITY` would
+/// abort it), and the journal is bit-identical between the sync and
+/// async pipelines.
+#[test]
+fn all_failing_evaluations_complete_the_search_infeasibly() {
+    let ev = FlakyEvaluator::calibnet(70, -1.0); // s >= 0 always: all plans fail
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let cfg = sharded_cfg(10, 17, 0);
+    let r = search(&ev, &net, &rm, &dev, &cfg);
+    assert_eq!(r.records.len(), 10, "failures must not shorten the journal");
+    for rec in &r.records {
+        assert!(rec.objective.is_finite(), "infeasible objective must stay finite");
+        assert_eq!(rec.objective, INFEASIBLE_OBJECTIVE, "iter {}", rec.iter);
+        assert_eq!(rec.accuracy, 0.0);
+        assert_eq!(rec.images_per_sec, 0.0);
+        assert!(!rec.simulated);
+    }
+    let mut acfg = sharded_cfg(10, 17, 0);
+    acfg.engine.async_eval = true;
+    let r2 = search(&ev, &net, &rm, &dev, &acfg);
+    assert_eq!(
+        objective_bits_of(&r),
+        objective_bits_of(&r2),
+        "failing-evaluator journal diverged between sync and async pipelines"
+    );
+}
+
+/// A never-failing `try_eval` journals identically across the sync and
+/// async pipelines — the error plumbing costs nothing when unused — and
+/// a cache that lived through an all-failing search serves a healthy
+/// search afterwards (failures never poison or pollute the stores).
+#[test]
+fn failure_plumbing_is_free_and_never_poisons_the_cache() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250()];
+    let cfg = sharded_cfg(8, 21, 0);
+    let healthy = StubEvaluator::calibnet(70);
+    let never_fails = FlakyEvaluator::calibnet(70, f64::INFINITY);
+    let a = search_sharded(&never_fails, &net, &rm, &devices, &cfg);
+    let mut acfg = sharded_cfg(8, 21, 0);
+    acfg.engine.async_eval = true;
+    let b = search_sharded(&never_fails, &net, &rm, &devices, &acfg);
+    assert_eq!(
+        objective_bits_of(&a.per_device[0].result),
+        objective_bits_of(&b.per_device[0].result)
+    );
+    // ...and cache survival: an all-failing search over a shared cache,
+    // then a healthy one on the same cache
+    let cache = DesignCache::new();
+    let all_fail = FlakyEvaluator::calibnet(70, -1.0);
+    let failed = search_sharded_with_cache(&all_fail, &net, &rm, &devices, &cfg, &cache);
+    assert!(failed
+        .per_device[0]
+        .result
+        .records
+        .iter()
+        .all(|r| r.objective == INFEASIBLE_OBJECTIVE));
+    let after = search_sharded_with_cache(&healthy, &net, &rm, &devices, &cfg, &cache);
+    assert_eq!(after.per_device[0].result.records.len(), 8);
+    assert!(
+        after.per_device[0].result.best_record().objective > INFEASIBLE_OBJECTIVE,
+        "healthy search on the shared cache must find a feasible best"
+    );
+}
+
+/// `--iters 0` is a legal smoke run: empty journal, no best record, no
+/// panic anywhere on the result surface.
+#[test]
+fn zero_iteration_search_has_no_best_and_no_panics() {
+    let ev = StubEvaluator::calibnet(71);
+    let net = networks::calibnet();
+    let r = search(
+        &ev,
+        &net,
+        &ResourceModel::default(),
+        &DeviceBudget::u250(),
+        &sharded_cfg(0, 1, 0),
+    );
+    assert!(r.records.is_empty());
+    assert!(r.try_best_record().is_none(), "no iterations -> no best record");
+    assert!(r.efficiency_trajectory().is_empty());
+    let csv = r.to_table().to_csv();
+    assert_eq!(csv.lines().count(), 1, "journal must be header-only: {csv:?}");
+}
+
+/// An unwritable journal path is an `Err` from `write_journal`, not a
+/// panic (the CLI turns it into exit code 1).
+#[test]
+fn journal_write_failure_is_an_error_not_a_panic() {
+    let ev = StubEvaluator::calibnet(72);
+    let net = networks::calibnet();
+    let r = search(
+        &ev,
+        &net,
+        &ResourceModel::default(),
+        &DeviceBudget::u250(),
+        &sharded_cfg(2, 1, 0),
+    );
+    // the parent "directory" is an existing *file*, so create_dir_all fails
+    let blocker = std::env::temp_dir().join("hass_journal_blocker_test");
+    std::fs::write(&blocker, "occupied").unwrap();
+    let path = blocker.join("journal.csv");
+    let err = r.write_journal(path.to_str().unwrap());
+    std::fs::remove_file(&blocker).ok();
+    assert!(err.is_err(), "writing under a file must fail gracefully");
 }
 
 #[test]

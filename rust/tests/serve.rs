@@ -1,0 +1,298 @@
+//! Daemon protocol tests: a real [`Server`] on an OS-assigned port,
+//! driven over TCP exactly like `hass client` would.
+//!
+//! The invariants pinned here are the serve tentpole's acceptance
+//! criteria: malformed requests are answered (never crash the daemon or
+//! the connection), concurrent searches stream journals bit-identical to
+//! the same search through the library entry points, a client
+//! disconnecting mid-search frees its admission slot for the next
+//! client, and `shutdown` drains the accept loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use hass::arch::networks;
+use hass::coordinator::{
+    search_sharded_with_cache, DesignCache, EngineConfig, SearchConfig, SurrogateEvaluator,
+};
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::server::{ServeConfig, Server};
+use hass::sparsity::synthesize;
+use hass::util::json::Json;
+
+fn start_server(max_inflight: usize) -> (Arc<Server>, SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Arc::new(Server::new(
+        DesignCache::new(),
+        ServeConfig { max_inflight },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind test port");
+    let addr = listener.local_addr().expect("local addr");
+    let s = server.clone();
+    let handle = std::thread::spawn(move || s.run(listener).expect("accept loop"));
+    (server, addr, handle)
+}
+
+fn send_line(stream: &TcpStream, line: &str) {
+    let mut w = stream;
+    w.write_all(format!("{line}\n").as_bytes()).expect("send request line");
+}
+
+/// Read one response line (blocking) and parse it.
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read response line");
+    assert!(n > 0, "connection closed while a response was expected");
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+/// Read lines until the terminal result/error for `id`; returns
+/// (events seen, terminal line).
+fn read_until_result(reader: &mut BufReader<TcpStream>, id: f64) -> (Vec<Json>, Json) {
+    let mut events = Vec::new();
+    loop {
+        let v = read_json(reader);
+        assert_eq!(
+            v.get("id").and_then(|i| i.as_f64()),
+            Some(id),
+            "response for a different request interleaved: {v:?}"
+        );
+        if v.get("event").is_some() {
+            events.push(v);
+            continue;
+        }
+        return (events, v);
+    }
+}
+
+fn shutdown_and_join(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let stream = TcpStream::connect(addr).expect("connect for shutdown");
+    send_line(&stream, r#"{"id": 99, "method": "shutdown"}"#);
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let (_, v) = read_until_result(&mut reader, 99.0);
+    assert!(v.get("result").is_some(), "shutdown must be acknowledged: {v:?}");
+    handle.join().expect("accept loop must drain and exit");
+}
+
+/// The canonical search request the bit-identity tests use; must mirror
+/// `reference_csv` below flag for flag.
+fn search_request(id: u64, iters: usize, seed: u64) -> String {
+    format!(
+        r#"{{"id": {id}, "method": "search", "params": {{"network": "calibnet", "device": "u250", "iters": {iters}, "seed": {seed}, "batch": 4, "quant": 12}}}}"#
+    )
+}
+
+/// The same search through the library entry points — what `hass search
+/// --network calibnet --device u250 --batch 4 --quant 12` runs.
+fn reference_csv(iters: usize, seed: u64) -> String {
+    let net = networks::calibnet();
+    let ev = SurrogateEvaluator {
+        sparsity: synthesize(&net, seed),
+        net: net.clone(),
+        base_acc: 76.0,
+    };
+    let cfg = SearchConfig {
+        iterations: iters,
+        seed,
+        engine: EngineConfig {
+            batch: 4,
+            threads: 0,
+            cache: true,
+            quant_bits: 12,
+            async_eval: false,
+        },
+        ..Default::default()
+    };
+    let devices = [DeviceBudget::u250()];
+    let r = search_sharded_with_cache(
+        &ev,
+        &net,
+        &ResourceModel::default(),
+        &devices,
+        &cfg,
+        &DesignCache::new(),
+    );
+    r.per_device[0].result.to_table().to_csv()
+}
+
+fn run_search(addr: SocketAddr, id: u64, iters: usize, seed: u64) -> (Vec<Json>, Json) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    send_line(&stream, &search_request(id, iters, seed));
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    read_until_result(&mut reader, id as f64)
+}
+
+fn journal_of(terminal: &Json) -> String {
+    let devices = terminal
+        .get("result")
+        .and_then(|r| r.get("devices"))
+        .and_then(|d| d.as_arr())
+        .unwrap_or_else(|| panic!("search failed: {terminal:?}"));
+    assert_eq!(devices.len(), 1);
+    devices[0]
+        .get("journal_csv")
+        .and_then(|c| c.as_str())
+        .expect("journal_csv in device result")
+        .to_string()
+}
+
+#[test]
+fn malformed_lines_are_answered_and_the_connection_survives() {
+    let (_server, addr, handle) = start_server(2);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    for bad in ["not json at all", "{", "[1, 2, 3]", r#"{"id": 1}"#, r#"{"method": 42}"#] {
+        send_line(&stream, bad);
+        let v = read_json(&mut reader);
+        assert!(
+            v.get("error").and_then(|e| e.as_str()).is_some(),
+            "malformed line {bad:?} must get an error response: {v:?}"
+        );
+    }
+    // an unknown method and broken params are errors too, echoing the id
+    send_line(&stream, r#"{"id": 5, "method": "frobnicate"}"#);
+    let v = read_json(&mut reader);
+    assert_eq!(v.get("id").and_then(|i| i.as_f64()), Some(5.0));
+    assert!(v.get("error").and_then(|e| e.as_str()).unwrap().contains("unknown method"));
+    send_line(
+        &stream,
+        r#"{"id": 6, "method": "search", "params": {"network": "no-such-net"}}"#,
+    );
+    let v = read_json(&mut reader);
+    assert!(v.get("error").and_then(|e| e.as_str()).unwrap().contains("no-such-net"));
+    send_line(&stream, r#"{"id": 7, "method": "search", "params": {"iters": "many"}}"#);
+    let v = read_json(&mut reader);
+    assert!(v.get("error").and_then(|e| e.as_str()).unwrap().contains("iters"));
+    // the same connection still serves valid requests after all that
+    send_line(&stream, r#"{"id": 8, "method": "stats"}"#);
+    let v = read_json(&mut reader);
+    let stats = v.get("result").expect("stats result");
+    assert_eq!(stats.get("completed_searches").and_then(|c| c.as_usize()), Some(0));
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
+
+/// Two clients searching concurrently each get, streamed back, the
+/// bit-identical journal of the same search run through the library (and
+/// therefore of the `hass search` CLI, which prints exactly this CSV) —
+/// the cache being shared and contended never changes results.
+#[test]
+fn concurrent_daemon_searches_are_bit_identical_to_the_library() {
+    let want = reference_csv(6, 3);
+    let (_server, addr, handle) = start_server(2);
+    let (a, b) = std::thread::scope(|s| {
+        let ta = s.spawn(|| run_search(addr, 1, 6, 3));
+        let tb = s.spawn(|| run_search(addr, 2, 6, 3));
+        (ta.join().expect("client a"), tb.join().expect("client b"))
+    });
+    for (events, terminal) in [&a, &b] {
+        assert!(
+            events.iter().any(|e| {
+                e.get("event").and_then(|v| v.as_str()) == Some("generation")
+            }),
+            "per-generation progress must stream to each client"
+        );
+        assert_eq!(journal_of(terminal), want, "daemon journal diverged from library");
+    }
+    // a warm repeat on the now-hot shared cache: still bit-identical,
+    // and every pricing is served from memory (zero misses)
+    let (_, warm) = run_search(addr, 3, 6, 3);
+    assert_eq!(journal_of(&warm), want, "warm daemon journal diverged");
+    let dev = &warm.get("result").unwrap().get("devices").unwrap().as_arr().unwrap()[0];
+    assert_eq!(
+        dev.get("cache_misses").and_then(|m| m.as_usize()),
+        Some(0),
+        "a warm repeat must serve every pricing from the resident cache"
+    );
+    assert!(dev.get("cache_hits").and_then(|h| h.as_usize()).unwrap() > 0);
+    shutdown_and_join(addr, handle);
+}
+
+/// With a single admission slot, a client that disconnects mid-search
+/// must have its search cancelled (between generations) and the slot
+/// released — the next client's search completes instead of queueing
+/// forever.
+#[test]
+fn disconnect_mid_search_frees_the_admission_slot() {
+    let (_server, addr, handle) = start_server(1);
+    // client A: many cheap generations, so the disconnect lands mid-run
+    let a = TcpStream::connect(addr).expect("connect a");
+    send_line(&a, &search_request(10, 48, 5));
+    let mut ra = BufReader::new(a.try_clone().expect("clone"));
+    // wait for evidence the search is actually running...
+    loop {
+        let v = read_json(&mut ra);
+        if v.get("event").and_then(|e| e.as_str()) == Some("generation") {
+            break;
+        }
+        assert!(v.get("error").is_none(), "search a failed to start: {v:?}");
+    }
+    // ...then vanish without reading the rest
+    drop(ra);
+    drop(a);
+    // client B: must be admitted once A's slot frees, and complete
+    let (_events, terminal) = run_search(addr, 11, 2, 6);
+    assert!(
+        terminal.get("result").is_some(),
+        "client b's search must complete after a's disconnect: {terminal:?}"
+    );
+    shutdown_and_join(addr, handle);
+}
+
+/// `iters: 0` over the wire: a legal no-op search — header-only journal,
+/// no best fields, no panic.
+#[test]
+fn zero_iteration_daemon_search_returns_an_empty_journal() {
+    let (_server, addr, handle) = start_server(2);
+    let (_events, terminal) = run_search(addr, 20, 0, 1);
+    let result = terminal.get("result").expect("zero-iteration search must succeed");
+    let devices = result.get("devices").and_then(|d| d.as_arr()).unwrap();
+    assert_eq!(devices.len(), 1);
+    assert!(devices[0].get("best_iter").is_none(), "no iterations -> no best");
+    let csv = devices[0].get("journal_csv").and_then(|c| c.as_str()).unwrap();
+    assert_eq!(csv.lines().count(), 1, "journal must be header-only: {csv:?}");
+    shutdown_and_join(addr, handle);
+}
+
+/// `price` and `save-cache` round-trip through the resident cache: the
+/// second identical pricing is served cached, and the snapshot written
+/// by `save-cache` loads back with the priced design in it.
+#[test]
+fn price_and_save_cache_use_the_resident_stores() {
+    let (_server, addr, handle) = start_server(2);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let price = r#"{"id": 1, "method": "price", "params": {"network": "calibnet", "device": "u250", "sw": 0.5, "sa": 0.5, "quant": 12}}"#;
+    send_line(&stream, price);
+    let (_, cold) = read_until_result(&mut reader, 1.0);
+    let cold = cold.get("result").expect("price result").clone();
+    assert_eq!(cold.get("cached").and_then(|c| c.as_bool()), Some(false));
+    assert!(cold.get("images_per_sec").and_then(|i| i.as_f64()).unwrap() > 0.0);
+    let price2 = r#"{"id": 2, "method": "price", "params": {"network": "calibnet", "device": "u250", "sw": 0.5, "sa": 0.5, "quant": 12}}"#;
+    send_line(&stream, price2);
+    let (_, warm) = read_until_result(&mut reader, 2.0);
+    let warm = warm.get("result").expect("price result").clone();
+    assert_eq!(warm.get("cached").and_then(|c| c.as_bool()), Some(true));
+    assert_eq!(
+        warm.get("images_per_sec").and_then(|i| i.as_f64()).unwrap().to_bits(),
+        cold.get("images_per_sec").and_then(|i| i.as_f64()).unwrap().to_bits(),
+        "a cache hit must return the identical design"
+    );
+    // snapshot the warm store and load it back
+    let path = std::env::temp_dir().join("hass_serve_save_cache_test.json");
+    let req = format!(
+        r#"{{"id": 3, "method": "save-cache", "params": {{"path": {}}}}}"#,
+        Json::Str(path.to_string_lossy().into_owned()).to_string()
+    );
+    send_line(&stream, &req);
+    let (_, saved) = read_until_result(&mut reader, 3.0);
+    let saved = saved.get("result").expect("save-cache result").clone();
+    assert!(saved.get("designs").and_then(|d| d.as_usize()).unwrap() >= 1);
+    let (loaded, st) = DesignCache::load(&path).expect("snapshot loads");
+    std::fs::remove_file(&path).ok();
+    assert!(st.designs >= 1);
+    assert!(loaded.len() >= 1);
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
