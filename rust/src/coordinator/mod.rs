@@ -44,11 +44,12 @@ use crate::sparsity::{NetworkSparsity, SparsityPoint};
 use crate::util::clampf;
 
 pub use crate::engine::{
-    CandidateEvaluator, DesignCache, DeviceSearchResult, Engine, EngineConfig,
-    EngineStats, EvalCompletion, EvalError, EvalPoint, EvalRequest, ParetoPoint,
-    SearchConfig, SearchControl, SearchMode, SearchProgress, SearchRecord, SearchResult,
-    ShardedEngine, ShardedSearchResult, ShardedStats, SimScore, SimulatedEvaluator,
-    SnapshotStats, INFEASIBLE_OBJECTIVE,
+    resume_fingerprint, CandidateEvaluator, Checkpoint, CheckpointSpec, DesignCache,
+    DeviceSearchResult, Engine, EngineConfig, EngineStats, EvalCompletion, EvalError,
+    EvalPoint, EvalRequest, ParetoPoint, RetryPolicy, SearchConfig, SearchControl,
+    SearchMode, SearchProgress, SearchRecord, SearchResult, ShardedEngine,
+    ShardedSearchResult, ShardedStats, SimScore, SimulatedEvaluator, SnapshotStats,
+    INFEASIBLE_OBJECTIVE, TRANSIENT_PREFIX,
 };
 /// Historical name of [`CandidateEvaluator`], kept for downstream callers.
 pub use crate::engine::CandidateEvaluator as Evaluate;
@@ -226,6 +227,36 @@ pub fn search_sharded_with_cache(
     cache: &DesignCache,
 ) -> ShardedSearchResult {
     ShardedEngine::new(evaluator, target, rm, devices).search_with_cache(cfg, cache)
+}
+
+/// [`search_with_cache`] with a [`SearchControl`] (progress observer /
+/// cancellation / checkpoint resume).  `None` means the observer
+/// cancelled the search.
+pub fn search_with_cache_ctrl(
+    evaluator: &dyn Evaluate,
+    target: &Network,
+    rm: &ResourceModel,
+    dev: &DeviceBudget,
+    cfg: &SearchConfig,
+    cache: &DesignCache,
+    ctrl: &SearchControl<'_>,
+) -> Option<SearchResult> {
+    Engine::new(evaluator, target, rm, dev).search_with_cache_ctrl(cfg, cache, ctrl)
+}
+
+/// [`search_sharded_with_cache`] with a [`SearchControl`]; see
+/// [`search_with_cache_ctrl`].
+pub fn search_sharded_with_cache_ctrl(
+    evaluator: &dyn Evaluate,
+    target: &Network,
+    rm: &ResourceModel,
+    devices: &[DeviceBudget],
+    cfg: &SearchConfig,
+    cache: &DesignCache,
+    ctrl: &SearchControl<'_>,
+) -> Option<ShardedSearchResult> {
+    ShardedEngine::new(evaluator, target, rm, devices)
+        .search_with_cache_ctrl(cfg, cache, ctrl)
 }
 
 #[cfg(test)]

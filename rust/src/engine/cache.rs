@@ -92,6 +92,31 @@
 //! mismatches need no load-time handling at all: the pricing-context
 //! fingerprint is part of every key, so entries saved under another
 //! network / resource model / DSE config simply never hit.
+//!
+//! # Compaction and cross-process sharing
+//!
+//! Long-lived cache files only grow, so both stores track *usage*: each
+//! [`get_or_compute`](DesignCache::get_or_compute) /
+//! [`get_or_build`](FrontierStore::get_or_build) bumps a per-entry use
+//! count and last-touched tick (counter-free [`get`](DesignCache::get) /
+//! [`insert`](DesignCache::insert) deliberately do not, so pre-seeded
+//! reference designs and snapshot rebuilds stay invisible to the
+//! accounting).  Usage rides along in the snapshot as optional `uses` /
+//! `tick` entry fields — *excluded* from the `check` checksum, so the
+//! format version stays 1 and old snapshots load unchanged — and
+//! survives a save/load round trip.
+//! [`save_compacted`](DesignCache::save_compacted) with a nonzero cap
+//! evicts least-recently-used entries (oldest tick first, then fewest
+//! uses) past the cap, per store.
+//!
+//! Saves are also safe against *concurrent* savers sharing one
+//! `--cache-file`: the writer takes a best-effort advisory lock (an
+//! atomically created `<path>.lock` sibling, with bounded backoff and
+//! stale-lock stealing), merges entries already on disk that it does not
+//! hold in memory (the in-memory version of an entry always wins), and
+//! renames the temp file into place — so two processes warming one
+//! snapshot union their work instead of the last writer discarding the
+//! first's.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -104,6 +129,7 @@ use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::{ResourceModel, Resources};
 use crate::hardware::LayerDesign;
 use crate::sparsity::SparsityPoint;
+use crate::util::fault;
 use crate::util::json::{u64_from_hex, u64_to_hex, Json};
 use crate::util::memo::StripedMemo;
 
@@ -288,11 +314,19 @@ struct FrontierKey {
 /// on either); the memo's single-compute contract applies per frontier.
 pub struct FrontierStore {
     memo: StripedMemo<FrontierKey, Arc<LayerFrontier>>,
+    /// per-entry (use count, last-touched tick) for LRU compaction; one
+    /// short-lived lock per lookup is noise next to a frontier build
+    usage: Mutex<HashMap<FrontierKey, (u64, u64)>>,
+    clock: AtomicU64,
 }
 
 impl FrontierStore {
     fn new() -> Self {
-        FrontierStore { memo: StripedMemo::new(STRIPES) }
+        FrontierStore {
+            memo: StripedMemo::new(STRIPES),
+            usage: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+        }
     }
 
     /// Total frontiers across all stripes (including in-flight cells).
@@ -322,15 +356,32 @@ impl FrontierStore {
             shape,
             point: (point.s_w.to_bits(), point.s_a.to_bits()),
         };
-        let (frontier, fresh) =
-            self.memo.get_or_compute(key, || Arc::new(build_frontier(layer, point, rm, dev)));
+        let (frontier, fresh) = self
+            .memo
+            .get_or_compute(key.clone(), || Arc::new(build_frontier(layer, point, rm, dev)));
         if fresh {
             handle.stats.frontier_misses.fetch_add(1, Ordering::Relaxed);
         } else {
             handle.stats.frontier_hits.fetch_add(1, Ordering::Relaxed);
         }
+        touch(&self.usage, &self.clock, key);
         frontier
     }
+}
+
+/// Bump an entry's (uses, last tick) in a store's usage map.  The maps
+/// hold no cross-entry invariant, so a poisoned lock is recovered like
+/// everywhere else in the cache.
+fn touch<K: std::hash::Hash + Eq>(
+    usage: &Mutex<HashMap<K, (u64, u64)>>,
+    clock: &AtomicU64,
+    key: K,
+) {
+    let tick = clock.fetch_add(1, Ordering::Relaxed) + 1;
+    let mut map = usage.lock().unwrap_or_else(|p| p.into_inner());
+    let e = map.entry(key).or_insert((0, 0));
+    e.0 += 1;
+    e.1 = tick;
 }
 
 /// Thread-safe, multi-device memo table for [`crate::dse::explore`]
@@ -344,6 +395,9 @@ pub struct DesignCache {
     designs: StripedMemo<Key, NetworkDesign>,
     devices: Mutex<HashMap<u64, Arc<DevStats>>>,
     frontiers: FrontierStore,
+    /// per-entry (use count, last-touched tick) for LRU compaction
+    usage: Mutex<HashMap<Key, (u64, u64)>>,
+    clock: AtomicU64,
 }
 
 impl Default for DesignCache {
@@ -359,6 +413,8 @@ impl DesignCache {
             designs: StripedMemo::new(STRIPES),
             devices: Mutex::new(HashMap::new()),
             frontiers: FrontierStore::new(),
+            usage: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
         }
     }
 
@@ -453,12 +509,14 @@ impl DesignCache {
     where
         F: FnOnce() -> NetworkDesign,
     {
-        let (design, fresh) = self.designs.get_or_compute(Self::key(handle, points), compute);
+        let key = Self::key(handle, points);
+        let (design, fresh) = self.designs.get_or_compute(key.clone(), compute);
         if fresh {
             handle.stats.misses.fetch_add(1, Ordering::Relaxed);
         } else {
             handle.stats.hits.fetch_add(1, Ordering::Relaxed);
         }
+        touch(&self.usage, &self.clock, key);
         design
     }
 
@@ -503,17 +561,44 @@ impl DesignCache {
     /// order is canonical (sorted by serialization), so the same cache
     /// contents always produce the same file.
     pub fn to_snapshot(&self) -> Json {
-        let mut designs: Vec<Json> = Vec::new();
-        self.designs.for_each_complete(|k, v| designs.push(design_to_json(k, v)));
-        designs.sort_by_cached_key(|j| j.to_string());
-        let mut frontiers: Vec<Json> = Vec::new();
-        self.frontiers.memo.for_each_complete(|k, f| frontiers.push(frontier_to_json(k, f)));
-        frontiers.sort_by_cached_key(|j| j.to_string());
+        let (designs, frontiers) = self.entry_lists();
+        Self::snapshot_doc(designs, frontiers)
+    }
+
+    /// Every completed entry of both stores as `(tick, uses, entry)` —
+    /// the working set [`Self::to_snapshot`] and
+    /// [`Self::save_compacted`] order, merge and evict over.
+    fn entry_lists(&self) -> (Vec<SnapshotEntry>, Vec<SnapshotEntry>) {
+        let mut designs: Vec<SnapshotEntry> = Vec::new();
+        {
+            let usage = self.usage.lock().unwrap_or_else(|p| p.into_inner());
+            self.designs.for_each_complete(|k, v| {
+                let (uses, tick) = usage.get(k).copied().unwrap_or((0, 0));
+                designs.push((tick, uses, design_to_json(k, v, uses, tick)));
+            });
+        }
+        let mut frontiers: Vec<SnapshotEntry> = Vec::new();
+        {
+            let usage = self.frontiers.usage.lock().unwrap_or_else(|p| p.into_inner());
+            self.frontiers.memo.for_each_complete(|k, f| {
+                let (uses, tick) = usage.get(k).copied().unwrap_or((0, 0));
+                frontiers.push((tick, uses, frontier_to_json(k, f, uses, tick)));
+            });
+        }
+        (designs, frontiers)
+    }
+
+    /// Assemble the versioned document in canonical (sorted) entry order.
+    fn snapshot_doc(designs: Vec<SnapshotEntry>, frontiers: Vec<SnapshotEntry>) -> Json {
+        let mut dj: Vec<Json> = designs.into_iter().map(|(_, _, j)| j).collect();
+        dj.sort_by_cached_key(|j| j.to_string());
+        let mut fj: Vec<Json> = frontiers.into_iter().map(|(_, _, j)| j).collect();
+        fj.sort_by_cached_key(|j| j.to_string());
         Json::obj(vec![
             ("format", Json::Str(SNAPSHOT_FORMAT.into())),
             ("version", Json::Num(SNAPSHOT_VERSION)),
-            ("designs", Json::Arr(designs)),
-            ("frontiers", Json::Arr(frontiers)),
+            ("designs", Json::Arr(dj)),
+            ("frontiers", Json::Arr(fj)),
         ])
     }
 
@@ -539,28 +624,51 @@ impl DesignCache {
             .get("designs")
             .and_then(|d| d.as_arr())
             .ok_or_else(|| "snapshot missing 'designs' array".to_string())?;
+        let mut max_tick = 0u64;
         for entry in designs {
             match design_from_json(entry) {
                 Some((key, design)) => {
+                    let (uses, tick) = usage_of(entry);
+                    if uses > 0 {
+                        max_tick = max_tick.max(tick);
+                        cache
+                            .usage
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .insert(key.clone(), (uses, tick));
+                    }
                     cache.designs.insert(key, design);
                     stats.designs += 1;
                 }
                 None => stats.skipped += 1,
             }
         }
+        cache.clock.store(max_tick, Ordering::Relaxed);
         let frontiers = snapshot
             .get("frontiers")
             .and_then(|d| d.as_arr())
             .ok_or_else(|| "snapshot missing 'frontiers' array".to_string())?;
+        let mut max_tick = 0u64;
         for entry in frontiers {
             match frontier_from_json(entry) {
                 Some((key, frontier)) => {
+                    let (uses, tick) = usage_of(entry);
+                    if uses > 0 {
+                        max_tick = max_tick.max(tick);
+                        cache
+                            .frontiers
+                            .usage
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .insert(key.clone(), (uses, tick));
+                    }
                     cache.frontiers.memo.insert(key, frontier);
                     stats.frontiers += 1;
                 }
                 None => stats.skipped += 1,
             }
         }
+        cache.frontiers.clock.store(max_tick, Ordering::Relaxed);
         Ok((cache, stats))
     }
 
@@ -570,18 +678,59 @@ impl DesignCache {
     /// interrupted save (Ctrl-C, OOM mid-sweep) leaves the previous good
     /// snapshot intact instead of a truncated file.
     pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<SnapshotStats> {
+        self.save_compacted(path, 0)
+    }
+
+    /// [`save`](Self::save) with optional LRU compaction: a nonzero
+    /// `max_entries` keeps at most that many design and frontier entries
+    /// each, evicting least-recently-used entries first (oldest tick,
+    /// then fewest uses — see the module docs).  Every save, capped or
+    /// not, also *merges* with whatever another process persisted to
+    /// `path` concurrently: under a best-effort advisory `<path>.lock`
+    /// the on-disk entries this cache does not hold are adopted before
+    /// the (atomic tmp+rename) write, so sharers union their work
+    /// instead of the last writer discarding the first's.
+    pub fn save_compacted<P: AsRef<std::path::Path>>(
+        &self,
+        path: P,
+        max_entries: usize,
+    ) -> std::io::Result<SnapshotStats> {
         let path = path.as_ref();
-        let snapshot = self.to_snapshot();
-        let stats = SnapshotStats {
-            designs: snapshot.req("designs").as_arr().map_or(0, |a| a.len()),
-            frontiers: snapshot.req("frontiers").as_arr().map_or(0, |a| a.len()),
-            skipped: 0,
-        };
+        if let Some(e) = fault::io_error("cache.save") {
+            return Err(e);
+        }
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
+        let _lock = SnapshotLock::acquire(path);
+        let (mut designs, mut frontiers) = self.entry_lists();
+        // merge-on-save: a corrupt or foreign file merges nothing and is
+        // simply overwritten (per-entry checksums keep corruption out)
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(disk) = Json::parse(&text) {
+                if disk.get("format").and_then(|f| f.as_str()) == Some(SNAPSHOT_FORMAT)
+                    && disk.get("version").and_then(|v| v.as_f64()) == Some(SNAPSHOT_VERSION)
+                {
+                    if let Some(d) = disk.get("designs").and_then(|d| d.as_arr()) {
+                        merge_disk_entries(&mut designs, d);
+                    }
+                    if let Some(f) = disk.get("frontiers").and_then(|f| f.as_arr()) {
+                        merge_disk_entries(&mut frontiers, f);
+                    }
+                }
+            }
+        }
+        let evicted =
+            evict_lru(&mut designs, max_entries) + evict_lru(&mut frontiers, max_entries);
+        let stats = SnapshotStats {
+            designs: designs.len(),
+            frontiers: frontiers.len(),
+            skipped: 0,
+            evicted,
+        };
+        let snapshot = Self::snapshot_doc(designs, frontiers);
         // per-process tmp name: concurrent savers to one path each write
         // their own sibling and the renames are last-writer-wins with a
         // *valid* file either way
@@ -589,7 +738,9 @@ impl DesignCache {
         tmp.push(format!(".{}.tmp", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp);
         std::fs::write(&tmp, snapshot.to_string())?;
-        std::fs::rename(&tmp, path)?;
+        std::fs::rename(&tmp, path).inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })?;
         Ok(stats)
     }
 
@@ -617,6 +768,124 @@ pub struct SnapshotStats {
     pub frontiers: usize,
     /// entries rejected on load (integrity-check or shape mismatch)
     pub skipped: usize,
+    /// least-recently-used entries dropped by a capped save
+    /// ([`DesignCache::save_compacted`]); always 0 on load
+    pub evicted: usize,
+}
+
+/// `(last-touched tick, use count, serialized entry)` — the snapshot
+/// working set.
+type SnapshotEntry = (u64, u64, Json);
+
+/// An entry's recorded usage (`uses`, `tick` fields; 0 when absent).
+fn usage_of(entry: &Json) -> (u64, u64) {
+    let uses = entry.get("uses").and_then(u64_field).unwrap_or(0);
+    let tick = entry.get("tick").and_then(u64_field).unwrap_or(0);
+    (uses, tick)
+}
+
+/// The key fields identifying an entry within its section (usage and
+/// value payload excluded): design entries are `(fp, pts)`, frontier
+/// entries `(ctx, shape, pt)`.
+fn entry_identity(e: &Json) -> Option<String> {
+    if let Some(fp) = e.get("fp") {
+        return Some(format!("{}|{}", fp.to_string(), e.get("pts")?.to_string()));
+    }
+    Some(format!(
+        "{}|{}|{}",
+        e.get("ctx")?.to_string(),
+        e.get("shape")?.to_string(),
+        e.get("pt")?.to_string()
+    ))
+}
+
+/// Fold a snapshot section already on disk into `mine`: entries we do
+/// not hold in memory are adopted along with their recorded usage;
+/// entries we do hold keep the in-memory version (it is at least as
+/// fresh).  Entries failing their integrity check merge nothing.
+fn merge_disk_entries(mine: &mut Vec<SnapshotEntry>, disk: &[Json]) {
+    let have: std::collections::HashSet<String> =
+        mine.iter().filter_map(|(_, _, j)| entry_identity(j)).collect();
+    for e in disk {
+        if !check_matches(e) {
+            continue;
+        }
+        let Some(id) = entry_identity(e) else { continue };
+        if have.contains(&id) {
+            continue;
+        }
+        let (uses, tick) = usage_of(e);
+        mine.push((tick, uses, e.clone()));
+    }
+}
+
+/// Drop least-recently-used entries past `cap` (0 = unlimited): oldest
+/// tick first, fewest uses breaking ties, the serialization as the
+/// final deterministic tiebreak.  Returns how many were evicted.
+fn evict_lru(entries: &mut Vec<SnapshotEntry>, cap: usize) -> usize {
+    if cap == 0 || entries.len() <= cap {
+        return 0;
+    }
+    entries.sort_by_cached_key(|(tick, uses, j)| (*tick, *uses, j.to_string()));
+    let evict = entries.len() - cap;
+    entries.drain(..evict);
+    evict
+}
+
+/// Best-effort advisory lock for snapshot saves: an atomically created
+/// `<path>.lock` sibling.  Contended acquisition backs off a bounded
+/// number of times; a lock left behind by a crashed holder is stolen by
+/// age.  If the lock still cannot be taken the save proceeds unlocked —
+/// the tmp+rename write stays atomic either way, the lock only makes
+/// the concurrent read-merge-write cycles serialize.
+struct SnapshotLock {
+    path: std::path::PathBuf,
+    held: bool,
+}
+
+impl SnapshotLock {
+    const STALE: std::time::Duration = std::time::Duration::from_secs(10);
+
+    fn acquire(target: &std::path::Path) -> SnapshotLock {
+        let mut lock = target.as_os_str().to_owned();
+        lock.push(".lock");
+        let path = std::path::PathBuf::from(lock);
+        for attempt in 0u32..10 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write;
+                    let _ = write!(f, "{}", std::process::id());
+                    return SnapshotLock { path, held: true };
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| age > Self::STALE);
+                    if stale {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        5u64.checked_shl(attempt).unwrap_or(u64::MAX).min(80),
+                    ));
+                }
+                // unwritable directory, permission trouble: the write
+                // itself will surface the real error — proceed unlocked
+                Err(_) => break,
+            }
+        }
+        SnapshotLock { path, held: false }
+    }
+}
+
+impl Drop for SnapshotLock {
+    fn drop(&mut self) {
+        if self.held {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
 }
 
 /// `--cache-file <path>` support shared by the bench sweep drivers
@@ -679,11 +948,14 @@ const SNAPSHOT_VERSION: f64 = 1.0;
 /// (sorted) key order.  Values serialize deterministically, so the
 /// checksum is representation-stable — and hashing field by field means
 /// verification needs neither a deep clone of the entry nor a
-/// re-serialization of the whole object.
+/// re-serialization of the whole object.  The usage fields (`uses`,
+/// `tick`) are excluded too: they are bookkeeping, not payload, and
+/// excluding them keeps the snapshot format at version 1 (old files
+/// load unchanged, old builds skip nothing).
 fn entry_checksum(fields: &BTreeMap<String, Json>) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for (k, v) in fields {
-        if k == "check" {
+        if k == "check" || k == "uses" || k == "tick" {
             continue;
         }
         h = fnv_extend(h, k);
@@ -765,7 +1037,7 @@ fn layer_design_from_json(j: &Json) -> Option<LayerDesign> {
     Some(LayerDesign { i_par, o_par, n_mac })
 }
 
-fn design_to_json(key: &Key, design: &NetworkDesign) -> Json {
+fn design_to_json(key: &Key, design: &NetworkDesign, uses: u64, tick: u64) -> Json {
     let mut pts = Vec::with_capacity(key.points.len() * 2);
     for &(w, a) in &key.points {
         pts.push(Json::Str(u64_to_hex(w)));
@@ -782,13 +1054,18 @@ fn design_to_json(key: &Key, design: &NetworkDesign) -> Json {
             ])
         })
         .collect();
-    with_check(Json::obj(vec![
+    let mut fields = vec![
         ("fp", Json::Str(u64_to_hex(key.device))),
         ("pts", Json::Arr(pts)),
         ("thr", Json::Str(u64_to_hex(design.throughput.to_bits()))),
         ("res", resources_to_json(&design.resources)),
         ("ds", Json::Arr(ds)),
-    ]))
+    ];
+    if uses > 0 {
+        fields.push(("uses", Json::Num(uses as f64)));
+        fields.push(("tick", Json::Num(tick as f64)));
+    }
+    with_check(Json::obj(fields))
 }
 
 fn design_from_json(entry: &Json) -> Option<(Key, NetworkDesign)> {
@@ -817,7 +1094,7 @@ fn design_from_json(entry: &Json) -> Option<(Key, NetworkDesign)> {
     Some((Key { device, points }, NetworkDesign { designs, throughput, resources }))
 }
 
-fn frontier_to_json(key: &FrontierKey, frontier: &LayerFrontier) -> Json {
+fn frontier_to_json(key: &FrontierKey, frontier: &LayerFrontier, uses: u64, tick: u64) -> Json {
     let es: Vec<Json> = frontier
         .entries()
         .iter()
@@ -837,12 +1114,17 @@ fn frontier_to_json(key: &FrontierKey, frontier: &LayerFrontier) -> Json {
         })
         .collect();
     let pt = vec![Json::Str(u64_to_hex(key.point.0)), Json::Str(u64_to_hex(key.point.1))];
-    with_check(Json::obj(vec![
+    let mut fields = vec![
         ("ctx", Json::Str(u64_to_hex(key.context))),
         ("shape", Json::Str(u64_to_hex(key.shape))),
         ("pt", Json::Arr(pt)),
         ("es", Json::Arr(es)),
-    ]))
+    ];
+    if uses > 0 {
+        fields.push(("uses", Json::Num(uses as f64)));
+        fields.push(("tick", Json::Num(tick as f64)));
+    }
+    with_check(Json::obj(fields))
 }
 
 fn frontier_from_json(entry: &Json) -> Option<(FrontierKey, Arc<LayerFrontier>)> {
@@ -1333,7 +1615,7 @@ mod tests {
         cache.insert(&h, &p2, design(7));
         let snap = cache.to_snapshot();
         let (loaded, st) = DesignCache::from_snapshot(&snap).unwrap();
-        assert_eq!(st, SnapshotStats { designs: 2, frontiers: 0, skipped: 0 });
+        assert_eq!(st, SnapshotStats { designs: 2, frontiers: 0, skipped: 0, evicted: 0 });
         let h2 = reg(&loaded, &DeviceBudget::u250());
         let back = loaded.get(&h2, &p1).expect("loaded entry");
         assert_eq!(back.throughput.to_bits(), (0.1f64 + 0.2).to_bits());
@@ -1363,7 +1645,7 @@ mod tests {
             cache.frontier_store().get_or_build(&h, shape, layer, p, &rm, dev);
         }
         let (loaded, st) = DesignCache::from_snapshot(&cache.to_snapshot()).unwrap();
-        assert_eq!(st, SnapshotStats { designs: 0, frontiers: 2, skipped: 0 });
+        assert_eq!(st, SnapshotStats { designs: 0, frontiers: 2, skipped: 0, evicted: 0 });
         assert_eq!(loaded.frontier_store().len(), 2);
         for dev in &devs {
             let h = loaded.register(dev, &net, &rm, &DseConfig::default());
@@ -1402,7 +1684,7 @@ mod tests {
         cache.get_or_compute(&h, &pts(&[(0.5, 0.5)]), || design(3));
         let path = std::env::temp_dir().join("hass_cache_save_load_test.json");
         let saved = cache.save(&path).unwrap();
-        assert_eq!(saved, SnapshotStats { designs: 1, frontiers: 0, skipped: 0 });
+        assert_eq!(saved, SnapshotStats { designs: 1, frontiers: 0, skipped: 0, evicted: 0 });
         let (loaded, st) = DesignCache::load(&path).unwrap();
         assert_eq!(st.designs, 1);
         let h2 = reg(&loaded, &DeviceBudget::u250());
@@ -1566,5 +1848,112 @@ mod tests {
         assert_eq!(st.skipped, 1);
         assert_eq!(st.frontiers, 0);
         assert!(loaded.frontier_store().is_empty());
+    }
+
+    // ---- compaction + cross-process sharing ---------------------------
+
+    #[test]
+    fn usage_survives_a_snapshot_round_trip() {
+        let (cache, h) = u250_cache();
+        let hot = pts(&[(0.5, 0.5)]);
+        let cold = pts(&[(0.25, 0.25)]);
+        cache.get_or_compute(&h, &hot, || design(1));
+        cache.get_or_compute(&h, &hot, || design(1));
+        cache.get_or_compute(&h, &cold, || design(2));
+        let snap = cache.to_snapshot();
+        assert!(snap.to_string().contains("\"uses\""), "usage must be persisted");
+        let (loaded, st) = DesignCache::from_snapshot(&snap).unwrap();
+        assert_eq!(st.designs, 2);
+        assert_eq!(st.skipped, 0, "usage fields must not break the checksum");
+        // hit counts and recency round-trip: re-snapshotting the loaded
+        // cache reproduces the original file byte for byte
+        assert_eq!(loaded.to_snapshot().to_string(), snap.to_string());
+    }
+
+    #[test]
+    fn capped_save_evicts_least_recently_used_entries() {
+        let _x = crate::util::fault::exclusive();
+        let (cache, h) = u250_cache();
+        let old = pts(&[(0.125, 0.125)]);
+        let hot = pts(&[(0.5, 0.5)]);
+        cache.get_or_compute(&h, &old, || design(1));
+        cache.get_or_compute(&h, &hot, || design(2));
+        cache.get_or_compute(&h, &hot, || design(2)); // newer AND more used
+        let path = std::env::temp_dir().join("hass_cache_compaction_test.json");
+        std::fs::remove_file(&path).ok();
+        let st = cache.save_compacted(&path, 1).unwrap();
+        assert_eq!((st.designs, st.evicted), (1, 1));
+        let (loaded, _) = DesignCache::load(&path).unwrap();
+        let h2 = reg(&loaded, &DeviceBudget::u250());
+        assert!(loaded.get(&h2, &hot).is_some(), "most-recently-used must survive");
+        assert!(loaded.get(&h2, &old).is_none(), "LRU entry must be evicted");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_savers_merge_instead_of_clobbering() {
+        let _x = crate::util::fault::exclusive();
+        let path = std::env::temp_dir().join("hass_cache_merge_test.json");
+        std::fs::remove_file(&path).ok();
+        let (a, ha) = u250_cache();
+        a.get_or_compute(&ha, &pts(&[(0.5, 0.5)]), || design(1));
+        a.save(&path).unwrap();
+        // a second cache (another process, conceptually) that never saw
+        // the first one's entry must union with it on save
+        let (b, hb) = u250_cache();
+        b.get_or_compute(&hb, &pts(&[(0.25, 0.25)]), || design(2));
+        let st = b.save(&path).unwrap();
+        assert_eq!(st.designs, 2, "save must adopt the on-disk entry");
+        let (merged, _) = DesignCache::load(&path).unwrap();
+        let h = reg(&merged, &DeviceBudget::u250());
+        assert_eq!(merged.get(&h, &pts(&[(0.5, 0.5)])).unwrap().resources.dsp, 1);
+        assert_eq!(merged.get(&h, &pts(&[(0.25, 0.25)])).unwrap().resources.dsp, 2);
+        // ...and for a key held by both, the in-memory version wins
+        let (c, hc) = u250_cache();
+        c.insert(&hc, &pts(&[(0.5, 0.5)]), design(9));
+        c.save(&path).unwrap();
+        let (merged, _) = DesignCache::load(&path).unwrap();
+        let h = reg(&merged, &DeviceBudget::u250());
+        assert_eq!(merged.get(&h, &pts(&[(0.5, 0.5)])).unwrap().resources.dsp, 9);
+        assert!(!path.with_extension("json.lock").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn a_held_foreign_lock_delays_but_never_blocks_a_save() {
+        let _x = crate::util::fault::exclusive();
+        let path = std::env::temp_dir().join("hass_cache_lockwait_test.json");
+        let mut l = path.clone().into_os_string();
+        l.push(".lock");
+        let lock = std::path::PathBuf::from(l);
+        std::fs::remove_file(&path).ok();
+        std::fs::write(&lock, "held").unwrap();
+        let (cache, h) = u250_cache();
+        cache.get_or_compute(&h, &pts(&[(0.5, 0.5)]), || design(1));
+        // the lock is fresh (not stale): acquisition backs off, gives up,
+        // and the save proceeds unlocked instead of deadlocking
+        let st = cache.save(&path).unwrap();
+        assert_eq!(st.designs, 1);
+        assert!(lock.exists(), "a fresh foreign lock must not be deleted");
+        std::fs::remove_file(&lock).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn an_armed_save_fault_surfaces_as_an_io_error() {
+        let _x = crate::util::fault::exclusive();
+        let path = std::env::temp_dir().join("hass_cache_fault_test.json");
+        std::fs::remove_file(&path).ok();
+        let (cache, h) = u250_cache();
+        cache.get_or_compute(&h, &pts(&[(0.5, 0.5)]), || design(1));
+        {
+            let _g = crate::util::fault::armed("cache.save", 1);
+            let err = cache.save(&path).unwrap_err();
+            assert!(err.to_string().contains("injected fault"));
+            assert!(!path.exists(), "a failed save must write nothing");
+        }
+        // disarmed again: the same save succeeds
+        assert!(cache.save(&path).is_ok());
+        std::fs::remove_file(&path).ok();
     }
 }

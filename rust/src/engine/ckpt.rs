@@ -1,0 +1,461 @@
+//! Crash-safe search checkpoints (`hass search --checkpoint/--resume`).
+//!
+//! A long sweep killed mid-run used to restart cold.  The engine now
+//! periodically snapshots everything a resumed process needs to
+//! *replay* the interrupted search: the per-device journal prefix (every
+//! [`SearchRecord`] scored so far) plus the generation cursor, tagged
+//! with a [`search_fingerprint`] of every result-relevant configuration
+//! field.
+//!
+//! # Replay-based resume
+//!
+//! TPE has no state-export API, and serializing the Parzen model would
+//! create a second source of truth that could drift from the live
+//! implementation.  Resume instead *re-runs the generation loop*:
+//! proposals are regenerated exactly (the optimizer consumes its RNG
+//! stream identically because seed, batch schedule and warm-start
+//! anchors are fingerprint-protected), but **evaluation is skipped** for
+//! every replayed generation — records come from the checkpoint and are
+//! fed straight back to `observe_batch` with the regenerated proposal
+//! coordinates.  Because evaluation is the entire cost of a search,
+//! replay is effectively free, and the resumed run's journal is
+//! **bit-identical** to the uninterrupted run's by the engine's
+//! determinism contract (enforced in `tests/chaos.rs` and the
+//! chaos-smoke CI job).
+//!
+//! Checkpoints are only ever written at generation boundaries, so
+//! `done` is always a prefix of the generation schedule and replay
+//! granularity is exact.
+//!
+//! # Format
+//!
+//! One JSON document, written atomically (tmp + rename, the same
+//! machinery as the cache snapshots):
+//!
+//! ```text
+//! {"format": "hass-checkpoint", "version": 1,
+//!  "fingerprint": "<16-hex search fingerprint>",
+//!  "done": <iterations completed per shard>,
+//!  "devices": [{"device": "<name>", "records": [<record>, ...]}, ...]}
+//! ```
+//!
+//! Every `f64` is encoded as its 16-hex-digit IEEE-754 bit pattern
+//! (`util::json::u64_to_hex`), so a round trip is exact down to the last
+//! bit — a resumed journal can be `cmp`-equal to the original.
+//!
+//! The fingerprint covers exactly the fields the determinism contract
+//! names as result-relevant — iterations, seed, mode, λ, warm start,
+//! TPE and DSE configuration, `engine.batch`, `engine.quant_bits`, the
+//! target's layer shapes and the device budgets — and deliberately
+//! excludes the execution knobs (`threads`, `cache`, `async_eval`) plus
+//! the fault-tolerance knobs, so a checkpoint taken on 1 thread resumes
+//! on 16.  A mismatched checkpoint is refused loudly by the CLI and
+//! ignored (fresh start) by the engine.
+
+use std::collections::HashSet;
+
+use crate::arch::Network;
+use crate::dse::frontier::shape_fingerprint;
+use crate::hardware::device::DeviceBudget;
+use crate::pruning::PruningPlan;
+use crate::util::fault;
+use crate::util::json::{u64_from_hex, u64_to_hex, Json};
+
+use super::cache::device_fingerprint;
+use super::{SearchConfig, SearchRecord};
+
+/// Where and how often the engine writes checkpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointSpec {
+    /// checkpoint file path (rewritten atomically on every save)
+    pub path: String,
+    /// write every `every` completed generations (minimum 1)
+    pub every: usize,
+}
+
+/// One device's journal prefix inside a checkpoint.
+#[derive(Clone, Debug)]
+pub struct DeviceCheckpoint {
+    pub device: String,
+    pub records: Vec<SearchRecord>,
+}
+
+/// Everything a resumed search replays from.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// [`search_fingerprint`] of the run that wrote this checkpoint
+    pub fingerprint: u64,
+    /// per-shard iterations completed (always a generation boundary)
+    pub done: usize,
+    pub devices: Vec<DeviceCheckpoint>,
+}
+
+fn mix(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x100000001b3);
+}
+
+fn mix_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        mix(h, b as u64);
+    }
+}
+
+/// FNV-1a over every *result-relevant* field of a search: the
+/// checkpoint-compatibility key.  Execution knobs (`threads`, `cache`,
+/// `async_eval`) and the fault-tolerance knobs (retry, timeouts,
+/// checkpoint cadence) are excluded — they never change results, so
+/// they must never invalidate a checkpoint.
+pub fn search_fingerprint(cfg: &SearchConfig, shapes: &[u64], device_fps: &[u64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    mix(&mut h, cfg.iterations as u64);
+    mix(&mut h, cfg.seed);
+    mix_bytes(&mut h, format!("{:?}", cfg.mode).as_bytes());
+    for l in cfg.lambda {
+        mix(&mut h, l.to_bits());
+    }
+    mix(&mut h, cfg.warm_start as u64);
+    mix_bytes(&mut h, format!("{:?}", cfg.tpe).as_bytes());
+    mix_bytes(&mut h, format!("{:?}", cfg.dse).as_bytes());
+    mix(&mut h, cfg.engine.batch.max(1) as u64);
+    mix(&mut h, cfg.engine.quant_bits as u64);
+    for &s in shapes {
+        mix(&mut h, s);
+    }
+    for &d in device_fps {
+        mix(&mut h, d);
+    }
+    h
+}
+
+/// [`search_fingerprint`] computed from a target geometry and a raw
+/// device list, collapsing duplicate budgets exactly like the sharded
+/// engine does — the CLI-side validator for `--resume`.
+pub fn resume_fingerprint(
+    cfg: &SearchConfig,
+    target: &Network,
+    devices: &[DeviceBudget],
+) -> u64 {
+    let shapes: Vec<u64> =
+        target.compute_layers().iter().map(|l| shape_fingerprint(l)).collect();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let fps: Vec<u64> = devices
+        .iter()
+        .map(device_fingerprint)
+        .filter(|fp| seen.insert(*fp))
+        .collect();
+    search_fingerprint(cfg, &shapes, &fps)
+}
+
+fn f64_json(v: f64) -> Json {
+    Json::Str(u64_to_hex(v.to_bits()))
+}
+
+fn json_f64(j: &Json) -> Option<f64> {
+    j.as_str().and_then(u64_from_hex).map(f64::from_bits)
+}
+
+fn record_to_json(r: &SearchRecord) -> Json {
+    let hexes = |v: &[f64]| {
+        Json::Arr(v.iter().map(|t| Json::Str(u64_to_hex(t.to_bits()))).collect())
+    };
+    Json::obj(vec![
+        ("iter", Json::Num(r.iter as f64)),
+        ("acc", f64_json(r.accuracy)),
+        ("spa", f64_json(r.avg_sparsity)),
+        ("den", f64_json(r.op_density)),
+        ("ips", f64_json(r.images_per_sec)),
+        ("aips", f64_json(r.analytic_images_per_sec)),
+        ("dsp", Json::Num(r.dsp as f64)),
+        ("eff", f64_json(r.efficiency)),
+        ("obj", f64_json(r.objective)),
+        ("sim", Json::Bool(r.simulated)),
+        ("tw", hexes(&r.plan.tau_w)),
+        ("ta", hexes(&r.plan.tau_a)),
+    ])
+}
+
+fn record_from_json(j: &Json) -> Result<SearchRecord, String> {
+    let f = |k: &str| {
+        j.get(k)
+            .and_then(json_f64)
+            .ok_or_else(|| format!("checkpoint record: bad field '{k}'"))
+    };
+    let taus = |k: &str| -> Result<Vec<f64>, String> {
+        j.get(k)
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| format!("checkpoint record: bad field '{k}'"))?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .and_then(u64_from_hex)
+                    .map(f64::from_bits)
+                    .ok_or_else(|| format!("checkpoint record: bad threshold in '{k}'"))
+            })
+            .collect()
+    };
+    let tau_w = taus("tw")?;
+    let tau_a = taus("ta")?;
+    if tau_w.len() != tau_a.len() || tau_w.is_empty() {
+        return Err("checkpoint record: threshold arrays disagree".to_string());
+    }
+    Ok(SearchRecord {
+        iter: j
+            .get("iter")
+            .and_then(|v| v.as_usize())
+            .ok_or("checkpoint record: bad field 'iter'")?,
+        accuracy: f("acc")?,
+        avg_sparsity: f("spa")?,
+        op_density: f("den")?,
+        images_per_sec: f("ips")?,
+        analytic_images_per_sec: f("aips")?,
+        dsp: j
+            .get("dsp")
+            .and_then(|v| v.as_usize())
+            .ok_or("checkpoint record: bad field 'dsp'")? as u64,
+        efficiency: f("eff")?,
+        objective: f("obj")?,
+        simulated: j
+            .get("sim")
+            .and_then(|v| v.as_bool())
+            .ok_or("checkpoint record: bad field 'sim'")?,
+        plan: PruningPlan { tau_w, tau_a },
+    })
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str("hass-checkpoint".to_string())),
+            ("version", Json::Num(1.0)),
+            ("fingerprint", Json::Str(u64_to_hex(self.fingerprint))),
+            ("done", Json::Num(self.done as f64)),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::Str(d.device.clone())),
+                                (
+                                    "records",
+                                    Json::Arr(d.records.iter().map(record_to_json).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint, String> {
+        match v.get("format").and_then(|f| f.as_str()) {
+            Some("hass-checkpoint") => {}
+            other => return Err(format!("not a hass checkpoint (format {other:?})")),
+        }
+        match v.get("version").and_then(|x| x.as_f64()) {
+            Some(ver) if ver == 1.0 => {}
+            other => return Err(format!("unsupported checkpoint version {other:?}")),
+        }
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(|f| f.as_str())
+            .and_then(u64_from_hex)
+            .ok_or("checkpoint: bad fingerprint")?;
+        let done =
+            v.get("done").and_then(|d| d.as_usize()).ok_or("checkpoint: bad 'done'")?;
+        let mut devices = Vec::new();
+        for d in v
+            .get("devices")
+            .and_then(|d| d.as_arr())
+            .ok_or("checkpoint: missing 'devices'")?
+        {
+            let device = d
+                .get("device")
+                .and_then(|n| n.as_str())
+                .ok_or("checkpoint: device entry without a name")?
+                .to_string();
+            let records: Vec<SearchRecord> = d
+                .get("records")
+                .and_then(|r| r.as_arr())
+                .ok_or("checkpoint: device entry without records")?
+                .iter()
+                .map(record_from_json)
+                .collect::<Result<_, _>>()?;
+            if records.len() != done {
+                return Err(format!(
+                    "checkpoint: device '{device}' carries {} records for done = {done}",
+                    records.len()
+                ));
+            }
+            devices.push(DeviceCheckpoint { device, records });
+        }
+        if devices.is_empty() {
+            return Err("checkpoint: no devices".to_string());
+        }
+        Ok(Checkpoint { fingerprint, done, devices })
+    }
+
+    /// Atomically write the checkpoint: serialize to `<path>.<pid>.tmp`
+    /// in the target directory, then rename over `path` — a reader (or a
+    /// crash) can never observe a torn file.  Honors the `"ckpt.save"`
+    /// fault-injection site.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(e) = fault::io_error("ckpt.save") {
+            return Err(e);
+        }
+        let p = std::path::Path::new(path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = format!("{path}.{}.tmp", std::process::id());
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, path).inspect_err(|_| {
+            std::fs::remove_file(&tmp).ok();
+        })
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load(path: &str) -> Result<Checkpoint, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("failed to read checkpoint '{path}': {e}"))?;
+        let v = Json::parse(&text)
+            .map_err(|e| format!("failed to parse checkpoint '{path}': {e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::engine::EngineConfig;
+
+    fn record(iter: usize, obj: f64) -> SearchRecord {
+        SearchRecord {
+            iter,
+            accuracy: 84.25 + obj,
+            avg_sparsity: 0.3125,
+            op_density: 0.64,
+            images_per_sec: 1234.5678,
+            analytic_images_per_sec: 1200.0,
+            dsp: 4321,
+            efficiency: 3.25e-7,
+            objective: obj,
+            simulated: iter % 2 == 0,
+            plan: PruningPlan {
+                tau_w: vec![0.01 * iter as f64, 0.2],
+                tau_a: vec![0.0, 0.15 + obj],
+            },
+        }
+    }
+
+    fn ckpt() -> Checkpoint {
+        Checkpoint {
+            fingerprint: 0xdead_beef_cafe_f00d,
+            done: 3,
+            devices: vec![DeviceCheckpoint {
+                device: "u250".to_string(),
+                records: vec![record(0, 1.0625), record(1, -0.5), record(2, f64::MIN)],
+            }],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bit_exactly() {
+        let c = ckpt();
+        let back = Checkpoint::from_json(&c.to_json()).expect("roundtrip");
+        assert_eq!(back.fingerprint, c.fingerprint);
+        assert_eq!(back.done, c.done);
+        assert_eq!(back.devices.len(), 1);
+        assert_eq!(back.devices[0].device, "u250");
+        for (a, b) in back.devices[0].records.iter().zip(&c.devices[0].records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.efficiency.to_bits(), b.efficiency.to_bits());
+            assert_eq!(a.dsp, b.dsp);
+            assert_eq!(a.simulated, b.simulated);
+            assert_eq!(a.plan, b.plan);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_via_file() {
+        let path = std::env::temp_dir().join("hass_ckpt_roundtrip.json");
+        let path = path.to_str().unwrap();
+        let c = ckpt();
+        c.save(path).expect("save");
+        let back = Checkpoint::load(path).expect("load");
+        assert_eq!(back.done, c.done);
+        assert_eq!(
+            back.devices[0].records[2].objective.to_bits(),
+            f64::MIN.to_bits(),
+            "infeasible scores must survive the file exactly"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn malformed_checkpoints_are_rejected_not_panicked() {
+        assert!(Checkpoint::load("/nonexistent/ckpt.json").is_err());
+        let bad = [
+            r#"{"format": "something-else", "version": 1}"#,
+            r#"{"format": "hass-checkpoint", "version": 2, "fingerprint": "00", "done": 0, "devices": []}"#,
+            r#"{"format": "hass-checkpoint", "version": 1, "fingerprint": "zz", "done": 0, "devices": []}"#,
+            r#"{"format": "hass-checkpoint", "version": 1, "fingerprint": "0000000000000001", "done": 0, "devices": []}"#,
+        ];
+        for text in bad {
+            let v = Json::parse(text).expect("test JSON parses");
+            assert!(Checkpoint::from_json(&v).is_err(), "accepted: {text}");
+        }
+        // done/record-count disagreement is refused
+        let mut c = ckpt();
+        c.done = 5;
+        assert!(Checkpoint::from_json(&c.to_json()).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_result_relevant_fields_only() {
+        let net = networks::calibnet();
+        let devices = [crate::hardware::device::DeviceBudget::u250()];
+        let base = SearchConfig { iterations: 8, seed: 3, ..Default::default() };
+        let fp = resume_fingerprint(&base, &net, &devices);
+        assert_eq!(fp, resume_fingerprint(&base, &net, &devices), "stable");
+
+        // result-relevant changes move the fingerprint
+        let seed = SearchConfig { seed: 4, ..base.clone() };
+        assert_ne!(fp, resume_fingerprint(&seed, &net, &devices));
+        let iters = SearchConfig { iterations: 9, ..base.clone() };
+        assert_ne!(fp, resume_fingerprint(&iters, &net, &devices));
+        let batch = SearchConfig {
+            engine: EngineConfig { batch: 4, ..base.engine },
+            ..base.clone()
+        };
+        assert_ne!(fp, resume_fingerprint(&batch, &net, &devices));
+
+        // execution knobs must NOT move it (a 1-thread checkpoint resumes
+        // on 16 threads, with or without the cache, sync or async)
+        let knobs = SearchConfig {
+            engine: EngineConfig {
+                threads: 16,
+                cache: false,
+                async_eval: true,
+                ..base.engine
+            },
+            ..base.clone()
+        };
+        assert_eq!(fp, resume_fingerprint(&knobs, &net, &devices));
+
+        // duplicate devices collapse exactly like the sharded engine
+        let dup = [
+            crate::hardware::device::DeviceBudget::u250(),
+            crate::hardware::device::DeviceBudget::u250(),
+        ];
+        assert_eq!(fp, resume_fingerprint(&base, &net, &dup));
+    }
+}

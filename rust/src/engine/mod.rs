@@ -82,6 +82,33 @@
 //! sharded/standalone determinism contract structural rather than
 //! incidental.
 //!
+//! # Fault tolerance
+//!
+//! PR 7 made evaluation failures non-panicking; this layer makes them
+//! *survivable*:
+//!
+//! * **Transient retry** — [`RetryPolicy`] (see [`retry`]) classifies an
+//!   [`EvalError`] by the [`TRANSIENT_PREFIX`] convention and re-drives
+//!   transient failures with bounded exponential backoff before the
+//!   candidate is scored infeasible ([`EngineStats::retried_evals`]).
+//!   Every pre-existing backend error is permanent, so the default
+//!   policy changes nothing for them.
+//! * **Stall watchdog** — on the async pipeline,
+//!   [`SearchConfig::eval_timeout_ms`] bounds the silence between
+//!   completions and [`SearchConfig::deadline_ms`] bounds a whole
+//!   generation; when either fires, every still-outstanding measurement
+//!   is reclaimed as an infeasible-scored record
+//!   ([`EngineStats::reclaimed_stalls`]) and the search keeps moving.
+//!   Both default to off (0), preserving wait-forever semantics.
+//! * **Checkpoint/resume** — [`SearchConfig::checkpoint`] periodically
+//!   writes an atomic, fingerprint-tagged journal snapshot
+//!   ([`ckpt`]); [`SearchControl::resume`] replays it so a killed run
+//!   continues where it stopped with a bit-identical journal.
+//! * **Deterministic chaos** — [`crate::util::fault`] injects all of the
+//!   above failure modes as pure functions of `(fault seed, plan)`, so
+//!   `tests/chaos.rs` and the chaos-smoke CI job reproduce every
+//!   recovery path exactly, across thread counts and pipelines.
+//!
 //! # Determinism contract
 //!
 //! A search result is a pure function of `(evaluator, target, device,
@@ -109,17 +136,23 @@
 //! [`TpeOptimizer::observe_batch`]: crate::optim::tpe::TpeOptimizer::observe_batch
 
 pub mod cache;
+pub mod ckpt;
 pub mod evaluator;
+pub mod retry;
 pub mod shard;
 
 pub use cache::{
     cache_file_from_args, quantize_points, save_cache_file, DesignCache, DeviceCacheHandle,
     FrontierStore, SnapshotStats,
 };
+pub use ckpt::{
+    resume_fingerprint, search_fingerprint, Checkpoint, CheckpointSpec, DeviceCheckpoint,
+};
 pub use evaluator::{
     CandidateEvaluator, EvalCompletion, EvalError, EvalPoint, EvalRequest, SimScore,
     SimulatedEvaluator,
 };
+pub use retry::{is_transient, RetryPolicy, TRANSIENT_PREFIX};
 pub use shard::{
     DeviceSearchResult, ParetoPoint, SearchControl, SearchProgress, ShardedEngine,
     ShardedSearchResult, ShardedStats,
@@ -209,6 +242,21 @@ pub struct SearchConfig {
     pub tpe: TpeConfig,
     pub dse: DseConfig,
     pub engine: EngineConfig,
+    /// retry schedule for transient ([`TRANSIENT_PREFIX`]-tagged)
+    /// measurement failures; the default retries nothing that existed
+    /// before the convention, so it is behavior-preserving
+    pub retry: RetryPolicy,
+    /// async pipeline only: reclaim every outstanding measurement of a
+    /// generation if no completion arrives for this many milliseconds
+    /// (0 = wait forever).  Reclaimed slots score infeasible, like any
+    /// other failed measurement.  Wall-clock-dependent by nature: only
+    /// genuinely stuck measurements are reclaimed deterministically.
+    pub eval_timeout_ms: u64,
+    /// async pipeline only: reclaim every outstanding measurement once a
+    /// generation has run for this many milliseconds (0 = no deadline)
+    pub deadline_ms: u64,
+    /// write crash-safe checkpoints ([`ckpt`]) at this path/cadence
+    pub checkpoint: Option<CheckpointSpec>,
 }
 
 impl Default for SearchConfig {
@@ -225,6 +273,10 @@ impl Default for SearchConfig {
             tpe: TpeConfig::default(),
             dse: DseConfig::default(),
             engine: EngineConfig::default(),
+            retry: RetryPolicy::default(),
+            eval_timeout_ms: 0,
+            deadline_ms: 0,
+            checkpoint: None,
         }
     }
 }
@@ -302,6 +354,14 @@ pub struct EngineStats {
     /// this shard's simulator-scored records (0.0 when none) — the
     /// analytic-model drift signal the ladder measures as it runs
     pub sim_disagreement: f64,
+    /// transient-failure retries this shard's measurements consumed
+    /// ([`SearchConfig::retry`]); 0 under the default policy unless the
+    /// backend tags errors transient
+    pub retried_evals: u64,
+    /// measurements of this shard reclaimed as infeasible by the stall
+    /// watchdog ([`SearchConfig::eval_timeout_ms`] /
+    /// [`SearchConfig::deadline_ms`])
+    pub reclaimed_stalls: u64,
 }
 
 impl EngineStats {
@@ -421,6 +481,8 @@ pub(super) struct Measurement {
     pub(super) ev: EvalPoint,
     pub(super) metrics: pruning::SparsityMetrics,
     pub(super) error: Option<EvalError>,
+    /// transient-failure retries this measurement consumed
+    pub(super) retries: u32,
 }
 
 impl Measurement {
@@ -438,7 +500,7 @@ impl Measurement {
         match result {
             Ok(ev) => {
                 let metrics = pruning::metrics(target, &ev.points);
-                Measurement { plan, ev, metrics, error: None }
+                Measurement { plan, ev, metrics, error: None, retries: 0 }
             }
             Err(e) => {
                 let ev = EvalPoint {
@@ -447,7 +509,7 @@ impl Measurement {
                     sim: Vec::new(),
                 };
                 let metrics = pruning::metrics(target, &ev.points);
-                Measurement { plan, ev, metrics, error: Some(e) }
+                Measurement { plan, ev, metrics, error: Some(e), retries: 0 }
             }
         }
     }
@@ -493,27 +555,45 @@ impl<'a> Engine<'a> {
     /// possibly warm) design cache.  The cache never changes results; a
     /// warm cache only changes the hit/miss split in the returned stats.
     pub fn search_with_cache(&self, cfg: &SearchConfig, cache: &DesignCache) -> SearchResult {
+        self.search_with_cache_ctrl(cfg, cache, &SearchControl::default())
+            .expect("a search without an observer cannot be cancelled")
+    }
+
+    /// [`search_with_cache`](Self::search_with_cache) with a
+    /// [`SearchControl`] (progress observer / cancellation / checkpoint
+    /// resume) — the single-shard face of
+    /// [`ShardedEngine::search_with_cache_ctrl`].
+    pub fn search_with_cache_ctrl(
+        &self,
+        cfg: &SearchConfig,
+        cache: &DesignCache,
+        ctrl: &SearchControl<'_>,
+    ) -> Option<SearchResult> {
         let sharded = ShardedEngine::new(
             self.evaluator,
             self.target,
             self.rm,
             std::slice::from_ref(self.dev),
         );
-        let mut r = sharded.search_with_cache(cfg, cache);
-        r.per_device.remove(0).result
+        let mut r = sharded.search_with_cache_ctrl(cfg, cache, ctrl)?;
+        Some(r.per_device.remove(0).result)
     }
 
     /// Device-independent half of a candidate evaluation: decode the
     /// proposal, run the (possibly expensive) measurement backend, derive
     /// sparsity metrics.  Touches neither the device budget nor the
     /// resource model — a sharded generation measures each distinct
-    /// proposal once and shares the result across shards.
-    pub(super) fn measure_candidate(&self, x: &[f64]) -> Measurement {
+    /// proposal once and shares the result across shards.  Transient
+    /// backend failures are re-driven under `retry` before the candidate
+    /// is written off.
+    pub(super) fn measure_candidate(&self, x: &[f64], retry: &RetryPolicy) -> Measurement {
         let model = self.evaluator.sparsity_model();
         let n_points = model.layers.len();
         let plan = PruningPlan::from_unit_point(x, model);
-        let result = self.evaluator.try_eval(&plan);
-        Measurement::from_result(self.target, plan, result, n_points)
+        let (result, retries) = retry.run(|| self.evaluator.try_eval(&plan));
+        let mut m = Measurement::from_result(self.target, plan, result, n_points);
+        m.retries = retries;
+        m
     }
 
     /// Device-dependent half: price the measured operating points on this

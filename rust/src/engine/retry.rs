@@ -1,0 +1,164 @@
+//! Transient-failure classification and bounded exponential backoff.
+//!
+//! A measurement backend can fail two ways: *permanently* (the plan is
+//! genuinely unevaluable — a rejected configuration, a model error) or
+//! *transiently* (a flaky device, a dropped connection, an injected
+//! chaos fault).  Permanent failures are data: the engine scores the
+//! candidate infeasible and moves on, exactly as before.  Transient
+//! failures deserve another try before the candidate is written off.
+//!
+//! Classification is by error-string convention: an [`EvalError`]
+//! starting with [`TRANSIENT_PREFIX`] is transient, anything else is
+//! permanent.  Every pre-existing backend error ("measurement backend
+//! rejected plan…", "PJRT evaluation failed…") lacks the prefix, so the
+//! default policy changes nothing for them — retry behavior is strictly
+//! opt-in for backends that tag their errors.
+//!
+//! Determinism: a backend whose *final* outcome after retries is a pure
+//! function of the plan (true of [`crate::util::fault::FaultyEvaluator`]
+//! by construction — its attempt counter is keyed by plan, not by time)
+//! keeps journals bit-identical across thread counts and pipelines.
+//! Backoff sleeps affect wall clock only, never results.
+
+use super::evaluator::EvalError;
+
+/// Error-string prefix marking an [`EvalError`] as transient (retryable).
+pub const TRANSIENT_PREFIX: &str = "transient:";
+
+/// Is this failure worth retrying?
+pub fn is_transient(e: &EvalError) -> bool {
+    e.starts_with(TRANSIENT_PREFIX)
+}
+
+/// Bounded-retry policy for transient evaluation failures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// retries after the first attempt (0 = never retry)
+    pub max_retries: u32,
+    /// backoff before the first retry, milliseconds
+    pub base_backoff_ms: u64,
+    /// backoff ceiling, milliseconds
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, base_backoff_ms: 1, max_backoff_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (PR-7 behavior: first failure scores
+    /// the candidate infeasible).
+    pub fn never() -> Self {
+        RetryPolicy { max_retries: 0, base_backoff_ms: 0, max_backoff_ms: 0 }
+    }
+
+    /// Exponential backoff for retry number `attempt` (0-based), capped.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        self.base_backoff_ms
+            .checked_shl(attempt)
+            .unwrap_or(u64::MAX)
+            .min(self.max_backoff_ms)
+    }
+
+    /// Run `f`, retrying transient failures with backoff until it
+    /// succeeds, fails permanently, or the retry budget is spent.
+    /// Returns the final result plus the number of retries consumed
+    /// (for the engine's `retried_evals` stat).
+    pub fn run<T>(
+        &self,
+        mut f: impl FnMut() -> Result<T, EvalError>,
+    ) -> (Result<T, EvalError>, u32) {
+        let mut attempt = 0;
+        loop {
+            match f() {
+                Err(e) if is_transient(&e) && attempt < self.max_retries => {
+                    let ms = self.backoff_ms(attempt);
+                    if ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                    attempt += 1;
+                }
+                r => return (r, attempt),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_is_by_prefix_only() {
+        assert!(is_transient(&format!("{TRANSIENT_PREFIX} device hiccup")));
+        assert!(!is_transient(&"measurement backend rejected plan (s = 1.9)".to_string()));
+        assert!(!is_transient(&"PJRT evaluation failed".to_string()));
+        assert!(!is_transient(&String::new()));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let p = RetryPolicy { max_retries: 10, base_backoff_ms: 2, max_backoff_ms: 9 };
+        assert_eq!(p.backoff_ms(0), 2);
+        assert_eq!(p.backoff_ms(1), 4);
+        assert_eq!(p.backoff_ms(2), 8);
+        assert_eq!(p.backoff_ms(3), 9, "capped");
+        assert_eq!(p.backoff_ms(200), 9, "shift overflow saturates to the cap");
+    }
+
+    #[test]
+    fn transients_retry_until_success() {
+        let p = RetryPolicy { max_retries: 5, base_backoff_ms: 0, max_backoff_ms: 0 };
+        let mut calls = 0;
+        let (r, retries) = p.run(|| {
+            calls += 1;
+            if calls <= 3 {
+                Err(format!("{TRANSIENT_PREFIX} flaky"))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(r, Ok(4));
+        assert_eq!(retries, 3);
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_the_last_transient_error() {
+        let p = RetryPolicy { max_retries: 2, base_backoff_ms: 0, max_backoff_ms: 0 };
+        let mut calls = 0;
+        let (r, retries) = p.run(|| -> Result<(), EvalError> {
+            calls += 1;
+            Err(format!("{TRANSIENT_PREFIX} always down"))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 3, "one attempt + two retries");
+        assert_eq!(retries, 2);
+    }
+
+    #[test]
+    fn permanent_errors_never_retry() {
+        let p = RetryPolicy::default();
+        let mut calls = 0;
+        let (r, retries) = p.run(|| -> Result<(), EvalError> {
+            calls += 1;
+            Err("rejected plan".to_string())
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn never_policy_is_first_failure_wins() {
+        let p = RetryPolicy::never();
+        let mut calls = 0;
+        let (r, _) = p.run(|| -> Result<(), EvalError> {
+            calls += 1;
+            Err(format!("{TRANSIENT_PREFIX} flaky"))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+}

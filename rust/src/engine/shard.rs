@@ -35,6 +35,7 @@ use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::arch::Network;
 use crate::dse::explore;
@@ -47,6 +48,8 @@ use crate::pruning::PruningPlan;
 use crate::sparsity::SparsityPoint;
 
 use super::cache::{device_fingerprint, quantize_points, DesignCache, DeviceCacheHandle};
+use super::ckpt::{search_fingerprint, Checkpoint, CheckpointSpec, DeviceCheckpoint};
+use super::retry::{is_transient, RetryPolicy};
 use super::{
     CandidateEvaluator, Engine, EngineStats, EvalCtx, EvalCompletion, EvalRequest,
     Measurement, SearchConfig, SearchRecord, SearchResult, ANCHORS,
@@ -116,6 +119,13 @@ pub struct ShardedStats {
     /// simulator-scored records that set a new running-best objective,
     /// summed over shards
     pub sim_promotions: usize,
+    /// transient-failure retries consumed ([`SearchConfig::retry`]),
+    /// summed over shards
+    pub retried_evals: u64,
+    /// measurements reclaimed as infeasible by the stall watchdog
+    /// ([`SearchConfig::eval_timeout_ms`] / [`SearchConfig::deadline_ms`]),
+    /// summed over shards
+    pub reclaimed_stalls: u64,
 }
 
 /// Output of [`ShardedEngine::search`]: per-device results (standalone
@@ -231,6 +241,14 @@ pub struct SearchProgress {
 pub struct SearchControl<'c> {
     /// return `false` to cancel the search after the current generation
     pub observer: Option<&'c (dyn Fn(SearchProgress) -> bool + Sync)>,
+    /// checkpoint to resume from ([`super::ckpt`]): its generations are
+    /// *replayed* — proposals regenerated (consuming the optimizer RNG
+    /// exactly as the original run did), evaluation skipped, records
+    /// restored — so the continued journal is bit-identical to an
+    /// uninterrupted run.  A checkpoint whose fingerprint or device set
+    /// does not match this search is ignored (fresh start); the CLI
+    /// validates loudly before handing one in.
+    pub resume: Option<&'c Checkpoint>,
 }
 
 /// Per-shard search state: the single-device engine view, its cache
@@ -253,6 +271,9 @@ struct Shard<'e> {
     async_gens: usize,
     overlap: u64,
     ooo: u64,
+    /// fault-tolerance counters accumulated over this run's generations
+    retried: u64,
+    reclaimed: u64,
     tpe: TpeOptimizer,
     records: Vec<SearchRecord>,
 }
@@ -418,6 +439,8 @@ impl<'a> ShardedEngine<'a> {
                     async_gens: 0,
                     overlap: 0,
                     ooo: 0,
+                    retried: 0,
+                    reclaimed: 0,
                     handle,
                     // every shard is seeded exactly like a standalone run,
                     // which is what makes its journal standalone-identical
@@ -426,6 +449,28 @@ impl<'a> ShardedEngine<'a> {
                 }
             })
             .collect();
+
+        // checkpoint/resume: fingerprint the result-relevant configuration;
+        // a matching checkpoint's generations are replayed below, anything
+        // else is silently a fresh start (the CLI validates loudly first)
+        let device_fps: Vec<u64> =
+            shards.iter().map(|s| device_fingerprint(s.engine.dev)).collect();
+        let fp = search_fingerprint(cfg, &shapes, &device_fps);
+        let resume_done = match ctrl.resume {
+            Some(ck)
+                if ck.fingerprint == fp
+                    && ck.done <= cfg.iterations
+                    && ck.devices.len() == shards.len()
+                    && ck
+                        .devices
+                        .iter()
+                        .zip(&shards)
+                        .all(|(d, s)| d.device == s.engine.dev.name) =>
+            {
+                ck.done
+            }
+            _ => 0,
+        };
 
         let mut generations = 0usize;
         let mut done = 0usize;
@@ -447,7 +492,31 @@ impl<'a> ShardedEngine<'a> {
                 })
                 .collect();
             // --- evaluate the union of (shard, candidate) work items ----
-            let evaluated = {
+            let replayed = done < resume_done;
+            let evaluated = if replayed {
+                // resume replay: records come from the checkpoint, so the
+                // generation's entire evaluation cost is skipped.  The
+                // proposals above consumed the optimizer RNG exactly as
+                // the original run did; feeding them back below with the
+                // checkpointed objectives reproduces the TPE model state
+                // bit for bit.  (`done` boundaries align because
+                // checkpoints are only written between generations of a
+                // fingerprint-identical schedule.)
+                let ck = ctrl.resume.expect("resume_done > 0 implies a checkpoint");
+                let mut records = Vec::with_capacity(shards.len() * g);
+                for d in &ck.devices {
+                    records.extend(d.records[done..done + g].iter().cloned());
+                }
+                let zeros = vec![0u64; shards.len()];
+                GenerationOutput {
+                    records,
+                    dedup: zeros.clone(),
+                    overlap: zeros.clone(),
+                    ooo: zeros.clone(),
+                    retries: zeros.clone(),
+                    reclaimed: zeros,
+                }
+            } else {
                 let ctxs: Vec<EvalCtx<'_>> = shards
                     .iter()
                     .map(|s| EvalCtx {
@@ -468,10 +537,10 @@ impl<'a> ShardedEngine<'a> {
                     .collect();
                 if cfg.engine.async_eval {
                     run_generation_async(
-                        self.evaluator, &shards, &ctxs, &xs_all, done, g, threads,
+                        self.evaluator, &shards, &ctxs, &xs_all, done, g, threads, cfg,
                     )
                 } else {
-                    run_generation(&shards, &ctxs, &xs_all, done, g, threads)
+                    run_generation(&shards, &ctxs, &xs_all, done, g, threads, &cfg.retry)
                 }
             };
             // --- reduce per shard, in candidate order -------------------
@@ -487,12 +556,25 @@ impl<'a> ShardedEngine<'a> {
                 s.dedup += evaluated.dedup[si];
                 s.overlap += evaluated.overlap[si];
                 s.ooo += evaluated.ooo[si];
-                if cfg.engine.async_eval {
+                s.retried += evaluated.retries[si];
+                s.reclaimed += evaluated.reclaimed[si];
+                if cfg.engine.async_eval && !replayed {
                     s.async_gens += 1;
                 }
             }
             generations += 1;
             done += g;
+            // crash safety: persist the journal prefix at the configured
+            // cadence (not during replay — that checkpoint already exists,
+            // and not at completion — the result is about to be returned)
+            if let Some(spec) = &cfg.checkpoint {
+                if done > resume_done
+                    && done < cfg.iterations
+                    && generations % spec.every.max(1) == 0
+                {
+                    write_checkpoint(spec, fp, done, &shards);
+                }
+            }
             if let Some(obs) = ctrl.observer {
                 let go = obs(SearchProgress {
                     generation: generations,
@@ -500,6 +582,11 @@ impl<'a> ShardedEngine<'a> {
                     total: cfg.iterations,
                 });
                 if !go && done < cfg.iterations {
+                    // cancelled (client disconnect / daemon shutdown):
+                    // leave a checkpoint behind so the run can resume
+                    if let Some(spec) = &cfg.checkpoint {
+                        write_checkpoint(spec, fp, done, &shards);
+                    }
                     return None;
                 }
             }
@@ -514,6 +601,7 @@ impl<'a> ShardedEngine<'a> {
         let mut total_dedup = 0u64;
         let (mut total_overlap, mut total_ooo) = (0u64, 0u64);
         let (mut total_sim_evals, mut total_sim_promotions) = (0usize, 0usize);
+        let (mut total_retried, mut total_reclaimed) = (0u64, 0u64);
         let async_generations = if cfg.engine.async_eval { generations } else { 0 };
         for s in shards {
             let best = s
@@ -534,6 +622,8 @@ impl<'a> ShardedEngine<'a> {
             total_dedup += s.dedup;
             total_overlap += s.overlap;
             total_ooo += s.ooo;
+            total_retried += s.retried;
+            total_reclaimed += s.reclaimed;
             // fidelity-ladder accounting, derived from the journal itself
             // in candidate order — thread-count invariant by construction
             let mut sim_evals = 0usize;
@@ -578,6 +668,8 @@ impl<'a> ShardedEngine<'a> {
                         sim_evals,
                         sim_promotions,
                         sim_disagreement,
+                        retried_evals: s.retried,
+                        reclaimed_stalls: s.reclaimed,
                     },
                     records: s.records,
                 },
@@ -602,6 +694,8 @@ impl<'a> ShardedEngine<'a> {
                 ooo_completions: total_ooo,
                 sim_evals: total_sim_evals,
                 sim_promotions: total_sim_promotions,
+                retried_evals: total_retried,
+                reclaimed_stalls: total_reclaimed,
             },
             pareto,
             per_device,
@@ -611,12 +705,35 @@ impl<'a> ShardedEngine<'a> {
 
 /// Everything one lockstep generation hands back to the reducer: records
 /// in flat `shard * g + candidate` order plus per-shard execution
-/// counters (all-zero overlap/ooo on the sync two-phase path).
+/// counters (all-zero overlap/ooo on the sync two-phase path, all-zero
+/// reclaimed everywhere but the async watchdog).
 struct GenerationOutput {
     records: Vec<SearchRecord>,
     dedup: Vec<u64>,
     overlap: Vec<u64>,
     ooo: Vec<u64>,
+    retries: Vec<u64>,
+    reclaimed: Vec<u64>,
+}
+
+/// Best-effort checkpoint write between generations: a failed save must
+/// never kill a healthy search, so IO errors are reported and swallowed
+/// (the previous checkpoint, if any, survives intact — saves are atomic).
+fn write_checkpoint(spec: &CheckpointSpec, fingerprint: u64, done: usize, shards: &[Shard<'_>]) {
+    let ck = Checkpoint {
+        fingerprint,
+        done,
+        devices: shards
+            .iter()
+            .map(|s| DeviceCheckpoint {
+                device: s.engine.dev.name.clone(),
+                records: s.records.clone(),
+            })
+            .collect(),
+    };
+    if let Err(e) = ck.save(&spec.path) {
+        eprintln!("warning: checkpoint write to '{}' failed: {e}", spec.path);
+    }
 }
 
 /// Cross-shard dedup of one generation's proposals: every `(shard,
@@ -684,6 +801,7 @@ fn run_generation(
     base_iter: usize,
     g: usize,
     threads: usize,
+    retry: &RetryPolicy,
 ) -> GenerationOutput {
     let total = shards.len() * g;
     let dd = dedup_proposals(xs_all, shards.len(), g);
@@ -692,10 +810,16 @@ fn run_generation(
     meas.resize_with(dd.owners.len(), || None);
     run_slots(&mut meas, threads, |slot, mi| {
         let (si, j) = dd.owners[mi];
-        *slot = Some(shards[si].engine.measure_candidate(&xs_all[si][j]));
+        *slot = Some(shards[si].engine.measure_candidate(&xs_all[si][j], retry));
     });
     let meas: Vec<Measurement> =
         meas.into_iter().map(|o| o.expect("measurement slot filled")).collect();
+    // retry accounting follows measurement ownership (flat-order first
+    // occurrence), like the dedup counter
+    let mut retries = vec![0u64; shards.len()];
+    for (mi, m) in meas.iter().enumerate() {
+        retries[dd.owners[mi].0] += m.retries as u64;
+    }
     // --- pass 2: price + score every (shard, candidate) work item -------
     let mut out: Vec<Option<SearchRecord>> = Vec::new();
     out.resize_with(total, || None);
@@ -713,6 +837,8 @@ fn run_generation(
         dedup: dd.dedup,
         overlap: vec![0; shards.len()],
         ooo: vec![0; shards.len()],
+        retries,
+        reclaimed: vec![0; shards.len()],
     }
 }
 
@@ -736,6 +862,22 @@ fn run_generation(
 /// shard), which makes the whole pipeline an execution knob: bit-for-bit
 /// identical to the sync path for any evaluator honoring the purity
 /// contract, including ones that complete out of submission order.
+///
+/// # Stall watchdog
+///
+/// With [`SearchConfig::eval_timeout_ms`] (silence between completions)
+/// or [`SearchConfig::deadline_ms`] (whole-generation budget) non-zero,
+/// a pop that would otherwise block forever times out and **reclaims
+/// every still-outstanding measurement** as a failed one — each gets an
+/// infeasible-scored record ("measurement stalled; reclaimed by the
+/// watchdog", deliberately not transient so it is never retried), and
+/// the generation completes.  An evaluator that returned without sending
+/// every completion is reclaimed immediately (those completions can
+/// never arrive).  Late completions that do arrive after reclamation are
+/// ignored.  Both knobs default to 0 = the wait-forever semantics, where
+/// a short completion count is still a contract violation.  Caveat: the
+/// watchdog reclaims *completions*; an `eval_async` implementation that
+/// itself never returns still blocks the generation's scope join.
 fn run_generation_async(
     evaluator: &dyn CandidateEvaluator,
     shards: &[Shard<'_>],
@@ -744,7 +886,10 @@ fn run_generation_async(
     base_iter: usize,
     g: usize,
     threads: usize,
+    cfg: &SearchConfig,
 ) -> GenerationOutput {
+    let retry = cfg.retry;
+    let (eval_timeout, deadline) = (cfg.eval_timeout_ms, cfg.deadline_ms);
     let n_shards = shards.len();
     let total = n_shards * g;
     let dd = dedup_proposals(xs_all, n_shards, g);
@@ -773,17 +918,24 @@ fn run_generation_async(
         received: usize,
         max_slot: Option<usize>,
         done: Vec<bool>,
+        /// last completion arrival (or generation start): what
+        /// `eval_timeout_ms` measures silence against
+        last_progress: Instant,
     }
+    let gen_start = Instant::now();
     let (meas_tx, meas_rx) = mpsc::channel::<EvalCompletion>();
     let pop = Mutex::new(PopState {
         rx: meas_rx,
         received: 0,
         max_slot: None,
         done: vec![false; n_meas],
+        last_progress: gen_start,
     });
     let (rec_tx, rec_rx) = mpsc::channel::<(usize, SearchRecord)>();
     let overlap: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
     let ooo: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
+    let retried: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
+    let reclaimed: Vec<AtomicU64> = (0..n_shards).map(|_| AtomicU64::new(0)).collect();
     // true while the evaluator is still working through the generation's
     // request batch: pricings started in that window genuinely overlap
     // measurement work (a queue backlog drained *after* the evaluator
@@ -806,33 +958,135 @@ fn run_generation_async(
             let rec_tx = rec_tx.clone();
             let (pop, plans, dd) = (&pop, &plans, &dd);
             let (overlap, ooo, measuring) = (&overlap, &ooo, &measuring);
+            let (retried, reclaimed) = (&retried, &reclaimed);
             sc.spawn(move || loop {
+                // one popped completion — or the watchdog's harvest of
+                // every slot that will never complete
+                enum Popped {
+                    One(EvalCompletion, bool),
+                    Stalled(Vec<usize>),
+                }
                 // pop one completion (serialized); price its users
                 // (parallel across workers) after releasing the lock
-                let (c, out_of_order) = {
+                let popped = {
                     let mut st = pop.lock().unwrap();
                     if st.received == n_meas {
                         return;
                     }
-                    let Ok(c) = st.rx.recv() else { return };
-                    assert!(
-                        c.slot < n_meas && !std::mem::replace(&mut st.done[c.slot], true),
-                        "evaluator violated the eval_async contract on slot {}",
-                        c.slot
-                    );
-                    st.received += 1;
-                    let out_of_order = st.max_slot.is_some_and(|m| c.slot < m);
-                    st.max_slot = Some(st.max_slot.map_or(c.slot, |m| m.max(c.slot)));
-                    (c, out_of_order)
+                    let recv = if eval_timeout == 0 && deadline == 0 {
+                        // wait-forever semantics: a closed channel with
+                        // outstanding slots is a contract violation the
+                        // collector will report
+                        st.rx.recv().map_err(|_| false)
+                    } else {
+                        // watchdog: bound the wait by the nearer of the
+                        // per-completion timeout and the generation
+                        // deadline.  A disconnect with outstanding slots
+                        // means those completions can never arrive —
+                        // reclaim immediately rather than waiting out the
+                        // timer.
+                        let now = Instant::now();
+                        let mut wait = Duration::from_secs(86_400);
+                        if eval_timeout > 0 {
+                            let t = st.last_progress + Duration::from_millis(eval_timeout);
+                            wait = wait.min(t.saturating_duration_since(now));
+                        }
+                        if deadline > 0 {
+                            let t = gen_start + Duration::from_millis(deadline);
+                            wait = wait.min(t.saturating_duration_since(now));
+                        }
+                        st.rx.recv_timeout(wait).map_err(|_| true)
+                    };
+                    match recv {
+                        Ok(c) => {
+                            st.last_progress = Instant::now();
+                            assert!(
+                                c.slot < n_meas
+                                    && !std::mem::replace(&mut st.done[c.slot], true),
+                                "evaluator violated the eval_async contract on slot {}",
+                                c.slot
+                            );
+                            st.received += 1;
+                            let out_of_order = st.max_slot.is_some_and(|m| c.slot < m);
+                            st.max_slot =
+                                Some(st.max_slot.map_or(c.slot, |m| m.max(c.slot)));
+                            Popped::One(c, out_of_order)
+                        }
+                        Err(false) => return,
+                        Err(true) => {
+                            // watchdog fired: mark every outstanding slot
+                            // done so no other worker waits again, and
+                            // reclaim them all below
+                            let stalled: Vec<usize> = st
+                                .done
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, &d)| !d)
+                                .map(|(s, _)| s)
+                                .collect();
+                            for &s in &stalled {
+                                st.done[s] = true;
+                            }
+                            st.received = n_meas;
+                            Popped::Stalled(stalled)
+                        }
+                    }
+                };
+                let (c, out_of_order) = match popped {
+                    Popped::One(c, out_of_order) => (c, out_of_order),
+                    Popped::Stalled(stalled) => {
+                        // score reclaimed slots as failed measurements:
+                        // infeasible records keep the journal and the TPE
+                        // feedback shape-complete, and the search moves on
+                        for slot in stalled {
+                            reclaimed[dd.owners[slot].0].fetch_add(1, Ordering::Relaxed);
+                            let meas = Measurement::from_result(
+                                shards[0].engine.target,
+                                plans[slot].clone(),
+                                Err("measurement stalled; reclaimed by the watchdog"
+                                    .to_string()),
+                                n_points,
+                            );
+                            for &k in &dd.users[slot] {
+                                let (si, j) = (k / g, k % g);
+                                let rec = shards[si].engine.score_candidate(
+                                    base_iter + j,
+                                    &meas,
+                                    &ctxs[si],
+                                );
+                                if rec_tx.send((k, rec)).is_err() {
+                                    return; // collector bailed out
+                                }
+                            }
+                        }
+                        continue; // next pop sees received == n_meas
+                    }
                 };
                 if out_of_order {
                     ooo[dd.owners[c.slot].0].fetch_add(1, Ordering::Relaxed);
                 }
                 let overlapping = measuring.load(Ordering::Acquire);
+                // a transient completion failure is re-driven on this
+                // worker, synchronously, under the same retry schedule as
+                // the sync path — so both pipelines see the same final
+                // outcome for the same plan
+                let (result, tries) = match c.result {
+                    Err(e) if is_transient(&e) => {
+                        let mut first = Some(Err(e));
+                        retry.run(|| match first.take() {
+                            Some(r) => r,
+                            None => evaluator.try_eval(&plans[c.slot]),
+                        })
+                    }
+                    r => (r, 0),
+                };
+                if tries > 0 {
+                    retried[dd.owners[c.slot].0].fetch_add(tries as u64, Ordering::Relaxed);
+                }
                 let meas = Measurement::from_result(
                     shards[0].engine.target,
                     plans[c.slot].clone(),
-                    c.result,
+                    result,
                     n_points,
                 );
                 for &k in &dd.users[c.slot] {
@@ -864,6 +1118,8 @@ fn run_generation_async(
         dedup: dd.dedup,
         overlap: overlap.into_iter().map(|a| a.into_inner()).collect(),
         ooo: ooo.into_iter().map(|a| a.into_inner()).collect(),
+        retries: retried.into_iter().map(|a| a.into_inner()).collect(),
+        reclaimed: reclaimed.into_iter().map(|a| a.into_inner()).collect(),
     }
 }
 

@@ -71,6 +71,29 @@
 //! client disconnects mid-search — is answered or absorbed without
 //! taking the process (or its caches) down.
 //!
+//! ## Fault tolerance (`engine::retry`, `engine::ckpt`, `util::fault`)
+//!
+//! Long sweeps on real measurement backends meet transient failures,
+//! stalls and crashes, so the search runtime is chaos-hardened end to
+//! end: evaluator errors prefixed [`engine::TRANSIENT_PREFIX`] are
+//! retried with bounded exponential backoff
+//! ([`engine::RetryPolicy`], `hass search --retries`) before a
+//! candidate scores infeasible; the async completion queue carries a
+//! **stall watchdog** (`--eval-timeout`, `--deadline`) that reclaims
+//! in-flight measurements which never complete as infeasible-scored
+//! journal records instead of hanging the run; and `--checkpoint`
+//! snapshots the search atomically (temp file + rename) every N
+//! generations so a killed run resumes with `--resume` and journals
+//! **bit-identically** to an uninterrupted one.  All of it is tested
+//! deterministically through [`util::fault`]: a seeded
+//! [`util::fault::FaultPlan`] makes injected failures and stalls a pure
+//! function of the fault seed (independent of thread schedule), and
+//! named injection sites cover snapshot IO and daemon connections
+//! (`tests/chaos.rs`, the CI chaos-smoke job).  None of these knobs
+//! enter the determinism fingerprint: a zero-fault run with retry,
+//! watchdog or checkpointing enabled journals bit-identically to the
+//! seed configuration.
+//!
 //! ## The event-driven simulator and the fidelity ladder (`simulator`)
 //!
 //! The cycle-level dataflow simulator runs on a discrete-event core — a
@@ -116,7 +139,7 @@
 //! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
 //! | [`server`]    | resident `hass serve` search daemon + JSON-RPC protocol |
 //! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |
-//! | [`util`]      | offline stand-ins: rng, prop testing, json, cli; [`util::memo`] striped memo |
+//! | [`util`]      | offline stand-ins: rng, prop testing, json, cli; [`util::memo`] striped memo; [`util::fault`] chaos harness |
 
 pub mod arch;
 pub mod baselines;

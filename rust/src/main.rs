@@ -16,9 +16,10 @@
 use hass::arch::networks;
 use hass::baselines;
 use hass::coordinator::{
-    search_sharded_with_cache, search_with_cache, CandidateEvaluator, DesignCache,
-    EngineConfig, MeasuredEvaluator, SearchConfig, SearchMode, SimulatedEvaluator,
-    SurrogateEvaluator,
+    resume_fingerprint, search_sharded_with_cache_ctrl, search_with_cache_ctrl,
+    CandidateEvaluator, Checkpoint, CheckpointSpec, DesignCache, EngineConfig,
+    MeasuredEvaluator, RetryPolicy, SearchConfig, SearchControl, SearchMode,
+    SimulatedEvaluator, SurrogateEvaluator,
 };
 use hass::dse::{self, explore, DseConfig};
 use hass::hardware::device::DeviceBudget;
@@ -159,7 +160,43 @@ fn cmd_search(args: &[String]) -> i32 {
             "JSON snapshot path: load a warm design cache before the search \
              and save it back after (created if missing)",
         )
-        .opt("journal", "", "CSV path for the per-iteration journal");
+        .opt("journal", "", "CSV path for the per-iteration journal")
+        .opt(
+            "retries",
+            "3",
+            "max retries for transient evaluation failures (0 = first failure wins)",
+        )
+        .opt(
+            "eval-timeout",
+            "0",
+            "async pipeline watchdog: ms without a completion before the \
+             generation's outstanding measurements are reclaimed (0 = off)",
+        )
+        .opt(
+            "deadline",
+            "0",
+            "async pipeline watchdog: ms budget for a whole generation \
+             before outstanding measurements are reclaimed (0 = off)",
+        )
+        .opt(
+            "checkpoint",
+            "",
+            "path for periodic crash-safe search checkpoints \
+             (atomic tmp+rename; resume with --resume)",
+        )
+        .opt("checkpoint-every", "1", "generations between checkpoint writes")
+        .opt(
+            "resume",
+            "",
+            "checkpoint file to continue an interrupted search from \
+             (the finished journal is bit-identical to an uninterrupted run)",
+        )
+        .opt(
+            "cache-max-entries",
+            "0",
+            "compact the saved --cache-file to at most this many design and \
+             frontier entries each, least-recently-used first (0 = unlimited)",
+        );
     let p = parse_or_die(cli, args);
     let net = network_or_die(p.get("network"));
     let devices = match DeviceBudget::parse_list(p.get("devices")) {
@@ -196,12 +233,69 @@ fn cmd_search(args: &[String]) -> i32 {
         println!("[search] --evaluator sim ranks per generation; enabling the async pipeline");
         engine.async_eval = true;
     }
+    let eval_timeout_ms = p.get_u64("eval-timeout");
+    let deadline_ms = p.get_u64("deadline");
+    if (eval_timeout_ms > 0 || deadline_ms > 0) && !engine.async_eval {
+        eprintln!(
+            "warning: --eval-timeout/--deadline watch the async completion queue; \
+             the sync pipeline has no in-flight measurements to reclaim (add --async)"
+        );
+    }
+    let ckpt_path = p.get("checkpoint");
     let cfg = SearchConfig {
         iterations: p.get_usize("iters"),
         seed: p.get_u64("seed"),
         mode,
         engine,
+        retry: RetryPolicy {
+            max_retries: p.get_usize("retries") as u32,
+            ..Default::default()
+        },
+        eval_timeout_ms,
+        deadline_ms,
+        checkpoint: (!ckpt_path.is_empty()).then(|| CheckpointSpec {
+            path: ckpt_path.to_string(),
+            every: p.get_usize("checkpoint-every").max(1),
+        }),
         ..Default::default()
+    };
+    // --resume: load + validate loudly here (the engine silently ignores a
+    // mismatched checkpoint; the CLI should explain why instead)
+    let resume_path = p.get("resume");
+    let resume_ck = if resume_path.is_empty() {
+        None
+    } else {
+        match Checkpoint::load(resume_path) {
+            Ok(ck) => {
+                let fp = resume_fingerprint(&cfg, &net, &all_devices);
+                if ck.fingerprint != fp {
+                    eprintln!(
+                        "checkpoint '{resume_path}' was written by a different search \
+                         (fingerprint {:016x}, this run is {fp:016x}); refusing to \
+                         resume — rerun with the original network/devices/seed/flags",
+                        ck.fingerprint
+                    );
+                    return 2;
+                }
+                if ck.done > cfg.iterations {
+                    eprintln!(
+                        "checkpoint '{resume_path}' already covers {} iterations but \
+                         this run asks for only {}; refusing to resume",
+                        ck.done, cfg.iterations
+                    );
+                    return 2;
+                }
+                println!(
+                    "[search] resume <- {resume_path}: {} of {} iterations already done",
+                    ck.done, cfg.iterations
+                );
+                Some(ck)
+            }
+            Err(e) => {
+                eprintln!("failed to load checkpoint: {e}");
+                return 2;
+            }
+        }
     };
     let want_measured = match p.get("evaluator") {
         "measured" => true,
@@ -268,11 +362,21 @@ fn cmd_search(args: &[String]) -> i32 {
         p.get("cache-file")
     };
     let cache = load_cache(cache_file);
+    let cache_cap = p.get_usize("cache-max-entries");
+    let ctrl = SearchControl { resume: resume_ck.as_ref(), ..Default::default() };
 
     // --- sharded multi-device search (--devices a,b,...) --------------
     if all_devices.len() >= 2 {
-        let result =
-            search_sharded_with_cache(ev.as_ref(), &net, &rm, &all_devices, &cfg, &cache);
+        let result = search_sharded_with_cache_ctrl(
+            ev.as_ref(),
+            &net,
+            &rm,
+            &all_devices,
+            &cfg,
+            &cache,
+            &ctrl,
+        )
+        .expect("a search without an observer cannot be cancelled");
         let s = &result.stats;
         println!(
             "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
@@ -295,6 +399,13 @@ fn cmd_search(args: &[String]) -> i32 {
                 "[search] async pipeline: {} generations | {} pricings overlapped \
                  in-flight measurements | {} completions out of order",
                 s.async_generations, s.overlap_pricings, s.ooo_completions
+            );
+        }
+        if s.retried_evals > 0 || s.reclaimed_stalls > 0 {
+            println!(
+                "[search] fault tolerance: {} transient failures retried | {} stalled \
+                 measurements reclaimed by the watchdog",
+                s.retried_evals, s.reclaimed_stalls
             );
         }
         if s.sim_evals > 0 {
@@ -323,12 +434,13 @@ fn cmd_search(args: &[String]) -> i32 {
                 }
             }
         }
-        return save_cache(&cache, cache_file);
+        return save_cache(&cache, cache_file, cache_cap);
     }
 
     // --- single-device search (--device, or a 1-entry --devices) ------
     let dev = all_devices.into_iter().next().expect("resolved above");
-    let result = search_with_cache(ev.as_ref(), &net, &rm, &dev, &cfg, &cache);
+    let result = search_with_cache_ctrl(ev.as_ref(), &net, &rm, &dev, &cfg, &cache, &ctrl)
+        .expect("a search without an observer cannot be cancelled");
     // --iters 0 is a legal smoke run (e.g. warming a cache file): there
     // is no best record then, not a panic
     match result.try_best_record() {
@@ -358,6 +470,13 @@ fn cmd_search(args: &[String]) -> i32 {
             s.async_generations, s.overlap_pricings, s.ooo_completions
         );
     }
+    if s.retried_evals > 0 || s.reclaimed_stalls > 0 {
+        println!(
+            "[search] fault tolerance: {} transient failures retried | {} stalled \
+             measurements reclaimed by the watchdog",
+            s.retried_evals, s.reclaimed_stalls
+        );
+    }
     if s.sim_evals > 0 {
         println!(
             "[search] fidelity ladder: {} records simulator-scored | {} set a new \
@@ -376,7 +495,7 @@ fn cmd_search(args: &[String]) -> i32 {
         }
         println!("[search] journal -> {journal}");
     }
-    save_cache(&cache, cache_file)
+    save_cache(&cache, cache_file, cache_cap)
 }
 
 /// Load a warm design cache from `path` (`--cache-file`): empty path or
@@ -408,15 +527,24 @@ fn load_cache(path: &str) -> DesignCache {
 }
 
 /// Persist the design cache back to `path` (no-op for an empty path).
-fn save_cache(cache: &DesignCache, path: &str) -> i32 {
+/// `max_entries` > 0 compacts the snapshot (LRU eviction per section)
+/// on the way out; the save also merges with any snapshot another
+/// process wrote concurrently (advisory lock, see `DesignCache::save`).
+fn save_cache(cache: &DesignCache, path: &str, max_entries: usize) -> i32 {
     if path.is_empty() {
         return 0;
     }
-    match cache.save(path) {
+    match cache.save_compacted(path, max_entries) {
         Ok(st) => {
             println!(
-                "[search] cache -> {path}: {} designs, {} frontiers",
-                st.designs, st.frontiers
+                "[search] cache -> {path}: {} designs, {} frontiers{}",
+                st.designs,
+                st.frontiers,
+                if st.evicted > 0 {
+                    format!(" ({} least-recently-used entries evicted)", st.evicted)
+                } else {
+                    String::new()
+                }
             );
             0
         }
@@ -684,7 +812,12 @@ fn cmd_client(args: &[String]) -> i32 {
     .opt("sw", "0.5", "price: uniform weight sparsity")
     .opt("sa", "0.5", "price: uniform activation sparsity")
     .opt("journal", "", "search: write the returned per-device journal CSVs here")
-    .opt("path", "", "save-cache: snapshot path (on the daemon's host)");
+    .opt("path", "", "save-cache: snapshot path (on the daemon's host)")
+    .opt(
+        "connect-retries",
+        "3",
+        "reconnect attempts after a refused connection (exponential backoff)",
+    );
     let p = parse_or_die(cli, args);
     let method =
         p.p.positionals.first().map(String::as_str).unwrap_or("stats").to_string();
@@ -717,11 +850,27 @@ fn cmd_client(args: &[String]) -> i32 {
         }
     };
     let addr = p.get("addr");
-    let stream = match std::net::TcpStream::connect(addr) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("failed to connect to '{addr}': {e} (is `hass serve` running?)");
-            return 1;
+    // a daemon mid-restart refuses connections for a moment — retry with
+    // bounded exponential backoff instead of failing on the first refusal
+    let retries = p.get_usize("connect-retries") as u32;
+    let mut attempt = 0u32;
+    let stream = loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) if attempt < retries => {
+                let ms = 25u64.checked_shl(attempt).unwrap_or(u64::MAX).min(400);
+                eprintln!(
+                    "[client] connect to '{addr}' failed ({e}); retry {} of {retries} \
+                     in {ms}ms",
+                    attempt + 1
+                );
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                attempt += 1;
+            }
+            Err(e) => {
+                eprintln!("failed to connect to '{addr}': {e} (is `hass serve` running?)");
+                return 1;
+            }
         }
     };
     let request = Json::obj(vec![

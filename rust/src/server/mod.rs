@@ -20,7 +20,7 @@
 //!
 //! | method       | params                                                           | result |
 //! |--------------|------------------------------------------------------------------|--------|
-//! | `search`     | `network`, `device` \| `devices` (csv), `iters`, `seed`, `mode` (`hw`\|`sw`), `batch`, `threads`, `quant`, `async`, `cache` | per-device `{device, journal_csv, cache_hits, cache_misses, best_*}` + run stats; streams `queued`/`started`/`generation` events |
+//! | `search`     | `network`, `device` \| `devices` (csv), `iters`, `seed`, `mode` (`hw`\|`sw`), `batch`, `threads`, `quant`, `async`, `cache`, `retries`, `eval_timeout`, `deadline`, `checkpoint`, `checkpoint_every` | per-device `{device, journal_csv, cache_hits, cache_misses, best_*}` + run stats; streams `queued`/`started`/`generation` events |
 //! | `price`      | `network`, `device`, `sw`, `sa`, `quant`                         | `{images_per_sec, dsp, efficiency, cached}` via the shared cache |
 //! | `stats`      | —                                                                | cache sizes + admission/search counters |
 //! | `save-cache` | `path`                                                           | `{designs, frontiers}` snapshot written |
@@ -52,6 +52,23 @@
 //! is caught at the request boundary, and the striped cache locks
 //! recover from poisoning (`util::memo`) — one bad request never takes
 //! the daemon or its warm caches down.
+//!
+//! # Fault tolerance
+//!
+//! The engine's fault-tolerance layer (see [`crate::engine`]) is fully
+//! reachable through the daemon: a `search` request may carry `retries`
+//! (transient-failure retry budget), `eval_timeout` / `deadline` (async
+//! stall watchdog, ms) and `checkpoint` / `checkpoint_every` (a
+//! host-side path the engine snapshots the run to between generations).
+//! Because a cancelled search — client gone, or daemon shutdown kicking
+//! the connection — also writes its checkpoint before unwinding, an
+//! interrupted daemon search can be continued with `hass search
+//! --resume` and journals bit-identically to an uninterrupted run.
+//! Deterministic chaos tests drive the daemon through the
+//! `server.conn.drop` and `server.search.panic` injection sites
+//! ([`crate::util::fault`]): a dropped connection or a panicking search
+//! must cost exactly one request, with the resident caches still warm
+//! and serving.
 
 pub mod protocol;
 
@@ -65,12 +82,13 @@ use crate::arch::networks;
 use crate::coordinator::SurrogateEvaluator;
 use crate::dse::frontier::shape_fingerprint;
 use crate::engine::{
-    quantize_points, DesignCache, EngineConfig, SearchConfig, SearchControl, SearchMode,
-    ShardedEngine,
+    quantize_points, CheckpointSpec, DesignCache, EngineConfig, RetryPolicy, SearchConfig,
+    SearchControl, SearchMode, ShardedEngine,
 };
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::sparsity::{synthesize, SparsityPoint};
+use crate::util::fault;
 use crate::util::json::Json;
 
 use protocol::{error_line, event_line, parse_request, result_line, Request};
@@ -257,6 +275,13 @@ impl Server {
     /// panics on client input; a malformed line is answered and the
     /// connection survives it.
     fn handle_conn(&self, stream: TcpStream) {
+        // chaos site: a connection dropped before the first byte (network
+        // blip, proxy reset).  Must cost exactly one request — the client
+        // reconnects with backoff, the daemon keeps serving.
+        if fault::fire("server.conn.drop") {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
         let Ok(read_half) = stream.try_clone() else { return };
         let writer = Mutex::new(stream);
         let reader = BufReader::new(read_half);
@@ -350,11 +375,23 @@ impl Server {
             quant_bits: usize_param(params, "quant", 0)? as u32,
             async_eval: bool_param(params, "async", false)?,
         };
+        let ckpt_path = str_param(params, "checkpoint", "")?;
+        let ckpt_every = usize_param(params, "checkpoint_every", 1)?.max(1);
         let cfg = SearchConfig {
             iterations: usize_param(params, "iters", 96)?,
             seed: u64_param(params, "seed", 0)?,
             mode,
             engine,
+            retry: RetryPolicy {
+                max_retries: usize_param(params, "retries", 3)? as u32,
+                ..Default::default()
+            },
+            eval_timeout_ms: u64_param(params, "eval_timeout", 0)?,
+            deadline_ms: u64_param(params, "deadline", 0)?,
+            checkpoint: (!ckpt_path.is_empty()).then(|| CheckpointSpec {
+                path: ckpt_path.clone(),
+                every: ckpt_every,
+            }),
             ..Default::default()
         };
         // the exact evaluator construction of the CLI surrogate path —
@@ -402,13 +439,21 @@ impl Server {
             )
             .is_ok()
         };
-        let ctrl = SearchControl { observer: Some(&observer) };
+        let ctrl = SearchControl {
+            observer: Some(&observer),
+            ..Default::default()
+        };
         let eng = ShardedEngine::new(&ev, &net, &self.rm, &devices);
         // defense in depth: the satellite fixes make the search itself
         // panic-free on evaluator failure, and the striped caches recover
         // from poisoning — but a residual panic must still cost only this
         // request, never the daemon
         let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // chaos site: a panic from inside the search worker — the
+            // catch_unwind boundary must contain it with caches intact
+            if fault::fire("server.search.panic") {
+                panic!("injected panic at site 'server.search.panic'");
+            }
             eng.search_with_cache_ctrl(&cfg, &self.cache, &ctrl)
         }));
         let result = match outcome {
@@ -627,6 +672,22 @@ mod tests {
         let (t2, w2) = a.ticket();
         assert!(w2);
         assert!(!a.wait(t2));
+    }
+
+    #[test]
+    fn lock_clean_recovers_a_poisoned_mutex() {
+        let m = std::sync::Arc::new(Mutex::new(5i32));
+        let m2 = m.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the daemon-state lock");
+        });
+        assert!(poisoner.join().is_err(), "the poisoner must panic");
+        assert!(m.lock().is_err(), "the lock must actually be poisoned");
+        // the daemon keeps serving: lock_clean recovers the guarded data
+        assert_eq!(*lock_clean(&m), 5);
+        *lock_clean(&m) += 1;
+        assert_eq!(*lock_clean(&m), 6);
     }
 
     #[test]

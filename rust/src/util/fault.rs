@@ -1,0 +1,328 @@
+//! Deterministic, seeded fault injection for chaos tests and CI.
+//!
+//! Robustness code is only trustworthy if every failure mode it guards
+//! against can be reproduced on demand.  This module provides two
+//! injection mechanisms, both deterministic:
+//!
+//! * [`FaultPlan`] + [`FaultyEvaluator`] — evaluator-level faults that
+//!   are a *pure function of the pruning plan* (hashed with the fault
+//!   seed through the shared [`crate::util::rng`] stream).  A fixed
+//!   `FaultPlan` injects the same transient failures and stalls into the
+//!   same candidates regardless of thread count, shard count or
+//!   pipeline (sync vs async), so chaos journals stay bit-identical
+//!   across executions — the engine's determinism contract extends to
+//!   faulty runs.
+//! * a process-global **site registry** ([`arm`] / [`fire`] /
+//!   [`io_error`]) — named injection points compiled into snapshot IO,
+//!   checkpoint IO and server connection handling.  Tests arm a site
+//!   with a count; the next `count` passes through that site fail.
+//!   Sites are global state: tests using them must serialize through
+//!   [`exclusive`] and disarm via the [`armed`] guard.
+//!
+//! Nothing here fires unless explicitly armed or wrapped: production
+//! runs pay one `HashMap` lookup per armed-site check and nothing else.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::engine::evaluator::{
+    CandidateEvaluator, EvalCompletion, EvalError, EvalPoint, EvalRequest,
+};
+use crate::engine::retry::TRANSIENT_PREFIX;
+use crate::pruning::PruningPlan;
+use crate::sparsity::NetworkSparsity;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// seeded per-plan faults
+// ---------------------------------------------------------------------
+
+/// A reproducible schedule of evaluator faults, drawn per pruning plan
+/// from the fault seed.  Which plans fail (and how often), and which
+/// async measurements stall, depend only on `(seed, plan)` — never on
+/// timing, thread count or evaluation order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// fault stream seed (independent of the search seed)
+    pub seed: u64,
+    /// probability a plan's measurement fails transiently at least once
+    pub fail_rate: f64,
+    /// upper bound on consecutive transient failures per faulty plan
+    pub max_failures: u32,
+    /// probability an async measurement stalls: its completion never
+    /// arrives and the engine's watchdog must reclaim the slot
+    pub stall_rate: f64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as a baseline in tests).
+    pub fn none(seed: u64) -> Self {
+        FaultPlan { seed, fail_rate: 0.0, max_failures: 0, stall_rate: 0.0 }
+    }
+
+    /// FNV-1a over the fault seed and the plan's threshold bits: the
+    /// deterministic identity faults are keyed by.
+    pub fn plan_hash(&self, plan: &PruningPlan) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ self.seed;
+        for &t in plan.tau_w.iter().chain(plan.tau_a.iter()) {
+            h ^= t.to_bits();
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Number of transient failures this plan's measurement sees before
+    /// it is allowed to succeed.
+    pub fn failures_for(&self, plan: &PruningPlan) -> u32 {
+        if self.fail_rate <= 0.0 || self.max_failures == 0 {
+            return 0;
+        }
+        let mut rng = Rng::new(self.plan_hash(plan));
+        if rng.bool(self.fail_rate) {
+            1 + rng.below(self.max_failures as usize) as u32
+        } else {
+            0
+        }
+    }
+
+    /// Whether this plan's *async* measurement stalls (no completion is
+    /// ever sent; sync evaluation is unaffected).  Drawn from a stream
+    /// independent of [`failures_for`](Self::failures_for).
+    pub fn stalls(&self, plan: &PruningPlan) -> bool {
+        if self.stall_rate <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(self.plan_hash(plan) ^ 0x5354_414c_4c45_4421);
+        rng.bool(self.stall_rate)
+    }
+}
+
+/// Evaluator wrapper injecting the faults a [`FaultPlan`] schedules.
+///
+/// * [`try_eval`](CandidateEvaluator::try_eval) fails with a
+///   [`TRANSIENT_PREFIX`]-tagged error for the plan's first
+///   [`failures_for`](FaultPlan::failures_for) attempts, then delegates
+///   — so an engine retry budget ≥ the fault budget recovers every
+///   candidate and the journal is bit-identical to a zero-fault run.
+/// * [`eval_async`](CandidateEvaluator::eval_async) silently *drops*
+///   the completion of any plan [`stalls`](FaultPlan::stalls) selects,
+///   modelling a measurement that never returns; the engine's watchdog
+///   (`SearchConfig::eval_timeout_ms`) must reclaim those slots.
+///
+/// Attempt counts are shared across threads (one mutexed map), so which
+/// attempt finally succeeds depends only on how many times the engine
+/// has asked about that plan — deterministic under the engine's
+/// fixed retry cadence.
+pub struct FaultyEvaluator<'a> {
+    inner: &'a dyn CandidateEvaluator,
+    plan: FaultPlan,
+    attempts: Mutex<HashMap<u64, u32>>,
+}
+
+impl<'a> FaultyEvaluator<'a> {
+    pub fn new(inner: &'a dyn CandidateEvaluator, plan: FaultPlan) -> Self {
+        FaultyEvaluator { inner, plan, attempts: Mutex::new(HashMap::new()) }
+    }
+
+    /// The schedule this wrapper injects.
+    pub fn fault_plan(&self) -> FaultPlan {
+        self.plan
+    }
+}
+
+impl CandidateEvaluator for FaultyEvaluator<'_> {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        self.inner.sparsity_model()
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        self.inner.eval(plan)
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.inner.base_accuracy()
+    }
+
+    fn try_eval(&self, plan: &PruningPlan) -> Result<EvalPoint, EvalError> {
+        let budget = self.plan.failures_for(plan);
+        if budget > 0 {
+            let key = self.plan.plan_hash(plan);
+            let mut attempts = self.attempts.lock().unwrap_or_else(|p| p.into_inner());
+            let n = attempts.entry(key).or_insert(0);
+            if *n < budget {
+                *n += 1;
+                return Err(format!(
+                    "{TRANSIENT_PREFIX} injected fault (attempt {n} of {budget})"
+                ));
+            }
+        }
+        self.inner.try_eval(plan)
+    }
+
+    fn eval_async(&self, requests: Vec<EvalRequest>, completions: Sender<EvalCompletion>) {
+        for req in requests {
+            if self.plan.stalls(&req.plan) {
+                continue; // completion never arrives; the watchdog reclaims it
+            }
+            let result = self.try_eval(&req.plan);
+            if completions.send(EvalCompletion { slot: req.slot, result }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// global injection sites (snapshot IO, checkpoints, server connections)
+// ---------------------------------------------------------------------
+
+fn sites() -> &'static Mutex<HashMap<String, u32>> {
+    static SITES: OnceLock<Mutex<HashMap<String, u32>>> = OnceLock::new();
+    SITES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_sites() -> MutexGuard<'static, HashMap<String, u32>> {
+    sites().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm `site`: the next `count` [`fire`] calls there report a fault.
+pub fn arm(site: &str, count: u32) {
+    lock_sites().insert(site.to_string(), count);
+}
+
+/// Disarm one site (idempotent).
+pub fn disarm(site: &str) {
+    lock_sites().remove(site);
+}
+
+/// Disarm every site (test teardown).
+pub fn disarm_all() {
+    lock_sites().clear();
+}
+
+/// Should a fault fire at `site` right now?  Consumes one armed count.
+/// Unarmed sites always answer `false`, so production code pays only
+/// this lookup.
+pub fn fire(site: &str) -> bool {
+    let mut s = lock_sites();
+    match s.get_mut(site) {
+        Some(0) | None => false,
+        Some(n) => {
+            *n -= 1;
+            true
+        }
+    }
+}
+
+/// [`fire`] dressed as an IO failure, for injection into snapshot and
+/// checkpoint writes: `if let Some(e) = fault::io_error("ckpt.save") {
+/// return Err(e); }`.
+pub fn io_error(site: &str) -> Option<std::io::Error> {
+    fire(site).then(|| {
+        std::io::Error::other(format!("injected fault at site '{site}'"))
+    })
+}
+
+/// RAII arming: the site disarms when the guard drops, even if the test
+/// panics midway.
+pub struct Armed {
+    site: String,
+}
+
+pub fn armed(site: &str, count: u32) -> Armed {
+    arm(site, count);
+    Armed { site: site.to_string() }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm(&self.site);
+    }
+}
+
+/// Serialize tests touching the global site registry: hold this guard
+/// for the duration of any test that arms sites, so parallel tests
+/// never see each other's faults.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::networks;
+    use crate::sparsity::synthesize;
+
+    #[test]
+    fn fault_plan_is_a_pure_function_of_the_pruning_plan() {
+        let net = networks::calibnet();
+        let sp = synthesize(&net, 5);
+        let n = sp.layers.len();
+        let fp = FaultPlan { seed: 9, fail_rate: 0.5, max_failures: 3, stall_rate: 0.3 };
+        for s in [0.0, 0.2, 0.55, 0.9] {
+            let plan = PruningPlan::from_unit_point(&vec![s; 2 * n], &sp);
+            let again = PruningPlan::from_unit_point(&vec![s; 2 * n], &sp);
+            assert_eq!(fp.failures_for(&plan), fp.failures_for(&again));
+            assert_eq!(fp.stalls(&plan), fp.stalls(&again));
+            assert!(fp.failures_for(&plan) <= fp.max_failures);
+        }
+    }
+
+    #[test]
+    fn fault_rates_roughly_hold_over_many_plans() {
+        let net = networks::calibnet();
+        let sp = synthesize(&net, 6);
+        let n = sp.layers.len();
+        let fp = FaultPlan { seed: 10, fail_rate: 0.4, max_failures: 2, stall_rate: 0.25 };
+        let total = 400;
+        let mut failing = 0;
+        let mut stalling = 0;
+        for i in 0..total {
+            let s = i as f64 / total as f64;
+            let plan = PruningPlan::from_unit_point(&vec![s; 2 * n], &sp);
+            if fp.failures_for(&plan) > 0 {
+                failing += 1;
+            }
+            if fp.stalls(&plan) {
+                stalling += 1;
+            }
+        }
+        let f = failing as f64 / total as f64;
+        let st = stalling as f64 / total as f64;
+        assert!((0.25..=0.55).contains(&f), "fail fraction {f}");
+        assert!((0.12..=0.40).contains(&st), "stall fraction {st}");
+    }
+
+    #[test]
+    fn zero_rates_inject_nothing() {
+        let net = networks::calibnet();
+        let sp = synthesize(&net, 7);
+        let n = sp.layers.len();
+        let fp = FaultPlan::none(3);
+        for s in [0.0, 0.3, 0.7] {
+            let plan = PruningPlan::from_unit_point(&vec![s; 2 * n], &sp);
+            assert_eq!(fp.failures_for(&plan), 0);
+            assert!(!fp.stalls(&plan));
+        }
+    }
+
+    #[test]
+    fn armed_sites_fire_exactly_count_times_and_guard_disarms() {
+        let _x = exclusive();
+        {
+            let _g = armed("test.site", 2);
+            assert!(fire("test.site"));
+            assert!(fire("test.site"));
+            assert!(!fire("test.site"), "count exhausted");
+        }
+        arm("test.site", 1);
+        assert!(io_error("test.site").is_some());
+        assert!(io_error("test.site").is_none());
+        assert!(!fire("never.armed"));
+        disarm_all();
+    }
+}

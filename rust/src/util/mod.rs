@@ -14,9 +14,12 @@
 //! * [`prop`] — a tiny property-based-testing harness (seed-reporting
 //!   random-case runner) standing in for proptest,
 //! * [`memo`] — the generic lock-striped single-compute memo table the
-//!   engine's pricing caches are built on.
+//!   engine's pricing caches are built on,
+//! * [`fault`] — deterministic fault injection (seeded evaluator fault
+//!   plans + named global injection sites) for chaos tests and CI.
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod memo;
 pub mod prop;

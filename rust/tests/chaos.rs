@@ -1,0 +1,333 @@
+//! Chaos suite: the fault-tolerance tentpole under deterministic,
+//! seeded fault injection (`util::fault`).
+//!
+//! The invariant every test here leans on is that the engine's
+//! determinism contract *extends to faulty runs*: a fixed [`FaultPlan`]
+//! makes injected transient failures and stalls a pure function of the
+//! fault seed and the pruning plan, so chaos journals stay bit-identical
+//! across thread counts and across the sync / async pipelines — and a
+//! faulty run whose retry budget covers the fault budget journals
+//! bit-identically to a run with no faults at all.
+
+use hass::arch::networks;
+use hass::coordinator::{
+    search_sharded, search_sharded_with_cache_ctrl, search_with_cache_ctrl,
+    CandidateEvaluator, Checkpoint, CheckpointSpec, DesignCache, EngineConfig, EvalPoint,
+    RetryPolicy, SearchConfig, SearchControl, SearchProgress, SearchResult,
+    INFEASIBLE_OBJECTIVE,
+};
+use hass::dse::DseConfig;
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::pruning::PruningPlan;
+use hass::sparsity::{synthesize, NetworkSparsity};
+use hass::util::fault::{self, FaultPlan, FaultyEvaluator};
+
+/// Same deterministic stub the tier-1 suite pins the engine with:
+/// closed-form quadratic accuracy response, pure and cheap.
+struct StubEvaluator {
+    sparsity: NetworkSparsity,
+}
+
+impl StubEvaluator {
+    fn calibnet(seed: u64) -> Self {
+        StubEvaluator { sparsity: synthesize(&networks::calibnet(), seed) }
+    }
+}
+
+impl CandidateEvaluator for StubEvaluator {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        &self.sparsity
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        let points = plan.points(&self.sparsity);
+        let s = points.iter().map(|p| (p.s_w + p.s_a) * 0.5).sum::<f64>()
+            / points.len() as f64;
+        EvalPoint { accuracy: 92.0 - 30.0 * s * s, points, sim: Vec::new() }
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        92.0
+    }
+}
+
+fn chaos_cfg(iters: usize, seed: u64, threads: usize, async_eval: bool) -> SearchConfig {
+    SearchConfig {
+        iterations: iters,
+        seed,
+        dse: DseConfig { max_iters: 1_500, ..Default::default() },
+        engine: EngineConfig { batch: 4, threads, cache: true, quant_bits: 12, async_eval },
+        // fast test cadence; the budget (3) covers every fault plan below
+        retry: RetryPolicy { max_retries: 3, base_backoff_ms: 1, max_backoff_ms: 4 },
+        ..Default::default()
+    }
+}
+
+fn objective_bits(r: &SearchResult) -> Vec<u64> {
+    r.records.iter().map(|x| x.objective.to_bits()).collect()
+}
+
+/// One single-device run through the ctrl entry point with a fresh cache.
+fn run_ctrl(
+    ev: &dyn CandidateEvaluator,
+    cfg: &SearchConfig,
+    ctrl: &SearchControl<'_>,
+) -> Option<SearchResult> {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let dev = DeviceBudget::u250();
+    let cache = DesignCache::new();
+    search_with_cache_ctrl(ev, &net, &rm, &dev, cfg, &cache, ctrl)
+}
+
+/// Every candidate fails transiently (up to twice) before succeeding; a
+/// retry budget covering the fault budget must recover every one, so
+/// the journal is bit-identical to the zero-fault run — on the sync and
+/// async pipelines, serial and pooled.
+#[test]
+fn retried_faults_leave_the_journal_bit_identical_to_a_clean_run() {
+    let ctrl = SearchControl::default();
+    let clean_ev = StubEvaluator::calibnet(80);
+    let clean = run_ctrl(&clean_ev, &chaos_cfg(12, 25, 0, false), &ctrl).unwrap();
+    assert_eq!(clean.stats.retried_evals, 0);
+    let fp = FaultPlan { seed: 7, fail_rate: 1.0, max_failures: 2, stall_rate: 0.0 };
+    for (threads, async_eval) in [(1, false), (0, false), (1, true), (0, true)] {
+        let inner = StubEvaluator::calibnet(80);
+        let faulty = FaultyEvaluator::new(&inner, fp);
+        let cfg = chaos_cfg(12, 25, threads, async_eval);
+        let r = run_ctrl(&faulty, &cfg, &ctrl).unwrap();
+        assert!(
+            r.stats.retried_evals > 0,
+            "threads={threads} async={async_eval}: a fail_rate-1.0 plan must retry"
+        );
+        assert_eq!(
+            objective_bits(&clean),
+            objective_bits(&r),
+            "threads={threads} async={async_eval}: recovered chaos journal diverged"
+        );
+        for (a, b) in clean.records.iter().zip(&r.records) {
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.plan, b.plan);
+        }
+        assert_eq!(clean.best, r.best);
+    }
+}
+
+/// A retry budget *smaller* than the fault budget leaves some candidates
+/// permanently failed — deterministically: which ones is a pure function
+/// of the fault seed, so runs agree bit for bit across thread counts,
+/// and every journal line stays finite.
+#[test]
+fn an_exhausted_retry_budget_fails_candidates_deterministically() {
+    let ctrl = SearchControl::default();
+    let fp = FaultPlan { seed: 13, fail_rate: 1.0, max_failures: 2, stall_rate: 0.0 };
+    let run = |threads: usize| {
+        let inner = StubEvaluator::calibnet(83);
+        let faulty = FaultyEvaluator::new(&inner, fp);
+        let mut cfg = chaos_cfg(10, 37, threads, false);
+        cfg.retry = RetryPolicy { max_retries: 1, base_backoff_ms: 1, max_backoff_ms: 2 };
+        run_ctrl(&faulty, &cfg, &ctrl).unwrap()
+    };
+    let a = run(1);
+    let b = run(0);
+    assert_eq!(a.records.len(), 10);
+    assert_eq!(
+        objective_bits(&a),
+        objective_bits(&b),
+        "exhausted-budget journal diverged across thread counts"
+    );
+    assert_eq!(a.stats.retried_evals, b.stats.retried_evals);
+    for rec in &a.records {
+        assert!(rec.objective.is_finite(), "iter {}: non-finite objective", rec.iter);
+    }
+}
+
+/// Watchdog reclamation: an async evaluator that never delivers any
+/// completion must not hang the search — `eval_timeout_ms` (and,
+/// equivalently, `deadline_ms`) reclaims every in-flight slot as an
+/// infeasible-scored record, and the journal is identical whichever
+/// watchdog fires and however many worker threads run.
+#[test]
+fn stalled_measurements_are_reclaimed_infeasible_not_hung() {
+    let ctrl = SearchControl::default();
+    let fp = FaultPlan { seed: 21, fail_rate: 0.0, max_failures: 0, stall_rate: 1.0 };
+    let run = |threads: usize, eval_timeout_ms: u64, deadline_ms: u64| {
+        let inner = StubEvaluator::calibnet(84);
+        let faulty = FaultyEvaluator::new(&inner, fp);
+        let mut cfg = chaos_cfg(10, 41, threads, true);
+        cfg.eval_timeout_ms = eval_timeout_ms;
+        cfg.deadline_ms = deadline_ms;
+        run_ctrl(&faulty, &cfg, &ctrl).unwrap()
+    };
+    let a = run(1, 150, 0);
+    assert_eq!(a.records.len(), 10, "stalls must not shorten the journal");
+    assert_eq!(a.stats.reclaimed_stalls, 10, "every measurement stalls here");
+    for rec in &a.records {
+        assert_eq!(rec.objective, INFEASIBLE_OBJECTIVE, "iter {}", rec.iter);
+        assert_eq!(rec.accuracy, 0.0);
+    }
+    let b = run(0, 150, 0);
+    assert_eq!(objective_bits(&a), objective_bits(&b));
+    assert_eq!(b.stats.reclaimed_stalls, 10);
+    // the per-generation deadline reclaims the same set
+    let c = run(0, 0, 300);
+    assert_eq!(objective_bits(&a), objective_bits(&c));
+}
+
+/// Partial stalls: reclaimed slots and healthy completions mix inside a
+/// generation, the infeasible-record count matches the reclaim counter
+/// exactly, and the mix is thread-count invariant (stall selection is a
+/// pure function of the fault seed).
+#[test]
+fn a_partial_stall_mix_is_deterministic_across_thread_counts() {
+    let ctrl = SearchControl::default();
+    let fp = FaultPlan { seed: 33, fail_rate: 0.0, max_failures: 0, stall_rate: 0.4 };
+    let run = |threads: usize| {
+        let inner = StubEvaluator::calibnet(85);
+        let faulty = FaultyEvaluator::new(&inner, fp);
+        let mut cfg = chaos_cfg(12, 43, threads, true);
+        cfg.eval_timeout_ms = 150;
+        run_ctrl(&faulty, &cfg, &ctrl).unwrap()
+    };
+    let a = run(1);
+    let b = run(0);
+    assert_eq!(objective_bits(&a), objective_bits(&b), "partial-stall journal diverged");
+    assert_eq!(a.stats.reclaimed_stalls, b.stats.reclaimed_stalls);
+    let infeasible =
+        a.records.iter().filter(|r| r.objective == INFEASIBLE_OBJECTIVE).count() as u64;
+    assert_eq!(
+        infeasible, a.stats.reclaimed_stalls,
+        "reclaim counter must match the infeasible journal lines"
+    );
+}
+
+/// The checkpoint/resume tentpole: cancel a checkpointed sharded search
+/// mid-run (as a daemon shutdown or SIGKILL-then-rerun would), resume
+/// from the file it left behind, and the continued journals are
+/// bit-identical to an uninterrupted run on every device.
+#[test]
+fn a_cancelled_checkpointed_search_resumes_bit_identically() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let ev = StubEvaluator::calibnet(82);
+    let baseline = search_sharded(&ev, &net, &rm, &devices, &chaos_cfg(12, 29, 0, false));
+
+    let path = std::env::temp_dir().join("hass_chaos_resume_test.json");
+    std::fs::remove_file(&path).ok();
+    let ckpt_path = path.to_str().unwrap().to_string();
+    let mut cfg = chaos_cfg(12, 29, 0, false);
+    cfg.checkpoint = Some(CheckpointSpec { path: ckpt_path.clone(), every: 1 });
+    // cancel once 8 of 12 iterations are done (a generation boundary)
+    let observer = |p: SearchProgress| p.done < 8;
+    let ctrl = SearchControl { observer: Some(&observer), ..Default::default() };
+    let cache = DesignCache::new();
+    let cancelled =
+        search_sharded_with_cache_ctrl(&ev, &net, &rm, &devices, &cfg, &cache, &ctrl);
+    assert!(cancelled.is_none(), "the observer must cancel the run");
+
+    let ck = Checkpoint::load(&ckpt_path).expect("cancellation must leave a checkpoint");
+    assert_eq!(ck.done, 8);
+    assert_eq!(ck.devices.len(), devices.len());
+    let rctrl = SearchControl { resume: Some(&ck), ..Default::default() };
+    let cache2 = DesignCache::new();
+    let resumed =
+        search_sharded_with_cache_ctrl(&ev, &net, &rm, &devices, &cfg, &cache2, &rctrl)
+            .expect("resumed run must complete");
+    std::fs::remove_file(&path).ok();
+
+    for (a, b) in baseline.per_device.iter().zip(&resumed.per_device) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.result.records.len(), b.result.records.len());
+        for (x, y) in a.result.records.iter().zip(&b.result.records) {
+            assert_eq!(
+                x.objective.to_bits(),
+                y.objective.to_bits(),
+                "{} iter {}: resumed journal diverged from the uninterrupted run",
+                a.device,
+                x.iter
+            );
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.images_per_sec.to_bits(), y.images_per_sec.to_bits());
+            assert_eq!(x.plan, y.plan);
+        }
+        assert_eq!(a.result.best, b.result.best);
+    }
+}
+
+/// A checkpoint from a *different* search (wrong fingerprint) is ignored
+/// at the engine layer — the run silently starts fresh instead of
+/// replaying foreign records (the CLI refuses loudly before it gets
+/// here; the engine is the backstop).
+#[test]
+fn a_foreign_checkpoint_is_ignored_and_the_search_starts_fresh() {
+    let ev = StubEvaluator::calibnet(86);
+    let cfg = chaos_cfg(8, 47, 0, false);
+    let ctrl = SearchControl::default();
+    let fresh = run_ctrl(&ev, &cfg, &ctrl).unwrap();
+    let bogus = Checkpoint { fingerprint: 0xdead_beef, done: 4, devices: Vec::new() };
+    let rctrl = SearchControl { resume: Some(&bogus), ..Default::default() };
+    let resumed = run_ctrl(&ev, &cfg, &rctrl).unwrap();
+    assert_eq!(
+        objective_bits(&fresh),
+        objective_bits(&resumed),
+        "a mismatched checkpoint must not perturb the search"
+    );
+}
+
+/// Checkpoint writes are best-effort: an injected IO fault at the
+/// `ckpt.save` site costs a warning, never the search — and the faulted
+/// write leaves no file behind (saves are atomic).
+#[test]
+fn an_injected_checkpoint_io_fault_never_kills_a_healthy_search() {
+    let _x = fault::exclusive();
+    let ev = StubEvaluator::calibnet(87);
+    let ctrl = SearchControl::default();
+    let clean = run_ctrl(&ev, &chaos_cfg(8, 53, 0, false), &ctrl).unwrap();
+    let path = std::env::temp_dir().join("hass_chaos_ckpt_fault_test.json");
+    std::fs::remove_file(&path).ok();
+    let mut cfg = chaos_cfg(8, 53, 0, false);
+    let ckpt_path = path.to_str().unwrap().to_string();
+    cfg.checkpoint = Some(CheckpointSpec { path: ckpt_path, every: 1 });
+    let _g = fault::armed("ckpt.save", 1);
+    // 8 iterations / batch 4 = 2 generations: exactly one mid-run
+    // checkpoint write, and it is the one that faults
+    let r = run_ctrl(&ev, &cfg, &ctrl)
+        .expect("a failed checkpoint write must not kill the search");
+    assert_eq!(
+        objective_bits(&clean),
+        objective_bits(&r),
+        "checkpointing (even failing checkpointing) must never change results"
+    );
+    assert!(!path.exists(), "the faulted write must not leave a file behind");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Zero-fault runs with every fault-tolerance knob enabled journal
+/// bit-identically to the plain configuration: retry budgets, watchdog
+/// timeouts and checkpoint cadence are execution knobs outside the
+/// determinism fingerprint.
+#[test]
+fn fault_tolerance_knobs_cost_nothing_on_a_healthy_run() {
+    let ev = StubEvaluator::calibnet(88);
+    let ctrl = SearchControl::default();
+    let plain = run_ctrl(&ev, &chaos_cfg(10, 59, 0, false), &ctrl).unwrap();
+    let path = std::env::temp_dir().join("hass_chaos_knob_test.json");
+    std::fs::remove_file(&path).ok();
+    let mut cfg = chaos_cfg(10, 59, 0, true);
+    cfg.retry = RetryPolicy { max_retries: 5, base_backoff_ms: 1, max_backoff_ms: 8 };
+    cfg.eval_timeout_ms = 5_000;
+    cfg.deadline_ms = 60_000;
+    let ckpt_path = path.to_str().unwrap().to_string();
+    cfg.checkpoint = Some(CheckpointSpec { path: ckpt_path, every: 1 });
+    let armored = run_ctrl(&ev, &cfg, &ctrl).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(
+        objective_bits(&plain),
+        objective_bits(&armored),
+        "fault-tolerance knobs changed a healthy run's journal"
+    );
+    assert_eq!(armored.stats.retried_evals, 0);
+    assert_eq!(armored.stats.reclaimed_stalls, 0);
+}

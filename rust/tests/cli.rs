@@ -95,9 +95,69 @@ fn unwritable_journal_path_exits_1_gracefully() {
 #[test]
 fn client_without_a_daemon_fails_gracefully() {
     // a port nobody listens on: connect fails, exit 1, helpful hint
-    let out = hass(&["client", "stats", "--addr", "127.0.0.1:1"]);
+    // (--connect-retries 0 pins the no-retry path and keeps this fast)
+    let out = hass(&["client", "stats", "--addr", "127.0.0.1:1", "--connect-retries", "0"]);
     assert_eq!(out.status.code(), Some(1));
     let err = stderr_of(&out);
     assert!(err.contains("failed to connect"), "unhelpful error: {err}");
+    assert!(!err.contains("retry"), "--connect-retries 0 must not retry: {err}");
     assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn client_reconnects_with_bounded_backoff_before_giving_up() {
+    let out = hass(&["client", "stats", "--addr", "127.0.0.1:1", "--connect-retries", "2"]);
+    assert_eq!(out.status.code(), Some(1), "exhausted retries still exit 1");
+    let err = stderr_of(&out);
+    assert!(err.contains("retry 1 of 2"), "first retry must be reported: {err}");
+    assert!(err.contains("retry 2 of 2"), "second retry must be reported: {err}");
+    assert!(err.contains("failed to connect"), "final error must still print: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn resume_refuses_a_missing_checkpoint() {
+    let out = hass(&[
+        "search",
+        "--iters",
+        "4",
+        "--evaluator",
+        "surrogate",
+        "--resume",
+        "/nonexistent/hass_ckpt.json",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_of(&out);
+    assert!(err.contains("failed to load checkpoint"), "unhelpful error: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn checkpointed_search_resumes_only_a_matching_run() {
+    let ckpt = std::env::temp_dir().join("hass_cli_resume_test.json");
+    std::fs::remove_file(&ckpt).ok();
+    let ckpt_s = ckpt.to_str().expect("utf-8 temp path");
+    // 8 iters / batch 4 = 2 generations: the mid-run checkpoint at
+    // iteration 4 stays on disk after the run completes
+    let base = ["search", "--iters", "8", "--batch", "4", "--evaluator", "surrogate"];
+    let mut write = base.to_vec();
+    write.extend(["--seed", "5", "--checkpoint", ckpt_s]);
+    let out = hass(&write);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr_of(&out));
+    assert!(ckpt.exists(), "mid-run checkpoint must be left on disk");
+    // a different seed is a different search: refuse loudly, exit 2
+    let mut foreign = base.to_vec();
+    foreign.extend(["--seed", "6", "--resume", ckpt_s]);
+    let out = hass(&foreign);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_of(&out);
+    assert!(err.contains("refusing to resume"), "unhelpful error: {err}");
+    // the matching configuration resumes and completes
+    let mut resume = base.to_vec();
+    resume.extend(["--seed", "5", "--resume", ckpt_s]);
+    let out = hass(&resume);
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("resume <-"), "resume notice missing: {stdout}");
 }

@@ -405,6 +405,9 @@ fn sharded_journals_match_standalone_bit_for_bit() {
     let sharded = search_sharded(&ev, &net, &rm, &devices, &cfg);
     assert_eq!(sharded.stats.devices, 3);
     assert_eq!(sharded.stats.evaluations, 3 * 14);
+    // a healthy run consumes none of the fault-tolerance machinery
+    assert_eq!(sharded.stats.retried_evals, 0);
+    assert_eq!(sharded.stats.reclaimed_stalls, 0);
     for dev in &devices {
         let standalone = Engine::new(&ev, &net, &rm, dev).search(&cfg);
         let shard = sharded.by_device(&dev.name).expect("device in sharded result");
@@ -573,6 +576,9 @@ fn warm_from_disk_search_is_bit_identical_with_zero_misses() {
     let cold = search_sharded_with_cache(&ev, &net, &rm, &devices, &cfg, &cache);
     assert!(cold.stats.cache_misses > 0, "cold run must miss");
     let path = std::env::temp_dir().join("hass_warm_from_disk_test.json");
+    // snapshot saves merge with whatever is already on disk; a stale file
+    // from an interrupted earlier run must not leak into this one
+    std::fs::remove_file(&path).ok();
     let saved = cache.save(&path).unwrap();
     assert!(saved.designs > 0, "snapshot must carry the design memo");
     assert!(saved.frontiers > 0, "snapshot must carry the frontier store");

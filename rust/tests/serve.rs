@@ -14,12 +14,14 @@ use std::sync::Arc;
 
 use hass::arch::networks;
 use hass::coordinator::{
-    search_sharded_with_cache, DesignCache, EngineConfig, SearchConfig, SurrogateEvaluator,
+    search_sharded_with_cache, Checkpoint, DesignCache, EngineConfig, SearchConfig,
+    SurrogateEvaluator,
 };
 use hass::hardware::device::DeviceBudget;
 use hass::hardware::resources::ResourceModel;
 use hass::server::{ServeConfig, Server};
 use hass::sparsity::synthesize;
+use hass::util::fault;
 use hass::util::json::Json;
 
 fn start_server(max_inflight: usize) -> (Arc<Server>, SocketAddr, std::thread::JoinHandle<()>) {
@@ -293,6 +295,104 @@ fn price_and_save_cache_use_the_resident_stores() {
     std::fs::remove_file(&path).ok();
     assert!(st.designs >= 1);
     assert!(loaded.len() >= 1);
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
+
+// ===== chaos: injected daemon faults ====================================
+
+/// A search that panics inside the worker (injected at the
+/// `server.search.panic` site) must cost exactly one request: the client
+/// gets an error line, the admission slot frees, and the resident caches
+/// stay warm and serving — the next price hits, the next search runs.
+#[test]
+fn a_panicking_search_costs_one_request_and_leaves_the_caches_warm() {
+    let _x = fault::exclusive();
+    let (_server, addr, handle) = start_server(1);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    // prime the resident cache with one pricing
+    let price = r#"{"id": 1, "method": "price", "params": {"network": "calibnet", "device": "u250", "sw": 0.4, "sa": 0.4, "quant": 12}}"#;
+    send_line(&stream, price);
+    let (_, cold) = read_until_result(&mut reader, 1.0);
+    assert!(cold.get("result").is_some(), "priming price failed: {cold:?}");
+    // a panicking search: error line, connection survives
+    {
+        let _g = fault::armed("server.search.panic", 1);
+        send_line(&stream, &search_request(2, 4, 9));
+        let (_, v) = read_until_result(&mut reader, 2.0);
+        let err = v.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+        assert!(err.contains("panicked"), "expected a panic error line, got {v:?}");
+    }
+    // the caches are still warm: the identical pricing now hits
+    let price2 = r#"{"id": 3, "method": "price", "params": {"network": "calibnet", "device": "u250", "sw": 0.4, "sa": 0.4, "quant": 12}}"#;
+    send_line(&stream, price2);
+    let (_, warm) = read_until_result(&mut reader, 3.0);
+    let warm = warm.get("result").expect("price after panic").clone();
+    assert_eq!(
+        warm.get("cached").and_then(|c| c.as_bool()),
+        Some(true),
+        "the panic must not have taken the resident cache down"
+    );
+    // and the single admission slot was released: a real search completes
+    send_line(&stream, &search_request(4, 4, 9));
+    let (_, done) = read_until_result(&mut reader, 4.0);
+    assert!(done.get("result").is_some(), "search after panic failed: {done:?}");
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
+
+/// A connection dropped by the daemon before the first byte (injected at
+/// `server.conn.drop` — a network blip) closes that one socket and
+/// nothing else: the next connection is served normally.
+#[test]
+fn a_dropped_connection_costs_one_socket_not_the_daemon() {
+    let _x = fault::exclusive();
+    let (_server, addr, handle) = start_server(1);
+    {
+        let _g = fault::armed("server.conn.drop", 1);
+        let stream = TcpStream::connect(addr).expect("connect");
+        send_line(&stream, r#"{"id": 1, "method": "stats"}"#);
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "the dropped connection must answer nothing: {line:?}");
+    }
+    // the site is disarmed; a fresh connection works
+    let stream = TcpStream::connect(addr).expect("reconnect");
+    send_line(&stream, r#"{"id": 2, "method": "stats"}"#);
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let v = read_json(&mut reader);
+    assert!(v.get("result").is_some(), "reconnect must be served: {v:?}");
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
+
+/// The daemon's `checkpoint` search param reaches the engine: a
+/// checkpointed daemon search leaves a loadable mid-run checkpoint
+/// behind, generation-aligned with the request's batch size.
+#[test]
+fn daemon_searches_honor_the_checkpoint_param() {
+    let (_server, addr, handle) = start_server(1);
+    let path = std::env::temp_dir().join("hass_serve_ckpt_param_test.json");
+    std::fs::remove_file(&path).ok();
+    let req = format!(
+        r#"{{"id": 1, "method": "search", "params": {{"network": "calibnet", "device": "u250", "iters": 8, "seed": 9, "batch": 4, "quant": 12, "checkpoint": {}}}}}"#,
+        Json::Str(path.to_string_lossy().into_owned()).to_string()
+    );
+    let stream = TcpStream::connect(addr).expect("connect");
+    send_line(&stream, &req);
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let (_, terminal) = read_until_result(&mut reader, 1.0);
+    assert!(terminal.get("result").is_some(), "search failed: {terminal:?}");
+    // 8 iters / batch 4 = 2 generations: the mid-run write at done=4
+    // is on disk (the final generation is never checkpointed)
+    let ck = Checkpoint::load(path.to_str().unwrap()).expect("daemon checkpoint loads");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck.done, 4, "checkpoint must sit on the mid-run generation boundary");
+    assert_eq!(ck.devices.len(), 1);
+    assert_eq!(ck.devices[0].device, "u250");
+    assert_eq!(ck.devices[0].records.len(), 4);
     drop(stream);
     shutdown_and_join(addr, handle);
 }
