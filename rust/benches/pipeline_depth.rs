@@ -1,0 +1,242 @@
+//! §Perf harness for the cross-generation lookahead pipeline and the
+//! per-layer parallel simulator.
+//!
+//! **Depth sweep.**  A sharded search drives a slow evaluator (fixed
+//! wall-clock delay per candidate, concurrent within a generation — the
+//! measured-backend regime where evaluation latency dominates the
+//! propose/price loop).  At `--pipeline-depth 0` every generation drains
+//! at the reduce barrier before the next is proposed; at depth D up to
+//! D+1 generations are in flight, so the barrier idle time collapses and
+//! steady-state throughput approaches (D+1) generations per evaluation
+//! latency.  The sweep measures wall time at depths 0/1/2 and asserts
+//! the fixed-depth determinism contract (two depth-1 runs agree
+//! bit-for-bit on every journal).
+//!
+//! **Per-layer simulation.**  One promoted resnet18 candidate (frontier
+//! `explore` at uniform sparsity, the same promotion path the fidelity
+//! ladder uses) is simulated serially and with `simulate_par` at the
+//! host's parallelism.  Candidate-only parallelism cannot split a single
+//! candidate, so the serial run *is* that baseline; the parallel run
+//! chunks the deterministic core's per-group feasibility scans over
+//! scoped workers.  Deep FIFOs keep the scans long enough to matter —
+//! the regime where a lone promoted candidate otherwise leaves every
+//! other core idle.
+//!
+//! Output: `results/BENCH_pipeline.json` (+ a table on stderr).
+//! Run: `cargo bench --bench pipeline_depth [-- --quick]`.
+
+use std::time::{Duration, Instant};
+
+use hass::arch::networks;
+use hass::coordinator::{
+    search_sharded, CandidateEvaluator, EngineConfig, EvalPoint, SearchConfig,
+};
+use hass::dse::{explore, DseConfig};
+use hass::engine::ShardedSearchResult;
+use hass::hardware::device::DeviceBudget;
+use hass::hardware::resources::ResourceModel;
+use hass::pruning::PruningPlan;
+use hass::simulator::{simulate, simulate_par, stages_from_design, SparsityDynamics};
+use hass::sparsity::{synthesize, NetworkSparsity, SparsityPoint};
+
+/// Stub evaluator with a fixed wall-clock delay per `eval`.  Unlike the
+/// mutex-serialized `SlowEvaluator` in `engine_scaling`, evaluations
+/// within (and across) generations sleep concurrently — the regime a
+/// farm of measurement boards or remote workers presents, where the
+/// pipeline's cross-generation overlap pays directly.
+struct SlowStub {
+    sparsity: NetworkSparsity,
+    delay: Duration,
+}
+
+impl CandidateEvaluator for SlowStub {
+    fn sparsity_model(&self) -> &NetworkSparsity {
+        &self.sparsity
+    }
+
+    fn eval(&self, plan: &PruningPlan) -> EvalPoint {
+        std::thread::sleep(self.delay);
+        let points = plan.points(&self.sparsity);
+        let s = points.iter().map(|p| (p.s_w + p.s_a) * 0.5).sum::<f64>()
+            / points.len() as f64;
+        EvalPoint { accuracy: 92.0 - 30.0 * s * s, points, sim: Vec::new() }
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        92.0
+    }
+}
+
+fn journal_bits(r: &ShardedSearchResult) -> Vec<u64> {
+    r.per_device
+        .iter()
+        .flat_map(|d| d.result.records.iter().map(|x| x.objective.to_bits()))
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // ---- depth sweep: slow evaluator, 2 shards ------------------------
+    let iters = if quick { 12 } else { 24 };
+    let batch = 4usize;
+    let delay = Duration::from_millis(if quick { 15 } else { 40 });
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let ev = SlowStub { sparsity: synthesize(&net, 7), delay };
+
+    let run_depth = |depth: usize| {
+        let cfg = SearchConfig {
+            iterations: iters,
+            seed: 3,
+            pipeline_depth: depth,
+            engine: EngineConfig {
+                batch,
+                threads: 0,
+                cache: true,
+                quant_bits: 12,
+                async_eval: false,
+            },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let r = search_sharded(&ev, &net, &rm, &devices, &cfg);
+        (t0.elapsed().as_secs_f64() * 1e3, r)
+    };
+
+    run_depth(0); // warmup (thread pool, allocator, frontier store)
+    let (d0_ms, d0) = run_depth(0);
+    eprintln!(
+        "[pipeline_depth] depth 0 (drained): {iters} iters x {} devices, \
+         {} ms/eval -> {d0_ms:.0} ms ({cores} cores)",
+        devices.len(),
+        delay.as_millis(),
+    );
+
+    let mut sweep: Vec<(usize, f64, f64, usize, u64, u64)> = Vec::new();
+    sweep.push((0, d0_ms, 1.0, d0.stats.pipelined_generations, d0.stats.lookahead_proposals, d0.stats.barrier_wait_ns));
+    for depth in [1usize, 2] {
+        let (ms, r) = run_depth(depth);
+        eprintln!(
+            "[pipeline_depth] depth {depth}: {ms:.0} ms ({:.2}x vs drained) | \
+             {} generations overlapped, {} lookahead proposals, \
+             {:.1} ms at the reduce barrier",
+            d0_ms / ms,
+            r.stats.pipelined_generations,
+            r.stats.lookahead_proposals,
+            r.stats.barrier_wait_ns as f64 / 1e6,
+        );
+        sweep.push((
+            depth,
+            ms,
+            d0_ms / ms,
+            r.stats.pipelined_generations,
+            r.stats.lookahead_proposals,
+            r.stats.barrier_wait_ns,
+        ));
+    }
+
+    // fixed-depth determinism: a depth-1 rerun must journal bit-identically
+    let (_, a) = run_depth(1);
+    let (_, b) = run_depth(1);
+    assert_eq!(
+        journal_bits(&a),
+        journal_bits(&b),
+        "depth-1 reruns diverged: the pipeline is not deterministic"
+    );
+
+    let depth1_speedup = sweep[1].2;
+    if cores > 1 && depth1_speedup < 1.5 {
+        eprintln!(
+            "[pipeline_depth] WARNING: expected > 1.5x at depth 1 under a \
+             {} ms evaluator, measured {depth1_speedup:.2}x",
+            delay.as_millis(),
+        );
+    }
+
+    // ---- per-layer simulation: one promoted resnet18 candidate --------
+    let rnet = networks::resnet18();
+    let n = rnet.compute_layers().len();
+    let points = vec![SparsityPoint { s_w: 0.55, s_a: 0.44 }; n];
+    let design = explore(&rnet, &points, &rm, &DeviceBudget::u250(), &DseConfig::default());
+    // deep FIFOs: long feasibility scans, the chunked workers' regime
+    let cfgs = stages_from_design(&rnet, &design.designs, &points, 8192);
+    let images = if quick { 1 } else { 2 };
+    let reps = if quick { 2 } else { 3 };
+    let time_sim = |threads: usize| {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let rep = if threads <= 1 {
+                simulate(&rnet, &cfgs, images, SparsityDynamics::Deterministic)
+            } else {
+                simulate_par(&rnet, &cfgs, images, SparsityDynamics::Deterministic, threads)
+            };
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert!(!rep.deadlocked, "resnet18 candidate deadlocked in the bench");
+            best = best.min(ms);
+        }
+        best
+    };
+    let serial_ms = time_sim(1);
+    let par_ms = time_sim(cores);
+    let serial_rep = simulate(&rnet, &cfgs, images, SparsityDynamics::Deterministic);
+    let par_rep = simulate_par(&rnet, &cfgs, images, SparsityDynamics::Deterministic, cores);
+    assert_eq!(
+        serial_rep.total_cycles, par_rep.total_cycles,
+        "per-layer parallel simulation diverged from the serial core"
+    );
+    eprintln!(
+        "[pipeline_depth] resnet18 promoted candidate ({images} images): \
+         serial {serial_ms:.1} ms vs {cores}-thread per-layer {par_ms:.1} ms \
+         ({:.2}x; candidate-only parallelism = serial on a lone candidate)",
+        serial_ms / par_ms,
+    );
+
+    // ---- results ------------------------------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).expect("results dir");
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"cores\": {cores},\n"));
+    json.push_str("  \"depth_sweep\": {\n");
+    json.push_str(&format!("    \"network\": \"{}\",\n", net.name));
+    json.push_str(&format!("    \"iterations\": {iters},\n"));
+    json.push_str(&format!("    \"batch\": {batch},\n"));
+    json.push_str(&format!("    \"devices\": {},\n", devices.len()));
+    json.push_str(&format!("    \"eval_delay_ms\": {},\n", delay.as_millis()));
+    json.push_str("    \"runs\": [\n");
+    for (i, (depth, ms, speedup, pipelined, lookahead, barrier_ns)) in
+        sweep.iter().enumerate()
+    {
+        json.push_str(&format!(
+            "      {{\"pipeline_depth\": {depth}, \"wall_ms\": {ms:.3}, \
+             \"speedup_vs_drained\": {speedup:.3}, \
+             \"pipelined_generations\": {pipelined}, \
+             \"lookahead_proposals\": {lookahead}, \
+             \"barrier_wait_ms\": {:.3}}}{}\n",
+            *barrier_ns as f64 / 1e6,
+            if i + 1 == sweep.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("    ],\n");
+    json.push_str("    \"depth1_rerun_bit_identical\": true\n");
+    json.push_str("  },\n");
+    json.push_str("  \"per_layer_sim\": {\n");
+    json.push_str(&format!("    \"network\": \"{}\",\n", rnet.name));
+    json.push_str(&format!("    \"images\": {images},\n"));
+    json.push_str("    \"fifo_depth\": 8192,\n");
+    json.push_str(&format!("    \"serial_ms\": {serial_ms:.3},\n"));
+    json.push_str(&format!("    \"threads\": {cores},\n"));
+    json.push_str(&format!("    \"parallel_ms\": {par_ms:.3},\n"));
+    json.push_str(&format!("    \"speedup\": {:.3},\n", serial_ms / par_ms));
+    json.push_str(&format!(
+        "    \"total_cycles_match\": {}\n",
+        serial_rep.total_cycles == par_rep.total_cycles
+    ));
+    json.push_str("  }\n}\n");
+    let path = dir.join("BENCH_pipeline.json");
+    std::fs::write(&path, json).expect("write json");
+    eprintln!("[pipeline_depth] -> {}", path.display());
+}

@@ -119,6 +119,13 @@ pub fn search_fingerprint(cfg: &SearchConfig, shapes: &[u64], device_fps: &[u64]
     mix_bytes(&mut h, format!("{:?}", cfg.dse).as_bytes());
     mix(&mut h, cfg.engine.batch.max(1) as u64);
     mix(&mut h, cfg.engine.quant_bits as u64);
+    // pipeline depth is algorithmic (a depth-D schedule observes lagged
+    // prefixes), so it must invalidate cross-depth resumes — but mixing
+    // it only when non-zero keeps every depth-0 fingerprint (and every
+    // pre-pipeline checkpoint on disk) byte-compatible
+    if cfg.pipeline_depth > 0 {
+        mix(&mut h, cfg.pipeline_depth as u64);
+    }
     for &s in shapes {
         mix(&mut h, s);
     }
@@ -437,6 +444,17 @@ mod tests {
             ..base.clone()
         };
         assert_ne!(fp, resume_fingerprint(&batch, &net, &devices));
+        // pipeline depth is algorithmic too — but depth 0 (the classic
+        // drained schedule) must keep pre-pipeline fingerprints intact
+        let depth0 = SearchConfig { pipeline_depth: 0, ..base.clone() };
+        assert_eq!(fp, resume_fingerprint(&depth0, &net, &devices));
+        let depth2 = SearchConfig { pipeline_depth: 2, ..base.clone() };
+        assert_ne!(fp, resume_fingerprint(&depth2, &net, &devices));
+        let depth1 = SearchConfig { pipeline_depth: 1, ..base.clone() };
+        assert_ne!(
+            resume_fingerprint(&depth1, &net, &devices),
+            resume_fingerprint(&depth2, &net, &devices)
+        );
 
         // execution knobs must NOT move it (a 1-thread checkpoint resumes
         // on 16 threads, with or without the cache, sync or async)

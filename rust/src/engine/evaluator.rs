@@ -62,7 +62,7 @@ use crate::dse::{explore, DseConfig, NetworkDesign};
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
 use crate::pruning::PruningPlan;
-use crate::simulator::{simulate, stages_from_design, SparsityDynamics};
+use crate::simulator::{simulate_par, stages_from_design, SparsityDynamics};
 use crate::sparsity::{NetworkSparsity, SparsityPoint};
 
 use super::cache::device_fingerprint;
@@ -187,8 +187,11 @@ pub trait CandidateEvaluator: Sync {
 /// 3. **promote** the union over devices of the analytic top-`top_k`
 ///    candidates by images/second, and re-score each promoted
 ///    `(candidate, device)` pair with the event-driven simulator
-///    ([`crate::simulator::simulate`], `Deterministic` dynamics,
+///    ([`crate::simulator::simulate_par`], `Deterministic` dynamics,
 ///    `sim_images` images), attaching one [`SimScore`] per device.
+///    Cores left idle by a small promotion set go *inside* each
+///    simulation as per-layer scan workers (bit-identical to the serial
+///    core), so a single promoted candidate still fills the machine.
 ///
 /// Unpromoted candidates are released the moment ranking finishes, so
 /// the engine prices them while the promoted simulations are still
@@ -219,13 +222,18 @@ pub struct SimulatedEvaluator {
     pub sim_images: usize,
 }
 
+/// Machine parallelism (1 if unknown).
+fn hw_parallelism() -> usize {
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
 /// Worker threads for the ladder's internal pools — the evaluator runs
-/// on the engine's submitter thread and owns its own scheduling.
+/// on the engine's submitter thread and owns its own scheduling.  Hard
+/// cap: [`hw_parallelism`], never the amount of work — a generation with
+/// hundreds of (candidate, device) pairs must not spawn hundreds of
+/// threads on top of the engine's own workers.
 fn ladder_threads(work: usize) -> usize {
-    std::thread::available_parallelism()
-        .map(|t| t.get())
-        .unwrap_or(1)
-        .clamp(1, work.max(1))
+    hw_parallelism().clamp(1, work.max(1))
 }
 
 impl CandidateEvaluator for SimulatedEvaluator {
@@ -335,11 +343,17 @@ impl CandidateEvaluator for SimulatedEvaluator {
         }
 
         // rung 2: cycle-level simulation of every promoted (candidate,
-        // device) pair, concurrently
+        // device) pair, concurrently.  When fewer simulations than cores
+        // are in flight, the leftover parallelism goes *inside* each
+        // simulation (`simulate_par`'s per-layer chunked scans), so a
+        // lone promoted candidate still uses the whole machine instead of
+        // one core — pool × per_sim never exceeds hw_parallelism.
         let idx: Vec<usize> = (0..m).filter(|&i| promoted[i]).collect();
         let mut scores: Vec<Option<SimScore>> = Vec::new();
         scores.resize_with(idx.len() * n_dev, || None);
-        run_slots(&mut scores, ladder_threads(idx.len() * n_dev), |slot, k| {
+        let pool = ladder_threads(idx.len() * n_dev);
+        let per_sim = (hw_parallelism() / pool.max(1)).max(1);
+        run_slots(&mut scores, pool, |slot, k| {
             let (i, d) = (idx[k / n_dev], k % n_dev);
             let dev = &self.devices[d];
             let points = &results[i].as_ref().expect("promoted result present").points;
@@ -349,11 +363,12 @@ impl CandidateEvaluator for SimulatedEvaluator {
                 points,
                 self.rm.fifo_depth,
             );
-            let rep = simulate(
+            let rep = simulate_par(
                 &self.target,
                 &cfgs,
                 self.sim_images.max(1),
                 SparsityDynamics::Deterministic,
+                per_sim,
             );
             *slot = Some(SimScore {
                 device_fp: device_fingerprint(dev),
@@ -400,6 +415,18 @@ mod tests {
         fn base_accuracy(&self) -> f64 {
             90.0
         }
+    }
+
+    #[test]
+    fn ladder_thread_pool_is_capped_at_available_parallelism() {
+        let hw = hw_parallelism();
+        // never more threads than cores, no matter how many
+        // (candidate, device) slots a generation carries
+        assert_eq!(ladder_threads(usize::MAX), hw);
+        assert_eq!(ladder_threads(10_000 * 64), hw.min(10_000 * 64));
+        // and never more threads than work (or zero)
+        assert_eq!(ladder_threads(0), 1);
+        assert_eq!(ladder_threads(1), 1);
     }
 
     #[test]

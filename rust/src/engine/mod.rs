@@ -109,10 +109,33 @@
 //!   `tests/chaos.rs` and the chaos-smoke CI job reproduce every
 //!   recovery path exactly, across thread counts and pipelines.
 //!
+//! # Cross-generation pipelining (`SearchConfig::pipeline_depth`)
+//!
+//! The classic loop drains every generation at a barrier before TPE may
+//! propose the next one, so the slowest candidate of generation *g*
+//! idles the whole pool.  With `pipeline_depth = D > 0` the engine runs
+//! a **deterministic lookahead pipeline** instead: generation *P*'s
+//! proposals are drawn the moment exactly `max(P − D, 0)` generations
+//! have been observed, so up to `D + 1` generations are measured
+//! concurrently while the reducer joins and observes them strictly in
+//! generation order.  Proposals are always drawn in ascending generation
+//! order on the single per-shard optimizer RNG stream and
+//! `observe_batch` still fires in candidate order per generation, so a
+//! pipelined run is bit-identical across thread counts, sync/async
+//! pipelines, cache states and kill/resume — the depth itself *is*
+//! algorithmic (generation *P* sees `max(P − D, 0)` observed
+//! generations instead of *P*), which is why `pipeline_depth > 0`
+//! enters the checkpoint fingerprint while `D = 0` reproduces the
+//! classic drained schedule (and its fingerprint) exactly.
+//! [`EngineStats::pipelined_generations`],
+//! [`EngineStats::lookahead_proposals`] and
+//! [`EngineStats::barrier_wait_ns`] make the overlap measurable.
+//!
 //! # Determinism contract
 //!
 //! A search result is a pure function of `(evaluator, target, device,
-//! SearchConfig{seed, iterations, …}, EngineConfig{batch, quant_bits})`.
+//! SearchConfig{seed, iterations, pipeline_depth, …},
+//! EngineConfig{batch, quant_bits})`.
 //! `EngineConfig::threads`, `EngineConfig::cache` and
 //! `EngineConfig::async_eval` are execution knobs only: any thread count,
 //! either cache setting and either generation pipeline (two-phase barrier
@@ -122,7 +145,11 @@
 //! generation of k proposals is not the same sequence as k serial
 //! ask/tell rounds — the standard batched-BO trade-off), except during
 //! TPE's random-startup phase, where proposals are model-free and the
-//! candidate stream is identical for every batch size.  Sharding extends
+//! candidate stream is identical for every batch size.
+//! `SearchConfig::pipeline_depth` is algorithmic for the same reason —
+//! a depth-D schedule observes lagged prefixes — but for a *fixed*
+//! depth the journal is again invariant under every execution knob
+//! above.  Sharding extends
 //! the contract across devices: for a fixed seed, each device's journal
 //! from a [`ShardedEngine`] run is bit-identical to a standalone
 //! [`Engine::search`] on that device alone, whatever the shard count,
@@ -257,6 +284,15 @@ pub struct SearchConfig {
     pub deadline_ms: u64,
     /// write crash-safe checkpoints ([`ckpt`]) at this path/cadence
     pub checkpoint: Option<CheckpointSpec>,
+    /// cross-generation lookahead depth: generation *P*'s proposals are
+    /// drawn once `max(P − D, 0)` generations are observed, so up to
+    /// `D + 1` generations measure concurrently.  0 (default) keeps the
+    /// classic drained schedule — journals and fingerprints unchanged.
+    /// Depth is **algorithmic** (see the module docs): a fixed depth is
+    /// bit-deterministic across every execution knob, but different
+    /// depths are different searches, so `D > 0` enters the checkpoint
+    /// fingerprint.
+    pub pipeline_depth: usize,
 }
 
 impl Default for SearchConfig {
@@ -277,6 +313,7 @@ impl Default for SearchConfig {
             eval_timeout_ms: 0,
             deadline_ms: 0,
             checkpoint: None,
+            pipeline_depth: 0,
         }
     }
 }
@@ -362,6 +399,19 @@ pub struct EngineStats {
     /// watchdog ([`SearchConfig::eval_timeout_ms`] /
     /// [`SearchConfig::deadline_ms`])
     pub reclaimed_stalls: u64,
+    /// generations this shard ran through the cross-generation lookahead
+    /// pipeline ([`SearchConfig::pipeline_depth`] > 0); replayed
+    /// (resumed-from-checkpoint) generations are not counted
+    pub pipelined_generations: usize,
+    /// proposals this shard drew while observations lagged behind the
+    /// proposal front (lookahead draws) — deterministic for a fixed
+    /// depth: every candidate of generation P > 0 when depth ≥ 1
+    pub lookahead_proposals: u64,
+    /// nanoseconds the reducer spent blocked joining in-flight
+    /// generation tasks (the residual barrier a deeper pipeline
+    /// shrinks).  Timing-dependent (a stat, not a result); 0 on the
+    /// depth-0 inline path.
+    pub barrier_wait_ns: u64,
 }
 
 impl EngineStats {

@@ -27,6 +27,19 @@
 //! entries across searches, so a sparsity point priced for a device once
 //! is never re-explored for that device in any later run on that cache.
 //!
+//! With [`SearchConfig::pipeline_depth`] `D > 0` the lockstep loop
+//! becomes a bounded **lookahead pipeline**: generation *P* is proposed
+//! the moment exactly `max(P − D, 0)` generations have been observed, so
+//! up to `D + 1` generations measure concurrently on scoped tasks while
+//! the reducer joins and observes them strictly in generation order.
+//! The depth changes which observations TPE has seen when it proposes
+//! (algorithmic — it enters the checkpoint fingerprint), but for a fixed
+//! depth the schedule is a pure function of `(iterations, batch, D)`, so
+//! journals stay invariant across thread counts, sync/async pipelines,
+//! cache states and kill/resume.  `D = 0` runs the classic drained
+//! propose → evaluate → observe loop inline, byte-identical to the
+//! pre-pipeline engine.
+//!
 //! The cross-device [`ParetoPoint`] frontier (accuracy vs. computation
 //! efficiency, the Fig. 1 axes) is aggregated over every record of every
 //! shard, labelled with the device that produced it.
@@ -126,6 +139,21 @@ pub struct ShardedStats {
     /// ([`SearchConfig::eval_timeout_ms`] / [`SearchConfig::deadline_ms`]),
     /// summed over shards
     pub reclaimed_stalls: u64,
+    /// lockstep generations evaluated through the cross-generation
+    /// lookahead pipeline ([`SearchConfig::pipeline_depth`] > 0),
+    /// excluding generations replayed from a checkpoint (0 on the
+    /// classic drained schedule)
+    pub pipelined_generations: usize,
+    /// proposals drawn while earlier generations were still unobserved
+    /// (every candidate of generations `1..` under a depth ≥ 1
+    /// schedule), summed over shards — a pure function of the schedule,
+    /// identical across thread counts, sync/async and kill/resume
+    pub lookahead_proposals: u64,
+    /// nanoseconds the reducer spent blocked joining in-flight
+    /// generation tasks (run-level, not per-shard-summed;
+    /// timing-dependent like `overlap_pricings`; 0 on the depth-0
+    /// inline path)
+    pub barrier_wait_ns: u64,
 }
 
 /// Output of [`ShardedEngine::search`]: per-device results (standalone
@@ -251,12 +279,22 @@ pub struct SearchControl<'c> {
     pub resume: Option<&'c Checkpoint>,
 }
 
-/// Per-shard search state: the single-device engine view, its cache
-/// handle, and its private optimizer + journal.
-struct Shard<'e> {
+/// Immutable per-shard execution context: the single-device engine view,
+/// its cache handle and the dense-throughput reference.  Shared (`&`) by
+/// every in-flight generation task — which is what lets a depth-D
+/// lookahead pipeline measure several generations concurrently while the
+/// reducer exclusively owns the mutable [`ShardState`].
+struct ShardExec<'e> {
     engine: Engine<'e>,
     handle: DeviceCacheHandle,
     dense_ips: f64,
+}
+
+/// Reducer-owned per-shard search state: the private optimizer, the
+/// journal, and the run's counters.  Only the reducer (the generation
+/// loop's caller thread) ever touches this, so proposing and observing
+/// stay strictly ordered even when generations overlap in flight.
+struct ShardState {
     /// hit/miss snapshots at shard start, so per-run stats stay correct
     /// on a warm shared cache
     hits0: u64,
@@ -274,9 +312,15 @@ struct Shard<'e> {
     /// fault-tolerance counters accumulated over this run's generations
     retried: u64,
     reclaimed: u64,
+    /// proposals drawn before this shard had observed every earlier
+    /// generation (the lookahead pipeline's schedule counter)
+    lookahead: u64,
     tpe: TpeOptimizer,
     records: Vec<SearchRecord>,
 }
+
+/// One generation's proposals, `[shard][candidate][2 * n_layers]`.
+type Proposals = Vec<Vec<Vec<f64>>>;
 
 /// The sharded search engine: one evaluator + target geometry, fanned out
 /// over several device budgets (or partitions of one device).
@@ -421,50 +465,52 @@ impl<'a> ShardedEngine<'a> {
             }
         }
 
-        let mut shards: Vec<Shard<'a>> = devices
-            .into_iter()
-            .zip(handles)
-            .zip(denses.into_iter().zip(f0))
-            .map(|((dev, handle), (dense, (fhits0, fmisses0)))| {
-                let dense = dense.expect("dense slot filled");
-                let dense_ips = dense.images_per_sec(dev).max(1e-9);
-                Shard {
-                    engine: Engine::new(self.evaluator, self.target, self.rm, dev),
-                    dense_ips,
-                    hits0: handle.hits(),
-                    misses0: handle.misses(),
-                    fhits0,
-                    fmisses0,
-                    dedup: 0,
-                    async_gens: 0,
-                    overlap: 0,
-                    ooo: 0,
-                    retried: 0,
-                    reclaimed: 0,
-                    handle,
-                    // every shard is seeded exactly like a standalone run,
-                    // which is what makes its journal standalone-identical
-                    tpe: TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone()),
-                    records: Vec::with_capacity(cfg.iterations),
-                }
-            })
-            .collect();
+        let mut execs: Vec<ShardExec<'a>> = Vec::with_capacity(n_dev);
+        let mut states: Vec<ShardState> = Vec::with_capacity(n_dev);
+        for ((dev, handle), (dense, (fhits0, fmisses0))) in
+            devices.into_iter().zip(handles).zip(denses.into_iter().zip(f0))
+        {
+            let dense = dense.expect("dense slot filled");
+            let dense_ips = dense.images_per_sec(dev).max(1e-9);
+            states.push(ShardState {
+                hits0: handle.hits(),
+                misses0: handle.misses(),
+                fhits0,
+                fmisses0,
+                dedup: 0,
+                async_gens: 0,
+                overlap: 0,
+                ooo: 0,
+                retried: 0,
+                reclaimed: 0,
+                lookahead: 0,
+                // every shard is seeded exactly like a standalone run,
+                // which is what makes its journal standalone-identical
+                tpe: TpeOptimizer::new(2 * n, cfg.seed, cfg.tpe.clone()),
+                records: Vec::with_capacity(cfg.iterations),
+            });
+            execs.push(ShardExec {
+                engine: Engine::new(self.evaluator, self.target, self.rm, dev),
+                handle,
+                dense_ips,
+            });
+        }
 
         // checkpoint/resume: fingerprint the result-relevant configuration;
         // a matching checkpoint's generations are replayed below, anything
         // else is silently a fresh start (the CLI validates loudly first)
         let device_fps: Vec<u64> =
-            shards.iter().map(|s| device_fingerprint(s.engine.dev)).collect();
+            execs.iter().map(|s| device_fingerprint(s.engine.dev)).collect();
         let fp = search_fingerprint(cfg, &shapes, &device_fps);
         let resume_done = match ctrl.resume {
             Some(ck)
                 if ck.fingerprint == fp
                     && ck.done <= cfg.iterations
-                    && ck.devices.len() == shards.len()
+                    && ck.devices.len() == execs.len()
                     && ck
                         .devices
                         .iter()
-                        .zip(&shards)
+                        .zip(&execs)
                         .all(|(d, s)| d.device == s.engine.dev.name) =>
             {
                 ck.done
@@ -472,124 +518,224 @@ impl<'a> ShardedEngine<'a> {
             _ => 0,
         };
 
+        // one EvalCtx per shard, built once: pure borrowed data shared by
+        // every (possibly concurrent) generation task
+        let ctxs: Vec<EvalCtx<'_>> = execs
+            .iter()
+            .map(|ex| EvalCtx {
+                cache: if cfg.engine.cache { Some((cache, &ex.handle)) } else { None },
+                quant_bits: cfg.engine.quant_bits,
+                dense_ips: ex.dense_ips,
+                dev_fp: device_fingerprint(ex.engine.dev),
+                base_acc,
+                mode: cfg.mode,
+                lambda: cfg.lambda,
+                dse: &cfg.dse,
+                shapes: &shapes,
+            })
+            .collect();
+
+        // --- the generation loop: a depth-D lookahead pipeline ----------
+        //
+        // Generation *P* is proposed the moment exactly `max(P − D, 0)`
+        // generations have been reduced (and every earlier generation has
+        // been proposed), so proposals are always drawn in ascending
+        // generation order on each shard's single optimizer RNG stream —
+        // the whole schedule is a pure function of (iterations, batch, D)
+        // and never of thread timing.  At D = 0 this degenerates to the
+        // classic propose → evaluate → observe drained loop, evaluated
+        // inline on this thread (no task, no join): journals and stats
+        // are byte-identical to the pre-pipeline engine.  At D > 0, up to
+        // D + 1 generations are in flight on scoped tasks (each fanning
+        // its candidates over the shared pool width — a slow generation
+        // tail no longer idles the machine) while this thread reduces
+        // them strictly in generation order.
+        let depth = cfg.pipeline_depth;
+        let n_gens = cfg.iterations.div_ceil(batch);
+        let evaluator = self.evaluator;
         let mut generations = 0usize;
         let mut done = 0usize;
-        while done < cfg.iterations {
-            let g = batch.min(cfg.iterations - done);
-            // --- propose per shard: anchors first, then a frozen-model
-            //     TPE batch (identical schedule to Engine's serial loop) --
-            let n_anchor =
-                if cfg.warm_start { 3usize.saturating_sub(done).min(g) } else { 0 };
-            let xs_all: Vec<Vec<Vec<f64>>> = shards
-                .iter_mut()
-                .map(|s| {
-                    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(g);
-                    for j in 0..n_anchor {
-                        xs.push(vec![ANCHORS[done + j]; 2 * n]);
+        let mut pipelined = 0usize;
+        let mut barrier_wait_ns = 0u64;
+        let cancelled = std::thread::scope(|sc| {
+            // an in-flight generation: its proposals travel with the task
+            // and come back with the records, so the reducer observes
+            // them without cloning
+            enum Pending<'s> {
+                /// replayed from a checkpoint, or evaluated inline (D = 0)
+                Ready(Proposals, GenerationOutput),
+                /// measuring on a scoped task (D > 0)
+                Running(std::thread::ScopedJoinHandle<'s, (Proposals, GenerationOutput)>),
+            }
+            let mut inflight: std::collections::VecDeque<(usize, bool, Pending<'_>)> =
+                std::collections::VecDeque::new();
+            let mut next_propose = 0usize;
+            while generations < n_gens {
+                // --- launch every generation whose observation prefix is
+                //     in: gen P needs exactly max(P − D, 0) reduced ------
+                while next_propose < n_gens && next_propose - generations <= depth {
+                    let start = next_propose * batch;
+                    let g = batch.min(cfg.iterations - start);
+                    // propose per shard: anchors first, then a frozen-
+                    // model TPE batch (identical schedule to the drained
+                    // serial loop)
+                    let n_anchor = if cfg.warm_start {
+                        3usize.saturating_sub(start).min(g)
+                    } else {
+                        0
+                    };
+                    let xs_all: Proposals = states
+                        .iter_mut()
+                        .map(|s| {
+                            let mut xs: Vec<Vec<f64>> = Vec::with_capacity(g);
+                            for j in 0..n_anchor {
+                                xs.push(vec![ANCHORS[start + j]; 2 * n]);
+                            }
+                            xs.extend(s.tpe.suggest_batch(g - n_anchor));
+                            xs
+                        })
+                        .collect();
+                    if depth > 0 && next_propose > 0 {
+                        // drawn while earlier generations were still
+                        // unobserved — a pure function of the schedule,
+                        // replay included, so kill/resume can't move it
+                        for s in states.iter_mut() {
+                            s.lookahead += g as u64;
+                        }
                     }
-                    xs.extend(s.tpe.suggest_batch(g - n_anchor));
-                    xs
-                })
-                .collect();
-            // --- evaluate the union of (shard, candidate) work items ----
-            let replayed = done < resume_done;
-            let evaluated = if replayed {
-                // resume replay: records come from the checkpoint, so the
-                // generation's entire evaluation cost is skipped.  The
-                // proposals above consumed the optimizer RNG exactly as
-                // the original run did; feeding them back below with the
-                // checkpointed objectives reproduces the TPE model state
-                // bit for bit.  (`done` boundaries align because
-                // checkpoints are only written between generations of a
-                // fingerprint-identical schedule.)
-                let ck = ctrl.resume.expect("resume_done > 0 implies a checkpoint");
-                let mut records = Vec::with_capacity(shards.len() * g);
-                for d in &ck.devices {
-                    records.extend(d.records[done..done + g].iter().cloned());
-                }
-                let zeros = vec![0u64; shards.len()];
-                GenerationOutput {
-                    records,
-                    dedup: zeros.clone(),
-                    overlap: zeros.clone(),
-                    ooo: zeros.clone(),
-                    retries: zeros.clone(),
-                    reclaimed: zeros,
-                }
-            } else {
-                let ctxs: Vec<EvalCtx<'_>> = shards
-                    .iter()
-                    .map(|s| EvalCtx {
-                        cache: if cfg.engine.cache {
-                            Some((cache, &s.handle))
+                    let replayed = start < resume_done;
+                    let pending = if replayed {
+                        // resume replay: records come from the checkpoint,
+                        // so the generation's entire evaluation cost is
+                        // skipped.  The proposals above consumed the
+                        // optimizer RNG exactly as the original run did;
+                        // feeding them back below with the checkpointed
+                        // objectives reproduces the TPE model state bit
+                        // for bit.  (`start` boundaries align because
+                        // checkpoints are only written between generations
+                        // of a fingerprint-identical schedule.)
+                        let ck =
+                            ctrl.resume.expect("resume_done > 0 implies a checkpoint");
+                        let mut records = Vec::with_capacity(execs.len() * g);
+                        for d in &ck.devices {
+                            records.extend(d.records[start..start + g].iter().cloned());
+                        }
+                        let zeros = vec![0u64; execs.len()];
+                        let out = GenerationOutput {
+                            records,
+                            dedup: zeros.clone(),
+                            overlap: zeros.clone(),
+                            ooo: zeros.clone(),
+                            retries: zeros.clone(),
+                            reclaimed: zeros,
+                        };
+                        Pending::Ready(xs_all, out)
+                    } else if depth == 0 {
+                        // drained schedule: evaluate inline, no join — the
+                        // classic loop, byte for byte
+                        let out = if cfg.engine.async_eval {
+                            run_generation_async(
+                                evaluator, &execs, &ctxs, &xs_all, start, g, threads, cfg,
+                            )
                         } else {
-                            None
-                        },
-                        quant_bits: cfg.engine.quant_bits,
-                        dense_ips: s.dense_ips,
-                        dev_fp: device_fingerprint(s.engine.dev),
-                        base_acc,
-                        mode: cfg.mode,
-                        lambda: cfg.lambda,
-                        dse: &cfg.dse,
-                        shapes: &shapes,
-                    })
-                    .collect();
-                if cfg.engine.async_eval {
-                    run_generation_async(
-                        self.evaluator, &shards, &ctxs, &xs_all, done, g, threads, cfg,
-                    )
-                } else {
-                    run_generation(&shards, &ctxs, &xs_all, done, g, threads, &cfg.retry)
+                            run_generation(
+                                &execs, &ctxs, &xs_all, start, g, threads, &cfg.retry,
+                            )
+                        };
+                        Pending::Ready(xs_all, out)
+                    } else {
+                        let (execs, ctxs) = (&execs, &ctxs);
+                        Pending::Running(sc.spawn(move || {
+                            let out = if cfg.engine.async_eval {
+                                run_generation_async(
+                                    evaluator, execs, ctxs, &xs_all, start, g, threads,
+                                    cfg,
+                                )
+                            } else {
+                                run_generation(
+                                    execs, ctxs, &xs_all, start, g, threads, &cfg.retry,
+                                )
+                            };
+                            (xs_all, out)
+                        }))
+                    };
+                    inflight.push_back((g, replayed, pending));
+                    next_propose += 1;
                 }
-            };
-            // --- reduce per shard, in candidate order -------------------
-            let mut flat = evaluated.records.into_iter();
-            for (si, (s, xs)) in shards.iter_mut().zip(xs_all).enumerate() {
-                let recs: Vec<SearchRecord> = flat.by_ref().take(g).collect();
-                let mut observed = Vec::with_capacity(g);
-                for (x, rec) in xs.into_iter().zip(&recs) {
-                    observed.push((x, rec.objective));
-                }
-                s.records.extend(recs);
-                s.tpe.observe_batch(observed);
-                s.dedup += evaluated.dedup[si];
-                s.overlap += evaluated.overlap[si];
-                s.ooo += evaluated.ooo[si];
-                s.retried += evaluated.retries[si];
-                s.reclaimed += evaluated.reclaimed[si];
-                if cfg.engine.async_eval && !replayed {
-                    s.async_gens += 1;
-                }
-            }
-            generations += 1;
-            done += g;
-            // crash safety: persist the journal prefix at the configured
-            // cadence (not during replay — that checkpoint already exists,
-            // and not at completion — the result is about to be returned)
-            if let Some(spec) = &cfg.checkpoint {
-                if done > resume_done
-                    && done < cfg.iterations
-                    && generations % spec.every.max(1) == 0
-                {
-                    write_checkpoint(spec, fp, done, &shards);
-                }
-            }
-            if let Some(obs) = ctrl.observer {
-                let go = obs(SearchProgress {
-                    generation: generations,
-                    done,
-                    total: cfg.iterations,
-                });
-                if !go && done < cfg.iterations {
-                    // cancelled (client disconnect / daemon shutdown):
-                    // leave a checkpoint behind so the run can resume
-                    if let Some(spec) = &cfg.checkpoint {
-                        write_checkpoint(spec, fp, done, &shards);
+                // --- reduce the oldest in-flight generation, in candidate
+                //     order per shard --------------------------------------
+                let (g, replayed, pending) =
+                    inflight.pop_front().expect("a launched generation");
+                let (xs_all, evaluated) = match pending {
+                    Pending::Ready(xs, out) => (xs, out),
+                    Pending::Running(h) => {
+                        let t0 = Instant::now();
+                        let r = h.join().expect("generation task panicked");
+                        barrier_wait_ns += t0.elapsed().as_nanos() as u64;
+                        r
                     }
-                    return None;
+                };
+                if depth > 0 && !replayed {
+                    pipelined += 1;
+                }
+                let mut flat = evaluated.records.into_iter();
+                for (si, (s, xs)) in states.iter_mut().zip(xs_all).enumerate() {
+                    let recs: Vec<SearchRecord> = flat.by_ref().take(g).collect();
+                    let mut observed = Vec::with_capacity(g);
+                    for (x, rec) in xs.into_iter().zip(&recs) {
+                        observed.push((x, rec.objective));
+                    }
+                    s.records.extend(recs);
+                    s.tpe.observe_batch(observed);
+                    s.dedup += evaluated.dedup[si];
+                    s.overlap += evaluated.overlap[si];
+                    s.ooo += evaluated.ooo[si];
+                    s.retried += evaluated.retries[si];
+                    s.reclaimed += evaluated.reclaimed[si];
+                    if cfg.engine.async_eval && !replayed {
+                        s.async_gens += 1;
+                    }
+                }
+                generations += 1;
+                done += g;
+                // crash safety: persist the journal prefix at the
+                // configured cadence (not during replay — that checkpoint
+                // already exists, and not at completion — the result is
+                // about to be returned).  Checkpoints land only at reduced
+                // generation boundaries, so a mid-pipeline snapshot is
+                // always a fully-observed prefix the replay above can
+                // regenerate from.
+                if let Some(spec) = &cfg.checkpoint {
+                    if done > resume_done
+                        && done < cfg.iterations
+                        && generations % spec.every.max(1) == 0
+                    {
+                        write_checkpoint(spec, fp, done, &execs, &states);
+                    }
+                }
+                if let Some(obs) = ctrl.observer {
+                    let go = obs(SearchProgress {
+                        generation: generations,
+                        done,
+                        total: cfg.iterations,
+                    });
+                    if !go && done < cfg.iterations {
+                        // cancelled (client disconnect / daemon shutdown):
+                        // leave a checkpoint behind so the run can resume.
+                        // Generations still in flight are joined by the
+                        // scope on the way out and their results dropped —
+                        // the checkpoint covers exactly the reduced prefix.
+                        if let Some(spec) = &cfg.checkpoint {
+                            write_checkpoint(spec, fp, done, &execs, &states);
+                        }
+                        return true;
+                    }
                 }
             }
+            false
+        });
+        if cancelled {
+            return None;
         }
 
         // --- finalize: per-device results + cross-device frontier -------
@@ -602,8 +748,9 @@ impl<'a> ShardedEngine<'a> {
         let (mut total_overlap, mut total_ooo) = (0u64, 0u64);
         let (mut total_sim_evals, mut total_sim_promotions) = (0usize, 0usize);
         let (mut total_retried, mut total_reclaimed) = (0u64, 0u64);
+        let mut total_lookahead = 0u64;
         let async_generations = if cfg.engine.async_eval { generations } else { 0 };
-        for s in shards {
+        for (ex, s) in execs.into_iter().zip(states) {
             let best = s
                 .records
                 .iter()
@@ -611,10 +758,10 @@ impl<'a> ShardedEngine<'a> {
                 .max_by(|a, b| a.1.objective.total_cmp(&b.1.objective))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
-            let hits = s.handle.hits() - s.hits0;
-            let misses = s.handle.misses() - s.misses0;
-            let fhits = s.handle.frontier_hits() - s.fhits0;
-            let fmisses = s.handle.frontier_misses() - s.fmisses0;
+            let hits = ex.handle.hits() - s.hits0;
+            let misses = ex.handle.misses() - s.misses0;
+            let fhits = ex.handle.frontier_hits() - s.fhits0;
+            let fmisses = ex.handle.frontier_misses() - s.fmisses0;
             total_hits += hits;
             total_misses += misses;
             total_fhits += fhits;
@@ -624,6 +771,7 @@ impl<'a> ShardedEngine<'a> {
             total_ooo += s.ooo;
             total_retried += s.retried;
             total_reclaimed += s.reclaimed;
+            total_lookahead += s.lookahead;
             // fidelity-ladder accounting, derived from the journal itself
             // in candidate order — thread-count invariant by construction
             let mut sim_evals = 0usize;
@@ -648,10 +796,10 @@ impl<'a> ShardedEngine<'a> {
             total_sim_evals += sim_evals;
             total_sim_promotions += sim_promotions;
             per_device.push(DeviceSearchResult {
-                device: s.engine.dev.name.clone(),
+                device: ex.engine.dev.name.clone(),
                 result: SearchResult {
                     best,
-                    dense_images_per_sec: s.dense_ips,
+                    dense_images_per_sec: ex.dense_ips,
                     stats: EngineStats {
                         evaluations: s.records.len(),
                         generations,
@@ -670,6 +818,9 @@ impl<'a> ShardedEngine<'a> {
                         sim_disagreement,
                         retried_evals: s.retried,
                         reclaimed_stalls: s.reclaimed,
+                        pipelined_generations: pipelined,
+                        lookahead_proposals: s.lookahead,
+                        barrier_wait_ns,
                     },
                     records: s.records,
                 },
@@ -696,6 +847,9 @@ impl<'a> ShardedEngine<'a> {
                 sim_promotions: total_sim_promotions,
                 retried_evals: total_retried,
                 reclaimed_stalls: total_reclaimed,
+                pipelined_generations: pipelined,
+                lookahead_proposals: total_lookahead,
+                barrier_wait_ns,
             },
             pareto,
             per_device,
@@ -719,14 +873,21 @@ struct GenerationOutput {
 /// Best-effort checkpoint write between generations: a failed save must
 /// never kill a healthy search, so IO errors are reported and swallowed
 /// (the previous checkpoint, if any, survives intact — saves are atomic).
-fn write_checkpoint(spec: &CheckpointSpec, fingerprint: u64, done: usize, shards: &[Shard<'_>]) {
+fn write_checkpoint(
+    spec: &CheckpointSpec,
+    fingerprint: u64,
+    done: usize,
+    execs: &[ShardExec<'_>],
+    states: &[ShardState],
+) {
     let ck = Checkpoint {
         fingerprint,
         done,
-        devices: shards
+        devices: execs
             .iter()
-            .map(|s| DeviceCheckpoint {
-                device: s.engine.dev.name.clone(),
+            .zip(states)
+            .map(|(ex, s)| DeviceCheckpoint {
+                device: ex.engine.dev.name.clone(),
                 records: s.records.clone(),
             })
             .collect(),
@@ -795,7 +956,7 @@ fn dedup_proposals(xs_all: &[Vec<Vec<f64>>], n_shards: usize, g: usize) -> Propo
 /// The barrier between the passes is what [`run_generation_async`]
 /// removes.
 fn run_generation(
-    shards: &[Shard<'_>],
+    shards: &[ShardExec<'_>],
     ctxs: &[EvalCtx<'_>],
     xs_all: &[Vec<Vec<f64>>],
     base_iter: usize,
@@ -880,7 +1041,7 @@ fn run_generation(
 /// itself never returns still blocks the generation's scope join.
 fn run_generation_async(
     evaluator: &dyn CandidateEvaluator,
-    shards: &[Shard<'_>],
+    shards: &[ShardExec<'_>],
     ctxs: &[EvalCtx<'_>],
     xs_all: &[Vec<Vec<f64>>],
     base_iter: usize,
@@ -1341,6 +1502,51 @@ mod tests {
         }
         assert_eq!(asynced.stats.async_generations, asynced.stats.generations);
         assert_eq!(sync.stats.async_generations, 0);
+    }
+
+    /// For a fixed lookahead depth, the pipeline is an execution knob:
+    /// thread count and sync/async evaluation never move a journal bit,
+    /// and the schedule counters are pure functions of the schedule.
+    #[test]
+    fn pipelined_search_is_execution_invariant_for_fixed_depth() {
+        let ev = surrogate(41);
+        let net = ev.net.clone();
+        let rm = ResourceModel::default();
+        let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+        let mk = |threads: usize, async_eval: bool| SearchConfig {
+            pipeline_depth: 2,
+            ..cfg(
+                10,
+                9,
+                EngineConfig { batch: 3, threads, cache: true, quant_bits: 12, async_eval },
+            )
+        };
+        let eng = ShardedEngine::new(&ev, &net, &rm, &devices);
+        let a = eng.search(&mk(0, false));
+        for r in [eng.search(&mk(2, false)), eng.search(&mk(0, true))] {
+            for (x, y) in a.per_device.iter().zip(&r.per_device) {
+                assert_eq!(
+                    objective_bits(&x.result),
+                    objective_bits(&y.result),
+                    "{}: depth-2 journal moved under an execution knob",
+                    x.device
+                );
+            }
+        }
+        // 10 iters at batch 3 = 4 generations (3+3+3+1); every generation
+        // after the first is proposed ahead of its observations
+        assert_eq!(a.stats.pipelined_generations, 4);
+        assert_eq!(a.stats.lookahead_proposals, 2 * (3 + 3 + 1));
+        // a depth-0 run of the same search keeps every pipeline counter
+        // at its drained-schedule zero
+        let drained = eng.search(&cfg(
+            10,
+            9,
+            EngineConfig { batch: 3, threads: 0, cache: true, quant_bits: 12, async_eval: false },
+        ));
+        assert_eq!(drained.stats.pipelined_generations, 0);
+        assert_eq!(drained.stats.lookahead_proposals, 0);
+        assert_eq!(drained.stats.barrier_wait_ns, 0);
     }
 
     #[test]

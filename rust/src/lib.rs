@@ -56,6 +56,21 @@
 //! [`coordinator`] keeps the production evaluators and the stable
 //! `search()` / `search_sharded()` entry points on top of the engine.
 //!
+//! With [`engine::SearchConfig::pipeline_depth`] > 0 the generation
+//! barrier itself is removed: up to D+1 generations are in flight
+//! concurrently, with generation g+1 proposed from observations through
+//! g−D on a fixed optimizer RNG schedule (**lookahead ask/tell** — TPE's
+//! `suggest_batch`/`observe_batch` are deliberately decoupled).  The
+//! pipelined trajectory differs from the drained one — depth is an
+//! algorithmic knob, reported next to the seed — but for a *fixed* depth
+//! results remain bit-identical across thread counts, sync/async
+//! pipelines, cache states and kill/resume, and depth 0 **is** the
+//! drained engine, byte for byte (`tests/integration.rs`, the CI
+//! pipeline-smoke job).  `EngineStats` reports
+//! `pipelined_generations` / `lookahead_proposals` / `barrier_wait_ns`;
+//! `benches/pipeline_depth.rs` quantifies the wall-time gain when
+//! evaluation latency dominates.
+//!
 //! ## The search daemon (`server`)
 //!
 //! `hass serve` keeps all of the above resident: a long-lived process
@@ -132,9 +147,9 @@
 //! | [`hardware`]  | SPE cycle model (Eq. 1–2), resource model, devices |
 //! | [`dse`]       | Eq. 3–5 DSE: frontier kernel, bisection, balancing, partitioning |
 //! | [`optim`]     | TPE and simulated annealing |
-//! | [`engine`]    | batched/parallel/sharded search + pricing caches |
+//! | [`engine`]    | batched/parallel/sharded search, lookahead pipeline, pricing caches |
 //! | [`coordinator`] | production evaluators + stable search entry points |
-//! | [`simulator`] | event-driven cycle-level dataflow simulator (model validation, fidelity ladder) |
+//! | [`simulator`] | event-driven cycle-level dataflow simulator, per-layer parallel core (model validation, fidelity ladder) |
 //! | [`baselines`] | dense / PASS-like / HPIPE-like / non-dataflow designs |
 //! | [`runtime`]   | PJRT execution of the AOT CalibNet artifact |
 //! | [`server`]    | resident `hass serve` search daemon + JSON-RPC protocol |

@@ -196,6 +196,14 @@ fn cmd_search(args: &[String]) -> i32 {
             "0",
             "compact the saved --cache-file to at most this many design and \
              frontier entries each, least-recently-used first (0 = unlimited)",
+        )
+        .opt(
+            "pipeline-depth",
+            "0",
+            "cross-generation lookahead: propose generation g+1 from \
+             observations through g-D while g's tail is still in flight \
+             (0 = drained ask/tell; results stay bit-identical across \
+             thread counts for any fixed depth)",
         );
     let p = parse_or_die(cli, args);
     let net = network_or_die(p.get("network"));
@@ -257,6 +265,7 @@ fn cmd_search(args: &[String]) -> i32 {
             path: ckpt_path.to_string(),
             every: p.get_usize("checkpoint-every").max(1),
         }),
+        pipeline_depth: p.get_usize("pipeline-depth"),
         ..Default::default()
     };
     // --resume: load + validate loudly here (the engine silently ignores a
@@ -401,6 +410,15 @@ fn cmd_search(args: &[String]) -> i32 {
                 s.async_generations, s.overlap_pricings, s.ooo_completions
             );
         }
+        if s.pipelined_generations > 0 {
+            println!(
+                "[search] lookahead pipeline: {} generations overlapped | {} proposals \
+                 drawn ahead of observations | {:.1} ms at the reduce barrier",
+                s.pipelined_generations,
+                s.lookahead_proposals,
+                s.barrier_wait_ns as f64 / 1e6
+            );
+        }
         if s.retried_evals > 0 || s.reclaimed_stalls > 0 {
             println!(
                 "[search] fault tolerance: {} transient failures retried | {} stalled \
@@ -468,6 +486,15 @@ fn cmd_search(args: &[String]) -> i32 {
             "[search] async pipeline: {} generations | {} pricings overlapped \
              in-flight measurements | {} completions out of order",
             s.async_generations, s.overlap_pricings, s.ooo_completions
+        );
+    }
+    if s.pipelined_generations > 0 {
+        println!(
+            "[search] lookahead pipeline: {} generations overlapped | {} proposals \
+             drawn ahead of observations | {:.1} ms at the reduce barrier",
+            s.pipelined_generations,
+            s.lookahead_proposals,
+            s.barrier_wait_ns as f64 / 1e6
         );
     }
     if s.retried_evals > 0 || s.reclaimed_stalls > 0 {
@@ -809,6 +836,13 @@ fn cmd_client(args: &[String]) -> i32 {
     .opt("threads", "0", "search: evaluation threads (0 = auto)")
     .opt("quant", "0", "search: pricing quantization bits")
     .flag("async", "search: async completion-queue pipeline")
+    .opt("pipeline-depth", "0", "search: cross-generation lookahead depth (0 = drained)")
+    .opt(
+        "resume",
+        "",
+        "search: checkpoint file on the daemon's host to continue from \
+         (a fingerprint mismatch is a JSON-RPC error, not a dead daemon)",
+    )
     .opt("sw", "0.5", "price: uniform weight sparsity")
     .opt("sa", "0.5", "price: uniform activation sparsity")
     .opt("journal", "", "search: write the returned per-device journal CSVs here")
@@ -833,6 +867,8 @@ fn cmd_client(args: &[String]) -> i32 {
             ("threads", Json::Num(p.get_usize("threads") as f64)),
             ("quant", Json::Num(p.get_usize("quant") as f64)),
             ("async", Json::Bool(p.get_bool("async"))),
+            ("pipeline_depth", Json::Num(p.get_usize("pipeline-depth") as f64)),
+            ("resume", Json::Str(p.get("resume").to_string())),
         ]),
         "price" => Json::obj(vec![
             ("network", Json::Str(p.get("network").to_string())),

@@ -20,11 +20,17 @@
 //!
 //! | method       | params                                                           | result |
 //! |--------------|------------------------------------------------------------------|--------|
-//! | `search`     | `network`, `device` \| `devices` (csv), `iters`, `seed`, `mode` (`hw`\|`sw`), `batch`, `threads`, `quant`, `async`, `cache`, `retries`, `eval_timeout`, `deadline`, `checkpoint`, `checkpoint_every` | per-device `{device, journal_csv, cache_hits, cache_misses, best_*}` + run stats; streams `queued`/`started`/`generation` events |
+//! | `search`     | `network`, `device` \| `devices` (csv), `iters`, `seed`, `mode` (`hw`\|`sw`), `batch`, `threads`, `quant`, `async`, `cache`, `retries`, `eval_timeout`, `deadline`, `checkpoint`, `checkpoint_every`, `pipeline_depth` (cross-generation lookahead, 0 = drained), `resume` (host-side checkpoint path to continue from) | per-device `{device, journal_csv, cache_hits, cache_misses, best_*}` + run stats; streams `queued`/`started`/`generation` events |
 //! | `price`      | `network`, `device`, `sw`, `sa`, `quant`                         | `{images_per_sec, dsp, efficiency, cached}` via the shared cache |
-//! | `stats`      | —                                                                | cache sizes + admission/search counters |
+//! | `stats`      | —                                                                | cache sizes + admission/search counters, incl. cumulative fault-tolerance (`retried_evals`, `reclaimed_stalls`) and pipeline (`pipelined_generations`, `lookahead_proposals`) totals |
 //! | `save-cache` | `path`                                                           | `{designs, frontiers}` snapshot written |
 //! | `shutdown`   | —                                                                | `{ok: true}`, then the daemon drains and exits |
+//!
+//! A `search` carrying `resume` validates the checkpoint *before*
+//! admission: a missing file or fingerprint mismatch is an ordinary
+//! JSON-RPC error line (the daemon keeps serving), never a process
+//! exit — the daemon-side twin of `hass search --resume`'s loud
+//! validation.
 //!
 //! # Fair admission
 //!
@@ -63,7 +69,8 @@
 //! Because a cancelled search — client gone, or daemon shutdown kicking
 //! the connection — also writes its checkpoint before unwinding, an
 //! interrupted daemon search can be continued with `hass search
-//! --resume` and journals bit-identically to an uninterrupted run.
+//! --resume` *or* by a later `search` request carrying `resume`, and
+//! journals bit-identically to an uninterrupted run.
 //! Deterministic chaos tests drive the daemon through the
 //! `server.conn.drop` and `server.search.panic` injection sites
 //! ([`crate::util::fault`]): a dropped connection or a panicking search
@@ -82,8 +89,8 @@ use crate::arch::networks;
 use crate::coordinator::SurrogateEvaluator;
 use crate::dse::frontier::shape_fingerprint;
 use crate::engine::{
-    quantize_points, CheckpointSpec, DesignCache, EngineConfig, RetryPolicy, SearchConfig,
-    SearchControl, SearchMode, ShardedEngine,
+    quantize_points, resume_fingerprint, Checkpoint, CheckpointSpec, DesignCache,
+    EngineConfig, RetryPolicy, SearchConfig, SearchControl, SearchMode, ShardedEngine,
 };
 use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::ResourceModel;
@@ -216,6 +223,13 @@ pub struct Server {
     conns: Mutex<Vec<(u64, TcpStream)>>,
     next_conn: AtomicU64,
     completed_searches: AtomicU64,
+    // cumulative run-stat totals over every completed search, surfaced by
+    // `stats` so operators see fault-tolerance and pipeline activity
+    // without scraping per-search results
+    retried_evals: AtomicU64,
+    reclaimed_stalls: AtomicU64,
+    pipelined_generations: AtomicU64,
+    lookahead_proposals: AtomicU64,
     rm: ResourceModel,
 }
 
@@ -230,6 +244,10 @@ impl Server {
             conns: Mutex::new(Vec::new()),
             next_conn: AtomicU64::new(0),
             completed_searches: AtomicU64::new(0),
+            retried_evals: AtomicU64::new(0),
+            reclaimed_stalls: AtomicU64::new(0),
+            pipelined_generations: AtomicU64::new(0),
+            lookahead_proposals: AtomicU64::new(0),
             rm: ResourceModel::default(),
         }
     }
@@ -392,7 +410,35 @@ impl Server {
                 path: ckpt_path.clone(),
                 every: ckpt_every,
             }),
+            pipeline_depth: usize_param(params, "pipeline_depth", 0)?,
             ..Default::default()
+        };
+        // daemon-side resume: validate before taking an admission slot —
+        // a bad checkpoint is this request's error, not a dead daemon
+        // (the CLI's exit-2 path, rephrased as a JSON-RPC error)
+        let resume_path = str_param(params, "resume", "")?;
+        let resume_ck = if resume_path.is_empty() {
+            None
+        } else {
+            let ck = Checkpoint::load(&resume_path)
+                .map_err(|e| format!("failed to load checkpoint '{resume_path}': {e}"))?;
+            let fp = resume_fingerprint(&cfg, &net, &devices);
+            if ck.fingerprint != fp {
+                return Err(format!(
+                    "checkpoint '{resume_path}' was written by a different search \
+                     (fingerprint {:016x}, this request is {fp:016x}); refusing to \
+                     resume — resend the original network/devices/seed/params",
+                    ck.fingerprint
+                ));
+            }
+            if ck.done > cfg.iterations {
+                return Err(format!(
+                    "checkpoint '{resume_path}' already covers {} iterations but this \
+                     request asks for only {}; refusing to resume",
+                    ck.done, cfg.iterations
+                ));
+            }
+            Some(ck)
         };
         // the exact evaluator construction of the CLI surrogate path —
         // this is what makes daemon journals bit-identical to `hass
@@ -441,7 +487,7 @@ impl Server {
         };
         let ctrl = SearchControl {
             observer: Some(&observer),
-            ..Default::default()
+            resume: resume_ck.as_ref(),
         };
         let eng = ShardedEngine::new(&ev, &net, &self.rm, &devices);
         // defense in depth: the satellite fixes make the search itself
@@ -462,6 +508,12 @@ impl Server {
             Ok(Some(r)) => r,
         };
         self.completed_searches.fetch_add(1, Ordering::Relaxed);
+        let s = &result.stats;
+        self.retried_evals.fetch_add(s.retried_evals, Ordering::Relaxed);
+        self.reclaimed_stalls.fetch_add(s.reclaimed_stalls, Ordering::Relaxed);
+        self.pipelined_generations
+            .fetch_add(s.pipelined_generations as u64, Ordering::Relaxed);
+        self.lookahead_proposals.fetch_add(s.lookahead_proposals, Ordering::Relaxed);
 
         let devices_json: Vec<Json> = result
             .per_device
@@ -537,6 +589,22 @@ impl Server {
                 Json::Num(self.completed_searches.load(Ordering::Relaxed) as f64),
             ),
             ("max_inflight", Json::Num(self.admission.max as f64)),
+            (
+                "retried_evals",
+                Json::Num(self.retried_evals.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "reclaimed_stalls",
+                Json::Num(self.reclaimed_stalls.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pipelined_generations",
+                Json::Num(self.pipelined_generations.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "lookahead_proposals",
+                Json::Num(self.lookahead_proposals.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 

@@ -42,12 +42,29 @@
 //! the search loop: `engine::SimulatedEvaluator` re-scores the analytic
 //! top-k of each generation with it (the fidelity ladder).
 //!
+//! **Per-layer parallelism.**  [`simulate_par`] runs the same event core
+//! with the deterministic core's dominant inner loop — the per-group
+//! feasibility scan of `det_run_len` — chunked over scoped worker
+//! threads.  The scan is pure (frozen-neighbour run projections, no
+//! mutation), and the run length is the *first failing group*, so the
+//! minimum over chunk-local first failures reproduces the serial answer
+//! exactly: `simulate_par` is differential-tested bit-identical to
+//! [`simulate`] and [`simulate_scan`] at every thread count.  A serial
+//! prefix keeps cheap early failures cheap, and threads only engage on
+//! scans long enough to amortize the spawn (so `threads = 1`, small
+//! pipelines, and [`SparsityDynamics::Stochastic`] — which never
+//! coalesces — all take the unthreaded path).  This is what lets a
+//! *single* promoted candidate's simulation spread over the engine's
+//! idle cores in the fidelity ladder, instead of parallelising across
+//! candidates only.
+//!
 //! **Buffering.**  [`buffer_sizes`] (and the sample-count-parameterised
 //! [`buffer_sizes_with`]) implement the paper's moving-window buffer
 //! heuristic over stochastic group durations.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::arch::{LayerDesc, Network, Op};
 use crate::hardware::LayerDesign;
@@ -368,6 +385,35 @@ pub fn simulate_events(
     dynamics: SparsityDynamics,
     coalesce: bool,
 ) -> SimReport {
+    simulate_events_threaded(net, configs, images, dynamics, coalesce, 1)
+}
+
+/// [`simulate`] with per-layer parallelism: the deterministic core's
+/// per-group feasibility scans (`det_run_len`) are chunked over up to
+/// `threads` scoped workers, so a *single* network's simulation spreads
+/// over idle cores.  Bit-identical to [`simulate`] at every thread
+/// count — the run length is the first failing group, and the minimum
+/// over chunk-local first failures is exactly the serial answer.
+/// `threads <= 1` is the serial core; stochastic dynamics never coalesce
+/// and therefore never engage the workers.
+pub fn simulate_par(
+    net: &Network,
+    configs: &[StageConfig],
+    images: usize,
+    dynamics: SparsityDynamics,
+    threads: usize,
+) -> SimReport {
+    simulate_events_threaded(net, configs, images, dynamics, true, threads)
+}
+
+fn simulate_events_threaded(
+    net: &Network,
+    configs: &[StageConfig],
+    images: usize,
+    dynamics: SparsityDynamics,
+    coalesce: bool,
+    threads: usize,
+) -> SimReport {
     let compute: Vec<LayerDesc> = net.compute_layers().into_iter().cloned().collect();
     assert_eq!(compute.len(), configs.len());
     assert!(images > 0);
@@ -540,7 +586,7 @@ pub fn simulate_events(
                         None => {
                             let dt = det_t[i];
                             let k = if coalesce {
-                                det_run_len(&stages, i, n, now, dt)
+                                det_run_len(&stages, i, n, now, dt, threads)
                             } else {
                                 1
                             };
@@ -607,6 +653,14 @@ pub fn simulate_events(
     finish_report(&stages, &mut image_done, images, deadlocked)
 }
 
+/// Serial prefix scanned before any workers spawn in [`det_run_len`]:
+/// early failures (the common case when a neighbour is nearly full or
+/// nearly drained) stay as cheap as the fully serial core.
+const DET_PAR_PREFIX: u64 = 1024;
+/// Minimum tail length worth spawning workers for — below this the
+/// spawn overhead dwarfs the scan.
+const DET_PAR_MIN_TAIL: u64 = 2048;
+
 /// How many back-to-back groups stage `i` can provably run starting at
 /// `t` (deterministic dynamics).  Pessimistic: neighbours are assumed to
 /// make no progress beyond their in-flight runs, so a positive answer is
@@ -614,7 +668,13 @@ pub fn simulate_events(
 /// these times.  Capped at the image boundary so a run never crosses an
 /// image (keeps the input predicate's `img` fixed and sink stamping at
 /// run ends).
-fn det_run_len(stages: &[Stage], i: usize, n: usize, t: u64, dt: u64) -> u64 {
+///
+/// With `threads > 1` the per-group scan is chunked over scoped workers.
+/// The predicate below is pure — it reads only neighbour runs frozen at
+/// their pre-round schedules — and the answer is the index of the first
+/// failing group, so the minimum over chunk-local first failures equals
+/// the serial first failure bit-for-bit.
+fn det_run_len(stages: &[Stage], i: usize, n: usize, t: u64, dt: u64, threads: usize) -> u64 {
     let s = &stages[i];
     let g_in = s.next_group % s.groups;
     let cap = s.groups - g_in;
@@ -634,8 +694,8 @@ fn det_run_len(stages: &[Stage], i: usize, n: usize, t: u64, dt: u64) -> u64 {
     if quick_in && quick_sp {
         return cap;
     }
-    let mut k = 1u64;
-    for j in 1..cap {
+    // feasibility of the group `j` positions into the prospective run
+    let ok_at = |j: u64| -> bool {
         let tau = t + j * dt;
         let ok_in = i == 0 || {
             let up = &stages[i - 1];
@@ -656,13 +716,56 @@ fn det_run_len(stages: &[Stage], i: usize, n: usize, t: u64, dt: u64) -> u64 {
             };
             space_ok_at(s, down, done0 + j, down_next)
         };
-        if ok_in && ok_sp {
-            k = j + 1;
-        } else {
-            break;
+        ok_in && ok_sp
+    };
+    // the run length is the first failing j (all of 1..j passed), or cap
+    // when every group clears
+    let prefix_end = cap.min(1 + DET_PAR_PREFIX);
+    for j in 1..prefix_end {
+        if !ok_at(j) {
+            return j;
         }
     }
-    k
+    if prefix_end == cap {
+        return cap;
+    }
+    let tail = cap - prefix_end;
+    if threads <= 1 || tail < DET_PAR_MIN_TAIL {
+        for j in prefix_end..cap {
+            if !ok_at(j) {
+                return j;
+            }
+        }
+        return cap;
+    }
+    // chunked parallel first-failure search over the tail; `fetch_min`
+    // is commutative, so the final minimum is schedule-independent
+    let workers = threads.min(tail.div_ceil(DET_PAR_MIN_TAIL / 2) as usize).max(2);
+    let chunk = tail.div_ceil(workers as u64);
+    let first_fail = AtomicU64::new(u64::MAX);
+    std::thread::scope(|sc| {
+        for w in 0..workers {
+            let (ok_at, first_fail) = (&ok_at, &first_fail);
+            sc.spawn(move || {
+                let lo = prefix_end + w as u64 * chunk;
+                let hi = (lo + chunk).min(cap);
+                for j in lo..hi {
+                    // a failure in an earlier chunk makes this one moot
+                    if j & 511 == 0 && first_fail.load(Ordering::Relaxed) <= lo {
+                        return;
+                    }
+                    if !ok_at(j) {
+                        first_fail.fetch_min(j, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            });
+        }
+    });
+    match first_fail.into_inner() {
+        u64::MAX => cap,
+        j => j,
+    }
 }
 
 /// Wake a starved stage at the exact cycle its upstream's in-flight run
@@ -1153,6 +1256,58 @@ mod tests {
         let coalesced = simulate_events(net, cfgs, images, dyn_, true);
         assert_eq!(scan, event, "event core diverged from scan ({dyn_:?}, {images} images)");
         assert_eq!(scan, coalesced, "coalescing changed the report ({dyn_:?}, {images} images)");
+        for threads in [2usize, 5] {
+            let par = simulate_par(net, cfgs, images, dyn_, threads);
+            assert_eq!(
+                scan, par,
+                "per-layer parallel sim diverged ({threads} threads, {dyn_:?}, {images} images)"
+            );
+        }
+    }
+
+    /// The small differential nets never leave `det_run_len`'s serial
+    /// prefix, so force the chunked worker path with a pipeline whose
+    /// stages have tens of thousands of groups and FIFOs deep enough for
+    /// long (but not whole-image, which would take the quick path) runs.
+    #[test]
+    fn event_core_par_matches_serial_on_long_scans() {
+        let layers = vec![
+            LayerDesc {
+                name: "c0".into(),
+                op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 2, cout: 8, groups: 1 },
+                in_hw: 48,
+                branch: false,
+            },
+            LayerDesc {
+                name: "c1".into(),
+                op: Op::Conv { kernel: 3, stride: 1, pad: 1, cin: 8, cout: 8, groups: 1 },
+                in_hw: 48,
+                branch: false,
+            },
+            LayerDesc {
+                name: "c2".into(),
+                op: Op::Conv { kernel: 1, stride: 1, pad: 0, cin: 8, cout: 4, groups: 1 },
+                in_hw: 48,
+                branch: false,
+            },
+        ];
+        let net = Network { name: "par".into(), input_hw: 48, input_channels: 2, layers };
+        // o_par 1 → 48*48*cout groups per image (≫ DET_PAR_PREFIX +
+        // DET_PAR_MIN_TAIL); mismatched n_mac skews stage rates so
+        // producers race ahead until mid-image FIFO limits bite
+        let designs: Vec<LayerDesign> = [4usize, 1, 2]
+            .iter()
+            .map(|&m| LayerDesign { i_par: 1, o_par: 1, n_mac: m })
+            .collect();
+        let points = uniform_points(&net, 0.35);
+        for fifo in [8192u64, 1024] {
+            let cfgs = stages_from_design(&net, &designs, &points, fifo);
+            let serial = simulate(&net, &cfgs, 2, SparsityDynamics::Deterministic);
+            for threads in [2usize, 3, 8] {
+                let par = simulate_par(&net, &cfgs, 2, SparsityDynamics::Deterministic, threads);
+                assert_eq!(serial, par, "long-scan divergence at {threads} threads, fifo {fifo}");
+            }
+        }
     }
 
     #[test]

@@ -331,3 +331,66 @@ fn fault_tolerance_knobs_cost_nothing_on_a_healthy_run() {
     assert_eq!(armored.stats.retried_evals, 0);
     assert_eq!(armored.stats.reclaimed_stalls, 0);
 }
+
+/// The pipelined twin of the resume tentpole: kill a depth-2 lookahead
+/// search mid-run — with generations in flight past the last observed
+/// one — resume from the checkpoint, and the finished journals are
+/// bit-identical to an uninterrupted depth-2 run on every device.  The
+/// checkpoint records only *reduced* generations; the replay regenerates
+/// the lookahead proposal schedule (same optimizer RNG trace), so no
+/// pipeline state needs to survive the kill.
+#[test]
+fn a_mid_pipeline_checkpoint_resumes_bit_identically() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let ev = StubEvaluator::calibnet(89);
+    let mut base_cfg = chaos_cfg(16, 61, 0, false);
+    base_cfg.pipeline_depth = 2;
+    let baseline = search_sharded(&ev, &net, &rm, &devices, &base_cfg);
+    assert!(baseline.stats.pipelined_generations > 0, "the baseline must pipeline");
+
+    let path = std::env::temp_dir().join("hass_chaos_pipeline_resume_test.json");
+    std::fs::remove_file(&path).ok();
+    let ckpt_path = path.to_str().unwrap().to_string();
+    let mut cfg = base_cfg.clone();
+    cfg.checkpoint = Some(CheckpointSpec { path: ckpt_path.clone(), every: 1 });
+    // cancel once 8 of 16 iterations are reduced — at depth 2, up to two
+    // further generations are in flight at that moment and are discarded
+    let observer = |p: SearchProgress| p.done < 8;
+    let ctrl = SearchControl { observer: Some(&observer), ..Default::default() };
+    let cache = DesignCache::new();
+    let cancelled =
+        search_sharded_with_cache_ctrl(&ev, &net, &rm, &devices, &cfg, &cache, &ctrl);
+    assert!(cancelled.is_none(), "the observer must cancel the run");
+
+    let ck = Checkpoint::load(&ckpt_path).expect("cancellation must leave a checkpoint");
+    assert_eq!(ck.done, 8, "checkpoints land on reduced-generation boundaries only");
+    let rctrl = SearchControl { resume: Some(&ck), ..Default::default() };
+    let cache2 = DesignCache::new();
+    let resumed =
+        search_sharded_with_cache_ctrl(&ev, &net, &rm, &devices, &cfg, &cache2, &rctrl)
+            .expect("resumed run must complete");
+    std::fs::remove_file(&path).ok();
+
+    // replayed lookahead draws count too: the proposal schedule is a pure
+    // function of the depth, so the counter is kill/resume invariant
+    assert_eq!(resumed.stats.lookahead_proposals, baseline.stats.lookahead_proposals);
+    for (a, b) in baseline.per_device.iter().zip(&resumed.per_device) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.result.records.len(), b.result.records.len());
+        for (x, y) in a.result.records.iter().zip(&b.result.records) {
+            assert_eq!(
+                x.objective.to_bits(),
+                y.objective.to_bits(),
+                "{} iter {}: mid-pipeline resume diverged from the uninterrupted run",
+                a.device,
+                x.iter
+            );
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.images_per_sec.to_bits(), y.images_per_sec.to_bits());
+            assert_eq!(x.plan, y.plan);
+        }
+        assert_eq!(a.result.best, b.result.best);
+    }
+}

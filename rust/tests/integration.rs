@@ -911,3 +911,155 @@ fn sharded_laddered_search_is_thread_invariant_and_device_scoped() {
         }
     }
 }
+
+// ===== cross-generation lookahead pipeline ==============================
+
+/// Full per-record journal fingerprint (not just objectives): any drift
+/// in accuracy, throughput, resources or the plan itself fails the
+/// bit-identity assertions below.
+fn journal_bits_of(r: &hass::coordinator::SearchResult) -> Vec<(u64, u64, u64, u64)> {
+    r.records
+        .iter()
+        .map(|x| {
+            (
+                x.objective.to_bits(),
+                x.accuracy.to_bits(),
+                x.images_per_sec.to_bits(),
+                x.dsp,
+            )
+        })
+        .collect()
+}
+
+fn assert_sharded_equal(
+    a: &hass::engine::ShardedSearchResult,
+    b: &hass::engine::ShardedSearchResult,
+    what: &str,
+) {
+    for (x, y) in a.per_device.iter().zip(&b.per_device) {
+        assert_eq!(x.device, y.device);
+        assert_eq!(
+            journal_bits_of(&x.result),
+            journal_bits_of(&y.result),
+            "{}: {what} journal diverged",
+            x.device
+        );
+        for (p, q) in x.result.records.iter().zip(&y.result.records) {
+            assert_eq!(p.plan, q.plan, "{} iter {}: {what} plan diverged", x.device, p.iter);
+        }
+        assert_eq!(x.result.best, y.result.best);
+    }
+}
+
+/// `--pipeline-depth 0` is the classic drained engine: byte-identical
+/// journals to a run that never mentions the flag, and every pipeline
+/// counter stays zero.
+#[test]
+fn pipeline_depth_zero_is_the_drained_engine() {
+    let ev = StubEvaluator::calibnet(64);
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    let base = search_sharded(&ev, &net, &rm, &devices, &sharded_cfg(12, 41, 0));
+    let mut cfg = sharded_cfg(12, 41, 0);
+    cfg.pipeline_depth = 0; // explicit, same as the default
+    let zero = search_sharded(&ev, &net, &rm, &devices, &cfg);
+    assert_sharded_equal(&base, &zero, "depth-0");
+    assert_eq!(zero.stats.pipelined_generations, 0);
+    assert_eq!(zero.stats.lookahead_proposals, 0);
+    assert_eq!(zero.stats.barrier_wait_ns, 0, "depth 0 must not even time a barrier");
+}
+
+/// The net invariant for a fixed depth: thread counts, sync vs async
+/// (with an adversarially slow, out-of-order evaluator) and cold vs warm
+/// caches all journal bit-identically — only the depth itself is
+/// algorithmic.
+#[test]
+fn pipeline_journals_are_execution_invariant_for_fixed_depth() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250(), DeviceBudget::v7_690t()];
+    for depth in [1usize, 2] {
+        let mut ref_cfg = sharded_cfg(12, 43, 0);
+        ref_cfg.pipeline_depth = depth;
+        let reference =
+            search_sharded(&StubEvaluator::calibnet(65), &net, &rm, &devices, &ref_cfg);
+        assert!(
+            reference.stats.pipelined_generations > 0,
+            "depth {depth}: generations never overlapped"
+        );
+        assert!(
+            reference.stats.lookahead_proposals > 0,
+            "depth {depth}: no proposal was drawn ahead of its observations"
+        );
+        // thread counts, sync path
+        for threads in [1usize, 2] {
+            let mut cfg = sharded_cfg(12, 43, threads);
+            cfg.pipeline_depth = depth;
+            let r = search_sharded(&StubEvaluator::calibnet(65), &net, &rm, &devices, &cfg);
+            assert_sharded_equal(&reference, &r, "threaded pipelined");
+            assert_eq!(r.stats.pipelined_generations, reference.stats.pipelined_generations);
+            assert_eq!(r.stats.lookahead_proposals, reference.stats.lookahead_proposals);
+        }
+        // async completion queue, out-of-order slow evaluator
+        for threads in [0usize, 1] {
+            let mut cfg = sharded_cfg(12, 43, threads);
+            cfg.pipeline_depth = depth;
+            cfg.engine.async_eval = true;
+            let r =
+                search_sharded(&SlowOooEvaluator::calibnet(65), &net, &rm, &devices, &cfg);
+            assert_sharded_equal(&reference, &r, "async pipelined");
+            assert!(r.stats.ooo_completions > 0, "the evaluator completes in reverse");
+        }
+        // cold vs warm shared cache
+        let cache = DesignCache::new();
+        let cold = search_sharded_with_cache(
+            &StubEvaluator::calibnet(65),
+            &net,
+            &rm,
+            &devices,
+            &ref_cfg,
+            &cache,
+        );
+        let warm = search_sharded_with_cache(
+            &StubEvaluator::calibnet(65),
+            &net,
+            &rm,
+            &devices,
+            &ref_cfg,
+            &cache,
+        );
+        assert!(warm.stats.cache_hits > cold.stats.cache_hits, "second run must hit");
+        assert_sharded_equal(&reference, &cold, "cold-cache pipelined");
+        assert_sharded_equal(&reference, &warm, "warm-cache pipelined");
+    }
+}
+
+/// Depth is algorithmic, not cosmetic: once the TPE model engages, a
+/// depth-2 schedule proposes from older observations than the drained
+/// schedule and the journals genuinely diverge.  (At depth 0 they could
+/// not — that is the previous test.)
+#[test]
+fn pipeline_depth_changes_the_search_trajectory_once_the_model_engages() {
+    let net = networks::calibnet();
+    let rm = ResourceModel::default();
+    let devices = [DeviceBudget::u250()];
+    // 5 generations x batch 4: the drained run crosses TPE's startup
+    // threshold (10 observations) at generation 3's proposal time, the
+    // depth-2 run only at generation 4's — the schedules must differ
+    let drained = search_sharded(
+        &StubEvaluator::calibnet(66),
+        &net,
+        &rm,
+        &devices,
+        &sharded_cfg(20, 47, 0),
+    );
+    let mut cfg = sharded_cfg(20, 47, 0);
+    cfg.pipeline_depth = 2;
+    let piped =
+        search_sharded(&StubEvaluator::calibnet(66), &net, &rm, &devices, &cfg);
+    let a = journal_bits_of(&drained.per_device[0].result);
+    let b = journal_bits_of(&piped.per_device[0].result);
+    assert_eq!(a.len(), b.len());
+    assert_ne!(a, b, "a positive lookahead depth must change the proposal schedule");
+}

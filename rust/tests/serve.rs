@@ -299,6 +299,76 @@ fn price_and_save_cache_use_the_resident_stores() {
     shutdown_and_join(addr, handle);
 }
 
+/// Daemon-side resume (the PR 8 follow-on): a pipelined, checkpointed
+/// daemon search leaves a mid-run checkpoint behind; a later `search`
+/// request carrying `resume` must continue it to a journal bit-identical
+/// to the uninterrupted run, a fingerprint mismatch must be answered as
+/// a request-scoped JSON-RPC error (the connection and the daemon
+/// survive), and `stats` must surface the cumulative fault-tolerance and
+/// pipeline counters.
+#[test]
+fn daemon_resume_continues_a_checkpoint_and_mismatches_are_request_errors() {
+    let (_server, addr, handle) = start_server(1);
+    let path = std::env::temp_dir().join("hass_serve_resume_param_test.json");
+    std::fs::remove_file(&path).ok();
+    let ck_json = Json::Str(path.to_string_lossy().into_owned()).to_string();
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    // the uninterrupted reference: 12 iters at depth 1, checkpointing
+    // every generation — the last mid-run write sits at done = 8
+    let req = format!(
+        r#"{{"id": 1, "method": "search", "params": {{"network": "calibnet", "device": "u250", "iters": 12, "seed": 9, "batch": 4, "quant": 12, "pipeline_depth": 1, "checkpoint": {ck_json}}}}}"#,
+    );
+    send_line(&stream, &req);
+    let (_, terminal) = read_until_result(&mut reader, 1.0);
+    assert!(terminal.get("result").is_some(), "pipelined search failed: {terminal:?}");
+    let want = journal_of(&terminal);
+    let ck = Checkpoint::load(path.to_str().unwrap()).expect("daemon checkpoint loads");
+    assert_eq!(ck.done, 8, "last mid-run checkpoint must sit at the done=8 boundary");
+    // a resume under a different seed is a different search: the request
+    // must be refused with an error line, not take the daemon down
+    let bad = format!(
+        r#"{{"id": 2, "method": "search", "params": {{"network": "calibnet", "device": "u250", "iters": 12, "seed": 10, "batch": 4, "quant": 12, "pipeline_depth": 1, "resume": {ck_json}}}}}"#,
+    );
+    send_line(&stream, &bad);
+    let (_, refused) = read_until_result(&mut reader, 2.0);
+    let err = refused.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+    assert!(
+        err.contains("different search"),
+        "fingerprint mismatch must be a request-scoped error: {refused:?}"
+    );
+    // the matching resume continues from done = 8 and must journal
+    // bit-identically to the uninterrupted run (warm cache and all)
+    let good = format!(
+        r#"{{"id": 3, "method": "search", "params": {{"network": "calibnet", "device": "u250", "iters": 12, "seed": 9, "batch": 4, "quant": 12, "pipeline_depth": 1, "resume": {ck_json}}}}}"#,
+    );
+    send_line(&stream, &good);
+    let (_, resumed) = read_until_result(&mut reader, 3.0);
+    assert!(resumed.get("result").is_some(), "resumed search failed: {resumed:?}");
+    assert_eq!(
+        journal_of(&resumed),
+        want,
+        "daemon-side resume diverged from the uninterrupted run"
+    );
+    std::fs::remove_file(&path).ok();
+    // stats: cumulative fault-tolerance + pipeline counters are surfaced
+    send_line(&stream, r#"{"id": 4, "method": "stats"}"#);
+    let v = read_json(&mut reader);
+    let stats = v.get("result").expect("stats result").clone();
+    assert_eq!(stats.get("retried_evals").and_then(|x| x.as_usize()), Some(0));
+    assert_eq!(stats.get("reclaimed_stalls").and_then(|x| x.as_usize()), Some(0));
+    assert!(
+        stats.get("pipelined_generations").and_then(|x| x.as_usize()).unwrap() >= 4,
+        "both depth-1 runs must count their overlapped generations: {stats:?}"
+    );
+    assert!(
+        stats.get("lookahead_proposals").and_then(|x| x.as_usize()).unwrap() > 0,
+        "lookahead proposals must accumulate across searches: {stats:?}"
+    );
+    drop(stream);
+    shutdown_and_join(addr, handle);
+}
+
 // ===== chaos: injected daemon faults ====================================
 
 /// A search that panics inside the worker (injected at the
