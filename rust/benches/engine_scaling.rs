@@ -60,7 +60,7 @@ impl CandidateEvaluator for SlowEvaluator {
     }
 
     fn eval(&self, plan: &PruningPlan) -> EvalPoint {
-        let _serialized = self.lock.lock().unwrap();
+        let _serialized = hass::util::lock_clean(&self.lock);
         std::thread::sleep(self.delay);
         self.inner.eval(plan)
     }

@@ -1,0 +1,360 @@
+//! Hand-rolled token scanner for [`hass lint`](crate::analysis).
+//!
+//! Not a parser — a lossy lexer that is exactly strong enough for the
+//! rules in [`super::rules`]: it distinguishes identifiers, punctuation,
+//! numbers, string/char literals and lifetimes, tracks line numbers, and
+//! **never** yields tokens from inside comments or literals (which is
+//! what makes the rules immune to the classic grep false-positive of a
+//! pattern appearing in a doc comment or an error message).  Along the
+//! way it collects the two comment-borne side channels the rules consume:
+//! `lint: allow(<rule>, ...)` escape hatches and `relaxed:` atomics
+//! classifications.
+//!
+//! The scanner understands everything that could otherwise desynchronize
+//! a token stream taken from real Rust source: line (`//`) and *nested*
+//! block (`/* /* */ */`) comments, raw strings `r#"..."#` with any hash
+//! count, raw identifiers `r#ident`, byte strings/chars, escaped
+//! characters (including `\`-newline line continuations inside string
+//! literals, which shift line numbers), and the `'a` lifetime vs `'a'`
+//! char-literal ambiguity.
+//!
+//! Like everything under `src/analysis/`, this module is itself subject
+//! to the panic-safety rule: the cursor is driven entirely through
+//! `get`-style lookups, so malformed input can mislex but never panic.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Token classes — only as fine-grained as the rules need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// identifier or keyword (rules that care check the text)
+    Ident,
+    /// one punctuation character
+    Punct,
+    /// numeric literal (int or float, any base/suffix)
+    Num,
+    /// string literal of any flavor (text is dropped)
+    Str,
+    /// char or byte-char literal (text is dropped)
+    Char,
+    /// lifetime such as `'a` (text keeps the quote)
+    Lifetime,
+}
+
+/// One lexed token with the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// The lexer's full output for one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// line -> rule names allowed by a `lint: allow(...)` comment there
+    pub allows: BTreeMap<u32, BTreeSet<String>>,
+    /// lines whose comments carry a `relaxed:` atomics classification
+    pub annotated: BTreeSet<u32>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Record a comment's side channels: `relaxed:` marks the line annotated
+/// (for the atomics rule), `lint: allow(a, b)` registers rule names.
+fn note_comment(text: &str, at_line: u32, out: &mut Lexed) {
+    if text.contains("relaxed:") {
+        out.annotated.insert(at_line);
+    }
+    const DIRECTIVE: &str = "lint: allow(";
+    if let Some(idx) = text.find(DIRECTIVE) {
+        let rest = text.get(idx + DIRECTIVE.len()..).unwrap_or("");
+        if let Some(close) = rest.find(')') {
+            for rule in rest.get(..close).unwrap_or("").split(',') {
+                let rule = rule.trim();
+                if !rule.is_empty() {
+                    out.allows.entry(at_line).or_default().insert(rule.to_string());
+                }
+            }
+        }
+    }
+}
+
+/// Lex one file.  Never fails: unexpected input degrades to stray
+/// `Punct` tokens, which no rule pattern matches.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let at = |k: usize| -> Option<char> { cs.get(k).copied() };
+    let text_of = |s: usize, e: usize| -> String {
+        cs.get(s..e).map(|seg| seg.iter().collect()).unwrap_or_default()
+    };
+
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    while i < n {
+        let Some(c) = at(i) else { break };
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- line comment -------------------------------------------
+        if c == '/' && at(i + 1) == Some('/') {
+            let start = i;
+            while i < n && at(i) != Some('\n') {
+                i += 1;
+            }
+            note_comment(&text_of(start, i), line, &mut out);
+            continue;
+        }
+        // ---- block comment (nested) ---------------------------------
+        if c == '/' && at(i + 1) == Some('*') {
+            let start = i;
+            let start_line = line;
+            let mut depth = 0i32;
+            while i < n {
+                if at(i) == Some('/') && at(i + 1) == Some('*') {
+                    depth += 1;
+                    i += 2;
+                } else if at(i) == Some('*') && at(i + 1) == Some('/') {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if at(i) == Some('\n') {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            note_comment(&text_of(start, i), start_line, &mut out);
+            continue;
+        }
+        // ---- raw strings, raw idents, byte strings/chars ------------
+        if c == 'r' || c == 'b' {
+            let prefix_len = if c == 'b' && at(i + 1) == Some('r') { 2 } else { 1 };
+            let has_r = c == 'r' || prefix_len == 2;
+            let mut k = i + prefix_len;
+            let kc = at(k);
+            if kc == Some('"') || (has_r && kc == Some('#')) {
+                if has_r {
+                    let mut hashes = 0usize;
+                    while at(k) == Some('#') {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if at(k) == Some('"') {
+                        // raw (byte) string: runs to `"` + the same
+                        // number of hashes; no escapes exist inside
+                        k += 1;
+                        let start_line = line;
+                        while k < n {
+                            if at(k) == Some('\n') {
+                                line += 1;
+                            }
+                            if at(k) == Some('"')
+                                && (0..hashes).all(|h| at(k + 1 + h) == Some('#'))
+                            {
+                                k += 1 + hashes;
+                                break;
+                            }
+                            k += 1;
+                        }
+                        out.toks.push(Tok {
+                            kind: TokKind::Str,
+                            text: String::new(),
+                            line: start_line,
+                        });
+                        i = k;
+                        continue;
+                    } else if hashes > 0 && at(k).is_some_and(is_ident_start) {
+                        // raw identifier r#ident: token text drops `r#`
+                        let s = k;
+                        while at(k).is_some_and(is_ident_cont) {
+                            k += 1;
+                        }
+                        out.toks.push(Tok {
+                            kind: TokKind::Ident,
+                            text: text_of(s, k),
+                            line,
+                        });
+                        i = k;
+                        continue;
+                    }
+                    // neither: plain identifier starting with r/b below
+                } else if at(k) == Some('"') {
+                    // byte string b"...": same escape rules as a normal
+                    // string (incl. `\`-newline line continuations)
+                    let start_line = line;
+                    i = k + 1;
+                    while i < n {
+                        if at(i) == Some('\\') {
+                            if at(i + 1) == Some('\n') {
+                                line += 1;
+                            }
+                            i += 2;
+                            continue;
+                        }
+                        if at(i) == Some('\n') {
+                            line += 1;
+                        }
+                        if at(i) == Some('"') {
+                            i += 1;
+                            break;
+                        }
+                        i += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: String::new(),
+                        line: start_line,
+                    });
+                    continue;
+                }
+            }
+            if c == 'b' && at(i + 1) == Some('\'') {
+                // byte char b'x' / b'\n'
+                let start_line = line;
+                i += 2;
+                if at(i) == Some('\\') {
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                while i < n && at(i) != Some('\'') {
+                    i += 1;
+                }
+                i += 1;
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: String::new(),
+                    line: start_line,
+                });
+                continue;
+            }
+            // plain identifier that happens to start with r/b
+            let s = i;
+            while at(i).is_some_and(is_ident_cont) {
+                i += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: text_of(s, i), line });
+            continue;
+        }
+        // ---- string literal -----------------------------------------
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if at(i) == Some('\\') {
+                    // an escaped newline continues the literal on the
+                    // next line — the line counter must still advance
+                    if at(i + 1) == Some('\n') {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if at(i) == Some('\n') {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if at(i) == Some('"') {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+            continue;
+        }
+        // ---- char literal vs lifetime -------------------------------
+        if c == '\'' {
+            if at(i + 1) == Some('\\') {
+                // escaped char literal '\n', '\u{1F600}', ...
+                let mut j = i + 3;
+                while j < n && at(j) != Some('\'') {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            if at(i + 1).is_some_and(is_ident_start) && at(i + 2) == Some('\'') {
+                // 'x' — a closing quote right after one ident char
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            if at(i + 1).is_some_and(is_ident_start) {
+                // 'name with no closing quote: a lifetime
+                let s = i;
+                let mut j = i + 1;
+                while at(j).is_some_and(is_ident_cont) {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Lifetime, text: text_of(s, j), line });
+                i = j;
+                continue;
+            }
+            // anything else ('0', '.', a stray quote) degrades to punct
+            // tokens — harmless, since no rule pattern contains them
+            out.toks.push(Tok { kind: TokKind::Punct, text: "'".to_string(), line });
+            i += 1;
+            continue;
+        }
+        // ---- number -------------------------------------------------
+        if c.is_ascii_digit() {
+            let s = i;
+            let mut seen_dot = false;
+            while let Some(ch) = at(i) {
+                if is_ident_cont(ch) {
+                    i += 1;
+                } else if ch == '.' && at(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    seen_dot = true;
+                    i += 1;
+                } else if (ch == '+' || ch == '-')
+                    && i > s
+                    && matches!(at(i.wrapping_sub(1)), Some('e') | Some('E'))
+                    && seen_dot
+                {
+                    // exponent sign of a float like 1.5e-3
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: text_of(s, i), line });
+            continue;
+        }
+        // ---- identifier / keyword -----------------------------------
+        if is_ident_start(c) {
+            let s = i;
+            while at(i).is_some_and(is_ident_cont) {
+                i += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: text_of(s, i), line });
+            continue;
+        }
+        // ---- single punctuation char --------------------------------
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}

@@ -1,0 +1,475 @@
+//! The invariant rules behind [`hass lint`](crate::analysis).
+//!
+//! Each rule is a short token-sequence pattern over [`super::lexer`]
+//! output, scoped to the modules whose contracts it protects (see the
+//! scope constants below and the rule reference in the module docs).
+//! Rules run per file; a file's *module key* — the path from its last
+//! `src/`, `tests/` or `benches/` component — decides which scopes
+//! apply, so results are identical whether the linter is invoked from
+//! the repo root, from `rust/`, or on absolute paths.
+//!
+//! Suppression has exactly two forms, both deliberate and auditable:
+//!
+//! * an inline `// lint: allow(<rule>)` comment on the offending line
+//!   or up to two lines above it (so a justification comment fits), and
+//! * [`DEFAULT_ALLOWLIST`] — module-keyed waivers with a recorded
+//!   reason, for contracts that hold module-wide.
+//!
+//! Suppressed findings are still produced (with
+//! [`Diagnostic::suppressed`] set) so the CLI can report how many
+//! waivers are live; the self-hosting test in `tests/lint.rs` asserts
+//! that count stays small and intentional.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, Lexed, Tok, TokKind};
+
+/// Rust keywords that may legitimately precede `[` without forming an
+/// index expression (`let [a, b] = ..`, `for x in ..`, `match v[..]`
+/// arms are *not* in this set — only non-expression positions are).
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
+    "pub", "ref", "return", "static", "struct", "trait", "type", "unsafe", "use", "where",
+    "while", "yield",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const ENV_READS: &[&str] = &["var", "var_os", "vars", "vars_os"];
+
+/// Journaled/deterministic paths: same inputs must replay to the same
+/// journal bytes, so no hashed iteration order or wall-clock reads.
+const DETERMINISM_SCOPE: &[&str] =
+    &["src/engine/", "src/dse/", "src/optim/", "src/simulator/"];
+/// CLI/daemon-reachable paths under the PR 7 panic-free contract.
+const PANIC_SCOPE: &[&str] = &[
+    "src/server/",
+    "src/engine/shard.rs",
+    "src/main.rs",
+    "src/util/cli.rs",
+    "src/analysis/",
+];
+/// Detached threads are banned everywhere in the library crate...
+const THREAD_SCOPE: &[&str] = &["src/"];
+/// ...except util/, which owns the rare justified detached helpers.
+const THREAD_EXCLUDE: &[&str] = &["src/util/"];
+/// Every `Ordering::Relaxed` in the crate must be classified.
+const ATOMICS_SCOPE: &[&str] = &["src/"];
+
+/// Module-keyed waivers: `(rule, module-key prefix, reason)`.  The
+/// reason is part of the record — a waiver without one does not land.
+pub const DEFAULT_ALLOWLIST: &[(&str, &str, &str)] = &[(
+    "index-panic",
+    "src/engine/shard.rs",
+    "slot-addressed indexing: indices come from enumerate() over the same \
+     index-addressed slot vectors (PR 5 contract)",
+)];
+
+/// One finding.  `suppressed` findings were matched but waived by an
+/// inline `lint: allow` or the [`DEFAULT_ALLOWLIST`]; the CLI counts
+/// them instead of printing them.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    pub suppressed: bool,
+}
+
+/// Path portion from the last `src/`, `tests/` or `benches/` component —
+/// the key rules and allowlist entries are scoped by.
+pub fn module_key(path: &str) -> String {
+    let p = path.replace('\\', "/");
+    for marker in ["/src/", "/tests/", "/benches/"] {
+        if let Some(idx) = p.rfind(marker) {
+            return p.get(idx + 1..).unwrap_or_default().to_string();
+        }
+    }
+    for marker in ["src/", "tests/", "benches/"] {
+        if p.starts_with(marker) {
+            return p;
+        }
+    }
+    p
+}
+
+fn in_scope(module: &str, prefixes: &[&str], excludes: &[&str]) -> bool {
+    prefixes.iter().any(|p| module.starts_with(p))
+        && !excludes.iter().any(|e| module.starts_with(e))
+}
+
+/// Token-index ranges covered by `#[test]` / `#[cfg(test)]` items or by
+/// `use ...;` declarations — every rule except lock-discipline skips
+/// those (tests may exercise panics; imports name types they don't use).
+fn mark_skipped(toks: &[Tok]) -> Vec<bool> {
+    let n = toks.len();
+    let mut skip = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let Some(t) = toks.get(i) else { break };
+        // `use` at statement position starts a use-declaration
+        if t.kind == TokKind::Ident && t.text == "use" {
+            let ok = match i.checked_sub(1).and_then(|p| toks.get(p)) {
+                None => true,
+                Some(prev) => {
+                    (prev.kind == TokKind::Punct
+                        && matches!(prev.text.as_str(), ";" | "{" | "}" | "]"))
+                        || (prev.kind == TokKind::Ident && prev.text == "pub")
+                }
+            };
+            if ok {
+                let mut j = i;
+                while let Some(tj) = toks.get(j) {
+                    let done = tj.kind == TokKind::Punct && tj.text == ";";
+                    if let Some(s) = skip.get_mut(j) {
+                        *s = true;
+                    }
+                    j += 1;
+                    if done {
+                        break;
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        // `#[...]` attribute: collect its identifiers to classify it
+        if t.kind == TokKind::Punct
+            && t.text == "#"
+            && toks.get(i + 1).is_some_and(|a| a.text == "[")
+        {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut names: Vec<&str> = Vec::new();
+            while let Some(tk) = toks.get(j) {
+                if tk.kind == TokKind::Punct && tk.text == "[" {
+                    depth += 1;
+                } else if tk.kind == TokKind::Punct && tk.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth >= 1 && tk.kind == TokKind::Ident {
+                    names.push(tk.text.as_str());
+                }
+                j += 1;
+            }
+            let is_test_attr = matches!(names.as_slice(), ["test"])
+                || matches!(names.as_slice(), ["cfg", "test", ..])
+                || (matches!(names.as_slice(), ["cfg", "all", ..])
+                    && names.iter().skip(2).any(|nm| *nm == "test"));
+            if is_test_attr {
+                // further attributes stacked on the same item
+                let mut k = j + 1;
+                while toks.get(k).is_some_and(|a| a.kind == TokKind::Punct && a.text == "#")
+                    && toks.get(k + 1).is_some_and(|b| b.text == "[")
+                {
+                    let mut d2 = 0i32;
+                    while let Some(tk) = toks.get(k) {
+                        if tk.text == "[" {
+                            d2 += 1;
+                        } else if tk.text == "]" {
+                            d2 -= 1;
+                            if d2 == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                // the item itself: to the matching `}` of its first
+                // brace, or a `;` at brace depth 0
+                let mut bd = 0i32;
+                let mut end = k;
+                while let Some(tk) = toks.get(end) {
+                    if tk.kind == TokKind::Punct {
+                        if tk.text == "{" {
+                            bd += 1;
+                        } else if tk.text == "}" {
+                            bd -= 1;
+                            if bd == 0 {
+                                break;
+                            }
+                        } else if tk.text == ";" && bd == 0 {
+                            break;
+                        }
+                    }
+                    end += 1;
+                }
+                for s in skip.iter_mut().take((end + 1).min(n)).skip(i) {
+                    *s = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    skip
+}
+
+/// Per-file rule state: dedup set + accumulated findings.
+struct Sink<'a> {
+    path: &'a str,
+    module: &'a str,
+    lexed: &'a Lexed,
+    seen: BTreeSet<(u32, &'static str)>,
+    diags: Vec<Diagnostic>,
+}
+
+impl Sink<'_> {
+    /// An inline `lint: allow(rule)` on any of `lines` or up to two
+    /// lines above one (room for a justification comment) waives it.
+    fn allowed(&self, rule: &str, lines: &[u32]) -> bool {
+        lines.iter().any(|&ln| {
+            (0..=2u32).any(|d| {
+                ln.checked_sub(d)
+                    .and_then(|probe| self.lexed.allows.get(&probe))
+                    .is_some_and(|set| set.contains(rule))
+            })
+        })
+    }
+
+    fn module_allowed(&self, rule: &str) -> bool {
+        DEFAULT_ALLOWLIST
+            .iter()
+            .any(|(r, pfx, _)| *r == rule && self.module.starts_with(pfx))
+    }
+
+    /// Record a finding, deduplicating on `(line, rule)`.
+    fn push(&mut self, rule: &'static str, line: u32, message: String, lines: &[u32]) {
+        if !self.seen.insert((line, rule)) {
+            return;
+        }
+        let one = [line];
+        let lines = if lines.is_empty() { one.as_slice() } else { lines };
+        let suppressed = self.allowed(rule, lines) || self.module_allowed(rule);
+        self.diags.push(Diagnostic {
+            file: self.path.to_string(),
+            line,
+            rule,
+            message,
+            suppressed,
+        });
+    }
+}
+
+/// `ident :: <seg>` — the path segment right after a `::`, if any.
+fn path_seg(toks: &[Tok], j: usize) -> Option<&str> {
+    let a = toks.get(j + 1)?;
+    let b = toks.get(j + 2)?;
+    let c = toks.get(j + 3)?;
+    (a.text == ":" && b.text == ":" && c.kind == TokKind::Ident).then_some(c.text.as_str())
+}
+
+/// Lint one file's source.  `path` is only used for scoping (via
+/// [`module_key`]) and for the `file` field of diagnostics; the source
+/// itself is passed in so tests can lint fixture strings directly.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let module = module_key(path);
+    let lexed = lex(src);
+    let skip = mark_skipped(&lexed.toks);
+    let toks = &lexed.toks;
+
+    let det = in_scope(&module, DETERMINISM_SCOPE, &[]);
+    let pan = in_scope(&module, PANIC_SCOPE, &[]);
+    let thr = in_scope(&module, THREAD_SCOPE, THREAD_EXCLUDE);
+    let atom = in_scope(&module, ATOMICS_SCOPE, &[]);
+
+    let mut sink =
+        Sink { path, module: &module, lexed: &lexed, seen: BTreeSet::new(), diags: Vec::new() };
+
+    for (j, t) in toks.iter().enumerate() {
+        let tests_skipped = skip.get(j).copied().unwrap_or(false);
+
+        // --- lock-discipline: applies everywhere, even inside tests ---
+        if t.kind == TokKind::Ident && matches!(t.text.as_str(), "lock" | "read" | "write") {
+            let prev_dot =
+                j.checked_sub(1).and_then(|p| toks.get(p)).is_some_and(|p| p.text == ".");
+            let d2 = toks.get(j + 4);
+            if prev_dot
+                && toks.get(j + 1).is_some_and(|x| x.text == "(")
+                && toks.get(j + 2).is_some_and(|x| x.text == ")")
+                && toks.get(j + 3).is_some_and(|x| x.text == ".")
+                && d2.is_some_and(|x| {
+                    x.kind == TokKind::Ident && matches!(x.text.as_str(), "unwrap" | "expect")
+                })
+            {
+                let call = d2.map(|x| x.text.as_str()).unwrap_or("unwrap");
+                let dl = d2.map(|x| x.line).unwrap_or(t.line);
+                sink.push(
+                    "lock-discipline",
+                    t.line,
+                    format!(
+                        ".{}().{}() panics on a poisoned lock; recover with \
+                         util::lock_clean (or into_inner)",
+                        t.text, call
+                    ),
+                    &[t.line, dl],
+                );
+            }
+        }
+        if tests_skipped {
+            continue;
+        }
+
+        // --- determinism -------------------------------------------------
+        if det && t.kind == TokKind::Ident {
+            match t.text.as_str() {
+                "HashMap" | "HashSet" => sink.push(
+                    "determinism",
+                    t.line,
+                    format!(
+                        "{} in a journaled path: iteration order is nondeterministic; \
+                         use BTreeMap/BTreeSet or allow with a why-deterministic \
+                         justification",
+                        t.text
+                    ),
+                    &[],
+                ),
+                "Instant" => sink.push(
+                    "determinism",
+                    t.line,
+                    "wall-clock time in a journaled path (Instant)".to_string(),
+                    &[],
+                ),
+                "SystemTime" | "UNIX_EPOCH" => sink.push(
+                    "determinism",
+                    t.line,
+                    format!("wall-clock time in a journaled path ({})", t.text),
+                    &[],
+                ),
+                "ThreadId" => sink.push(
+                    "determinism",
+                    t.line,
+                    "thread identity in a journaled path".to_string(),
+                    &[],
+                ),
+                "thread" => {
+                    if path_seg(toks, j) == Some("current") {
+                        sink.push(
+                            "determinism",
+                            t.line,
+                            "thread identity in a journaled path".to_string(),
+                            &[],
+                        );
+                    }
+                }
+                "env" => {
+                    if toks.get(j + 1).is_some_and(|a| a.text == "!") {
+                        sink.push(
+                            "determinism",
+                            t.line,
+                            "env! read in a journaled path".to_string(),
+                            &[],
+                        );
+                    } else if let Some(seg) = path_seg(toks, j) {
+                        if ENV_READS.contains(&seg) {
+                            sink.push(
+                                "determinism",
+                                t.line,
+                                format!("environment read (env::{seg}) in a journaled path"),
+                                &[],
+                            );
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // --- panic-safety ------------------------------------------------
+        if pan && t.kind == TokKind::Ident {
+            if matches!(t.text.as_str(), "unwrap" | "expect" | "unwrap_err" | "expect_err") {
+                let prev_dot =
+                    j.checked_sub(1).and_then(|p| toks.get(p)).is_some_and(|p| p.text == ".");
+                if prev_dot && toks.get(j + 1).is_some_and(|a| a.text == "(") {
+                    // `.lock().unwrap()` is lock-discipline's finding
+                    let is_lock = j >= 4
+                        && toks.get(j - 2).is_some_and(|x| x.text == ")")
+                        && toks.get(j - 3).is_some_and(|x| x.text == "(")
+                        && toks.get(j - 4).is_some_and(|x| {
+                            x.kind == TokKind::Ident
+                                && matches!(x.text.as_str(), "lock" | "read" | "write")
+                        });
+                    if !is_lock {
+                        sink.push(
+                            "panic-safety",
+                            t.line,
+                            format!(
+                                ".{}() on a CLI/daemon-reachable path (the PR 7 \
+                                 panic-free contract); return an error instead",
+                                t.text
+                            ),
+                            &[],
+                        );
+                    }
+                }
+            } else if PANIC_MACROS.contains(&t.text.as_str())
+                && toks.get(j + 1).is_some_and(|a| a.text == "!")
+            {
+                sink.push(
+                    "panic-safety",
+                    t.line,
+                    format!("{}! on a CLI/daemon-reachable path; return an error instead", t.text),
+                    &[],
+                );
+            }
+        }
+
+        // --- index-panic -------------------------------------------------
+        if pan && t.kind == TokKind::Punct && t.text == "[" {
+            let indexable = j.checked_sub(1).and_then(|p| toks.get(p)).is_some_and(|p| {
+                (p.kind == TokKind::Ident && !KEYWORDS.contains(&p.text.as_str()))
+                    || (p.kind == TokKind::Punct && matches!(p.text.as_str(), ")" | "]"))
+            });
+            if indexable {
+                sink.push(
+                    "index-panic",
+                    t.line,
+                    "indexing/slicing can panic on a CLI/daemon-reachable path; \
+                     use .get()/.get_mut() or an iterator"
+                        .to_string(),
+                    &[],
+                );
+            }
+        }
+
+        // --- thread-spawn ------------------------------------------------
+        if thr
+            && t.kind == TokKind::Ident
+            && t.text == "thread"
+            && path_seg(toks, j) == Some("spawn")
+        {
+            sink.push(
+                "thread-spawn",
+                t.line,
+                "detached thread::spawn outside util/: use std::thread::scope \
+                 so joins and panics are structured"
+                    .to_string(),
+                &[],
+            );
+        }
+
+        // --- atomics-relaxed ---------------------------------------------
+        if atom && t.kind == TokKind::Ident && t.text == "Relaxed" {
+            let noted = (0..=2u32).any(|d| {
+                t.line.checked_sub(d).is_some_and(|l| lexed.annotated.contains(&l))
+            });
+            if !noted {
+                sink.push(
+                    "atomics-relaxed",
+                    t.line,
+                    "Ordering::Relaxed without a `relaxed:` classification comment: \
+                     stats counters annotate why; control atomics (shutdown/cancel/\
+                     admission) must use Acquire/Release"
+                        .to_string(),
+                    &[],
+                );
+            }
+        }
+    }
+    sink.diags
+}

@@ -46,7 +46,7 @@
 //! [`crate::engine::DesignCache`] extends the same keying into a
 //! lock-striped cross-candidate / cross-generation / cross-shard store.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::arch::{LayerDesc, Network};
@@ -403,7 +403,7 @@ pub fn build_frontiers(
 ) -> Vec<Arc<LayerFrontier>> {
     let compute = net.compute_layers();
     assert_eq!(compute.len(), points.len());
-    let mut memo: HashMap<(u64, u64, u64), Arc<LayerFrontier>> = HashMap::new();
+    let mut memo: BTreeMap<(u64, u64, u64), Arc<LayerFrontier>> = BTreeMap::new();
     compute
         .iter()
         .zip(points)

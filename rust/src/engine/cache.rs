@@ -118,7 +118,7 @@
 //! snapshot union their work instead of the last writer discarding the
 //! first's.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -129,7 +129,7 @@ use crate::hardware::device::DeviceBudget;
 use crate::hardware::resources::{ResourceModel, Resources};
 use crate::hardware::LayerDesign;
 use crate::sparsity::SparsityPoint;
-use crate::util::fault;
+use crate::util::{fault, lock_clean};
 use crate::util::json::{u64_from_hex, u64_to_hex, Json};
 use crate::util::memo::StripedMemo;
 
@@ -158,7 +158,7 @@ pub fn quantize_points(points: &[SparsityPoint], bits: u32) -> Vec<SparsityPoint
 
 /// Cache key: device fingerprint + the exact bit patterns of the (already
 /// snapped) per-layer operating points.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 struct Key {
     device: u64,
     points: Vec<(u64, u64)>,
@@ -268,22 +268,26 @@ impl DeviceCacheHandle {
     /// Lookups served from the cache (including waits on in-flight
     /// computations) since this device was first registered.
     pub fn hits(&self) -> u64 {
+        // relaxed: stats counter read for reporting only
         self.stats.hits.load(Ordering::Relaxed)
     }
 
     /// Lookups that had to price from scratch.
     pub fn misses(&self) -> u64 {
+        // relaxed: stats counter read for reporting only
         self.stats.misses.load(Ordering::Relaxed)
     }
 
     /// Layer-frontier lookups served from the shared [`FrontierStore`]
     /// (structural reuse on whole-design cache misses).
     pub fn frontier_hits(&self) -> u64 {
+        // relaxed: stats counter read for reporting only
         self.stats.frontier_hits.load(Ordering::Relaxed)
     }
 
     /// Layer-frontier lookups that had to enumerate the design space.
     pub fn frontier_misses(&self) -> u64 {
+        // relaxed: stats counter read for reporting only
         self.stats.frontier_misses.load(Ordering::Relaxed)
     }
 }
@@ -294,7 +298,7 @@ impl DeviceCacheHandle {
 /// Keying by shape — not layer index or network — lets the repeated
 /// blocks of a ResNet share one frontier within a candidate, across
 /// candidates, and across searches over different networks.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 struct FrontierKey {
     context: u64,
     shape: u64,
@@ -316,7 +320,7 @@ pub struct FrontierStore {
     memo: StripedMemo<FrontierKey, Arc<LayerFrontier>>,
     /// per-entry (use count, last-touched tick) for LRU compaction; one
     /// short-lived lock per lookup is noise next to a frontier build
-    usage: Mutex<HashMap<FrontierKey, (u64, u64)>>,
+    usage: Mutex<BTreeMap<FrontierKey, (u64, u64)>>,
     clock: AtomicU64,
 }
 
@@ -324,7 +328,7 @@ impl FrontierStore {
     fn new() -> Self {
         FrontierStore {
             memo: StripedMemo::new(STRIPES),
-            usage: Mutex::new(HashMap::new()),
+            usage: Mutex::new(BTreeMap::new()),
             clock: AtomicU64::new(0),
         }
     }
@@ -360,8 +364,10 @@ impl FrontierStore {
             .memo
             .get_or_compute(key.clone(), || Arc::new(build_frontier(layer, point, rm, dev)));
         if fresh {
+            // relaxed: stats counters, hit/miss accounting only
             handle.stats.frontier_misses.fetch_add(1, Ordering::Relaxed);
         } else {
+            // relaxed: stats counters, hit/miss accounting only
             handle.stats.frontier_hits.fetch_add(1, Ordering::Relaxed);
         }
         touch(&self.usage, &self.clock, key);
@@ -372,13 +378,15 @@ impl FrontierStore {
 /// Bump an entry's (uses, last tick) in a store's usage map.  The maps
 /// hold no cross-entry invariant, so a poisoned lock is recovered like
 /// everywhere else in the cache.
-fn touch<K: std::hash::Hash + Eq>(
-    usage: &Mutex<HashMap<K, (u64, u64)>>,
+fn touch<K: Ord>(
+    usage: &Mutex<BTreeMap<K, (u64, u64)>>,
     clock: &AtomicU64,
     key: K,
 ) {
+    // relaxed: tick allocator — uniqueness comes from the atomic RMW;
+    // ticks only steer LRU eviction on save, never search results
     let tick = clock.fetch_add(1, Ordering::Relaxed) + 1;
-    let mut map = usage.lock().unwrap_or_else(|p| p.into_inner());
+    let mut map = lock_clean(usage);
     let e = map.entry(key).or_insert((0, 0));
     e.0 += 1;
     e.1 = tick;
@@ -393,10 +401,10 @@ fn touch<K: std::hash::Hash + Eq>(
 /// computed exactly once (see the module docs).
 pub struct DesignCache {
     designs: StripedMemo<Key, NetworkDesign>,
-    devices: Mutex<HashMap<u64, Arc<DevStats>>>,
+    devices: Mutex<BTreeMap<u64, Arc<DevStats>>>,
     frontiers: FrontierStore,
     /// per-entry (use count, last-touched tick) for LRU compaction
-    usage: Mutex<HashMap<Key, (u64, u64)>>,
+    usage: Mutex<BTreeMap<Key, (u64, u64)>>,
     clock: AtomicU64,
 }
 
@@ -411,9 +419,9 @@ impl DesignCache {
     pub fn new() -> Self {
         DesignCache {
             designs: StripedMemo::new(STRIPES),
-            devices: Mutex::new(HashMap::new()),
+            devices: Mutex::new(BTreeMap::new()),
             frontiers: FrontierStore::new(),
-            usage: Mutex::new(HashMap::new()),
+            usage: Mutex::new(BTreeMap::new()),
             clock: AtomicU64::new(0),
         }
     }
@@ -476,10 +484,7 @@ impl DesignCache {
         // poison-tolerant like the striped stores: the map holds no
         // invariant a panicking holder could corrupt, and a resident
         // server must keep registering devices after a worker panic
-        let stats = self
-            .devices
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
+        let stats = lock_clean(&self.devices)
             .entry(fp)
             .or_insert_with(|| Arc::new(DevStats::default()))
             .clone();
@@ -488,7 +493,7 @@ impl DesignCache {
 
     /// Number of distinct (device, pricing context) registrations so far.
     pub fn device_count(&self) -> usize {
-        self.devices.lock().unwrap_or_else(|p| p.into_inner()).len()
+        lock_clean(&self.devices).len()
     }
 
     fn key(handle: &DeviceCacheHandle, points: &[SparsityPoint]) -> Key {
@@ -512,8 +517,10 @@ impl DesignCache {
         let key = Self::key(handle, points);
         let (design, fresh) = self.designs.get_or_compute(key.clone(), compute);
         if fresh {
+            // relaxed: stats counters, hit/miss accounting only
             handle.stats.misses.fetch_add(1, Ordering::Relaxed);
         } else {
+            // relaxed: stats counters, hit/miss accounting only
             handle.stats.hits.fetch_add(1, Ordering::Relaxed);
         }
         touch(&self.usage, &self.clock, key);
@@ -571,7 +578,7 @@ impl DesignCache {
     fn entry_lists(&self) -> (Vec<SnapshotEntry>, Vec<SnapshotEntry>) {
         let mut designs: Vec<SnapshotEntry> = Vec::new();
         {
-            let usage = self.usage.lock().unwrap_or_else(|p| p.into_inner());
+            let usage = lock_clean(&self.usage);
             self.designs.for_each_complete(|k, v| {
                 let (uses, tick) = usage.get(k).copied().unwrap_or((0, 0));
                 designs.push((tick, uses, design_to_json(k, v, uses, tick)));
@@ -579,7 +586,7 @@ impl DesignCache {
         }
         let mut frontiers: Vec<SnapshotEntry> = Vec::new();
         {
-            let usage = self.frontiers.usage.lock().unwrap_or_else(|p| p.into_inner());
+            let usage = lock_clean(&self.frontiers.usage);
             self.frontiers.memo.for_each_complete(|k, f| {
                 let (uses, tick) = usage.get(k).copied().unwrap_or((0, 0));
                 frontiers.push((tick, uses, frontier_to_json(k, f, uses, tick)));
@@ -631,11 +638,7 @@ impl DesignCache {
                     let (uses, tick) = usage_of(entry);
                     if uses > 0 {
                         max_tick = max_tick.max(tick);
-                        cache
-                            .usage
-                            .lock()
-                            .unwrap_or_else(|p| p.into_inner())
-                            .insert(key.clone(), (uses, tick));
+                        lock_clean(&cache.usage).insert(key.clone(), (uses, tick));
                     }
                     cache.designs.insert(key, design);
                     stats.designs += 1;
@@ -643,6 +646,7 @@ impl DesignCache {
                 None => stats.skipped += 1,
             }
         }
+        // relaxed: the cache is still private to this thread here
         cache.clock.store(max_tick, Ordering::Relaxed);
         let frontiers = snapshot
             .get("frontiers")
@@ -655,11 +659,7 @@ impl DesignCache {
                     let (uses, tick) = usage_of(entry);
                     if uses > 0 {
                         max_tick = max_tick.max(tick);
-                        cache
-                            .frontiers
-                            .usage
-                            .lock()
-                            .unwrap_or_else(|p| p.into_inner())
+                        lock_clean(&cache.frontiers.usage)
                             .insert(key.clone(), (uses, tick));
                     }
                     cache.frontiers.memo.insert(key, frontier);
@@ -668,6 +668,7 @@ impl DesignCache {
                 None => stats.skipped += 1,
             }
         }
+        // relaxed: the cache is still private to this thread here
         cache.frontiers.clock.store(max_tick, Ordering::Relaxed);
         Ok((cache, stats))
     }
@@ -804,7 +805,7 @@ fn entry_identity(e: &Json) -> Option<String> {
 /// entries we do hold keep the in-memory version (it is at least as
 /// fresh).  Entries failing their integrity check merge nothing.
 fn merge_disk_entries(mine: &mut Vec<SnapshotEntry>, disk: &[Json]) {
-    let have: std::collections::HashSet<String> =
+    let have: BTreeSet<String> =
         mine.iter().filter_map(|(_, _, j)| entry_identity(j)).collect();
     for e in disk {
         if !check_matches(e) {

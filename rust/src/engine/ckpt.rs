@@ -52,7 +52,7 @@
 //! on 16.  A mismatched checkpoint is refused loudly by the CLI and
 //! ignored (fresh start) by the engine.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::arch::Network;
 use crate::dse::frontier::shape_fingerprint;
@@ -145,7 +145,7 @@ pub fn resume_fingerprint(
 ) -> u64 {
     let shapes: Vec<u64> =
         target.compute_layers().iter().map(|l| shape_fingerprint(l)).collect();
-    let mut seen: HashSet<u64> = HashSet::new();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
     let fps: Vec<u64> = devices
         .iter()
         .map(device_fingerprint)

@@ -44,8 +44,8 @@
 //! efficiency, the Fig. 1 axes) is aggregated over every record of every
 //! shard, labelled with the device that produced it.
 
-use std::collections::hash_map::Entry;
-use std::collections::{HashMap, HashSet};
+use std::collections::btree_map::Entry;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
@@ -363,6 +363,9 @@ impl<'a> ShardedEngine<'a> {
         cfg: &SearchConfig,
         cache: &DesignCache,
     ) -> ShardedSearchResult {
+        // the default SearchControl has no observer, so cancellation is
+        // impossible by construction — this expect is unreachable
+        // lint: allow(panic-safety)
         self.search_with_cache_ctrl(cfg, cache, &SearchControl::default())
             .expect("a search without an observer cannot be cancelled")
     }
@@ -384,7 +387,7 @@ impl<'a> ShardedEngine<'a> {
         // would share one fingerprint, so extra shards could only repeat
         // work and double-count its cache traffic.  Same-name devices
         // with *different* budgets fingerprint apart and all run.
-        let mut seen: HashSet<u64> = HashSet::new();
+        let mut seen: BTreeSet<u64> = BTreeSet::new();
         let devices: Vec<&'a DeviceBudget> =
             self.devices.iter().filter(|d| seen.insert(device_fingerprint(d))).collect();
         assert!(!devices.is_empty(), "sharded search needs at least one device");
@@ -470,6 +473,8 @@ impl<'a> ShardedEngine<'a> {
         for ((dev, handle), (dense, (fhits0, fmisses0))) in
             devices.into_iter().zip(handles).zip(denses.into_iter().zip(f0))
         {
+            // slot-filled invariant: the scoped spawn above wrote every slot
+            // lint: allow(panic-safety)
             let dense = dense.expect("dense slot filled");
             let dense_ips = dense.images_per_sec(dev).max(1e-9);
             states.push(ShardState {
@@ -614,6 +619,8 @@ impl<'a> ShardedEngine<'a> {
                         // for bit.  (`start` boundaries align because
                         // checkpoints are only written between generations
                         // of a fingerprint-identical schedule.)
+                        // resume_done > 0 is only ever set from a
+                        // present ctrl.resume: lint: allow(panic-safety)
                         let ck =
                             ctrl.resume.expect("resume_done > 0 implies a checkpoint");
                         let mut records = Vec::with_capacity(execs.len() * g);
@@ -664,12 +671,18 @@ impl<'a> ShardedEngine<'a> {
                 }
                 // --- reduce the oldest in-flight generation, in candidate
                 //     order per shard --------------------------------------
+                // the propose loop above always pushes before this pop
+                // (depth ≥ 0), so: lint: allow(panic-safety)
                 let (g, replayed, pending) =
                     inflight.pop_front().expect("a launched generation");
                 let (xs_all, evaluated) = match pending {
                     Pending::Ready(xs, out) => (xs, out),
                     Pending::Running(h) => {
+                        // barrier_wait_ns is a wall-clock *stat*, never
+                        // in the journal: lint: allow(determinism)
                         let t0 = Instant::now();
+                        // lint: allow(panic-safety) — join propagates a
+                        // worker panic; swallowing it would corrupt state
                         let r = h.join().expect("generation task panicked");
                         barrier_wait_ns += t0.elapsed().as_nanos() as u64;
                         r
@@ -921,7 +934,10 @@ fn dedup_proposals(xs_all: &[Vec<Vec<f64>>], n_shards: usize, g: usize) -> Propo
     let mut meas_idx: Vec<usize> = Vec::with_capacity(total);
     let mut owners: Vec<(usize, usize)> = Vec::new();
     let mut users: Vec<Vec<usize>> = Vec::new();
-    let mut seen: HashMap<Vec<u64>, usize> = HashMap::new();
+    // BTreeMap, not HashMap: dedup bookkeeping sits on the journaled
+    // path, and ordered maps keep every iteration deterministic by
+    // construction (the determinism lint bans hashed iteration here)
+    let mut seen: BTreeMap<Vec<u64>, usize> = BTreeMap::new();
     let mut dedup = vec![0u64; n_shards];
     for k in 0..total {
         let (si, j) = (k / g, k % g);
@@ -973,6 +989,7 @@ fn run_generation(
         let (si, j) = dd.owners[mi];
         *slot = Some(shards[si].engine.measure_candidate(&xs_all[si][j], retry));
     });
+    // lint: allow(panic-safety) — run_slots filled every slot by contract
     let meas: Vec<Measurement> =
         meas.into_iter().map(|o| o.expect("measurement slot filled")).collect();
     // retry accounting follows measurement ownership (flat-order first
@@ -992,6 +1009,7 @@ fn run_generation(
             &ctxs[si],
         ));
     });
+    // lint: allow(panic-safety) — run_slots filled every slot by contract
     let records = out.into_iter().map(|o| o.expect("generation slot filled")).collect();
     GenerationOutput {
         records,
@@ -1081,8 +1099,11 @@ fn run_generation_async(
         done: Vec<bool>,
         /// last completion arrival (or generation start): what
         /// `eval_timeout_ms` measures silence against
+        // lint: allow(determinism) — watchdog clock: opt-in fault
+        // tolerance, reclaims stalls; never enters journal records
         last_progress: Instant,
     }
+    // lint: allow(determinism) — watchdog clock (see PopState above)
     let gen_start = Instant::now();
     let (meas_tx, meas_rx) = mpsc::channel::<EvalCompletion>();
     let pop = Mutex::new(PopState {
@@ -1130,7 +1151,10 @@ fn run_generation_async(
                 // pop one completion (serialized); price its users
                 // (parallel across workers) after releasing the lock
                 let popped = {
-                    let mut st = pop.lock().unwrap();
+                    // poison recovery: PopState's fields are advanced one
+                    // completion at a time under the lock; a panicking
+                    // popper leaves them consistent for the next worker
+                    let mut st = crate::util::lock_clean(&pop);
                     if st.received == n_meas {
                         return;
                     }
@@ -1146,6 +1170,7 @@ fn run_generation_async(
                         // means those completions can never arrive —
                         // reclaim immediately rather than waiting out the
                         // timer.
+                        // lint: allow(determinism) — watchdog clock only
                         let now = Instant::now();
                         let mut wait = Duration::from_secs(86_400);
                         if eval_timeout > 0 {
@@ -1160,6 +1185,7 @@ fn run_generation_async(
                     };
                     match recv {
                         Ok(c) => {
+                            // lint: allow(determinism) — watchdog clock
                             st.last_progress = Instant::now();
                             assert!(
                                 c.slot < n_meas
@@ -1200,6 +1226,8 @@ fn run_generation_async(
                         // infeasible records keep the journal and the TPE
                         // feedback shape-complete, and the search moves on
                         for slot in stalled {
+                            // relaxed: stats counter, read via into_inner
+                            // after the scope joins every worker
                             reclaimed[dd.owners[slot].0].fetch_add(1, Ordering::Relaxed);
                             let meas = Measurement::from_result(
                                 shards[0].engine.target,
@@ -1224,6 +1252,7 @@ fn run_generation_async(
                     }
                 };
                 if out_of_order {
+                    // relaxed: stats counter, read after the scope join
                     ooo[dd.owners[c.slot].0].fetch_add(1, Ordering::Relaxed);
                 }
                 let overlapping = measuring.load(Ordering::Acquire);
@@ -1242,6 +1271,7 @@ fn run_generation_async(
                     r => (r, 0),
                 };
                 if tries > 0 {
+                    // relaxed: stats counter, read after the scope join
                     retried[dd.owners[c.slot].0].fetch_add(tries as u64, Ordering::Relaxed);
                 }
                 let meas = Measurement::from_result(
@@ -1253,6 +1283,7 @@ fn run_generation_async(
                 for &k in &dd.users[c.slot] {
                     let (si, j) = (k / g, k % g);
                     if overlapping {
+                        // relaxed: stats counter, read after the scope join
                         overlap[si].fetch_add(1, Ordering::Relaxed);
                     }
                     let rec =
@@ -1269,10 +1300,13 @@ fn run_generation_async(
         for _ in 0..total {
             let (k, rec) = rec_rx
                 .recv()
+                // lint: allow(panic-safety) — an eval_async contract
+                // violation must abort loudly, not journal silently
                 .expect("evaluator completed fewer requests than were submitted");
             out[k] = Some(rec);
         }
     });
+    // lint: allow(panic-safety) — the collector above filled every slot
     let records = out.into_iter().map(|o| o.expect("generation slot filled")).collect();
     GenerationOutput {
         records,

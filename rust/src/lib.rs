@@ -155,7 +155,9 @@
 //! | [`server`]    | resident `hass serve` search daemon + JSON-RPC protocol |
 //! | [`metrics`]   | tables, CSV/markdown, Pareto fronts |
 //! | [`util`]      | offline stand-ins: rng, prop testing, json, cli; [`util::memo`] striped memo; [`util::fault`] chaos harness |
+//! | [`analysis`]  | `hass lint`: repo-native invariant linter (determinism, panic-safety, lock discipline, atomics audit) |
 
+pub mod analysis;
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;

@@ -10,6 +10,7 @@
 //! * `networks`  — list the built-in network geometries
 //! * `serve`     — resident search daemon over warm caches (JSON-RPC/TCP)
 //! * `client`    — thin client for a running `hass serve` daemon
+//! * `lint`      — repo-native invariant linter (blocking in CI)
 //!
 //! Run `hass <subcommand> --help` for per-command flags.
 
@@ -36,18 +37,20 @@ use hass::util::rng::Rng;
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let sub = args.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest = args.get(2..).unwrap_or(&[]);
     let code = match sub {
-        "search" => cmd_search(&args[2..]),
-        "dse" => cmd_dse(&args[2..]),
-        "simulate" => cmd_simulate(&args[2..]),
-        "partition" => cmd_partition(&args[2..]),
-        "evaluate" => cmd_evaluate(&args[2..]),
+        "search" => cmd_search(rest),
+        "dse" => cmd_dse(rest),
+        "simulate" => cmd_simulate(rest),
+        "partition" => cmd_partition(rest),
+        "evaluate" => cmd_evaluate(rest),
         "networks" => cmd_networks(),
-        "serve" => cmd_serve(&args[2..]),
-        "client" => cmd_client(&args[2..]),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "lint" => cmd_lint(rest),
         _ => {
             eprintln!(
-                "usage: hass <search|dse|simulate|partition|evaluate|networks|serve|client> \
+                "usage: hass <search|dse|simulate|partition|evaluate|networks|serve|client|lint> \
                  [flags]\n\
                  HASS: Hardware-Aware Sparsity Search for dataflow DNN accelerators."
             );
@@ -376,7 +379,7 @@ fn cmd_search(args: &[String]) -> i32 {
 
     // --- sharded multi-device search (--devices a,b,...) --------------
     if all_devices.len() >= 2 {
-        let result = search_sharded_with_cache_ctrl(
+        let Some(result) = search_sharded_with_cache_ctrl(
             ev.as_ref(),
             &net,
             &rm,
@@ -384,8 +387,12 @@ fn cmd_search(args: &[String]) -> i32 {
             &cfg,
             &cache,
             &ctrl,
-        )
-        .expect("a search without an observer cannot be cancelled");
+        ) else {
+            // unreachable for the CLI's observer-less SearchControl, but
+            // the panic-free contract means we answer, not abort
+            eprintln!("[search] cancelled before completion");
+            return 1;
+        };
         let s = &result.stats;
         println!(
             "[search] sharded over {} devices: {} generations x batch {} on {} thread(s) | \
@@ -456,9 +463,16 @@ fn cmd_search(args: &[String]) -> i32 {
     }
 
     // --- single-device search (--device, or a 1-entry --devices) ------
-    let dev = all_devices.into_iter().next().expect("resolved above");
-    let result = search_with_cache_ctrl(ev.as_ref(), &net, &rm, &dev, &cfg, &cache, &ctrl)
-        .expect("a search without an observer cannot be cancelled");
+    let Some(dev) = all_devices.into_iter().next() else {
+        eprintln!("no device resolved (--device/--devices)");
+        return 2;
+    };
+    let Some(result) =
+        search_with_cache_ctrl(ev.as_ref(), &net, &rm, &dev, &cfg, &cache, &ctrl)
+    else {
+        eprintln!("[search] cancelled before completion");
+        return 1;
+    };
     // --iters 0 is a legal smoke run (e.g. warming a cache file): there
     // is no best record then, not a panic
     match result.try_best_record() {
@@ -594,7 +608,8 @@ fn cmd_dse(args: &[String]) -> i32 {
     let dev = device_or_die(p.get("device"));
     let rm = ResourceModel::default();
     let n = net.compute_layers().len();
-    let points = vec![SparsityPoint { s_w: p.get_f64("sw"), s_a: p.get_f64("sa") }; n];
+    let pt = SparsityPoint { s_w: p.get_f64("sw"), s_a: p.get_f64("sa") };
+    let points = vec![pt; n];
     let t0 = std::time::Instant::now();
     let d = explore(&net, &points, &rm, &dev, &DseConfig::default());
     println!(
@@ -619,7 +634,7 @@ fn cmd_dse(args: &[String]) -> i32 {
                 des.n_mac.to_string(),
                 des.engines().to_string(),
                 des.dsp().to_string(),
-                fmt(des.throughput(l, points[0])),
+                fmt(des.throughput(l, pt)),
             ]);
         }
         print!("{}", t.to_markdown());
@@ -697,12 +712,10 @@ fn cmd_partition(args: &[String]) -> i32 {
                 part.images_per_sec,
                 part.batch
             );
-            for (i, w) in part.bounds.windows(2).enumerate() {
-                let d = &part.designs[i];
+            for (i, (w, d)) in part.bounds.windows(2).zip(&part.designs).enumerate() {
+                let &[lo, hi] = w else { continue };
                 println!(
-                    "  part {i}: layers {}..{} | {} DSP | {:.0} img/s",
-                    w[0],
-                    w[1],
+                    "  part {i}: layers {lo}..{hi} | {} DSP | {:.0} img/s",
                     d.resources.dsp,
                     d.images_per_sec(&dev)
                 );
@@ -746,12 +759,13 @@ fn cmd_evaluate(args: &[String]) -> i32 {
         rt.meta.dense_val_accuracy * 100.0
     );
     let mut t = Table::new(&["layer", "S_w", "S_a", "pair_density"]);
-    for i in 0..l {
+    let rows = rt.meta.layers.iter().zip(&out.s_w).zip(&out.s_a).zip(&out.pair_density);
+    for (((layer, sw), sa), pd) in rows.take(l) {
         t.row(vec![
-            rt.meta.layers[i].name.clone(),
-            format!("{:.4}", out.s_w[i]),
-            format!("{:.4}", out.s_a[i]),
-            format!("{:.4}", out.pair_density[i]),
+            layer.name.clone(),
+            format!("{sw:.4}"),
+            format!("{sa:.4}"),
+            format!("{pd:.4}"),
         ]);
     }
     print!("{}", t.to_markdown());
@@ -996,7 +1010,7 @@ fn client_report(method: &str, result: &Json, journal: &str) -> i32 {
 fn cmd_networks() -> i32 {
     let mut t = Table::new(&["name", "layers", "compute", "GMACs", "params(M)"]);
     for name in networks::ALL_NETWORKS {
-        let net = networks::by_name(name).unwrap();
+        let Some(net) = networks::by_name(name) else { continue };
         t.row(vec![
             net.name.clone(),
             net.layers.len().to_string(),
@@ -1008,4 +1022,86 @@ fn cmd_networks() -> i32 {
     print!("{}", t.to_markdown());
     let _ = baselines::MemoryModel::default(); // keep the module linked
     0
+}
+
+const LINT_USAGE: &str = "\
+hass lint — repo-native invariant linter (see rust/src/analysis/).
+
+usage: hass lint [--json] [--fix-hints] [paths...]
+
+  --json        emit diagnostics as a JSON array instead of text
+  --fix-hints   append a one-line remediation hint to each diagnostic
+  paths         files or directories to lint; defaults to the repo's
+                rust/src, rust/benches and rust/tests (auto-detected
+                from the current directory)
+
+exit: 0 clean, 1 violations found, 2 usage/IO error";
+
+fn cmd_lint(args: &[String]) -> i32 {
+    let mut json = false;
+    let mut hints = false;
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    for a in args {
+        match a.as_str() {
+            "--json" => json = true,
+            "--fix-hints" => hints = true,
+            "--help" | "-h" => {
+                println!("{LINT_USAGE}");
+                return 0;
+            }
+            _ if a.starts_with('-') => {
+                eprintln!("unknown option {a}\n\n{LINT_USAGE}");
+                return 2;
+            }
+            _ => paths.push(std::path::PathBuf::from(a)),
+        }
+    }
+    if paths.is_empty() {
+        // default scope: the whole crate, wherever we're invoked from
+        let candidates: &[&str] = if std::path::Path::new("rust/src").is_dir() {
+            &["rust/src", "rust/benches", "rust/tests"]
+        } else {
+            &["src", "benches", "tests"]
+        };
+        for c in candidates {
+            if std::path::Path::new(c).exists() {
+                paths.push(std::path::PathBuf::from(c));
+            }
+        }
+        if paths.is_empty() {
+            eprintln!("lint: no sources found (run from the repo root or pass paths)");
+            return 2;
+        }
+    }
+    let report = match hass::analysis::lint_paths(&paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return 2;
+        }
+    };
+    if json {
+        let arr: Vec<Json> = report.diagnostics.iter().map(|d| d.to_json()).collect();
+        println!("{}", Json::Arr(arr));
+    } else {
+        for d in &report.diagnostics {
+            println!("{}", d.render());
+            if hints {
+                if let Some(h) = hass::analysis::fix_hint(d.rule) {
+                    println!("    fix: {h}");
+                }
+            }
+        }
+        eprintln!(
+            "[lint] {} file(s): {} violation(s), {} allowlisted",
+            report.files,
+            report.diagnostics.len(),
+            report.suppressed
+        );
+    }
+    if report.diagnostics.is_empty() {
+        0
+    } else {
+        1
+    }
 }

@@ -83,7 +83,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::arch::networks;
 use crate::coordinator::SurrogateEvaluator;
@@ -113,12 +113,10 @@ impl Default for ServeConfig {
     }
 }
 
-/// Mutex recovery for daemon state: every lock below guards data with no
-/// cross-field invariant a panicking holder could corrupt, and the daemon
-/// must keep serving after any worker panic.
-fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
-}
+// Mutex recovery for daemon state: every lock below guards data with no
+// cross-field invariant a panicking holder could corrupt, and the daemon
+// must keep serving after any worker panic — see `util::lock_clean`.
+use crate::util::lock_clean;
 
 /// FIFO ticket semaphore: at most `max` holders, strictly
 /// first-come-first-served beyond that (no barging — a late small
@@ -217,6 +215,10 @@ impl Drop for SlotGuard<'_> {
 pub struct Server {
     cache: DesignCache,
     admission: Admission,
+    /// control atomic (gates the accept loop): Release store in
+    /// [`begin_shutdown`](Self::begin_shutdown), Acquire load in
+    /// [`run`](Self::run) — never Relaxed, so everything written before
+    /// the flag flip is visible to the loop that observes it
     shutdown: AtomicBool,
     addr: OnceLock<SocketAddr>,
     /// live connections by id, so shutdown can unblock idle readers
@@ -270,6 +272,9 @@ impl Server {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
+                // uniqueness comes from the atomic RMW itself, nothing
+                // else is published under the returned id, so this is
+                // relaxed: id allocation, not control flow
                 let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
                 if let Ok(clone) = stream.try_clone() {
                     lock_clean(&self.conns).push((id, clone));
@@ -498,6 +503,9 @@ impl Server {
             // chaos site: a panic from inside the search worker — the
             // catch_unwind boundary must contain it with caches intact
             if fault::fire("server.search.panic") {
+                // deliberate chaos-injection panic, absorbed by the
+                // catch_unwind wrapping this closure (tests/chaos.rs)
+                // lint: allow(panic-safety)
                 panic!("injected panic at site 'server.search.panic'");
             }
             eng.search_with_cache_ctrl(&cfg, &self.cache, &ctrl)
@@ -507,12 +515,19 @@ impl Server {
             Ok(None) => return Err("search cancelled (client stopped reading)".into()),
             Ok(Some(r)) => r,
         };
-        self.completed_searches.fetch_add(1, Ordering::Relaxed);
+        // Atomics classification (the lint's atomics-relaxed rule): the
+        // counters below are pure monotonic stats — read only by the
+        // `stats` RPC for reporting, never to gate control flow — so
+        // Relaxed is correct (totals stay exact because fetch_add is an
+        // atomic RMW).  The daemon's control atomic is `shutdown`, which
+        // uses Release stores / Acquire loads (`begin_shutdown`/`run`).
+        self.completed_searches.fetch_add(1, Ordering::Relaxed); // relaxed: stats
         let s = &result.stats;
-        self.retried_evals.fetch_add(s.retried_evals, Ordering::Relaxed);
-        self.reclaimed_stalls.fetch_add(s.reclaimed_stalls, Ordering::Relaxed);
+        self.retried_evals.fetch_add(s.retried_evals, Ordering::Relaxed); // relaxed: stats
+        self.reclaimed_stalls.fetch_add(s.reclaimed_stalls, Ordering::Relaxed); // relaxed: stats
         self.pipelined_generations
-            .fetch_add(s.pipelined_generations as u64, Ordering::Relaxed);
+            .fetch_add(s.pipelined_generations as u64, Ordering::Relaxed); // relaxed: stats
+        // relaxed: stats
         self.lookahead_proposals.fetch_add(s.lookahead_proposals, Ordering::Relaxed);
 
         let devices_json: Vec<Json> = result
@@ -586,23 +601,28 @@ impl Server {
             ("queued_searches", Json::Num(self.admission.queued() as f64)),
             (
                 "completed_searches",
+                // relaxed: stats counter read for reporting only
                 Json::Num(self.completed_searches.load(Ordering::Relaxed) as f64),
             ),
             ("max_inflight", Json::Num(self.admission.max as f64)),
             (
                 "retried_evals",
+                // relaxed: stats counter read for reporting only
                 Json::Num(self.retried_evals.load(Ordering::Relaxed) as f64),
             ),
             (
                 "reclaimed_stalls",
+                // relaxed: stats counter read for reporting only
                 Json::Num(self.reclaimed_stalls.load(Ordering::Relaxed) as f64),
             ),
             (
                 "pipelined_generations",
+                // relaxed: stats counter read for reporting only
                 Json::Num(self.pipelined_generations.load(Ordering::Relaxed) as f64),
             ),
             (
                 "lookahead_proposals",
+                // relaxed: stats counter read for reporting only
                 Json::Num(self.lookahead_proposals.load(Ordering::Relaxed) as f64),
             ),
         ])
@@ -747,7 +767,9 @@ mod tests {
         let m = std::sync::Arc::new(Mutex::new(5i32));
         let m2 = m.clone();
         let poisoner = std::thread::spawn(move || {
-            let _g = m2.lock().unwrap();
+            // the poisoner itself locks cleanly; panicking while holding
+            // the guard is what poisons the mutex
+            let _g = lock_clean(&m2);
             panic!("poison the daemon-state lock");
         });
         assert!(poisoner.join().is_err(), "the poisoner must panic");

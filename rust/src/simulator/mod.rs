@@ -750,11 +750,15 @@ fn det_run_len(stages: &[Stage], i: usize, n: usize, t: u64, dt: u64, threads: u
                 let lo = prefix_end + w as u64 * chunk;
                 let hi = (lo + chunk).min(cap);
                 for j in lo..hi {
-                    // a failure in an earlier chunk makes this one moot
+                    // a failure in an earlier chunk makes this one moot;
+                    // relaxed: advisory early-exit hint — correctness
+                    // comes from the fetch_min reduction + scope join
                     if j & 511 == 0 && first_fail.load(Ordering::Relaxed) <= lo {
                         return;
                     }
                     if !ok_at(j) {
+                        // relaxed: commutative min-reduction, read after
+                        // the scope joins every worker
                         first_fail.fetch_min(j, Ordering::Relaxed);
                         return;
                     }

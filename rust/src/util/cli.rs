@@ -65,7 +65,7 @@ impl Cli {
     pub fn parse_from(mut self, args: &[String]) -> Result<Parsed, String> {
         let mut i = 0;
         while i < args.len() {
-            let a = &args[i];
+            let Some(a) = args.get(i) else { break };
             if a == "--help" || a == "-h" {
                 return Err(self.usage());
             }
@@ -131,9 +131,11 @@ pub struct Parsed {
 
 impl Parsed {
     pub fn get(&self, key: &str) -> &str {
-        self.values
-            .get(key)
-            .unwrap_or_else(|| panic!("option --{key} not registered"))
+        // a missing key is a programmer error (the option was never
+        // registered with the spec), not user input — panicking here is
+        // the documented contract of this accessor
+        // lint: allow(panic-safety)
+        self.values.get(key).unwrap_or_else(|| panic!("option --{key} not registered"))
     }
 
     pub fn get_usize(&self, key: &str) -> Result<usize, String> {

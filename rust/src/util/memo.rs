@@ -28,21 +28,17 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Mutex, OnceLock};
 
+// Stripe locks recover from poisoning via `util::lock_clean`: the maps
+// hold no invariant a panicking holder could half-write (lookup/insert
+// of independent entries), and a resident `hass serve` process must keep
+// answering after a worker panic rather than fail every later request.
+use crate::util::lock_clean;
+
 /// Lock-striped map of `K -> OnceLock<V>` cells: keys are spread over
 /// independent mutexes by key hash, values are computed at most once per
 /// key (see the module docs).
 pub struct StripedMemo<K, V> {
     stripes: Vec<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
-}
-
-/// Stripe locks recover from poisoning: the maps hold no invariant a
-/// panicking holder could half-write (lookup/insert of independent
-/// entries), and a resident `hass serve` process must keep answering
-/// after a worker panic rather than fail every later request.
-fn lock_clean<'m, K, V>(
-    stripe: &'m Mutex<HashMap<K, Arc<OnceLock<V>>>>,
-) -> std::sync::MutexGuard<'m, HashMap<K, Arc<OnceLock<V>>>> {
-    stripe.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 impl<K: Eq + Hash, V: Clone> StripedMemo<K, V> {

@@ -25,6 +25,20 @@ pub mod memo;
 pub mod prop;
 pub mod rng;
 
+/// Poison-tolerant mutex lock: the repo-wide replacement for
+/// `.lock().unwrap()` (banned by `hass lint`'s `lock-discipline` rule).
+///
+/// Every mutex in this crate guards data with no invariant a panicking
+/// holder could half-write (independent map entries, counters, queues),
+/// and a resident `hass serve` process must keep answering after one
+/// worker panic rather than fail every later request — so poisoning is
+/// recovered by taking the guarded data as-is.  If a future mutex *does*
+/// guard a multi-step invariant, handle its `PoisonError` explicitly at
+/// the call site instead of using this helper.
+pub fn lock_clean<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Ceiling division for unsigned integers.
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {
